@@ -1,0 +1,46 @@
+//! The §3.2 deployment story: configure TurboAngle for a NEW model with
+//! 3–5 evaluation runs and zero calibration data.
+//!
+//!     make artifacts && cargo run --release --example config_search -- [model]
+
+use anyhow::Result;
+use turboangle::eval::{search, PplHarness};
+use turboangle::runtime::{Entry, Manifest, ModelExecutor, Runtime};
+
+fn main() -> Result<()> {
+    let model = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "olmo-sim".to_string());
+    let manifest = Manifest::discover()?;
+    let rt = Runtime::cpu()?;
+    let exec = ModelExecutor::load(&rt, &manifest, &model, Entry::Eval)?;
+    let h = PplHarness::new(&manifest, exec)?;
+
+    println!("§3.2 heuristic search on {model}:");
+    println!("  1. probe E4 with (256,128) and (128,256) -> pick K-dom vs V-dom");
+    println!("  2. grow n_early while dPPL improves\n");
+
+    let res = search::heuristic_search(&h, 6)?;
+    for (i, s) in res.steps.iter().enumerate() {
+        println!("  eval {:>2}: {:32} dPPL {:+.4}", i + 1, s.tag, s.delta_ppl);
+    }
+    println!(
+        "\nchosen config: {} ({:.2} angle bits/element, dPPL {:+.4}, {} evals)",
+        res.best.tag(),
+        res.best.angle_bits_per_element(),
+        res.best_delta,
+        res.evals_used
+    );
+    assert!(res.evals_used <= 6, "the §3.2 budget is 3-5 evals + probes");
+
+    // compare against the exhaustive sweep's pick (what Table 2 reports)
+    println!("\n(for reference, the exhaustive Table-2 sweep on this model:)");
+    let full = turboangle::eval::sweep::early_boost_sweep(&h, &model)?;
+    println!(
+        "  best {} dPPL {:+.4} at {:.2} bits",
+        full.best_cfg.tag(),
+        full.best_delta,
+        full.best_bits
+    );
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! Quickstart: walk the TurboAngle pipeline stage by stage (paper Fig. 1).
+//!
+//! Uses only the native quantizer — no artifacts needed. Prints each
+//! intermediate tensor for one KV vector, then summarizes rate/error on a
+//! batch, reproducing the pipeline diagram as a narrated run.
+//!
+//!     cargo run --release --example quickstart
+
+use turboangle::quant::{angle, fwht, norm, packing, NormMode, QuantConfig};
+
+fn main() {
+    let d = 16usize; // small so every stage fits on screen
+    let sign = fwht::test_sign_diag(d, 2026);
+    let n_bins = 64u32;
+
+    // a "KV cache entry": correlated, outlier-ish — hostile to raw quant
+    let x: Vec<f32> = (0..d)
+        .map(|i| (i as f32 * 0.7).sin() * if i == 3 { 6.0 } else { 1.5 })
+        .collect();
+    println!("x (KV vector, d={d}):\n  {}", fmt(&x));
+
+    // Stage 1: random ±1 diagonal rotation
+    println!("\nD (shared ±1 diagonal, seeded once — paper §3.1):\n  {}", fmt(&sign));
+    let mut y = x.clone();
+    for (v, s) in y.iter_mut().zip(&sign) {
+        *v *= s;
+    }
+    println!("D·x:\n  {}", fmt(&y));
+
+    // Stage 2: normalized FWHT
+    fwht::fwht(&mut y);
+    println!("\ny = H·D·x (normalized FWHT, O(d log d) butterfly):\n  {}", fmt(&y));
+
+    // Stage 3: polar decomposition of consecutive pairs
+    let enc = angle::encode(&x, &sign, n_bins);
+    println!("\npolar pairs (r_i, theta->k_i) with n={n_bins} uniform bins:");
+    println!("  r: {}", fmt(&enc.r));
+    println!("  k: {:?}", enc.k);
+
+    // Stage 4: what actually lands in memory — bit-packed angles
+    let width = packing::bits_for(n_bins);
+    let packed = packing::pack(&enc.k, width);
+    println!(
+        "\nstorage: {} angle bits/pair ({} bits total for {} pairs = {:.2} bits/element)",
+        width,
+        packed.len_bits(),
+        enc.k.len(),
+        packed.len_bits() as f64 / d as f64
+    );
+
+    // Stage 5: norm quantization (§3.3)
+    let q = norm::quantize(&enc.r, NormMode::LINEAR8);
+    println!(
+        "norms -> 8-bit codes {:?} with fp32 window [{:.3}, {:.3}]",
+        q.codes, q.vmin, q.vmax
+    );
+
+    // Stage 6: reconstruction
+    let r_hat = norm::dequantize(&q, NormMode::LINEAR8);
+    let x_hat = angle::decode(&r_hat, &enc.k, &sign, n_bins, false);
+    println!("\nx_hat = D·H·y_hat (trig lookup + inverse FWHT):\n  {}", fmt(&x_hat));
+    let mse: f32 = x
+        .iter()
+        .zip(&x_hat)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f32>()
+        / d as f32;
+    let sig: f32 = x.iter().map(|v| v * v).sum::<f32>() / d as f32;
+    println!("per-element MSE {mse:.5} (signal power {sig:.3}, SNR {:.1} dB)", 10.0 * (sig / mse).log10());
+
+    // Rate accounting on a realistic config (Eq. 1 / Eq. 3)
+    println!("\n== rate accounting (Mistral-7B-like: L=32, d=128) ==");
+    for (name, cfg) in [
+        ("uniform K128V64 + fp32 norms", QuantConfig::paper_uniform(32)),
+        (
+            "E4(256,128) + K8V4-log (paper's best)",
+            QuantConfig::early_boost(32, 4, 256, 128).with_k8v4_log(),
+        ),
+    ] {
+        println!(
+            "  {name:40} {:.2} angle bits, {:.2} total bits/element",
+            cfg.angle_bits_per_element(),
+            cfg.total_bits_per_element(128)
+        );
+    }
+    println!("\n(16.0 bits/element is the fp16 reference -> ~2.4x compression end-to-end)");
+
+    assert!(mse < 0.02 * sig, "roundtrip error out of spec");
+    println!("\nquickstart OK");
+}
+
+fn fmt(v: &[f32]) -> String {
+    v.iter()
+        .map(|x| format!("{x:+.3}"))
+        .collect::<Vec<_>>()
+        .join(" ")
+}

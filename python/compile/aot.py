@@ -1,0 +1,243 @@
+"""AOT pipeline: train (if needed) → lower → HLO text → artifacts/.
+
+Python runs ONCE here and never on the request path. For each profile we
+emit:
+
+    artifacts/weights/<p>.tang          trained weights (+ the shared sign
+                                        diagonal D) in tensorfile format
+    artifacts/<p>.eval.hlo.txt          eval_fwd  — the PPL harness program
+    artifacts/<p>.prefill.hlo.txt       prefill   — prompt → compressed KV
+    artifacts/<p>.decode.hlo.txt        decode_step — the request path
+    artifacts/kernels.*.hlo.txt         standalone encode/decode/fwht kernels
+                                        (runtime micro-benches + golden tests)
+    artifacts/golden/*.tang             golden vectors for rust unit tests
+    artifacts/manifest.json             shapes, input order, seeds, eval
+                                        protocol — the runtime contract
+
+HLO TEXT is the interchange format (not .serialize()): jax >= 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus, model, tensorfile, train
+from .kernels import angle as kangle
+from .kernels import fwht as kfwht
+from .kernels import ref as kref
+from .profiles import PROFILES, SIGN_SEED, ModelProfile
+
+# Eval protocol (paper: 32 chunks x 1024 tokens; scaled for 1 CPU core —
+# recorded in the manifest so the rust harness and EXPERIMENTS.md agree).
+EVAL_CHUNKS = 16
+EVAL_CHUNK_LEN = 129  # 128 predicted tokens per chunk
+EVAL_BATCH = 8        # chunks per eval_fwd execution
+
+# Serving shapes (decode_step / prefill artifacts).
+SERVE_BATCH = 4
+SERVE_PREFILL = 64
+SERVE_TMAX = 192
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _param_specs(p: ModelProfile):
+    return [_f32(*s) for s in
+            (model.param_shapes(p)[n] for n in model.PARAM_ORDER)]
+
+
+def lower_eval(p: ModelProfile) -> str:
+    L = p.n_layers
+    fn = functools.partial(model.eval_fwd, p)
+    lowered = jax.jit(fn, keep_unused=True).lower(
+        _param_specs(p), _i32(EVAL_BATCH, EVAL_CHUNK_LEN), _f32(p.d_head),
+        _f32(L), _f32(L), _f32(4), jax.ShapeDtypeStruct((), jnp.int32))
+    return to_hlo_text(lowered)
+
+
+def lower_prefill(p: ModelProfile) -> str:
+    L = p.n_layers
+    fn = functools.partial(model.prefill, p)
+    lowered = jax.jit(fn, keep_unused=True).lower(
+        _param_specs(p), _i32(SERVE_BATCH, SERVE_PREFILL), _i32(SERVE_BATCH),
+        _f32(p.d_head), _f32(L), _f32(L), _f32(4),
+        jax.ShapeDtypeStruct((), jnp.int32))
+    return to_hlo_text(lowered)
+
+
+def lower_decode(p: ModelProfile) -> str:
+    L, H, half = p.n_layers, p.n_kv_heads, p.d_head // 2
+    cache = _f32(L, SERVE_BATCH, H, SERVE_TMAX, half)
+    fn = functools.partial(model.decode_step, p)
+    lowered = jax.jit(fn, keep_unused=True).lower(
+        _param_specs(p), _i32(SERVE_BATCH), _i32(SERVE_BATCH),
+        _f32(p.d_head), _f32(L), _f32(L), _f32(4),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        cache, cache, cache, cache)
+    return to_hlo_text(lowered)
+
+
+def lower_kernels(out_dir: str) -> dict[str, str]:
+    """Standalone kernel artifacts (d=64 and d=128) for runtime benches and
+
+    rust↔python golden cross-checks."""
+    paths = {}
+    for d in (64, 128):
+        rows = 1024
+        enc = jax.jit(kangle.encode, keep_unused=True).lower(
+            _f32(rows, d), _f32(d), jax.ShapeDtypeStruct((), jnp.float32))
+        paths[f"kernels.encode.d{d}"] = f"kernels.encode.d{d}.hlo.txt"
+        with open(os.path.join(out_dir, paths[f"kernels.encode.d{d}"]), "w") as f:
+            f.write(to_hlo_text(enc))
+        dec = jax.jit(functools.partial(kangle.decode, centered=False), keep_unused=True).lower(
+            _f32(rows, d // 2), _f32(rows, d // 2), _f32(d),
+            jax.ShapeDtypeStruct((), jnp.float32))
+        paths[f"kernels.decode.d{d}"] = f"kernels.decode.d{d}.hlo.txt"
+        with open(os.path.join(out_dir, paths[f"kernels.decode.d{d}"]), "w") as f:
+            f.write(to_hlo_text(dec))
+        fw = jax.jit(kfwht.fwht, keep_unused=True).lower(_f32(rows, d))
+        paths[f"kernels.fwht.d{d}"] = f"kernels.fwht.d{d}.hlo.txt"
+        with open(os.path.join(out_dir, paths[f"kernels.fwht.d{d}"]), "w") as f:
+            f.write(to_hlo_text(fw))
+    return paths
+
+
+def write_golden(out_dir: str):
+    """Golden vectors: rust/src/quant must reproduce these bit-for-bit-ish
+
+    (f32 tolerance). One file per head dim."""
+    os.makedirs(out_dir, exist_ok=True)
+    for d in (64, 128):
+        rng = np.random.default_rng(42 + d)
+        x = rng.normal(scale=2.0, size=(32, d)).astype(np.float32)
+        sign = kref.make_sign_diag(d, SIGN_SEED)
+        y = np.asarray(kref.rotate(jnp.asarray(x), jnp.asarray(sign)))
+        tensors = {"x": x, "sign": sign, "rotated": y}
+        for n in (48.0, 64.0, 128.0, 256.0):
+            r, k = kref.encode(jnp.asarray(x), jnp.asarray(sign), n)
+            xq = kref.decode(r, k, jnp.asarray(sign), n)
+            xqc = kref.decode(r, k, jnp.asarray(sign), n, centered=True)
+            tag = str(int(n))
+            tensors[f"r_n{tag}"] = np.asarray(r)
+            tensors[f"k_n{tag}"] = np.asarray(k)
+            tensors[f"dec_n{tag}"] = np.asarray(xq)
+            tensors[f"decc_n{tag}"] = np.asarray(xqc)
+        r, _ = kref.encode(jnp.asarray(x), jnp.asarray(sign), 64.0)
+        for bits, log in ((8.0, 0.0), (4.0, 1.0), (4.0, 0.0)):
+            rq = kref.quantize_norms(r, bits, log > 0)
+            tensors[f"normq_b{int(bits)}_log{int(log)}"] = np.asarray(rq)
+        tensors["tq4"] = np.asarray(
+            kref.tq_scalar_g(jnp.asarray(x), jnp.asarray(sign), 4))
+        tensors["tq3"] = np.asarray(
+            kref.tq_scalar_g(jnp.asarray(x), jnp.asarray(sign), 3))
+        tensorfile.write(os.path.join(out_dir, f"golden_d{d}.tang"), tensors)
+
+
+def build_manifest(artifact_names: dict) -> dict:
+    profiles = {}
+    for name, p in PROFILES.items():
+        profiles[name] = {
+            **p.to_dict(),
+            "weights": f"weights/{name}.tang",
+            "eval_hlo": f"{name}.eval.hlo.txt",
+            "prefill_hlo": f"{name}.prefill.hlo.txt",
+            "decode_hlo": f"{name}.decode.hlo.txt",
+            # execution-order input names for each entry point
+            "eval_inputs": model.PARAM_ORDER + [
+                "tokens", "sign", "nk", "nv", "norm_cfg", "mode"],
+            "prefill_inputs": model.PARAM_ORDER + [
+                "tokens", "length", "sign", "nk", "nv", "norm_cfg", "mode"],
+            "decode_inputs": model.PARAM_ORDER + [
+                "token", "pos", "sign", "nk", "nv", "norm_cfg", "mode",
+                "kr", "ki", "vr", "vi"],
+        }
+    return {
+        "version": 1,
+        "sign_seed": SIGN_SEED,
+        "eval": {"chunks": EVAL_CHUNKS, "chunk_len": EVAL_CHUNK_LEN,
+                 "batch": EVAL_BATCH,
+                 "paper_protocol": "32x1024 tokens WikiText-2; scaled"},
+        "serve": {"batch": SERVE_BATCH, "prefill_len": SERVE_PREFILL,
+                  "tmax": SERVE_TMAX},
+        "modes": {"none": 0, "angle": 1, "angle_centered": 2,
+                  "tq_sym_g4": 3, "kivi": 4, "kvquant": 5},
+        "profiles": profiles,
+        "kernels": artifact_names,
+    }
+
+
+def write_eval_data(out_dir: str):
+    """Held-out eval chunks, one file shared by all profiles (same corpus
+
+    distribution; per-profile val streams differ only by seed in training)."""
+    chunks = corpus.val_chunks(999, EVAL_CHUNKS, EVAL_CHUNK_LEN)
+    tensorfile.write(os.path.join(out_dir, "eval_chunks.tang"),
+                     {"chunks": chunks.astype(np.int32)})
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--profiles", nargs="*", default=list(PROFILES))
+    ap.add_argument("--skip-train", action="store_true",
+                    help="reuse existing weights if present")
+    args = ap.parse_args()
+
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    os.makedirs(os.path.join(out, "weights"), exist_ok=True)
+
+    for name in args.profiles:
+        p = PROFILES[name]
+        wpath = os.path.join(out, "weights", f"{name}.tang")
+        if not (args.skip_train and os.path.exists(wpath)):
+            print(f"== training {name} "
+                  f"({p.param_count()/1e6:.1f}M params)", flush=True)
+            params = train.train_profile(p)
+            train.save_weights(p, params, wpath)
+        print(f"== lowering {name}", flush=True)
+        for tag, fn in (("eval", lower_eval), ("prefill", lower_prefill),
+                        ("decode", lower_decode)):
+            text = fn(p)
+            path = os.path.join(out, f"{name}.{tag}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"   {name}.{tag}.hlo.txt: {len(text)/1e6:.1f} MB",
+                  flush=True)
+
+    print("== lowering standalone kernels", flush=True)
+    kernel_paths = lower_kernels(out)
+    print("== golden vectors", flush=True)
+    write_golden(os.path.join(out, "golden"))
+    write_eval_data(out)
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(build_manifest(kernel_paths), f, indent=2)
+    print("== manifest.json written", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Seeded synthetic corpus — the WikiText-2 stand-in (DESIGN.md §2).
+
+Byte-level text with real sequential structure at three scales so that KV
+quantization error propagates through attention the way it does on natural
+text:
+
+  * a fixed random "lexicon" of words (letter n-gram model),
+  * sentences from a small template grammar with agreement constraints
+    (subject id must repeat later in the sentence — a long-range dependency
+    attention must carry),
+  * paragraphs with topic words that recur across sentences.
+
+Deterministic given (seed); train/val split by paragraph parity so the
+val stream is held out.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+BOS, EOS, PAD = 256, 257, 258
+VOCAB = 259
+
+_CONS = "bcdfghjklmnpqrstvwz"
+_VOWS = "aeiou"
+
+
+def _make_lexicon(rng: np.random.Generator, n_words: int) -> list[str]:
+    words = []
+    for _ in range(n_words):
+        syllables = rng.integers(1, 4)
+        w = "".join(
+            _CONS[rng.integers(len(_CONS))] + _VOWS[rng.integers(len(_VOWS))]
+            for _ in range(syllables)
+        )
+        words.append(w)
+    return words
+
+
+def generate_text(seed: int, n_paragraphs: int) -> str:
+    rng = np.random.default_rng(seed)
+    nouns = _make_lexicon(rng, 160)
+    verbs = _make_lexicon(rng, 80)
+    adjs = _make_lexicon(rng, 60)
+
+    paragraphs = []
+    for _ in range(n_paragraphs):
+        topic = nouns[rng.integers(len(nouns))]
+        sents = []
+        for _ in range(rng.integers(3, 8)):
+            subj = topic if rng.random() < 0.55 else nouns[rng.integers(len(nouns))]
+            verb = verbs[rng.integers(len(verbs))]
+            adj = adjs[rng.integers(len(adjs))]
+            obj = nouns[rng.integers(len(nouns))]
+            form = rng.integers(4)
+            if form == 0:
+                s = f"the {adj} {subj} {verb}s the {obj}"
+            elif form == 1:
+                s = f"a {subj} {verb}s and the {subj} {verb}s again"
+            elif form == 2:
+                s = f"when the {subj} {verb}s , the {obj} is {adj}"
+            else:
+                s = f"every {subj} that {verb}s becomes {adj} like the {topic}"
+            sents.append(s + " .")
+        paragraphs.append(" ".join(sents))
+    return "\n".join(paragraphs)
+
+
+def tokenize(text: str) -> np.ndarray:
+    return np.frombuffer(text.encode("utf-8"), dtype=np.uint8).astype(np.int32)
+
+
+def train_stream(seed: int, min_tokens: int) -> np.ndarray:
+    """Token stream for training (paragraph-structured, BOS separated)."""
+    chunks = []
+    total = 0
+    block = 0
+    while total < min_tokens:
+        text = generate_text(seed * 1000 + 2 * block, 50)  # even: train
+        toks = tokenize(text)
+        chunks.append(np.concatenate([[BOS], toks]))
+        total += toks.size + 1
+        block += 1
+    return np.concatenate(chunks)[:min_tokens].astype(np.int32)
+
+
+def val_chunks(seed: int, n_chunks: int, chunk_len: int) -> np.ndarray:
+    """Held-out evaluation chunks, shaped (n_chunks, chunk_len).
+
+    Mirrors the paper's protocol: a contiguous held-out stream divided into
+    non-overlapping fixed-length chunks (paper: 32 x 1024 on WikiText-2;
+    scaled via the manifest here)."""
+    chunks = []
+    total = 0
+    block = 0
+    while total < n_chunks * chunk_len:
+        text = generate_text(seed * 1000 + 2 * block + 1, 50)  # odd: val
+        toks = tokenize(text)
+        chunks.append(np.concatenate([[BOS], toks]))
+        total += toks.size + 1
+        block += 1
+    stream = np.concatenate(chunks)[: n_chunks * chunk_len]
+    return stream.reshape(n_chunks, chunk_len).astype(np.int32)
+
+
+def batches(stream: np.ndarray, batch: int, seq: int, steps: int,
+            seed: int):
+    """Yield (batch, seq+1) training windows sampled from the stream."""
+    rng = np.random.default_rng(seed)
+    hi = stream.size - (seq + 1)
+    for _ in range(steps):
+        idx = rng.integers(0, hi, size=batch)
+        yield np.stack([stream[i : i + seq + 1] for i in idx])

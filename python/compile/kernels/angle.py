@@ -1,0 +1,138 @@
+"""Pallas kernels: fused TurboAngle encode / decode (paper Alg. 1 + §3.1).
+
+encode: rotate (±1 diag) → FWHT → polar decompose consecutive pairs →
+        uniform angle quantization. Emits (r, k) with k stored as f32 bin
+        indices (bit-packing is the storage layer's job — rust kv_manager
+        or the norm/packing helpers).
+decode: trig lookup → inverse FWHT → unrotate.
+
+The bin count n is a RUNTIME operand (a (1,1) f32 carried through SMEM-style
+as a scalar block) so that one lowered artifact serves every MixedKV sweep
+point. All trig / floor runs on the VPU; the FWHT stages stay VMEM-resident
+per row-block (see fwht.py docstring for the TPU mapping).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fwht import _fwht_tile, DEFAULT_BLOCK_ROWS
+
+TWO_PI = 6.283185307179586
+
+
+def _encode_kernel(n_ref, x_ref, sign_ref, r_ref, k_ref, *, d: int):
+    rows = x_ref.shape[0]
+    y = _fwht_tile(x_ref[...] * sign_ref[...], d)
+    yp = y.reshape(rows, d // 2, 2)
+    even = yp[:, :, 0]
+    odd = yp[:, :, 1]
+    r_ref[...] = jnp.sqrt(even * even + odd * odd)
+    theta = jnp.arctan2(odd, even)
+    theta = jnp.where(theta < 0, theta + TWO_PI, theta)
+    n = n_ref[0, 0]
+    k_ref[...] = jnp.mod(jnp.floor(n * theta / TWO_PI), n)
+
+
+def _decode_kernel(n_ref, r_ref, k_ref, sign_ref, o_ref, *, d: int,
+                   centered: bool):
+    rows = r_ref.shape[0]
+    n = n_ref[0, 0]
+    k = k_ref[...] + 0.5 if centered else k_ref[...]
+    theta = TWO_PI * k / n
+    r = r_ref[...]
+    y = jnp.stack([r * jnp.cos(theta), r * jnp.sin(theta)], axis=-1)
+    y = y.reshape(rows, d)
+    o_ref[...] = _fwht_tile(y, d) * sign_ref[...]
+
+
+def _flatten_rows(x):
+    d = x.shape[-1]
+    lead = x.shape[:-1]
+    rows = 1
+    for s in lead:
+        rows *= s
+    return x.reshape(rows, d), lead, rows
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def encode(x: jax.Array, sign: jax.Array, n: jax.Array,
+           block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Fused TurboAngle encode. x: (..., d); sign: (d,); n: scalar bins.
+
+    Returns (r, k), each (..., d/2) f32."""
+    d = x.shape[-1]
+    assert d & (d - 1) == 0 and d >= 2
+    x2, lead, rows = _flatten_rows(x)
+    br = min(block_rows, max(rows, 1))
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    prows = x2.shape[0]
+    n2 = jnp.asarray(n, jnp.float32).reshape(1, 1)
+    sign2 = sign.reshape(1, d).astype(x2.dtype)
+    r, k = pl.pallas_call(
+        functools.partial(_encode_kernel, d=d),
+        out_shape=(
+            jax.ShapeDtypeStruct((prows, d // 2), x2.dtype),
+            jax.ShapeDtypeStruct((prows, d // 2), x2.dtype),
+        ),
+        grid=(prows // br,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((br, d // 2), lambda i: (i, 0)),
+            pl.BlockSpec((br, d // 2), lambda i: (i, 0)),
+        ),
+        interpret=True,
+    )(n2, x2, sign2)
+    if pad:
+        r, k = r[:rows], k[:rows]
+    return r.reshape(*lead, d // 2), k.reshape(*lead, d // 2)
+
+
+@functools.partial(jax.jit, static_argnames=("centered", "block_rows"))
+def decode(r: jax.Array, k: jax.Array, sign: jax.Array, n: jax.Array,
+           centered: bool = False, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Fused TurboAngle decode. r, k: (..., d/2); returns x_hat (..., d)."""
+    half = r.shape[-1]
+    d = 2 * half
+    r2, lead, rows = _flatten_rows(r)
+    k2, _, _ = _flatten_rows(k)
+    br = min(block_rows, max(rows, 1))
+    pad = (-rows) % br
+    if pad:
+        r2 = jnp.pad(r2, ((0, pad), (0, 0)))
+        k2 = jnp.pad(k2, ((0, pad), (0, 0)))
+    prows = r2.shape[0]
+    n2 = jnp.asarray(n, jnp.float32).reshape(1, 1)
+    sign2 = sign.reshape(1, d).astype(r2.dtype)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, d=d, centered=centered),
+        out_shape=jax.ShapeDtypeStruct((prows, d), r2.dtype),
+        grid=(prows // br,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((br, half), lambda i: (i, 0)),
+            pl.BlockSpec((br, half), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        interpret=True,
+    )(n2, r2, k2, sign2)
+    if pad:
+        out = out[:rows]
+    return out.reshape(*lead, d)
+
+
+def quant_dequant(x, sign, n, centered: bool = False):
+    """encode→decode roundtrip through the Pallas kernels (fp32 norms)."""
+    r, k = encode(x, sign, n)
+    return decode(r, k, sign, n, centered=centered)

@@ -1,0 +1,74 @@
+"""Pallas kernel: normalized Fast Walsh-Hadamard transform over the head dim.
+
+TPU adaptation of the paper's PyTorch in-place butterfly (§3.1 Implementation
+and DESIGN.md §Hardware-Adaptation): the grid blocks over rows (tokens×heads),
+each grid step holds a (block_rows, d) tile in VMEM and runs all log2(d)
+butterfly stages VMEM-resident — the HBM↔VMEM schedule the GPU code expressed
+with threadblocks is expressed here with a BlockSpec.
+
+interpret=True is mandatory in this environment (CPU PJRT cannot execute
+Mosaic custom-calls); the kernel structure is TPU-shaped regardless.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _fwht_tile(y: jax.Array, d: int) -> jax.Array:
+    """All butterfly stages on a VMEM-resident (rows, d) tile.
+
+    Unrolled at trace time (log2(d) stages); each stage is a reshape +
+    elementwise add/sub, which Mosaic lowers to intra-tile vector ops for
+    d <= 128 (one lane tile)."""
+    rows = y.shape[0]
+    h = 1
+    while h < d:
+        yb = y.reshape(rows, d // (2 * h), 2, h)
+        a = yb[:, :, 0, :]
+        b = yb[:, :, 1, :]
+        y = jnp.concatenate([a + b, a - b], axis=-1).reshape(rows, d)
+        h *= 2
+    return y * (1.0 / jnp.sqrt(jnp.asarray(d, dtype=y.dtype)))
+
+
+def _fwht_kernel(x_ref, o_ref, *, d: int):
+    o_ref[...] = _fwht_tile(x_ref[...], d)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def fwht(x: jax.Array, block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
+    """Normalized FWHT over the last axis via a row-blocked Pallas kernel.
+
+    Accepts any leading shape; rows are flattened, padded to a multiple of
+    block_rows, and streamed through the grid.
+    """
+    d = x.shape[-1]
+    assert d & (d - 1) == 0, f"FWHT length must be a power of 2, got {d}"
+    lead = x.shape[:-1]
+    rows = 1
+    for s in lead:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    br = min(block_rows, max(rows, 1))
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    grid = (x2.shape[0] // br,)
+    out = pl.pallas_call(
+        functools.partial(_fwht_kernel, d=d),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x2.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        interpret=True,
+    )(x2)
+    if pad:
+        out = out[:rows]
+    return out.reshape(*lead, d)

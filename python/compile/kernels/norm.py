@@ -1,0 +1,69 @@
+"""Pallas kernel: per-vector min-max norm quantization (paper §3.3, Eq. 2).
+
+Quantizes the d/2 pair norms of each vector to `bits` levels, linear or
+log-space, with per-vector fp32 min/max (the 64/d overhead term in Eq. 3).
+`bits` and `log_space` are runtime scalars so one artifact covers fp32 /
+norm8 / K8V4-log configurations. bits == 0 → passthrough (fp32 norms).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fwht import DEFAULT_BLOCK_ROWS
+
+
+def _norm_quant_kernel(cfg_ref, r_ref, o_ref):
+    bits = cfg_ref[0, 0]
+    log_space = cfg_ref[0, 1] > 0.5
+    r = r_ref[...]
+    levels = jnp.exp2(bits) - 1.0
+    v = jnp.where(log_space, jnp.log(jnp.maximum(r, 1e-12)), r)
+    vmin = jnp.min(v, axis=-1, keepdims=True)
+    vmax = jnp.max(v, axis=-1, keepdims=True)
+    scale = jnp.where(vmax > vmin, vmax - vmin, 1.0)
+    q = jnp.round((v - vmin) / scale * levels)
+    vhat = vmin + q * scale / jnp.maximum(levels, 1.0)
+    rhat = jnp.where(log_space, jnp.exp(vhat), vhat)
+    o_ref[...] = jnp.where(bits > 0, rhat, r)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def quantize_norms(r: jax.Array, bits: jax.Array, log_space: jax.Array,
+                   block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
+    """Quant-dequant the per-pair norms. r: (..., d/2) with one min-max
+
+    window per trailing vector (matches Eq. 3's 64-bit/vector overhead)."""
+    half = r.shape[-1]
+    lead = r.shape[:-1]
+    rows = 1
+    for s in lead:
+        rows *= s
+    r2 = r.reshape(rows, half)
+    br = min(block_rows, max(rows, 1))
+    pad = (-rows) % br
+    if pad:
+        # pad rows are quantized independently (per-vector min-max) and
+        # discarded, so padding with ones is safe even in log space.
+        r2 = jnp.pad(r2, ((0, pad), (0, 0)), constant_values=1.0)
+    prows = r2.shape[0]
+    cfg = jnp.stack([jnp.asarray(bits, jnp.float32),
+                     jnp.asarray(log_space, jnp.float32)]).reshape(1, 2)
+    out = pl.pallas_call(
+        _norm_quant_kernel,
+        out_shape=jax.ShapeDtypeStruct((prows, half), r2.dtype),
+        grid=(prows // br,),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            pl.BlockSpec((br, half), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, half), lambda i: (i, 0)),
+        interpret=True,
+    )(cfg, r2)
+    if pad:
+        out = out[:rows]
+    return out.reshape(*lead, half)

@@ -1,0 +1,211 @@
+"""Pure-jnp reference oracle for every kernel in this package.
+
+This module is the single source of truth for correctness: the Pallas
+kernels (fwht.py / angle.py / norm.py) and the Rust-native quantizer
+(rust/src/quant/) are both validated against it — the Pallas path via
+pytest+hypothesis, the Rust path via golden vectors emitted by
+python/tests/gen_golden.py.
+
+All functions are pure, vmappable, and operate on the *last* axis
+(the head dimension d).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TWO_PI = 2.0 * np.pi
+
+
+# ---------------------------------------------------------------------------
+# Fast Walsh-Hadamard transform
+# ---------------------------------------------------------------------------
+
+def fwht(x: jax.Array) -> jax.Array:
+    """Normalized FWHT over the last axis (length must be a power of two).
+
+    Self-inverse: fwht(fwht(x)) == x. Norm-preserving (orthonormal).
+    """
+    d = x.shape[-1]
+    assert d & (d - 1) == 0, f"FWHT length must be a power of 2, got {d}"
+    h = 1
+    y = x
+    while h < d:
+        # reshape into (..., blocks, 2, h): butterfly pairs distance h apart
+        shape = y.shape[:-1] + (d // (2 * h), 2, h)
+        yb = y.reshape(shape)
+        a = yb[..., 0, :]
+        b = yb[..., 1, :]
+        y = jnp.concatenate([a + b, a - b], axis=-1).reshape(y.shape)
+        h *= 2
+    return y / jnp.sqrt(jnp.asarray(d, dtype=y.dtype))
+
+
+def make_sign_diag(d: int, seed: int) -> np.ndarray:
+    """The shared random ±1 diagonal D (paper §3.1): one seeded draw,
+    shared across all layers, heads and tokens."""
+    rng = np.random.default_rng(seed)
+    return rng.choice(np.array([-1.0, 1.0], dtype=np.float32), size=d)
+
+
+def rotate(x: jax.Array, sign: jax.Array) -> jax.Array:
+    """y = H · D · x."""
+    return fwht(x * sign)
+
+
+def unrotate(y: jax.Array, sign: jax.Array) -> jax.Array:
+    """x = D · H · y (H and D are self-inverse)."""
+    return fwht(y) * sign
+
+
+# ---------------------------------------------------------------------------
+# TurboAngle: polar decomposition + uniform angle quantization (Alg. 1)
+# ---------------------------------------------------------------------------
+
+def polar_decompose(y: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Split last axis into consecutive pairs, return (r, theta), each (..., d/2).
+
+    theta in [0, 2pi)."""
+    even = y[..., 0::2]
+    odd = y[..., 1::2]
+    r = jnp.sqrt(even * even + odd * odd)
+    theta = jnp.arctan2(odd, even)  # (-pi, pi]
+    theta = jnp.where(theta < 0, theta + TWO_PI, theta)
+    return r, theta
+
+
+def quantize_angle(theta: jax.Array, n: jax.Array) -> jax.Array:
+    """k = floor(n * theta / 2pi) mod n (Alg. 1 line 5). n may be a traced scalar."""
+    n = jnp.asarray(n, dtype=theta.dtype)
+    k = jnp.floor(n * theta / TWO_PI)
+    return jnp.mod(k, n)
+
+
+def dequantize_angle(k: jax.Array, n: jax.Array, centered: bool = False) -> jax.Array:
+    """theta_hat = 2pi*k/n (paper default: bin LEFT edge; §3.1 reconstruction).
+
+    centered=True uses the half-bin-corrected (k+0.5) variant (our ablation)."""
+    n = jnp.asarray(n, dtype=jnp.float32)
+    kk = k + 0.5 if centered else k
+    return TWO_PI * kk / n
+
+
+def encode(x: jax.Array, sign: jax.Array, n: jax.Array):
+    """Full TurboAngle encode path: returns (r, k) each shaped (..., d/2)."""
+    y = rotate(x, sign)
+    r, theta = polar_decompose(y)
+    k = quantize_angle(theta, n)
+    return r, k
+
+
+def decode(r: jax.Array, k: jax.Array, sign: jax.Array, n: jax.Array,
+           centered: bool = False) -> jax.Array:
+    """Reconstruct x_hat = D·H·y_hat from stored (r, k)."""
+    theta = dequantize_angle(k, n, centered)
+    even = r * jnp.cos(theta)
+    odd = r * jnp.sin(theta)
+    y = jnp.stack([even, odd], axis=-1).reshape(r.shape[:-1] + (2 * r.shape[-1],))
+    return unrotate(y, sign)
+
+
+def quant_dequant(x: jax.Array, sign: jax.Array, n: jax.Array,
+                  centered: bool = False) -> jax.Array:
+    """encode→decode roundtrip with fp32 norms (the Table-1/2 setting)."""
+    r, k = encode(x, sign, n)
+    return decode(r, k, sign, n, centered)
+
+
+# ---------------------------------------------------------------------------
+# Norm quantization (§3.3)
+# ---------------------------------------------------------------------------
+
+def quantize_norms(r: jax.Array, bits: jax.Array, log_space) -> jax.Array:
+    """Per-vector min-max scalar quant-dequant of the d/2 pair norms (Eq. 2).
+
+    `bits` may be a traced scalar; bits == 0 means fp32 passthrough.
+    log_space=True quantizes log(r) instead of r (strictly-positive norms;
+    zero norms are clamped to a tiny epsilon first). log_space may also be a
+    traced 0/1 scalar.
+    """
+    bits = jnp.asarray(bits, dtype=jnp.float32)
+    log_space = jnp.asarray(log_space, dtype=bool)
+    levels = jnp.exp2(bits) - 1.0
+    v = jnp.where(log_space, jnp.log(jnp.maximum(r, 1e-12)), r)
+    vmin = jnp.min(v, axis=-1, keepdims=True)
+    vmax = jnp.max(v, axis=-1, keepdims=True)
+    scale = jnp.where(vmax > vmin, (vmax - vmin), 1.0)
+    q = jnp.round((v - vmin) / scale * levels)
+    vhat = vmin + q * scale / jnp.maximum(levels, 1.0)
+    rhat = jnp.where(log_space, jnp.exp(vhat), vhat)
+    return jnp.where(bits > 0, rhat, r)
+
+
+def quant_dequant_full(x, sign, n, norm_bits, norm_log, centered: bool = False):
+    """Angle + norm quantization end-to-end (the Table-5 setting)."""
+    y = rotate(x, sign)
+    r, theta = polar_decompose(y)
+    k = quantize_angle(theta, n)
+    r = quantize_norms(r, norm_bits, norm_log)
+    return decode(r, k, sign, n, centered)
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+
+def tq_scalar_g(x: jax.Array, sign: jax.Array, bits, group: int = 4) -> jax.Array:
+    """TurboQuant sym{bits}-g{group}: FWHT+rotation, then symmetric scalar
+    quantization with per-group absmax scale (groups along the last axis).
+
+    Mirrors [13] as described in §5: a generic scalar quantizer applied to
+    the rotated (approximately Gaussian) coordinates. `bits` may be traced.
+    """
+    y = rotate(x, sign)
+    d = y.shape[-1]
+    assert d % group == 0
+    g = y.reshape(y.shape[:-1] + (d // group, group))
+    scale = jnp.max(jnp.abs(g), axis=-1, keepdims=True)
+    scale = jnp.where(scale > 0, scale, 1.0)
+    # clamp: scalar modes receive the per-layer config array as BITS; a
+    # mis-sent bin count (e.g. 128) must degrade to no-op, not overflow.
+    qmax = jnp.exp2(jnp.minimum(jnp.asarray(bits, jnp.float32), 16.0) - 1.0) - 1.0
+    q = jnp.clip(jnp.round(g / scale * qmax), -qmax, qmax)
+    ghat = q / qmax * scale
+    yhat = ghat.reshape(y.shape)
+    return unrotate(yhat, sign)
+
+
+def kivi_channel_asym(x: jax.Array, bits) -> jax.Array:
+    """KIVI-style per-channel asymmetric quant on RAW activations (no rotate).
+
+    Channel = last-axis position; min/max taken over the token axis (axis -2),
+    standing in for the calibration statistics KIVI computes per channel.
+    """
+    vmin = jnp.min(x, axis=-2, keepdims=True)
+    vmax = jnp.max(x, axis=-2, keepdims=True)
+    levels = jnp.exp2(jnp.minimum(jnp.asarray(bits, jnp.float32), 16.0)) - 1.0
+    scale = jnp.where(vmax > vmin, vmax - vmin, 1.0)
+    q = jnp.round((x - vmin) / scale * levels)
+    return vmin + q * scale / levels
+
+
+def kvquant_vector_outlier(x: jax.Array, bits, outlier_frac: float = 0.01):
+    """KVQuant-style per-vector quant with the top-|x| fraction kept in fp.
+
+    Outliers (per vector, by magnitude) bypass quantization — the '1%' in
+    KVQuant-4b-1%.
+    """
+    d = x.shape[-1]
+    n_out = max(1, int(round(outlier_frac * d)))
+    mag = jnp.abs(x)
+    thresh = jnp.sort(mag, axis=-1)[..., d - n_out][..., None]
+    is_out = mag >= thresh
+    vmin = jnp.min(jnp.where(is_out, jnp.inf, x), axis=-1, keepdims=True)
+    vmax = jnp.max(jnp.where(is_out, -jnp.inf, x), axis=-1, keepdims=True)
+    levels = jnp.exp2(jnp.minimum(jnp.asarray(bits, jnp.float32), 16.0)) - 1.0
+    scale = jnp.where(vmax > vmin, vmax - vmin, 1.0)
+    q = jnp.round((x - vmin) / scale * levels)
+    xhat = vmin + jnp.clip(q, 0, levels) * scale / levels
+    return jnp.where(is_out, x, xhat)

@@ -1,0 +1,371 @@
+"""L2: the transformer whose KV cache is quantized in-graph.
+
+A GQA decoder (RMSNorm + RoPE + SwiGLU, tied embeddings) with the TurboAngle
+quantizer applied to the K/V tensors every layer, exactly where a serving
+system stores them (post-RoPE K, raw V). Layers run under `lax.scan` over
+stacked parameters so per-layer quantizer configuration is a *runtime* input:
+
+    nk, nv    f32[L]    per-layer angle codebook sizes (or bits for scalar
+                        baseline modes) — the per-layer MixedKV knob (§3.2)
+    norm_cfg  f32[4]    [k_norm_bits, k_log, v_norm_bits, v_log]; 0 bits=fp32
+    mode      i32[]     0=none  1=angle(left-edge, paper Alg.1)
+                        2=angle(centered ablation) 3=TurboQuant sym-g4
+                        4=KIVI-style per-channel 5=KVQuant-style 1%-outlier
+
+One lowered artifact therefore serves every sweep point of every table.
+
+Entry points lowered by aot.py:
+    eval_fwd     — teacher-forced NLL over a chunk batch (PPL harness)
+    prefill      — prompt → compressed KV (angle idx + pair norms) + logits
+    decode_step  — one token step over a compressed cache (the request path)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .kernels import angle as kangle
+from .kernels import norm as knorm
+from .kernels import ref as kref
+from .corpus import PAD
+from .profiles import ModelProfile
+
+# parameter list order — the runtime contract (recorded in manifest.json and
+# asserted by rust/src/runtime/manifest.rs)
+PARAM_ORDER = [
+    "embed", "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+    "ln1", "ln2", "ln_f",
+]
+
+
+# ---------------------------------------------------------------------------
+# Init / shapes
+# ---------------------------------------------------------------------------
+
+def param_shapes(p: ModelProfile) -> dict[str, tuple[int, ...]]:
+    L, D, F = p.n_layers, p.d_model, p.d_ff
+    kvd = p.n_kv_heads * p.d_head
+    return {
+        "embed": (p.vocab, D),
+        "wq": (L, D, D),
+        "wk": (L, D, kvd),
+        "wv": (L, D, kvd),
+        "wo": (L, D, D),
+        "w_gate": (L, D, F),
+        "w_up": (L, D, F),
+        "w_down": (L, F, D),
+        "ln1": (L, D),
+        "ln2": (L, D),
+        "ln_f": (D,),
+    }
+
+
+def init_params(p: ModelProfile, seed: int) -> list[jax.Array]:
+    rng = np.random.default_rng(seed)
+    shapes = param_shapes(p)
+    out = []
+    for name in PARAM_ORDER:
+        shape = shapes[name]
+        if name.startswith("ln"):
+            arr = np.ones(shape, np.float32)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            arr = rng.normal(0.0, fan_in ** -0.5, size=shape).astype(np.float32)
+        out.append(jnp.asarray(arr))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * lax.rsqrt(ms + eps) * w
+
+
+def rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """Llama-style rotary embedding. x: (B, H, T, dh); pos: (T,) or (B, T)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[..., None].astype(jnp.float32) * freqs  # (..., T, half)
+    if ang.ndim == 2:  # (T, half) -> broadcast over B, H
+        ang = ang[None, None]
+    else:  # (B, T, half) -> broadcast over H
+        ang = ang[:, None]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _angle_qd(x, sign, n, norm_bits, norm_log, centered):
+    """Angle quant-dequant with optional norm quantization, through the
+
+    Pallas kernels (they lower into this same HLO)."""
+    r, k = kangle.encode(x, sign, n)
+    r = knorm.quantize_norms(r, norm_bits, norm_log)
+    return kangle.decode(r, k, sign, n, centered=centered)
+
+
+def quant_kv(k, v, sign, nk_l, nv_l, norm_cfg, mode):
+    """Quant-dequant the per-layer KV tensors according to `mode`.
+
+    k, v: (B, Hkv, T, dh). nk_l/nv_l: scalars for THIS layer (bins, or bits
+    for scalar baseline modes)."""
+
+    def m_none(k, v):
+        return k, v
+
+    def m_angle(k, v):
+        return (_angle_qd(k, sign, nk_l, norm_cfg[0], norm_cfg[1], False),
+                _angle_qd(v, sign, nv_l, norm_cfg[2], norm_cfg[3], False))
+
+    def m_angle_centered(k, v):
+        return (_angle_qd(k, sign, nk_l, norm_cfg[0], norm_cfg[1], True),
+                _angle_qd(v, sign, nv_l, norm_cfg[2], norm_cfg[3], True))
+
+    def m_tq(k, v):
+        return (kref.tq_scalar_g(k, sign, nk_l),
+                kref.tq_scalar_g(v, sign, nv_l))
+
+    def m_kivi(k, v):
+        return (kref.kivi_channel_asym(k, nk_l),
+                kref.kivi_channel_asym(v, nv_l))
+
+    def m_kvquant(k, v):
+        return (kref.kvquant_vector_outlier(k, nk_l),
+                kref.kvquant_vector_outlier(v, nv_l))
+
+    return lax.switch(
+        mode, [m_none, m_angle, m_angle_centered, m_tq, m_kivi, m_kvquant],
+        k, v)
+
+
+def _split_heads(x, n_heads, d_head):
+    b, t, _ = x.shape
+    return x.reshape(b, t, n_heads, d_head).transpose(0, 2, 1, 3)
+
+
+def _attend(q, k, v, mask, gqa: int):
+    """q: (B,Hq,Tq,dh); k,v: (B,Hkv,Tk,dh); mask broadcastable (Tq,Tk)."""
+    if gqa > 1:
+        k = jnp.repeat(k, gqa, axis=1)
+        v = jnp.repeat(v, gqa, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(q.shape[-1])
+    scores = jnp.where(mask, scores, -1e30)
+    return jnp.einsum("bhqk,bhkv->bhqv", jax.nn.softmax(scores, axis=-1), v)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training + PPL eval)
+# ---------------------------------------------------------------------------
+
+def forward(p: ModelProfile, params, tokens, sign, nk, nv, norm_cfg, mode,
+            enable_quant: bool = True):
+    """Teacher-forced forward. tokens: (B, T) int32 inputs. Returns logits
+
+    (B, T, V). KV quant-dequant applied at every layer (mode 0 disables at
+    runtime; enable_quant=False removes it at TRACE time — the training path
+    must not differentiate through the interpret-mode Pallas calls)."""
+    (embed, wq, wk, wv, wo, wg, wu, wd, ln1, ln2, ln_f) = params
+    B, T = tokens.shape
+    x = embed[tokens]
+    pos = jnp.arange(T)
+    causal = jnp.tril(jnp.ones((T, T), bool))
+
+    def layer(x, xs):
+        (wq_l, wk_l, wv_l, wo_l, wg_l, wu_l, wd_l, ln1_l, ln2_l,
+         nk_l, nv_l) = xs
+        h = rmsnorm(x, ln1_l)
+        q = _split_heads(h @ wq_l, p.n_q_heads, p.d_head)
+        k = _split_heads(h @ wk_l, p.n_kv_heads, p.d_head)
+        v = _split_heads(h @ wv_l, p.n_kv_heads, p.d_head)
+        q = rope(q, pos, p.rope_theta)
+        k = rope(k, pos, p.rope_theta)
+        # quantize exactly what a serving system stores: post-RoPE K, raw V
+        if enable_quant:
+            k, v = quant_kv(k, v, sign, nk_l, nv_l, norm_cfg, mode)
+        att = _attend(q, k, v, causal, p.gqa_ratio)
+        att = att.transpose(0, 2, 1, 3).reshape(B, T, p.d_model)
+        x = x + att @ wo_l
+        h2 = rmsnorm(x, ln2_l)
+        x = x + (jax.nn.silu(h2 @ wg_l) * (h2 @ wu_l)) @ wd_l
+        return x, None
+
+    xs = (wq, wk, wv, wo, wg, wu, wd, ln1, ln2, nk, nv)
+    x, _ = lax.scan(layer, x, xs)
+    x = rmsnorm(x, ln_f)
+    return x @ embed.T
+
+
+def eval_fwd(p: ModelProfile, params, tokens, sign, nk, nv, norm_cfg, mode,
+             enable_quant: bool = True):
+    """tokens: (B, T+1). Returns (nll_sum (B,), token_count (B,)) — the PPL
+
+    harness in rust reduces these across chunk batches."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(p, params, inputs, sign, nk, nv, norm_cfg, mode,
+                     enable_quant)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    valid = (targets != PAD).astype(jnp.float32)
+    return (nll * valid).sum(axis=-1), valid.sum(axis=-1)
+
+
+def loss_fn(p: ModelProfile, params, tokens, sign, nk, nv, norm_cfg, mode,
+            enable_quant: bool = True):
+    nll, cnt = eval_fwd(p, params, tokens, sign, nk, nv, norm_cfg, mode,
+                        enable_quant)
+    return nll.sum() / cnt.sum()
+
+
+# ---------------------------------------------------------------------------
+# Serving path: prefill + decode over a compressed cache
+# ---------------------------------------------------------------------------
+
+def _layer_common(p, h, wq_l, wk_l, wv_l, positions):
+    q = _split_heads(h @ wq_l, p.n_q_heads, p.d_head)
+    k = _split_heads(h @ wk_l, p.n_kv_heads, p.d_head)
+    v = _split_heads(h @ wv_l, p.n_kv_heads, p.d_head)
+    q = rope(q, positions, p.rope_theta)
+    k = rope(k, positions, p.rope_theta)
+    return q, k, v
+
+
+def prefill(p: ModelProfile, params, tokens, length, sign, nk, nv,
+            norm_cfg, mode):
+    """Prompt pass. tokens: (B, Tp) PAD-padded; length: (B,) true lengths.
+
+    Returns (logits_last (B,V),
+             kr, ki, vr, vi  each (L, B, Hkv, Tp, dh/2)):
+    the compressed cache (pair norms f32 + angle indices f32) the rust
+    kv_manager bit-packs and owns from then on. Attention during prefill uses
+    the QUANTIZED cache (mode 1/2), matching the decode path."""
+    (embed, wq, wk, wv, wo, wg, wu, wd, ln1, ln2, ln_f) = params
+    B, T = tokens.shape
+    x = embed[tokens]
+    pos = jnp.arange(T)
+    causal = jnp.tril(jnp.ones((T, T), bool)) & (pos[None, :] < length[:, None])[:, None, :]
+    # causal: (B, T, T) -> (B, 1, T, T) for heads
+    causal = causal[:, None]
+    centered = mode == 2
+
+    def layer(x, xs):
+        (wq_l, wk_l, wv_l, wo_l, wg_l, wu_l, wd_l, ln1_l, ln2_l,
+         nk_l, nv_l) = xs
+        h = rmsnorm(x, ln1_l)
+        q, k, v = _layer_common(p, h, wq_l, wk_l, wv_l, pos)
+        kr, ki = kangle.encode(k, sign, nk_l)
+        vr, vi = kangle.encode(v, sign, nv_l)
+        krq = knorm.quantize_norms(kr, norm_cfg[0], norm_cfg[1])
+        vrq = knorm.quantize_norms(vr, norm_cfg[2], norm_cfg[3])
+        kd = _decode_pair(krq, ki, sign, nk_l, centered)
+        vd = _decode_pair(vrq, vi, sign, nv_l, centered)
+        att = _attend(q, kd, vd, causal, p.gqa_ratio)
+        att = att.transpose(0, 2, 1, 3).reshape(B, T, p.d_model)
+        x = x + att @ wo_l
+        h2 = rmsnorm(x, ln2_l)
+        x = x + (jax.nn.silu(h2 @ wg_l) * (h2 @ wu_l)) @ wd_l
+        return x, (kr, ki, vr, vi)
+
+    xs = (wq, wk, wv, wo, wg, wu, wd, ln1, ln2, nk, nv)
+    x, caches = lax.scan(layer, x, xs)
+    x = rmsnorm(x, ln_f)
+    logits = x @ embed.T  # (B, T, V)
+    last = jnp.take_along_axis(
+        logits, (length - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    return (last, *caches)
+
+
+def _decode_pair(r, k, sign, n, centered):
+    return jnp.where(centered,
+                     kangle.decode(r, k, sign, n, centered=True),
+                     kangle.decode(r, k, sign, n, centered=False))
+
+
+def decode_step(p: ModelProfile, params, token, pos_b, sign, nk, nv,
+                norm_cfg, mode, kr, ki, vr, vi):
+    """One generation step over the compressed cache (the REQUEST PATH).
+
+    token: (B,) int32 current tokens; pos_b: (B,) int32 cache fill counts.
+    kr/ki/vr/vi: (L, B, Hkv, Tmax, dh/2) — pair norms (already norm-
+    dequantized by rust; it owns min/max) and angle indices as f32.
+    Returns (logits (B, V),
+             new_kr, new_ki, new_vr, new_vi  each (L, B, Hkv, dh/2))
+    — the current token's compressed KV entry for rust to pack + store.
+    Only angle modes are meaningful here (mode 2 = centered decode)."""
+    (embed, wq, wk, wv, wo, wg, wu, wd, ln1, ln2, ln_f) = params
+    B = token.shape[0]
+    Tmax = kr.shape[3]
+    x = embed[token][:, None]  # (B, 1, D)
+    centered = mode == 2
+    # mask over cache slots: slot t visible iff t < pos_b
+    slot = jnp.arange(Tmax)
+    mask_cache = (slot[None, :] < pos_b[:, None])[:, None, None, :]  # (B,1,1,T)
+    mask = jnp.concatenate(
+        [mask_cache, jnp.ones((B, 1, 1, 1), bool)], axis=-1)  # + self
+
+    def layer(x, xs):
+        (wq_l, wk_l, wv_l, wo_l, wg_l, wu_l, wd_l, ln1_l, ln2_l,
+         nk_l, nv_l, kr_l, ki_l, vr_l, vi_l) = xs
+        h = rmsnorm(x, ln1_l)
+        q, k_new, v_new = _layer_common(p, h, wq_l, wk_l, wv_l,
+                                        pos_b[:, None])
+        kc = _decode_pair(kr_l, ki_l, sign, nk_l, centered)  # (B,H,Tmax,dh)
+        vc = _decode_pair(vr_l, vi_l, sign, nv_l, centered)
+        k_all = jnp.concatenate([kc, k_new], axis=2)
+        v_all = jnp.concatenate([vc, v_new], axis=2)
+        att = _attend(q, k_all, v_all, mask, p.gqa_ratio)
+        att = att.transpose(0, 2, 1, 3).reshape(B, 1, p.d_model)
+        x = x + att @ wo_l
+        h2 = rmsnorm(x, ln2_l)
+        x = x + (jax.nn.silu(h2 @ wg_l) * (h2 @ wu_l)) @ wd_l
+        nkr, nki = kangle.encode(k_new, sign, nk_l)
+        nvr, nvi = kangle.encode(v_new, sign, nv_l)
+        # squeeze the T=1 axis -> (B, Hkv, dh/2)
+        return x, (nkr[:, :, 0], nki[:, :, 0], nvr[:, :, 0], nvi[:, :, 0])
+
+    xs = (wq, wk, wv, wo, wg, wu, wd, ln1, ln2, nk, nv, kr, ki, vr, vi)
+    x, new_kv = lax.scan(layer, x, xs)
+    x = rmsnorm(x, ln_f)
+    logits = (x @ embed.T)[:, 0]
+    return (logits, *new_kv)
+
+
+# ---------------------------------------------------------------------------
+# Training (build-time only)
+# ---------------------------------------------------------------------------
+
+def make_train_step(p: ModelProfile):
+    """AdamW + cosine schedule; quantization disabled during training."""
+    L = p.n_layers
+    nk = jnp.full((L,), 128.0)
+    nv = jnp.full((L,), 64.0)
+    norm_cfg = jnp.zeros((4,))
+    mode = jnp.int32(0)
+
+    def loss(params, tokens, sign):
+        return loss_fn(p, params, tokens, sign, nk, nv, norm_cfg, mode,
+                       enable_quant=False)
+
+    @jax.jit
+    def step(params, m, v, tokens, sign, lr):
+        l, g = jax.value_and_grad(loss)(params, tokens, sign)
+        b1, b2, eps, wdecay = 0.9, 0.95, 1e-8, 1e-4
+        new_params, new_m, new_v = [], [], []
+        for pa, ma, va, ga in zip(params, m, v, g):
+            ma = b1 * ma + (1 - b1) * ga
+            va = b2 * va + (1 - b2) * ga * ga
+            upd = ma / (jnp.sqrt(va) + eps) + wdecay * pa
+            new_params.append(pa - lr * upd)
+            new_m.append(ma)
+            new_v.append(va)
+        return new_params, new_m, new_v, l
+
+    return step

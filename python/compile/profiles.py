@@ -1,0 +1,80 @@
+"""Simulated model profiles (DESIGN.md §5).
+
+Each profile mirrors one of the paper's seven evaluation models in the
+dimensions that drive every experiment — layer count, head dimension, GQA
+grouping — at a width tiny enough to train at build time on one CPU core.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict, field
+
+
+@dataclass(frozen=True)
+class ModelProfile:
+    name: str
+    mirrors: str
+    n_layers: int
+    d_head: int
+    n_q_heads: int
+    n_kv_heads: int
+    d_model: int
+    d_ff: int
+    vocab: int = 259  # 256 bytes + BOS/EOS/PAD
+    rope_theta: float = 10000.0
+    train_steps: int = 200
+    train_batch: int = 6
+    train_seq: int = 96
+    lr: float = 3e-3
+    seed: int = 7
+
+    def __post_init__(self):
+        assert self.d_model == self.n_q_heads * self.d_head
+        assert self.n_q_heads % self.n_kv_heads == 0
+        assert self.d_head & (self.d_head - 1) == 0
+
+    @property
+    def gqa_ratio(self) -> int:
+        return self.n_q_heads // self.n_kv_heads
+
+    def param_count(self) -> int:
+        d, f, dh = self.d_model, self.d_ff, self.d_head
+        per_layer = (
+            d * self.n_q_heads * dh          # wq
+            + 2 * d * self.n_kv_heads * dh   # wk, wv
+            + self.n_q_heads * dh * d        # wo
+            + 3 * d * f                      # gate, up, down
+            + 2 * d                          # ln1, ln2
+        )
+        return self.n_layers * per_layer + self.vocab * d + d
+
+    def to_dict(self) -> dict:
+        out = asdict(self)
+        out["gqa_ratio"] = self.gqa_ratio
+        out["param_count"] = self.param_count()
+        return out
+
+
+# Layer counts and head dims match the paper's models exactly; widths are
+# scaled down and GQA ratios adapted to the tiny widths (DESIGN.md §2).
+PROFILES: dict[str, ModelProfile] = {
+    p.name: p
+    for p in [
+        ModelProfile("tinyllama-sim", "TinyLlama-1.1B", 22, 64, 4, 2, 256, 512,
+                     train_steps=150, train_batch=4),
+        ModelProfile("mistral-sim", "Mistral-7B-v0.1", 32, 128, 2, 1, 256, 384,
+                     train_steps=120, train_batch=4),
+        ModelProfile("smollm2-sim", "SmolLM2-1.7B", 24, 64, 2, 1, 128, 256),
+        ModelProfile("phi15-sim", "phi-1.5", 24, 64, 2, 2, 128, 256),
+        ModelProfile("stablelm2-sim", "StableLM-2-1.6B", 32, 64, 2, 1, 128, 256),
+        ModelProfile("starcoder2-sim", "StarCoder2-3B", 40, 64, 2, 1, 128, 256,
+                     train_steps=150),
+        ModelProfile("olmo-sim", "OLMo-1B", 32, 64, 2, 2, 128, 256),
+    ]
+}
+
+# The profile used by quickstart / serving examples and integration tests.
+DEFAULT_PROFILE = "smollm2-sim"
+
+# Global D seed (paper: one seeded draw shared across layers/heads/tokens).
+SIGN_SEED = 20260331

@@ -1,0 +1,72 @@
+"""Tiny binary tensor container — the build→runtime weight interchange.
+
+Layout (little-endian):
+    magic   b"TANG"
+    u32     version (1)
+    u32     tensor count
+    per tensor:
+        u16  name length, then name bytes (utf-8)
+        u8   dtype: 0=f32, 1=i32, 2=u8
+        u8   ndim
+        u32  dims[ndim]
+        u64  payload byte length
+        raw  payload (C-contiguous)
+
+Mirrored by rust/src/runtime/tensorfile.rs; both sides are round-trip
+tested against each other via artifacts/golden/.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"TANG"
+VERSION = 1
+_DTYPES = {0: np.float32, 1: np.int32, 2: np.uint8}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1, np.dtype(np.uint8): 2}
+
+
+def write(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors.items():
+            # np.asarray (NOT ascontiguousarray, which promotes 0-d to 1-d);
+            # tobytes() below copies to C order regardless of input layout.
+            arr = np.asarray(arr)
+            code = _CODES[arr.dtype]
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            payload = arr.tobytes()
+            f.write(struct.pack("<Q", len(payload)))
+            f.write(payload)
+
+
+def read(path: str) -> dict[str, np.ndarray]:
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:4] == MAGIC, "bad magic"
+    version, count = struct.unpack_from("<II", data, 4)
+    assert version == VERSION
+    off = 12
+    out: dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<H", data, off)
+        off += 2
+        name = data[off : off + nlen].decode("utf-8")
+        off += nlen
+        code, ndim = struct.unpack_from("<BB", data, off)
+        off += 2
+        dims = struct.unpack_from(f"<{ndim}I", data, off)
+        off += 4 * ndim
+        (plen,) = struct.unpack_from("<Q", data, off)
+        off += 8
+        arr = np.frombuffer(data[off : off + plen], dtype=_DTYPES[code])
+        out[name] = arr.reshape(dims).copy()
+        off += plen
+    return out

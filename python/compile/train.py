@@ -1,0 +1,70 @@
+"""Build-time training of the simulated model profiles (DESIGN.md §2, §5).
+
+Runs once under `make artifacts`. Each profile trains on the seeded
+synthetic corpus until it has real sequential structure (layer-
+heterogeneous quantization sensitivity needs a *trained* network, not a
+random one). Weights land in artifacts/weights/<profile>.tang.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model, tensorfile
+from .kernels import ref as kref
+from .profiles import PROFILES, SIGN_SEED, ModelProfile
+
+
+def train_profile(p: ModelProfile, verbose: bool = True) -> list[np.ndarray]:
+    sign = jnp.asarray(kref.make_sign_diag(p.d_head, SIGN_SEED))
+    params = model.init_params(p, p.seed)
+    m = [jnp.zeros_like(a) for a in params]
+    v = [jnp.zeros_like(a) for a in params]
+    step_fn = model.make_train_step(p)
+
+    stream = corpus.train_stream(p.seed + 1, 400_000)
+    t0 = time.time()
+    losses = []
+    for i, batch in enumerate(
+        corpus.batches(stream, p.train_batch, p.train_seq, p.train_steps,
+                       p.seed + 2)
+    ):
+        # cosine decay with short warmup
+        warm = min(1.0, (i + 1) / 20)
+        cos = 0.5 * (1 + np.cos(np.pi * i / p.train_steps))
+        lr = jnp.float32(p.lr * warm * (0.1 + 0.9 * cos))
+        params, m, v, l = step_fn(params, m, v, jnp.asarray(batch), sign, lr)
+        losses.append(float(l))
+        if verbose and (i % 25 == 0 or i == p.train_steps - 1):
+            print(f"  [{p.name}] step {i:4d} loss {float(l):.4f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    if verbose:
+        first = np.mean(losses[:10])
+        last = np.mean(losses[-10:])
+        print(f"  [{p.name}] loss {first:.3f} -> {last:.3f} "
+              f"in {time.time() - t0:.0f}s", flush=True)
+    return [np.asarray(a) for a in params]
+
+
+def save_weights(p: ModelProfile, params: list[np.ndarray], path: str):
+    tensors = dict(zip(model.PARAM_ORDER, params))
+    tensors["sign"] = kref.make_sign_diag(p.d_head, SIGN_SEED)
+    tensorfile.write(path, tensors)
+
+
+def main():
+    names = sys.argv[1:] or list(PROFILES)
+    for name in names:
+        p = PROFILES[name]
+        print(f"training {name} ({p.param_count()/1e6:.1f}M params, "
+              f"L={p.n_layers} dh={p.d_head})", flush=True)
+        params = train_profile(p)
+        save_weights(p, params, f"../artifacts/weights/{name}.tang")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""AOT pipeline tests: HLO-text lowering of every entry point on a tiny
+profile, golden-vector generation, and the manifest contract."""
+
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.profiles import ModelProfile, PROFILES
+
+TINY = ModelProfile("tiny-test", "unit-test", 2, 16, 2, 1, 32, 48)
+
+
+def _lower_eval_tiny():
+    fn = functools.partial(model.eval_fwd, TINY)
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32)
+             for s in (model.param_shapes(TINY)[n] for n in model.PARAM_ORDER)]
+    lowered = jax.jit(fn, keep_unused=True).lower(
+        specs, jax.ShapeDtypeStruct((2, 9), jnp.int32),
+        jax.ShapeDtypeStruct((16,), jnp.float32),
+        jax.ShapeDtypeStruct((2,), jnp.float32),
+        jax.ShapeDtypeStruct((2,), jnp.float32),
+        jax.ShapeDtypeStruct((4,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32))
+    return aot.to_hlo_text(lowered)
+
+
+def test_eval_lowering_produces_hlo_text():
+    text = _lower_eval_tiny()
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # all 17 inputs survive keep_unused=True; parameter numbering restarts
+    # in nested computations, so check the highest ENTRY parameter index
+    assert "parameter(16)" in text
+    assert "parameter(17)" not in text
+
+
+def test_hlo_text_is_ascii_and_parsable_size():
+    text = _lower_eval_tiny()
+    text.encode("ascii")
+    assert 10_000 < len(text) < 5_000_000
+
+
+def test_manifest_contract():
+    manifest = aot.build_manifest({})
+    assert manifest["version"] == 1
+    assert set(manifest["profiles"]) == set(PROFILES)
+    for name, prof in manifest["profiles"].items():
+        assert prof["eval_inputs"][:11] == model.PARAM_ORDER
+        assert prof["eval_inputs"][11:] == [
+            "tokens", "sign", "nk", "nv", "norm_cfg", "mode"]
+        assert prof["decode_inputs"][-4:] == ["kr", "ki", "vr", "vi"]
+        assert prof["weights"] == f"weights/{name}.tang"
+    assert manifest["modes"] == {
+        "none": 0, "angle": 1, "angle_centered": 2, "tq_sym_g4": 3,
+        "kivi": 4, "kvquant": 5}
+    # round-trips through json (the rust parser consumes this)
+    json.loads(json.dumps(manifest))
+
+
+def test_golden_vectors_selfconsistent(tmp_path):
+    aot.write_golden(str(tmp_path))
+    from compile import tensorfile
+    for d in (64, 128):
+        g = tensorfile.read(str(tmp_path / f"golden_d{d}.tang"))
+        assert g["x"].shape == (32, d)
+        assert g["sign"].shape == (d,)
+        # decode must be consistent with (r, k) under the same sign/n
+        from compile.kernels import ref
+        n = 64.0
+        dec = ref.decode(jnp.asarray(g["r_n64"]), jnp.asarray(g["k_n64"]),
+                         jnp.asarray(g["sign"]), n)
+        np.testing.assert_allclose(np.asarray(dec), g["dec_n64"], atol=1e-5)
+        # bins in range
+        assert g["k_n64"].min() >= 0 and g["k_n64"].max() < 64
+
+
+def test_eval_data_protocol(tmp_path):
+    aot.write_eval_data(str(tmp_path))
+    from compile import tensorfile
+    t = tensorfile.read(str(tmp_path / "eval_chunks.tang"))
+    assert t["chunks"].shape == (aot.EVAL_CHUNKS, aot.EVAL_CHUNK_LEN)
+    assert t["chunks"].dtype == np.int32

@@ -1,0 +1,172 @@
+"""L2 model tests: shapes, RoPE, quant-mode plumbing, serving-path
+consistency, and a training smoke test — all on a tiny ad-hoc profile so
+the suite stays fast on one core."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import corpus, model
+from compile.kernels import ref as kref
+from compile.profiles import PROFILES, ModelProfile, SIGN_SEED
+
+TINY = ModelProfile("tiny-test", "unit-test", 3, 16, 2, 1, 32, 48,
+                    train_steps=4, train_batch=2, train_seq=24)
+
+
+def _setup(p=TINY, seed=0):
+    params = model.init_params(p, seed)
+    sign = jnp.asarray(kref.make_sign_diag(p.d_head, SIGN_SEED))
+    L = p.n_layers
+    nk = jnp.full((L,), 128.0)
+    nv = jnp.full((L,), 64.0)
+    ncfg = jnp.zeros((4,))
+    return params, sign, nk, nv, ncfg
+
+
+def test_param_shapes_and_count():
+    shapes = model.param_shapes(TINY)
+    assert shapes["wq"] == (3, 32, 32)
+    assert shapes["wk"] == (3, 32, 16)  # 1 kv head * d_head 16
+    params = model.init_params(TINY, 0)
+    total = sum(int(np.prod(p.shape)) for p in params)
+    assert total == TINY.param_count()
+
+
+def test_all_profiles_param_counts_positive():
+    for p in PROFILES.values():
+        assert p.param_count() > 0
+        assert p.d_model == p.n_q_heads * p.d_head
+        assert p.n_q_heads % p.n_kv_heads == 0
+
+
+def test_forward_shapes_and_finiteness():
+    params, sign, nk, nv, ncfg = _setup()
+    toks = jnp.asarray(np.arange(2 * 10).reshape(2, 10) % 255, dtype=jnp.int32)
+    logits = model.forward(TINY, params, toks, sign, nk, nv, ncfg,
+                           jnp.int32(1))
+    assert logits.shape == (2, 10, TINY.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("mode", [0, 1, 2, 3, 4, 5])
+def test_all_quant_modes_finite(mode):
+    params, sign, nk, nv, ncfg = _setup()
+    if mode >= 3:  # scalar modes: arrays carry bits
+        nk = jnp.full((TINY.n_layers,), 4.0)
+        nv = jnp.full((TINY.n_layers,), 4.0)
+    toks = jnp.asarray(np.arange(2 * 9).reshape(2, 9) % 255, dtype=jnp.int32)
+    nll, cnt = model.eval_fwd(TINY, params, toks, sign, nk, nv, ncfg,
+                              jnp.int32(mode))
+    assert nll.shape == (2,)
+    assert bool(jnp.isfinite(nll).all())
+    assert float(cnt.sum()) == 2 * 8
+
+
+def test_quant_none_equals_disabled():
+    """mode=0 through the switch == enable_quant=False at trace time."""
+    params, sign, nk, nv, ncfg = _setup()
+    toks = jnp.asarray(np.arange(2 * 9).reshape(2, 9) % 255, dtype=jnp.int32)
+    a, _ = model.eval_fwd(TINY, params, toks, sign, nk, nv, ncfg,
+                          jnp.int32(0), enable_quant=True)
+    b, _ = model.eval_fwd(TINY, params, toks, sign, nk, nv, ncfg,
+                          jnp.int32(0), enable_quant=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+def test_quantization_changes_but_bounds_loss():
+    params, sign, nk, nv, ncfg = _setup()
+    toks = jnp.asarray(np.arange(2 * 17).reshape(2, 17) % 255, dtype=jnp.int32)
+    ref_nll, cnt = model.eval_fwd(TINY, params, toks, sign, nk, nv, ncfg,
+                                  jnp.int32(0))
+    q_nll, _ = model.eval_fwd(TINY, params, toks, sign, nk, nv, ncfg,
+                              jnp.int32(1))
+    coarse_nll, _ = model.eval_fwd(
+        TINY, params, toks, sign, jnp.full((3,), 4.0), jnp.full((3,), 4.0),
+        ncfg, jnp.int32(1))
+    ref = float(ref_nll.sum() / cnt.sum())
+    q = float(q_nll.sum() / cnt.sum())
+    coarse = float(coarse_nll.sum() / cnt.sum())
+    assert abs(q - ref) < 0.15, "K128V64 is near-lossless even untrained"
+    assert abs(coarse - ref) > abs(q - ref), "4 bins must hurt more"
+
+
+def test_rope_preserves_norm_and_is_position_dependent():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1, 2, 6, 16)),
+                    dtype=jnp.float32)
+    pos = jnp.arange(6)
+    y = model.rope(x, pos, 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5)
+    # position 0 is identity
+    np.testing.assert_allclose(np.asarray(y[:, :, 0]), np.asarray(x[:, :, 0]),
+                               rtol=1e-5)
+    assert not np.allclose(np.asarray(y[:, :, 1]), np.asarray(x[:, :, 1]))
+
+
+def test_rmsnorm_scale_invariance():
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(4, 32)),
+                    dtype=jnp.float32)
+    w = jnp.ones((32,))
+    a = model.rmsnorm(x, w)
+    b = model.rmsnorm(x * 7.0, w)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_prefill_decode_matches_full_forward():
+    """Serving path == teacher-forced path (greedy argmax agreement)."""
+    p = TINY
+    params, sign, nk, nv, ncfg = _setup()
+    mode = jnp.int32(1)
+    B, Tp, Tmax = 2, 8, 12
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, 255, size=(B, Tp)).astype(np.int32))
+    length = jnp.asarray([8, 6], dtype=jnp.int32)
+    last, kr, ki, vr, vi = model.prefill(p, params, toks, length, sign,
+                                         nk, nv, ncfg, mode)
+    # pad caches to Tmax
+    def pad(c):
+        out = np.zeros((p.n_layers, B, p.n_kv_heads, Tmax, p.d_head // 2),
+                       np.float32)
+        out[:, :, :, :Tp] = np.asarray(c)
+        return jnp.asarray(out)
+
+    tok = jnp.asarray(np.argmax(np.asarray(last), -1).astype(np.int32))
+    logits, *_ = model.decode_step(p, params, tok, length, sign, nk, nv,
+                                   ncfg, mode, pad(kr), pad(ki), pad(vr),
+                                   pad(vi))
+    for b, plen in enumerate([8, 6]):
+        seq = np.concatenate([np.asarray(toks[b, :plen]), [int(tok[b])]])
+        full = model.forward(p, params, jnp.asarray(seq[None].astype(np.int32)),
+                             sign, nk, nv, ncfg, mode)
+        assert int(np.argmax(np.asarray(full)[0, -1])) == int(
+            np.argmax(np.asarray(logits)[b])), f"batch {b}"
+
+
+def test_train_step_decreases_loss():
+    p = TINY
+    params, sign, *_ = _setup()
+    m = [jnp.zeros_like(a) for a in params]
+    v = [jnp.zeros_like(a) for a in params]
+    step = model.make_train_step(p)
+    stream = corpus.train_stream(1, 20_000)
+    losses = []
+    for batch in corpus.batches(stream, 4, 24, 30, 2):
+        params, m, v, l = step(params, m, v, jnp.asarray(batch), sign,
+                               jnp.float32(3e-3))
+        losses.append(float(l))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3
+
+
+def test_eval_fwd_masks_pad_targets():
+    params, sign, nk, nv, ncfg = _setup()
+    toks = np.full((1, 9), corpus.PAD, dtype=np.int32)
+    toks[0, :4] = [10, 20, 30, 40]
+    nll, cnt = model.eval_fwd(TINY, params, jnp.asarray(toks), sign, nk, nv,
+                              ncfg, jnp.int32(0))
+    assert float(cnt[0]) == 3  # only the 3 non-PAD targets count

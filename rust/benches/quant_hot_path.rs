@@ -1,0 +1,167 @@
+//! Hot-path micro-benchmarks: native quantizer, bit-packing, cache
+//! reinflation, and the AOT kernel HLOs. The L3 perf numbers in
+//! EXPERIMENTS.md §Perf come from here.
+//!
+//!     cargo bench --bench quant_hot_path
+
+use std::time::Duration;
+use turboangle::coordinator::PagedKvCache;
+use turboangle::quant::{angle, baseline, fwht, norm, packing, NormMode, QuantConfig};
+use turboangle::runtime::{pjrt, Manifest, Runtime};
+use turboangle::util::bench::{bench, black_box};
+use turboangle::util::prop::Gen;
+
+const BUDGET: Duration = Duration::from_millis(400);
+
+fn main() {
+    let rows = 4096usize;
+    println!("== native quantizer hot path ({rows} rows/iter) ==");
+    for d in [64usize, 128] {
+        let mut g = Gen::new(7);
+        let sign = fwht::test_sign_diag(d, 3);
+        let x = g.f32_vec(rows * d, -3.0, 3.0);
+        let elems = (rows * d) as f64;
+
+        let mut buf = x.clone();
+        let r = bench(&format!("fwht d={d}"), BUDGET, || {
+            for row in 0..rows {
+                fwht::fwht(&mut buf[row * d..(row + 1) * d]);
+            }
+            black_box(&buf);
+        });
+        println!("{}", r.line(Some((elems, "elem"))));
+
+        let mut scratch = vec![0.0f32; d];
+        let mut rr = vec![0.0f32; d / 2];
+        let mut kk = vec![0u16; d / 2];
+        let r = bench(&format!("encode d={d} n=128"), BUDGET, || {
+            for row in 0..rows {
+                angle::encode_into(
+                    &x[row * d..(row + 1) * d],
+                    &sign,
+                    128,
+                    &mut scratch,
+                    &mut rr,
+                    &mut kk,
+                );
+            }
+            black_box(&rr);
+        });
+        println!("{}", r.line(Some((elems, "elem"))));
+
+        let mut out = vec![0.0f32; d];
+        let r = bench(&format!("decode d={d} n=128"), BUDGET, || {
+            for _ in 0..rows {
+                angle::decode_into(&rr, &kk, &sign, 128, false, &mut out);
+            }
+            black_box(&out);
+        });
+        println!("{}", r.line(Some((elems, "elem"))));
+
+        let lut = angle::TrigLut::new(128, false);
+        let r = bench(&format!("decode-LUT d={d} n=128"), BUDGET, || {
+            for _ in 0..rows {
+                angle::decode_into_lut(&rr, &kk, &sign, &lut, &mut out);
+            }
+            black_box(&out);
+        });
+        println!("{}", r.line(Some((elems, "elem"))));
+
+        let r = bench(&format!("tq_sym4_g4 d={d}"), BUDGET, || {
+            for row in 0..rows.min(512) {
+                black_box(baseline::tq_scalar_g(&x[row * d..(row + 1) * d], &sign, 4, 4));
+            }
+        });
+        println!("{}", r.line(Some(((rows.min(512) * d) as f64, "elem"))));
+
+        // bit packing
+        let codes: Vec<u16> = (0..rows * d / 2).map(|i| (i % 128) as u16).collect();
+        let r = bench(&format!("pack w=7 ({} codes)", codes.len()), BUDGET, || {
+            black_box(packing::pack(&codes, 7));
+        });
+        println!("{}", r.line(Some((codes.len() as f64, "code"))));
+        let bv = packing::pack(&codes, 7);
+        let mut outf = vec![0.0f32; codes.len()];
+        let r = bench("unpack->f32 w=7", BUDGET, || {
+            packing::unpack_f32_into(&bv, 7, &mut outf);
+            black_box(&outf);
+        });
+        println!("{}", r.line(Some((codes.len() as f64, "code"))));
+
+        // norm quant
+        let norms = g.f32_vec(d / 2, 0.1, 8.0);
+        let r = bench(&format!("norm quant+dequant 8b d={d}"), BUDGET, || {
+            for _ in 0..rows {
+                black_box(norm::quant_dequant(&norms, NormMode::LINEAR8));
+            }
+        });
+        println!("{}", r.line(Some(((rows * d / 2) as f64, "norm"))));
+    }
+
+    // cache reinflation (the per-decode-step coordinator cost)
+    println!("\n== kv_manager fill_dense (decode-step prep) ==");
+    {
+        let (l, b, h, tmax, d) = (24usize, 4usize, 1usize, 192usize, 64usize);
+        let half = d / 2;
+        let cfg = QuantConfig::paper_uniform(l).with_k8v4_log();
+        let mut kv = PagedKvCache::new(cfg, l, h, d, tmax, 4096, 16);
+        kv.new_seq(1).unwrap();
+        let mut g = Gen::new(9);
+        for _ in 0..128 {
+            for li in 0..l {
+                let kr = g.f32_vec(half, 0.1, 4.0);
+                let ki: Vec<f32> = (0..half).map(|_| (g.u64() % 128) as f32).collect();
+                let vr = g.f32_vec(half, 0.1, 4.0);
+                let vi: Vec<f32> = (0..half).map(|_| (g.u64() % 64) as f32).collect();
+                kv.append_token_lh(1, li, 0, &kr, &ki, &vr, &vi).unwrap();
+            }
+            kv.commit_token(1).unwrap();
+        }
+        let n = l * b * h * tmax * half;
+        let (mut kr, mut ki, mut vr, mut vi) =
+            (vec![0.0f32; n], vec![0.0f32; n], vec![0.0f32; n], vec![0.0f32; n]);
+        let r = bench("fill_dense 128tok L24 k8v4", BUDGET, || {
+            kv.fill_dense(1, 0, b, &mut kr, &mut ki, &mut vr, &mut vi).unwrap();
+        });
+        let decoded = (128 * l * h * d * 2) as f64;
+        println!("{}", r.line(Some((decoded, "elem"))));
+        // incremental top-up: what the engine actually pays per decode step
+        let r = bench("fill_dense_range last-token only", BUDGET, || {
+            kv.fill_dense_range(1, 0, b, 127, &mut kr, &mut ki, &mut vr, &mut vi)
+                .unwrap();
+        });
+        println!("{}", r.line(Some(((l * h * d * 2) as f64, "elem"))));
+        let stats = kv.memory_stats();
+        println!(
+            "cache: {} tokens, {} compressed bytes, {:.2}x vs fp16",
+            stats.tokens,
+            stats.compressed_bytes,
+            stats.compression_ratio()
+        );
+    }
+
+    // HLO kernel artifacts through PJRT (transfer + execute)
+    println!("\n== AOT kernel HLOs (PJRT CPU, incl. literal transfer) ==");
+    if let Ok(m) = Manifest::discover() {
+        let rt = Runtime::cpu().unwrap();
+        for d in [64usize, 128] {
+            let rows_k = 1024usize;
+            let mut g = Gen::new(11);
+            let x = g.f32_vec(rows_k * d, -3.0, 3.0);
+            let sign = fwht::test_sign_diag(d, 3);
+            let enc = rt.load(m.path(&format!("kernels.encode.d{d}.hlo.txt"))).unwrap();
+            let args = [
+                pjrt::lit_f32(&[rows_k, d], &x).unwrap(),
+                pjrt::lit_f32(&[d], &sign).unwrap(),
+                pjrt::lit_scalar_f32(128.0),
+            ];
+            let argrefs: Vec<&xla::Literal> = args.iter().collect();
+            let r = bench(&format!("HLO encode d={d} ({rows_k} rows)"), BUDGET, || {
+                black_box(enc.run(&argrefs).unwrap());
+            });
+            println!("{}", r.line(Some(((rows_k * d) as f64, "elem"))));
+        }
+    } else {
+        println!("(artifacts missing — skipped; run `make artifacts`)");
+    }
+}

@@ -1,0 +1,109 @@
+//! End-to-end serving benchmark: throughput/latency of the engine under a
+//! synthetic workload, across quantization configs and batch policies —
+//! the serving-system evidence that L3 isn't the bottleneck.
+//!
+//!     cargo bench --bench serving_throughput
+
+use std::time::Duration;
+use turboangle::coordinator::{BatchPolicy, Engine, EngineConfig, SchedulerPolicy};
+use turboangle::quant::{Mode, NormMode, QuantConfig};
+use turboangle::runtime::{Entry, Manifest, ModelExecutor, Runtime};
+use turboangle::workload::{self, WorkloadSpec};
+
+fn run(
+    manifest: &Manifest,
+    rt: &Runtime,
+    quant: QuantConfig,
+    policy: BatchPolicy,
+    label: &str,
+) -> anyhow::Result<()> {
+    let exec = ModelExecutor::load(rt, manifest, "smollm2-sim", Entry::Serve)?;
+    let mut engine = Engine::new(
+        exec,
+        EngineConfig {
+            quant,
+            batch_policy: policy,
+            scheduler: SchedulerPolicy::default(),
+            capacity_pages: 4096,
+            page_tokens: 16,
+        },
+    );
+    let spec = WorkloadSpec {
+        n_requests: 16,
+        prompt_min: 16,
+        prompt_max: 60,
+        gen_min: 6,
+        gen_max: 16,
+        seed: 21,
+    };
+    let t0 = std::time::Instant::now();
+    for req in workload::generate(&spec) {
+        engine.submit(req);
+    }
+    engine.run_to_completion()?;
+    let wall = t0.elapsed();
+    let m = &engine.metrics;
+    let coord_frac = m.coordinator_overhead.mean().as_secs_f64()
+        / m.decode_step_latency.mean().as_secs_f64().max(1e-9);
+    println!(
+        "{label:40} {:6.1} tok/s  step p50 {:>9.2?}  ttft p50 {:>9.2?}  coord/step {:>5.1}%  util {:.2}",
+        m.tokens_generated as f64 / wall.as_secs_f64(),
+        m.decode_step_latency.quantile(0.5),
+        m.ttft.quantile(0.5),
+        coord_frac * 100.0,
+        m.decode_utilization(),
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::discover()?;
+    let rt = Runtime::cpu()?;
+    println!("16 requests, prompts 16-60 tok, gen 6-16 tok, smollm2-sim, batch=4\n");
+
+    let l = 24;
+    for (label, quant) in [
+        (
+            "angle K128V64 + K8V4-log (deploy)",
+            QuantConfig::paper_uniform(l).with_k8v4_log(),
+        ),
+        ("angle K128V64 + fp32 norms", QuantConfig::paper_uniform(l)),
+        ("angle E4(256,128) + K8V4-log",
+            QuantConfig::early_boost(l, 4, 256, 128).with_k8v4_log()),
+        ("no quantization (mode=none)", {
+            let mut c = QuantConfig::none(l);
+            c.mode = Mode::None;
+            c.with_norms(NormMode::FP32, NormMode::FP32)
+        }),
+    ] {
+        run(&manifest, &rt, quant, BatchPolicy::default(), label)?;
+    }
+
+    println!("\nbatch policy ablation (deploy config):");
+    for (label, policy) in [
+        (
+            "min_batch=1 (eager)",
+            BatchPolicy {
+                min_batch: 1,
+                max_wait: Duration::ZERO,
+            },
+        ),
+        ("min_batch=2 wait=20ms (default)", BatchPolicy::default()),
+        (
+            "min_batch=4 wait=100ms (batched)",
+            BatchPolicy {
+                min_batch: 4,
+                max_wait: Duration::from_millis(100),
+            },
+        ),
+    ] {
+        run(
+            &manifest,
+            &rt,
+            QuantConfig::paper_uniform(l).with_k8v4_log(),
+            policy,
+            label,
+        )?;
+    }
+    Ok(())
+}

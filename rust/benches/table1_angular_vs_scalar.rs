@@ -1,0 +1,47 @@
+//! Regenerates paper Table 1 (angular vs scalar quantization) on the
+//! mistral-sim and tinyllama-sim profiles, including the §4.8 n=56
+//! non-monotone probe, and times the full sweep.
+//!
+//!     cargo bench --bench table1_angular_vs_scalar
+
+use turboangle::eval::{sweep, PplHarness};
+use turboangle::report;
+use turboangle::runtime::{Entry, Manifest, ModelExecutor, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::discover()?;
+    let rt = Runtime::cpu()?;
+    for model in ["mistral-sim", "tinyllama-sim"] {
+        let t0 = std::time::Instant::now();
+        let exec = ModelExecutor::load(&rt, &manifest, model, Entry::Eval)?;
+        let h = PplHarness::new(&manifest, exec)?;
+        let rows = sweep::table1(&h, true, false)?;
+        println!("{}", report::table1(model, &rows));
+        // paper shape checks (reported, not asserted — shapes, not numbers)
+        let ta3 = rows.iter().find(|r| r.method.contains("n=64")).unwrap();
+        let tq3 = rows.iter().find(|r| r.method == "TQ-sym3-g4").unwrap();
+        let tq4 = rows.iter().find(|r| r.method == "TQ-sym4-g4").unwrap();
+        println!(
+            "shape: TurboAngle@3.0b dPPL {:+.4} vs TQ-sym3@3.0b {:+.4} ({}x) vs TQ-sym4@4.0b {:+.4} ({}x)",
+            ta3.delta_ppl,
+            tq3.delta_ppl,
+            ratio(tq3.delta_ppl, ta3.delta_ppl),
+            tq4.delta_ppl,
+            ratio(tq4.delta_ppl, ta3.delta_ppl),
+        );
+        println!(
+            "sweep: {} evals in {:?}\n",
+            h.evals_run.borrow(),
+            t0.elapsed()
+        );
+    }
+    Ok(())
+}
+
+fn ratio(a: f64, b: f64) -> String {
+    if b.abs() < 1e-6 {
+        "inf".into()
+    } else {
+        format!("{:.1}", a / b)
+    }
+}

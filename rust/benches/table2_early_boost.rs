@@ -1,0 +1,59 @@
+//! Regenerates paper Tables 2 + 3 (per-layer early-boost) across all seven
+//! simulated profiles. `TA_MODELS=a,b` restricts the set (full run executes
+//! ~90 PPL evaluations).
+//!
+//!     cargo bench --bench table2_early_boost
+
+use turboangle::eval::{sweep, PplHarness};
+use turboangle::report;
+use turboangle::runtime::{Entry, Manifest, ModelExecutor, Runtime};
+
+const ALL: [&str; 7] = [
+    "tinyllama-sim",
+    "mistral-sim",
+    "smollm2-sim",
+    "phi15-sim",
+    "stablelm2-sim",
+    "starcoder2-sim",
+    "olmo-sim",
+];
+
+fn main() -> anyhow::Result<()> {
+    let models: Vec<String> = std::env::var("TA_MODELS")
+        .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+        .unwrap_or_else(|_| ALL.iter().map(|s| s.to_string()).collect());
+    let manifest = Manifest::discover()?;
+    let rt = Runtime::cpu()?;
+    let mut results = Vec::new();
+    let t_all = std::time::Instant::now();
+    for model in &models {
+        let t0 = std::time::Instant::now();
+        let exec = ModelExecutor::load(&rt, &manifest, model, Entry::Eval)?;
+        let h = PplHarness::new(&manifest, exec)?;
+        let r = sweep::early_boost_sweep(&h, model)?;
+        eprintln!(
+            "{model}: {} evals in {:?}; best {} dPPL {:+.4}",
+            h.evals_run.borrow(),
+            t0.elapsed(),
+            r.best_cfg.tag(),
+            r.best_delta
+        );
+        for (tag, d) in &r.sweep_log {
+            eprintln!("   {tag:36} {d:+.4}");
+        }
+        results.push(r);
+    }
+    println!("{}", report::table2(&results));
+    println!("{}", report::table3(&results));
+    let lossless = results.iter().filter(|r| r.best_delta <= 0.0).count();
+    let improved = results
+        .iter()
+        .filter(|r| r.best_delta < r.uniform_delta)
+        .count();
+    println!(
+        "shape: {improved}/{} models improved over uniform by per-layer boost; {lossless} lossless (paper: 7/7 improved, 4/7 lossless)",
+        results.len()
+    );
+    println!("total sweep wall time {:?}", t_all.elapsed());
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Regenerates paper Table 4 (layer-group sensitivity, phi-1.5 analog):
+//! single-group boosts + the combination probes that expose non-additive
+//! and negative-transfer structure.
+//!
+//!     cargo bench --bench table4_sensitivity
+//!     TA_MODEL=stablelm2-sim cargo bench --bench table4_sensitivity
+
+use turboangle::eval::{sensitivity, PplHarness};
+use turboangle::report;
+use turboangle::runtime::{Entry, Manifest, ModelExecutor, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::var("TA_MODEL").unwrap_or_else(|_| "phi15-sim".to_string());
+    let manifest = Manifest::discover()?;
+    let rt = Runtime::cpu()?;
+    let exec = ModelExecutor::load(&rt, &manifest, &model, Entry::Eval)?;
+    let h = PplHarness::new(&manifest, exec)?;
+    let t0 = std::time::Instant::now();
+    let rep = sensitivity::layer_group_sweep(&h, 4)?;
+    println!("model: {model}");
+    println!("{}", report::table4(&rep));
+    let best_single = rep
+        .singles
+        .iter()
+        .min_by(|a, b| a.delta_ppl.partial_cmp(&b.delta_ppl).unwrap())
+        .unwrap();
+    println!(
+        "shape: best single group {} ({:.0}% of uniform dPPL); negative-transfer groups: {}",
+        best_single.group,
+        100.0 * best_single.delta_ppl / rep.uniform_delta,
+        rep.negative_transfer.len()
+    );
+    println!(
+        "{} evals in {:?}",
+        h.evals_run.borrow(),
+        t0.elapsed()
+    );
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Regenerates paper Table 5 (norm quantization: fp32 vs norm8 vs
+//! K8V4-log on top of each model's best per-layer config) and the §3.3
+//! K-vs-V norm-sensitivity claim (K4 is catastrophic, V4-log is fine).
+//!
+//!     cargo bench --bench table5_norm_quant   (TA_MODELS=a,b to restrict)
+
+use turboangle::eval::{sweep, PplHarness};
+use turboangle::quant::NormMode;
+use turboangle::report;
+use turboangle::runtime::{Entry, Manifest, ModelExecutor, Runtime};
+
+const ALL: [&str; 7] = [
+    "tinyllama-sim",
+    "mistral-sim",
+    "smollm2-sim",
+    "phi15-sim",
+    "stablelm2-sim",
+    "starcoder2-sim",
+    "olmo-sim",
+];
+
+fn main() -> anyhow::Result<()> {
+    let models: Vec<String> = std::env::var("TA_MODELS")
+        .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+        .unwrap_or_else(|_| ALL.iter().map(|s| s.to_string()).collect());
+    let manifest = Manifest::discover()?;
+    let rt = Runtime::cpu()?;
+    let mut rows = Vec::new();
+    let t0 = std::time::Instant::now();
+    for model in &models {
+        let exec = ModelExecutor::load(&rt, &manifest, model, Entry::Eval)?;
+        let h = PplHarness::new(&manifest, exec)?;
+        let best = sweep::early_boost_sweep(&h, model)?.best_cfg;
+        rows.push(sweep::table5(&h, model, &best)?);
+        eprintln!("{model} done ({} evals)", h.evals_run.borrow());
+        // §3.3 asymmetry probe on one representative model
+        if model == "mistral-sim" {
+            let k4 = best
+                .clone()
+                .with_norms(NormMode { bits: 4, log_space: false }, NormMode::LOG4);
+            let k4_delta = h.delta_ppl(&k4)?;
+            let k8v4 = h.delta_ppl(&best.clone().with_k8v4_log())?;
+            println!(
+                "K-norm sensitivity ({model}): K4V4-log dPPL {k4_delta:+.4} vs K8V4-log {k8v4:+.4} ({}x worse)",
+                if k8v4.abs() > 1e-9 { format!("{:.0}", k4_delta / k8v4) } else { "inf".into() }
+            );
+        }
+    }
+    println!("{}", report::table5(&rows));
+    println!("total wall {:?}", t0.elapsed());
+    Ok(())
+}

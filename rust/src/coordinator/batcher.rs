@@ -1,0 +1,168 @@
+//! Dynamic batcher: admission queue + batch formation policy.
+//!
+//! Continuous-batching flavor: the engine owns `B` slots; the batcher
+//! decides *when* to run a prefill (enough waiting work, or the oldest
+//! request has waited past `max_wait`) and which requests join it.
+//! Admission also consults the kv page pool so a prefill never starts a
+//! sequence the cache cannot hold.
+
+use super::session::Request;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    /// run a prefill as soon as this many requests wait (≤ engine batch)
+    pub min_batch: usize,
+    /// …or when the oldest request has waited this long
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            min_batch: 2,
+            max_wait: Duration::from_millis(20),
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct BatcherStats {
+    pub submitted: u64,
+    pub admitted: u64,
+    pub rejected_cache: u64,
+}
+
+pub struct DynamicBatcher {
+    pub policy: BatchPolicy,
+    queue: VecDeque<Request>,
+    pub stats: BatcherStats,
+}
+
+impl DynamicBatcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        DynamicBatcher {
+            policy,
+            queue: VecDeque::new(),
+            stats: BatcherStats::default(),
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.stats.submitted += 1;
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Should a prefill run now, given `free_slots`? (`now` injected for
+    /// deterministic tests.)
+    pub fn should_prefill(&self, free_slots: usize, now: Instant) -> bool {
+        if free_slots == 0 || self.queue.is_empty() {
+            return false;
+        }
+        if self.queue.len() >= self.policy.min_batch.min(free_slots) {
+            return true;
+        }
+        self.queue
+            .front()
+            .map(|r| now.duration_since(r.arrival) >= self.policy.max_wait)
+            .unwrap_or(false)
+    }
+
+    /// Pop up to `free_slots` admissible requests. `can_admit` is the kv
+    /// pool check (expected tokens -> fits?). Non-admissible requests stay
+    /// queued (head-of-line blocking is intentional: FIFO fairness).
+    pub fn take_batch<F>(&mut self, free_slots: usize, mut can_admit: F) -> Vec<Request>
+    where
+        F: FnMut(&Request) -> bool,
+    {
+        let mut out = Vec::new();
+        while out.len() < free_slots {
+            match self.queue.front() {
+                Some(req) if can_admit(req) => {
+                    self.stats.admitted += 1;
+                    out.push(self.queue.pop_front().unwrap());
+                }
+                Some(_) => {
+                    self.stats.rejected_cache += 1;
+                    break;
+                }
+                None => break,
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![1, 2, 3], 4)
+    }
+
+    #[test]
+    fn batches_when_min_reached() {
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            min_batch: 2,
+            max_wait: Duration::from_secs(10),
+        });
+        let now = Instant::now();
+        b.submit(req(1));
+        assert!(!b.should_prefill(4, now));
+        b.submit(req(2));
+        assert!(b.should_prefill(4, now));
+        let batch = b.take_batch(4, |_| true);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn fires_on_max_wait() {
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            min_batch: 8,
+            max_wait: Duration::from_millis(5),
+        });
+        b.submit(req(1));
+        let later = Instant::now() + Duration::from_millis(6);
+        assert!(b.should_prefill(4, later));
+    }
+
+    #[test]
+    fn no_prefill_without_slots() {
+        let mut b = DynamicBatcher::new(BatchPolicy::default());
+        b.submit(req(1));
+        b.submit(req(2));
+        assert!(!b.should_prefill(0, Instant::now()));
+    }
+
+    #[test]
+    fn respects_free_slots() {
+        let mut b = DynamicBatcher::new(BatchPolicy::default());
+        for i in 0..5 {
+            b.submit(req(i));
+        }
+        let batch = b.take_batch(3, |_| true);
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.pending(), 2);
+        // FIFO order preserved
+        assert_eq!(batch[0].id, 0);
+        assert_eq!(batch[2].id, 2);
+    }
+
+    #[test]
+    fn cache_rejection_blocks_head() {
+        let mut b = DynamicBatcher::new(BatchPolicy::default());
+        b.submit(req(1));
+        b.submit(req(2));
+        let batch = b.take_batch(2, |r| r.id != 1);
+        assert!(batch.is_empty(), "FIFO head blocked => no batch");
+        assert_eq!(b.stats.rejected_cache, 1);
+        assert_eq!(b.pending(), 2);
+    }
+}

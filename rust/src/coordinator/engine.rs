@@ -1,0 +1,311 @@
+//! The serving engine: continuous batching over a compressed KV cache.
+//!
+//! One tick = one scheduler action:
+//!   * Prefill — batcher-formed prompt batch → prefill HLO → compressed
+//!     entries packed into the kv_manager, sessions seated in slots.
+//!   * Decode — active slots' caches reinflated (norm dequant + angle
+//!     unpack) into the dense HLO inputs, one fused decode step, new
+//!     tokens sampled greedily, new compressed entries appended.
+//!
+//! Python is never involved; the HLOs were lowered at build time.
+
+use super::batcher::{BatchPolicy, DynamicBatcher};
+use super::kv_manager::{MemoryStats, PagedKvCache};
+use super::metrics::EngineMetrics;
+use super::scheduler::{next_action, Action, SchedulerPolicy};
+use super::session::{Request, Session};
+use crate::quant::QuantConfig;
+use crate::runtime::ModelExecutor;
+use anyhow::Result;
+use std::time::Instant;
+
+pub const PAD: i32 = 258;
+pub const EOS: i32 = 257;
+
+pub struct EngineConfig {
+    pub quant: QuantConfig,
+    pub batch_policy: BatchPolicy,
+    pub scheduler: SchedulerPolicy,
+    /// kv pool capacity in pages of `page_tokens`
+    pub capacity_pages: usize,
+    pub page_tokens: usize,
+}
+
+pub struct Engine {
+    pub exec: ModelExecutor,
+    pub kv: PagedKvCache,
+    pub batcher: DynamicBatcher,
+    pub scheduler: SchedulerPolicy,
+    pub metrics: EngineMetrics,
+    pub quant: QuantConfig,
+    slots: Vec<Option<Session>>,
+    // reusable dense cache buffers (L,B,H,Tmax,d/2)
+    kr: Vec<f32>,
+    ki: Vec<f32>,
+    vr: Vec<f32>,
+    vi: Vec<f32>,
+    /// tokens already reinflated into the dense buffers, per slot — the
+    /// incremental fill keeps per-step coordinator cost O(1) in seq length
+    slot_filled: Vec<usize>,
+    finished: Vec<Session>,
+}
+
+impl Engine {
+    pub fn new(exec: ModelExecutor, cfg: EngineConfig) -> Self {
+        let (l, b, h, tmax, half) = exec.cache_dims();
+        let n = l * b * h * tmax * half;
+        let kv = PagedKvCache::new(
+            cfg.quant.clone(),
+            l,
+            h,
+            exec.profile.d_head,
+            tmax,
+            cfg.capacity_pages,
+            cfg.page_tokens,
+        );
+        Engine {
+            exec,
+            kv,
+            batcher: DynamicBatcher::new(cfg.batch_policy),
+            scheduler: cfg.scheduler,
+            metrics: EngineMetrics::default(),
+            quant: cfg.quant,
+            slots: (0..b).map(|_| None).collect(),
+            slot_filled: vec![0; b],
+            kr: vec![0.0; n],
+            ki: vec![0.0; n],
+            vr: vec![0.0; n],
+            vi: vec![0.0; n],
+            finished: Vec::new(),
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.metrics.requests_submitted += 1;
+        self.batcher.submit(req);
+    }
+
+    pub fn active_sessions(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.batcher.pending() > 0 || self.active_sessions() > 0
+    }
+
+    /// Drain finished sessions accumulated since the last call.
+    pub fn take_finished(&mut self) -> Vec<Session> {
+        std::mem::take(&mut self.finished)
+    }
+
+    pub fn memory_stats(&self) -> MemoryStats {
+        self.kv.memory_stats()
+    }
+
+    /// One scheduler tick. Returns the action taken.
+    pub fn tick(&mut self) -> Result<Action> {
+        let action = next_action(
+            &self.scheduler,
+            &self.batcher,
+            self.active_sessions(),
+            self.slots.len(),
+            Instant::now(),
+        );
+        match action {
+            Action::Prefill => self.run_prefill()?,
+            Action::Decode => self.run_decode()?,
+            Action::Idle => {}
+        }
+        Ok(action)
+    }
+
+    /// Run ticks until queue and slots drain.
+    pub fn run_to_completion(&mut self) -> Result<()> {
+        while self.has_work() {
+            self.tick()?;
+        }
+        Ok(())
+    }
+
+    fn free_slot_indices(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_none())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    fn run_prefill(&mut self) -> Result<()> {
+        let free = self.free_slot_indices();
+        let tp = self.exec.serve.prefill_len;
+        let tmax = self.exec.serve.tmax;
+        let kv = &self.kv;
+        let reqs = self.batcher.take_batch(free.len(), |r| {
+            kv.can_admit(r.prompt.len().min(tp) + r.max_new_tokens)
+        });
+        if reqs.is_empty() {
+            return Ok(());
+        }
+        let b_total = self.slots.len();
+        let mut tokens = vec![PAD; b_total * tp];
+        let mut lengths = vec![1i32; b_total]; // dummy lanes: len 1
+        for (lane, req) in reqs.iter().enumerate() {
+            let plen = req.prompt.len().min(tp);
+            tokens[lane * tp..lane * tp + plen].copy_from_slice(&req.prompt[..plen]);
+            lengths[lane] = plen as i32;
+        }
+        let out = self.exec.run_prefill(&tokens, &lengths, &self.quant)?;
+        self.metrics.prefill_batches += 1;
+
+        let (l_n, b_n, h_n, _tp, half) = (
+            self.exec.profile.n_layers,
+            b_total,
+            self.exec.profile.n_kv_heads,
+            tp,
+            self.exec.profile.d_head / 2,
+        );
+        let vocab = self.exec.profile.vocab;
+        for (lane, req) in reqs.into_iter().enumerate() {
+            let plen = req.prompt.len().min(tp);
+            self.kv.new_seq(req.id)?;
+            // pack the prompt's compressed entries: only t < plen
+            for t in 0..plen {
+                for l in 0..l_n {
+                    for h in 0..h_n {
+                        let base = (((l * b_n + lane) * h_n + h) * tp + t) * half;
+                        self.kv.append_token_lh(
+                            req.id,
+                            l,
+                            h,
+                            &out.kr[base..base + half],
+                            &out.ki[base..base + half],
+                            &out.vr[base..base + half],
+                            &out.vi[base..base + half],
+                        )?;
+                    }
+                }
+                self.kv.commit_token(req.id)?;
+            }
+            self.metrics.prefill_sequences += 1;
+            // first generated token from the prefill logits
+            let logits = &out.logits[lane * vocab..(lane + 1) * vocab];
+            let tok = argmax(logits);
+            let mut sess = Session::new(req, plen);
+            sess.push_token(tok, EOS, tmax);
+            self.metrics
+                .ttft
+                .record(Instant::now().duration_since(sess.request.arrival));
+            let slot = free[lane];
+            self.slot_filled[slot] = 0; // new sequence: full refill needed
+            self.slots[slot] = Some(sess);
+        }
+        Ok(())
+    }
+
+    fn run_decode(&mut self) -> Result<()> {
+        let b_total = self.slots.len();
+        let mut token = vec![0i32; b_total];
+        let mut pos = vec![0i32; b_total];
+        let mut any = false;
+        let t_coord = Instant::now();
+        for (b, slot) in self.slots.iter().enumerate() {
+            if let Some(sess) = slot {
+                any = true;
+                token[b] = *sess.generated.last().expect("session has a token");
+                pos[b] = (sess.cache_len() - 1) as i32;
+                let filled = self.kv.fill_dense_range(
+                    sess.request.id,
+                    b,
+                    b_total,
+                    self.slot_filled[b],
+                    &mut self.kr,
+                    &mut self.ki,
+                    &mut self.vr,
+                    &mut self.vi,
+                )?;
+                self.slot_filled[b] = filled;
+            }
+        }
+        if !any {
+            return Ok(());
+        }
+        let coord_prep = t_coord.elapsed();
+        let t0 = Instant::now();
+        let out = self.exec.run_decode(
+            &token, &pos, &self.quant, &self.kr, &self.ki, &self.vr, &self.vi,
+        )?;
+        self.metrics.decode_step_latency.record(t0.elapsed());
+        self.metrics.decode_steps += 1;
+        self.metrics.decode_slot_steps += b_total as u64;
+
+        let t_post = Instant::now();
+        let (l_n, h_n, half) = (
+            self.exec.profile.n_layers,
+            self.exec.profile.n_kv_heads,
+            self.exec.profile.d_head / 2,
+        );
+        let vocab = self.exec.profile.vocab;
+        let tmax = self.exec.serve.tmax;
+        for b in 0..b_total {
+            let Some(sess) = self.slots[b].as_mut() else {
+                continue;
+            };
+            // append the *processed* token's compressed KV
+            for l in 0..l_n {
+                for h in 0..h_n {
+                    let base = ((l * b_total + b) * h_n + h) * half;
+                    self.kv.append_token_lh(
+                        sess.request.id,
+                        l,
+                        h,
+                        &out.kr[base..base + half],
+                        &out.ki[base..base + half],
+                        &out.vr[base..base + half],
+                        &out.vi[base..base + half],
+                    )?;
+                }
+            }
+            self.kv.commit_token(sess.request.id)?;
+            let tok = argmax(&out.logits[b * vocab..(b + 1) * vocab]);
+            sess.push_token(tok, EOS, tmax);
+            self.metrics.tokens_generated += 1;
+            if sess.finished.is_some() {
+                let sess = self.slots[b].take().unwrap();
+                self.kv.free_seq(sess.request.id);
+                self.metrics
+                    .e2e
+                    .record(Instant::now().duration_since(sess.request.arrival));
+                self.metrics.requests_finished += 1;
+                self.finished.push(sess);
+            }
+        }
+        self.metrics
+            .coordinator_overhead
+            .record(coord_prep + t_post.elapsed());
+        Ok(())
+    }
+}
+
+fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::argmax;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[-1.0, -2.0]), 0);
+    }
+}

@@ -1,0 +1,495 @@
+//! Paged COMPRESSED KV-cache manager — where TurboAngle's rate actually
+//! becomes resident memory.
+//!
+//! Each sequence's cache is stored per (layer, head) as:
+//!   * angle indices bit-packed at exactly ceil(log2(n)) bits (packing.rs),
+//!   * norm codes bit-packed at the configured norm bits, with one fp32
+//!     (min,max) window per vector (Eq. 3's 64/d overhead term),
+//!   * or raw f32 norms when the config says fp32.
+//!
+//! Pages of `page_tokens` tokens are drawn from a global pool — the
+//! vLLM-style block allocator that gives admission control and a
+//! fragmentation-free memory bound. `fill_dense` reinflates a sequence into
+//! the (L,B,H,Tmax,d/2) tensors the decode_step HLO consumes.
+
+use crate::quant::norm::{self, NormMode};
+use crate::quant::packing::{bits_for, BitVec};
+use crate::quant::QuantConfig;
+use anyhow::{bail, ensure, Result};
+use std::collections::HashMap;
+
+/// Global page-pool accounting (pages are bookkeeping units; bytes live in
+/// the per-sequence stores).
+#[derive(Debug)]
+pub struct PagePool {
+    page_tokens: usize,
+    capacity_pages: usize,
+    allocated_pages: usize,
+}
+
+impl PagePool {
+    pub fn new(capacity_pages: usize, page_tokens: usize) -> Self {
+        PagePool {
+            page_tokens,
+            capacity_pages,
+            allocated_pages: 0,
+        }
+    }
+
+    fn try_alloc(&mut self, pages: usize) -> bool {
+        if self.allocated_pages + pages <= self.capacity_pages {
+            self.allocated_pages += pages;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn free(&mut self, pages: usize) {
+        debug_assert!(self.allocated_pages >= pages);
+        self.allocated_pages -= pages;
+    }
+
+    pub fn allocated(&self) -> usize {
+        self.allocated_pages
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity_pages
+    }
+}
+
+/// One (layer, head) compressed stream for one sequence side (K or V).
+#[derive(Clone, Debug, Default)]
+struct SideStore {
+    angles: BitVec,
+    norm_codes: BitVec,
+    /// one (vmin, vmax) per token vector; empty when norms are fp32
+    windows: Vec<(f32, f32)>,
+    /// raw norms when NormMode::FP32
+    raw_norms: Vec<f32>,
+}
+
+impl SideStore {
+    fn bytes(&self) -> usize {
+        self.angles.storage_bytes()
+            + self.norm_codes.storage_bytes()
+            + self.windows.len() * 8
+            + self.raw_norms.len() * 4
+    }
+}
+
+struct SeqCache {
+    len: usize,
+    pages: usize,
+    /// [layer][head] -> (K store, V store)
+    stores: Vec<Vec<(SideStore, SideStore)>>,
+}
+
+pub struct PagedKvCache {
+    pub cfg: QuantConfig,
+    pub n_layers: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub tmax: usize,
+    pool: PagePool,
+    seqs: HashMap<u64, SeqCache>,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemoryStats {
+    pub sequences: usize,
+    pub tokens: usize,
+    pub compressed_bytes: usize,
+    pub fp16_reference_bytes: usize,
+    pub pages_allocated: usize,
+    pub pages_capacity: usize,
+}
+
+impl MemoryStats {
+    pub fn compression_ratio(&self) -> f64 {
+        if self.compressed_bytes == 0 {
+            return 0.0;
+        }
+        self.fp16_reference_bytes as f64 / self.compressed_bytes as f64
+    }
+}
+
+impl PagedKvCache {
+    pub fn new(
+        cfg: QuantConfig,
+        n_layers: usize,
+        n_kv_heads: usize,
+        d_head: usize,
+        tmax: usize,
+        capacity_pages: usize,
+        page_tokens: usize,
+    ) -> Self {
+        assert_eq!(cfg.layers.len(), n_layers);
+        PagedKvCache {
+            cfg,
+            n_layers,
+            n_kv_heads,
+            d_head,
+            tmax,
+            pool: PagePool::new(capacity_pages, page_tokens),
+            seqs: HashMap::new(),
+        }
+    }
+
+    /// Admission: do we have pages for a sequence of `expected_tokens`?
+    pub fn can_admit(&self, expected_tokens: usize) -> bool {
+        let pages = expected_tokens.div_ceil(self.pool.page_tokens);
+        self.pool.allocated_pages + pages <= self.pool.capacity_pages
+    }
+
+    pub fn new_seq(&mut self, id: u64) -> Result<()> {
+        ensure!(!self.seqs.contains_key(&id), "sequence {id} exists");
+        let stores = (0..self.n_layers)
+            .map(|_| {
+                (0..self.n_kv_heads)
+                    .map(|_| (SideStore::default(), SideStore::default()))
+                    .collect()
+            })
+            .collect();
+        self.seqs.insert(
+            id,
+            SeqCache {
+                len: 0,
+                pages: 0,
+                stores,
+            },
+        );
+        Ok(())
+    }
+
+    pub fn free_seq(&mut self, id: u64) {
+        if let Some(s) = self.seqs.remove(&id) {
+            self.pool.free(s.pages);
+        }
+    }
+
+    fn append_side(
+        store: &mut SideStore,
+        r: &[f32],
+        k_idx: &[f32],
+        bins: u32,
+        mode: NormMode,
+    ) {
+        let width = bits_for(bins);
+        for &k in k_idx {
+            store.angles.push(k as u32, width);
+        }
+        if mode.bits == 0 {
+            store.raw_norms.extend_from_slice(r);
+        } else {
+            let q = norm::quantize(r, mode);
+            for &c in &q.codes {
+                store.norm_codes.push(c as u32, mode.bits as u32);
+            }
+            store.windows.push((q.vmin, q.vmax));
+        }
+    }
+
+    /// Append one token's compressed KV for (seq, layer, head).
+    /// `kr/ki/vr/vi` are the d/2-length raw norms and angle indices the
+    /// prefill/decode HLOs emit (indices as f32 codes).
+    #[allow(clippy::too_many_arguments)]
+    pub fn append_token_lh(
+        &mut self,
+        id: u64,
+        layer: usize,
+        head: usize,
+        kr: &[f32],
+        ki: &[f32],
+        vr: &[f32],
+        vi: &[f32],
+    ) -> Result<()> {
+        let half = self.d_head / 2;
+        ensure!(kr.len() == half && ki.len() == half);
+        ensure!(vr.len() == half && vi.len() == half);
+        let bins = self.cfg.layers[layer];
+        let (k_norm, v_norm) = (self.cfg.k_norm, self.cfg.v_norm);
+        let seq = match self.seqs.get_mut(&id) {
+            Some(s) => s,
+            None => bail!("unknown sequence {id}"),
+        };
+        let (ks, vs) = &mut seq.stores[layer][head];
+        Self::append_side(ks, kr, ki, bins.n_k, k_norm);
+        Self::append_side(vs, vr, vi, bins.n_v, v_norm);
+        Ok(())
+    }
+
+    /// Advance the sequence length by one token (after all layers/heads of
+    /// that token were appended), allocating pages as needed.
+    pub fn commit_token(&mut self, id: u64) -> Result<()> {
+        let page_tokens = self.pool.page_tokens;
+        let seq = match self.seqs.get_mut(&id) {
+            Some(s) => s,
+            None => bail!("unknown sequence {id}"),
+        };
+        ensure!(seq.len < self.tmax, "sequence {id} at tmax");
+        if seq.len % page_tokens == 0 {
+            if !self.pool.try_alloc(1) {
+                bail!("page pool exhausted");
+            }
+            seq.pages += 1;
+        }
+        seq.len += 1;
+        Ok(())
+    }
+
+    pub fn seq_len(&self, id: u64) -> usize {
+        self.seqs.get(&id).map_or(0, |s| s.len)
+    }
+
+    /// Dequantize + unpack one sequence into batch slot `b` of the dense
+    /// (L,B,H,Tmax,d/2) buffers the decode HLO takes. Slots beyond the
+    /// sequence length are left untouched (they're masked by pos).
+    #[allow(clippy::too_many_arguments)]
+    pub fn fill_dense(
+        &self,
+        id: u64,
+        b: usize,
+        batch: usize,
+        kr: &mut [f32],
+        ki: &mut [f32],
+        vr: &mut [f32],
+        vi: &mut [f32],
+    ) -> Result<usize> {
+        self.fill_dense_range(id, b, batch, 0, kr, ki, vr, vi)
+    }
+
+    /// Incremental variant: reinflate only tokens `from_t..len` — the
+    /// engine keeps per-slot dense buffers warm and tops up one token per
+    /// decode step, making the per-step coordinator cost O(1) in sequence
+    /// length instead of O(T) (EXPERIMENTS.md §Perf).
+    #[allow(clippy::too_many_arguments)]
+    pub fn fill_dense_range(
+        &self,
+        id: u64,
+        b: usize,
+        batch: usize,
+        from_t: usize,
+        kr: &mut [f32],
+        ki: &mut [f32],
+        vr: &mut [f32],
+        vi: &mut [f32],
+    ) -> Result<usize> {
+        let seq = self
+            .seqs
+            .get(&id)
+            .ok_or_else(|| anyhow::anyhow!("unknown sequence {id}"))?;
+        let half = self.d_head / 2;
+        let (h_n, tmax) = (self.n_kv_heads, self.tmax);
+        for l in 0..self.n_layers {
+            let bins = self.cfg.layers[l];
+            for h in 0..h_n {
+                let (ks, vs) = &seq.stores[l][h];
+                for (store, bins_n, mode, out_r, out_i) in [
+                    (ks, bins.n_k, self.cfg.k_norm, &mut *kr, &mut *ki),
+                    (vs, bins.n_v, self.cfg.v_norm, &mut *vr, &mut *vi),
+                ] {
+                    let width = bits_for(bins_n);
+                    for t in from_t..seq.len {
+                        let base = (((l * batch + b) * h_n + h) * tmax + t) * half;
+                        for i in 0..half {
+                            out_i[base + i] = store.angles.get(t * half + i, width) as f32;
+                        }
+                        if mode.bits == 0 {
+                            out_r[base..base + half]
+                                .copy_from_slice(&store.raw_norms[t * half..(t + 1) * half]);
+                        } else {
+                            // alloc-free dequant straight from the bitstream
+                            let (vmin, vmax) = store.windows[t];
+                            let scale = if vmax > vmin { vmax - vmin } else { 1.0 };
+                            let levels = mode.levels().max(1.0);
+                            let log_space = mode.log_space;
+                            for i in 0..half {
+                                let c = store.norm_codes.get(t * half + i, mode.bits as u32);
+                                let v = vmin + c as f32 * scale / levels;
+                                out_r[base + i] = if log_space { v.exp() } else { v };
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(seq.len)
+    }
+
+    pub fn memory_stats(&self) -> MemoryStats {
+        let mut st = MemoryStats {
+            sequences: self.seqs.len(),
+            pages_allocated: self.pool.allocated(),
+            pages_capacity: self.pool.capacity(),
+            ..Default::default()
+        };
+        for s in self.seqs.values() {
+            st.tokens += s.len;
+            for lh in &s.stores {
+                for (k, v) in lh {
+                    st.compressed_bytes += k.bytes() + v.bytes();
+                }
+            }
+            // fp16 reference: K and V, n_layers*n_heads*len*d_head*2 bytes each
+            st.fp16_reference_bytes +=
+                2 * self.n_layers * self.n_kv_heads * s.len * self.d_head * 2;
+        }
+        st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{angle, fwht::test_sign_diag};
+
+    fn mk_cache(norms: (NormMode, NormMode)) -> PagedKvCache {
+        let cfg = QuantConfig::paper_uniform(2).with_norms(norms.0, norms.1);
+        PagedKvCache::new(cfg, 2, 1, 8, 16, 64, 4)
+    }
+
+    fn fake_entry(seed: u64, half: usize, bins: u32) -> (Vec<f32>, Vec<f32>) {
+        let mut s = seed | 1;
+        let mut r = Vec::new();
+        let mut k = Vec::new();
+        for _ in 0..half {
+            s ^= s >> 12;
+            s ^= s << 25;
+            s ^= s >> 27;
+            r.push(0.1 + (s % 1000) as f32 / 250.0);
+            k.push((s % bins as u64) as f32);
+        }
+        (r, k)
+    }
+
+    #[test]
+    fn roundtrip_fp32_norms() {
+        let mut c = mk_cache((NormMode::FP32, NormMode::FP32));
+        c.new_seq(7).unwrap();
+        let half = 4;
+        let mut want = Vec::new();
+        for t in 0..5u64 {
+            for l in 0..2 {
+                let (kr, ki) = fake_entry(t * 10 + l as u64, half, 128);
+                let (vr, vi) = fake_entry(t * 10 + l as u64 + 5, half, 64);
+                c.append_token_lh(7, l, 0, &kr, &ki, &vr, &vi).unwrap();
+                want.push((l, kr, ki, vr, vi));
+            }
+            c.commit_token(7).unwrap();
+        }
+        let (lb, b, h, tmax, _) = (2, 1usize, 1, 16, half);
+        let n = lb * b * h * tmax * half;
+        let (mut kr, mut ki, mut vr, mut vi) =
+            (vec![0.0; n], vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+        let len = c.fill_dense(7, 0, 1, &mut kr, &mut ki, &mut vr, &mut vi).unwrap();
+        assert_eq!(len, 5);
+        for (idx, (l, wkr, wki, wvr, wvi)) in want.iter().enumerate() {
+            let t = idx / 2;
+            let base = ((l * b) * h * tmax + t) * half;
+            assert_eq!(&kr[base..base + half], &wkr[..]);
+            assert_eq!(&ki[base..base + half], &wki[..]);
+            assert_eq!(&vr[base..base + half], &wvr[..]);
+            assert_eq!(&vi[base..base + half], &wvi[..]);
+        }
+    }
+
+    #[test]
+    fn norm_quant_roundtrip_within_step() {
+        let mut c = mk_cache((NormMode::LINEAR8, NormMode::LOG4));
+        c.new_seq(1).unwrap();
+        let half = 4;
+        let (kr, ki) = fake_entry(3, half, 128);
+        let (vr, vi) = fake_entry(4, half, 64);
+        for l in 0..2 {
+            c.append_token_lh(1, l, 0, &kr, &ki, &vr, &vi).unwrap();
+        }
+        c.commit_token(1).unwrap();
+        let n = 2 * 16 * half;
+        let (mut okr, mut oki, mut ovr, mut ovi) =
+            (vec![0.0; n], vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+        c.fill_dense(1, 0, 1, &mut okr, &mut oki, &mut ovr, &mut ovi).unwrap();
+        // angles exact
+        assert_eq!(&oki[..half], &ki[..]);
+        assert_eq!(&ovi[..half], &vi[..]);
+        // norms within quantization error
+        let kspan = kr.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+            - kr.iter().cloned().fold(f32::INFINITY, f32::min);
+        for (a, b) in kr.iter().zip(&okr[..half]) {
+            assert!((a - b).abs() <= kspan / 255.0 * 0.51 + 1e-6);
+        }
+        for (a, b) in vr.iter().zip(&ovr[..half]) {
+            assert!((b / a - 1.0).abs() < 0.25, "{a} {b}"); // 4-bit log coarse
+        }
+    }
+
+    #[test]
+    fn page_accounting() {
+        let mut c = mk_cache((NormMode::FP32, NormMode::FP32));
+        c.new_seq(1).unwrap();
+        let half = 4;
+        let (kr, ki) = fake_entry(1, half, 128);
+        for t in 0..9 {
+            for l in 0..2 {
+                c.append_token_lh(1, l, 0, &kr, &ki, &kr, &ki).unwrap();
+            }
+            c.commit_token(1).unwrap();
+            let _ = t;
+        }
+        // 9 tokens at 4 tokens/page -> 3 pages
+        assert_eq!(c.memory_stats().pages_allocated, 3);
+        c.free_seq(1);
+        assert_eq!(c.memory_stats().pages_allocated, 0);
+    }
+
+    #[test]
+    fn pool_exhaustion_rejects() {
+        let cfg = QuantConfig::paper_uniform(1);
+        let mut c = PagedKvCache::new(cfg, 1, 1, 8, 64, 2, 4);
+        c.new_seq(1).unwrap();
+        let (kr, ki) = fake_entry(1, 4, 128);
+        let mut committed = 0;
+        for _ in 0..12 {
+            c.append_token_lh(1, 0, 0, &kr, &ki, &kr, &ki).unwrap();
+            if c.commit_token(1).is_ok() {
+                committed += 1;
+            } else {
+                break;
+            }
+        }
+        assert_eq!(committed, 8); // 2 pages * 4 tokens
+    }
+
+    #[test]
+    fn compression_ratio_beats_4x_with_k8v4() {
+        // d=64, K128V64 + K8V4-log ≈ 7.25 bits/elem vs fp16's 16 -> >2.2x;
+        // with fp32-norm storage it's much worse — this pins the ordering.
+        let cfg_a = QuantConfig::paper_uniform(2).with_k8v4_log();
+        let cfg_b = QuantConfig::paper_uniform(2);
+        let mut ratios = Vec::new();
+        for cfg in [cfg_a, cfg_b] {
+            let mut c = PagedKvCache::new(cfg, 2, 1, 64, 64, 1024, 16);
+            c.new_seq(1).unwrap();
+            let (kr, ki) = fake_entry(1, 32, 128);
+            let (vr, vi) = fake_entry(2, 32, 64);
+            for _ in 0..48 {
+                for l in 0..2 {
+                    c.append_token_lh(1, l, 0, &kr, &ki, &vr, &vi).unwrap();
+                }
+                c.commit_token(1).unwrap();
+            }
+            ratios.push(c.memory_stats().compression_ratio());
+        }
+        assert!(ratios[0] > 2.0, "k8v4 ratio {}", ratios[0]);
+        assert!(ratios[0] > ratios[1], "quantized norms must beat fp32");
+    }
+
+    #[test]
+    fn rejects_unknown_seq() {
+        let mut c = mk_cache((NormMode::FP32, NormMode::FP32));
+        let (kr, ki) = fake_entry(1, 4, 128);
+        assert!(c.append_token_lh(9, 0, 0, &kr, &ki, &kr, &ki).is_err());
+        assert!(c.commit_token(9).is_err());
+    }
+}

@@ -1,0 +1,148 @@
+//! Serving metrics: counters + log-bucketed latency histograms.
+
+use std::time::Duration;
+
+/// Log-scale histogram from 1µs to ~17s (doubling buckets).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: [u64; 25],
+    count: u64,
+    sum_us: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: [0; 25],
+            count: 0,
+            sum_us: 0,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let idx = (63 - us.leading_zeros() as usize).min(24);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us / self.count)
+    }
+
+    /// Approximate quantile from bucket upper edges.
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        Duration::from_micros(1 << 25)
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct EngineMetrics {
+    pub requests_submitted: u64,
+    pub requests_finished: u64,
+    pub tokens_generated: u64,
+    pub prefill_batches: u64,
+    pub prefill_sequences: u64,
+    pub decode_steps: u64,
+    pub decode_slot_steps: u64,
+    /// time-to-first-token
+    pub ttft: Histogram,
+    /// per decode step (whole batch)
+    pub decode_step_latency: Histogram,
+    /// request end-to-end
+    pub e2e: Histogram,
+    /// engine-side overhead per decode step (pack/unpack/gather)
+    pub coordinator_overhead: Histogram,
+}
+
+impl EngineMetrics {
+    /// Slot utilization of decode steps: generated tokens / slot capacity.
+    pub fn decode_utilization(&self) -> f64 {
+        if self.decode_slot_steps == 0 {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / self.decode_slot_steps as f64
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests: {} submitted, {} finished | tokens: {}\n\
+             prefill: {} batches ({} seqs) | decode: {} steps (util {:.2})\n\
+             ttft   p50 {:?} p95 {:?} mean {:?}\n\
+             step   p50 {:?} p95 {:?} mean {:?}\n\
+             e2e    p50 {:?} p95 {:?} mean {:?}\n\
+             coord  p50 {:?} p95 {:?} mean {:?}",
+            self.requests_submitted,
+            self.requests_finished,
+            self.tokens_generated,
+            self.prefill_batches,
+            self.prefill_sequences,
+            self.decode_steps,
+            self.decode_utilization(),
+            self.ttft.quantile(0.5),
+            self.ttft.quantile(0.95),
+            self.ttft.mean(),
+            self.decode_step_latency.quantile(0.5),
+            self.decode_step_latency.quantile(0.95),
+            self.decode_step_latency.mean(),
+            self.e2e.quantile(0.5),
+            self.e2e.quantile(0.95),
+            self.e2e.mean(),
+            self.coordinator_overhead.quantile(0.5),
+            self.coordinator_overhead.quantile(0.95),
+            self.coordinator_overhead.mean(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = Histogram::default();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i * 10));
+        }
+        assert!(h.quantile(0.5) <= h.quantile(0.95));
+        assert!(h.quantile(0.95) <= h.quantile(1.0));
+        assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn mean_sane() {
+        let mut h = Histogram::default();
+        h.record(Duration::from_micros(100));
+        h.record(Duration::from_micros(300));
+        assert_eq!(h.mean(), Duration::from_micros(200));
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile(0.5), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+}

@@ -1,0 +1,26 @@
+//! The serving coordinator — the paper-as-a-system: a vLLM-router-style
+//! engine whose resident KV cache is TurboAngle-compressed.
+//!
+//! * [`kv_manager`] — paged compressed cache (bit-packed angles + quantized
+//!   norms), block allocator, memory accounting
+//! * [`batcher`] / [`scheduler`] — dynamic batching and prefill/decode
+//!   interleave
+//! * [`router`] — replica routing policies
+//! * [`engine`] — the tick loop gluing slots, cache, and the AOT programs
+//! * [`metrics`] — latency histograms and counters
+
+pub mod batcher;
+pub mod engine;
+pub mod kv_manager;
+pub mod metrics;
+pub mod router;
+pub mod scheduler;
+pub mod server;
+pub mod session;
+
+pub use batcher::{BatchPolicy, DynamicBatcher};
+pub use engine::{Engine, EngineConfig};
+pub use kv_manager::PagedKvCache;
+pub use router::{RoutePolicy, Router};
+pub use scheduler::SchedulerPolicy;
+pub use session::{FinishReason, Request, Session};

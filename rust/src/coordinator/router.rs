@@ -1,0 +1,151 @@
+//! Request router across engine replicas (vllm-project/router-style).
+//!
+//! Single-process here (replicas are engine instances), but the policy
+//! layer is the real thing: least-loaded with optional session affinity
+//! (consistent hashing on a session key keeps multi-turn requests on the
+//! replica that may still hold their prefix).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    LeastLoaded,
+    /// consistent-hash by session key, falling back to least-loaded
+    SessionAffinity,
+}
+
+#[derive(Debug)]
+pub struct Router {
+    pub policy: RoutePolicy,
+    loads: Vec<usize>,
+    rr_next: usize,
+    /// virtual nodes -> replica (consistent hash ring)
+    ring: BTreeMap<u64, usize>,
+}
+
+fn hash64(x: u64) -> u64 {
+    // splitmix64
+    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Router {
+    pub fn new(replicas: usize, policy: RoutePolicy) -> Self {
+        let mut ring = BTreeMap::new();
+        for r in 0..replicas {
+            for v in 0..16u64 {
+                ring.insert(hash64((r as u64) << 32 | v), r);
+            }
+        }
+        Router {
+            policy,
+            loads: vec![0; replicas],
+            rr_next: 0,
+            ring,
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.loads.len()
+    }
+
+    /// Pick a replica for a request. `session_key` enables affinity.
+    pub fn route(&mut self, session_key: Option<u64>) -> usize {
+        let r = match self.policy {
+            RoutePolicy::RoundRobin => {
+                let r = self.rr_next % self.loads.len();
+                self.rr_next += 1;
+                r
+            }
+            RoutePolicy::LeastLoaded => self.least_loaded(),
+            RoutePolicy::SessionAffinity => match session_key {
+                Some(key) => self.ring_lookup(hash64(key)),
+                None => self.least_loaded(),
+            },
+        };
+        self.loads[r] += 1;
+        r
+    }
+
+    /// A request finished on `replica`.
+    pub fn complete(&mut self, replica: usize) {
+        debug_assert!(self.loads[replica] > 0);
+        self.loads[replica] = self.loads[replica].saturating_sub(1);
+    }
+
+    fn least_loaded(&self) -> usize {
+        self.loads
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, &l)| (l, *i))
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    fn ring_lookup(&self, h: u64) -> usize {
+        *self
+            .ring
+            .range(h..)
+            .next()
+            .map(|(_, r)| r)
+            .unwrap_or_else(|| self.ring.values().next().unwrap())
+    }
+
+    pub fn loads(&self) -> &[usize] {
+        &self.loads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(3, RoutePolicy::RoundRobin);
+        assert_eq!(
+            (0..6).map(|_| r.route(None)).collect::<Vec<_>>(),
+            vec![0, 1, 2, 0, 1, 2]
+        );
+    }
+
+    #[test]
+    fn least_loaded_balances() {
+        let mut r = Router::new(3, RoutePolicy::LeastLoaded);
+        for _ in 0..9 {
+            r.route(None);
+        }
+        assert_eq!(r.loads(), &[3, 3, 3]);
+    }
+
+    #[test]
+    fn least_loaded_fills_gaps() {
+        let mut r = Router::new(2, RoutePolicy::LeastLoaded);
+        let a = r.route(None);
+        let _b = r.route(None);
+        r.complete(a);
+        assert_eq!(r.route(None), a);
+    }
+
+    #[test]
+    fn affinity_is_sticky() {
+        let mut r = Router::new(4, RoutePolicy::SessionAffinity);
+        let first = r.route(Some(42));
+        for _ in 0..5 {
+            assert_eq!(r.route(Some(42)), first);
+        }
+    }
+
+    #[test]
+    fn affinity_spreads_sessions() {
+        let mut r = Router::new(4, RoutePolicy::SessionAffinity);
+        let mut seen = std::collections::HashSet::new();
+        for k in 0..64u64 {
+            seen.insert(r.route(Some(k)));
+        }
+        assert!(seen.len() >= 3, "ring should spread keys, got {seen:?}");
+    }
+}

@@ -1,0 +1,121 @@
+//! Prefill/decode interleaving policy.
+//!
+//! Decode-priority with prefill admission gates (the Orca/vLLM-style
+//! tradeoff): decode ticks keep inter-token latency low; prefills run when
+//! the batcher says a worthwhile batch exists or slots idle. Pure function
+//! of observable state — trivially testable.
+
+use super::batcher::DynamicBatcher;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    Prefill,
+    Decode,
+    Idle,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerPolicy {
+    /// prefer decode unless at least this fraction of slots are free
+    pub prefill_free_frac: f64,
+}
+
+impl Default for SchedulerPolicy {
+    fn default() -> Self {
+        SchedulerPolicy {
+            prefill_free_frac: 0.5,
+        }
+    }
+}
+
+pub fn next_action(
+    policy: &SchedulerPolicy,
+    batcher: &DynamicBatcher,
+    active_sessions: usize,
+    total_slots: usize,
+    now: Instant,
+) -> Action {
+    let free = total_slots - active_sessions;
+    let want_prefill = batcher.should_prefill(free, now);
+    if want_prefill {
+        // run prefill if decode is idle, or enough capacity sits free
+        if active_sessions == 0
+            || (free as f64) / (total_slots as f64) >= policy.prefill_free_frac
+        {
+            return Action::Prefill;
+        }
+    }
+    if active_sessions > 0 {
+        return Action::Decode;
+    }
+    if want_prefill {
+        return Action::Prefill;
+    }
+    Action::Idle
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher};
+    use crate::coordinator::session::Request;
+    use std::time::Duration;
+
+    fn loaded_batcher(n: usize) -> DynamicBatcher {
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            min_batch: 1,
+            max_wait: Duration::ZERO,
+        });
+        for i in 0..n {
+            b.submit(Request::new(i as u64, vec![1], 4));
+        }
+        b
+    }
+
+    #[test]
+    fn idle_when_nothing() {
+        let b = loaded_batcher(0);
+        assert_eq!(
+            next_action(&SchedulerPolicy::default(), &b, 0, 4, Instant::now()),
+            Action::Idle
+        );
+    }
+
+    #[test]
+    fn prefill_when_empty_and_pending() {
+        let b = loaded_batcher(2);
+        assert_eq!(
+            next_action(&SchedulerPolicy::default(), &b, 0, 4, Instant::now()),
+            Action::Prefill
+        );
+    }
+
+    #[test]
+    fn decode_priority_when_mostly_busy() {
+        let b = loaded_batcher(2);
+        // 3 of 4 slots busy -> free frac 0.25 < 0.5 -> decode first
+        assert_eq!(
+            next_action(&SchedulerPolicy::default(), &b, 3, 4, Instant::now()),
+            Action::Decode
+        );
+    }
+
+    #[test]
+    fn prefill_when_half_free() {
+        let b = loaded_batcher(2);
+        assert_eq!(
+            next_action(&SchedulerPolicy::default(), &b, 2, 4, Instant::now()),
+            Action::Prefill
+        );
+    }
+
+    #[test]
+    fn decode_when_no_pending() {
+        let b = loaded_batcher(0);
+        assert_eq!(
+            next_action(&SchedulerPolicy::default(), &b, 2, 4, Instant::now()),
+            Action::Decode
+        );
+    }
+}

@@ -1,0 +1,205 @@
+//! Line-delimited-JSON TCP front-end for the engine — the deployable
+//! surface: one request per line, one response per line.
+//!
+//!   → {"id": 1, "prompt": "the wodu zatu", "max_new_tokens": 8}
+//!   ← {"id": 1, "text": "...", "tokens": [ ... ], "prompt_tokens": 13,
+//!      "finish": "length"}
+//!
+//! Connections are handled by threads that feed an mpsc queue; the engine
+//! runs its tick loop on the serving thread (PJRT handles stay on one
+//! thread). Responses travel back through per-request channels.
+
+use super::engine::Engine;
+use super::session::{FinishReason, Request};
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// A parsed wire request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireRequest {
+    pub id: u64,
+    pub prompt: String,
+    pub max_new_tokens: usize,
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<WireRequest> {
+    let j = Json::parse(line)?;
+    Ok(WireRequest {
+        id: j.get("id")?.as_u64()?,
+        prompt: j.get("prompt")?.as_str()?.to_string(),
+        max_new_tokens: j
+            .opt("max_new_tokens")
+            .map(|v| v.as_usize())
+            .transpose()?
+            .unwrap_or(16),
+    })
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format one response line (no trailing newline).
+pub fn format_response(
+    id: u64,
+    prompt_tokens: usize,
+    generated: &[i32],
+    finish: Option<FinishReason>,
+) -> String {
+    let text: String = generated
+        .iter()
+        .filter(|&&t| (0..256).contains(&t))
+        .map(|&t| t as u8 as char)
+        .collect();
+    let toks = generated
+        .iter()
+        .map(|t| t.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    let finish = match finish {
+        Some(FinishReason::Length) => "length",
+        Some(FinishReason::Eos) => "eos",
+        Some(FinishReason::CacheFull) => "cache_full",
+        None => "unknown",
+    };
+    format!(
+        "{{\"id\": {id}, \"text\": \"{}\", \"tokens\": [{toks}], \"prompt_tokens\": {prompt_tokens}, \"finish\": \"{finish}\"}}",
+        json_escape(&text)
+    )
+}
+
+type Queued = (WireRequest, mpsc::Sender<String>);
+
+/// Serve until `max_requests` have completed (0 = forever). Returns the
+/// number served. Binds `addr`; prints the bound address to stderr.
+pub fn serve(engine: &mut Engine, addr: &str, max_requests: usize) -> Result<usize> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    eprintln!("turboangle serving on {local}");
+    let (tx, rx) = mpsc::channel::<Queued>();
+
+    // acceptor thread: one handler thread per connection
+    std::thread::spawn(move || {
+        for stream in listener.incoming().flatten() {
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                let _ = handle_conn(stream, tx);
+            });
+        }
+    });
+
+    let mut next_id: u64 = 1 << 32; // engine-side ids; wire ids are echoed
+    let mut pending: HashMap<u64, (u64, mpsc::Sender<String>)> = HashMap::new();
+    let mut served = 0usize;
+    loop {
+        // ingest whatever arrived
+        while let Ok((wire, resp_tx)) = rx.try_recv() {
+            let prompt: Vec<i32> = wire.prompt.bytes().map(|b| b as i32).collect();
+            let id = next_id;
+            next_id += 1;
+            pending.insert(id, (wire.id, resp_tx));
+            engine.submit(Request::new(id, prompt, wire.max_new_tokens));
+        }
+        if engine.has_work() {
+            engine.tick()?;
+        } else {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        for sess in engine.take_finished() {
+            if let Some((wire_id, resp_tx)) = pending.remove(&sess.request.id) {
+                let line = format_response(
+                    wire_id,
+                    sess.prompt_len,
+                    &sess.generated,
+                    sess.finished,
+                );
+                let _ = resp_tx.send(line);
+                served += 1;
+            }
+        }
+        if max_requests > 0 && served >= max_requests && pending.is_empty() {
+            return Ok(served);
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Queued>) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_request(&line) {
+            Ok(wire) => {
+                let (resp_tx, resp_rx) = mpsc::channel();
+                tx.send((wire, resp_tx))
+                    .map_err(|_| anyhow!("engine gone"))?;
+                // block this connection until its response is ready
+                let resp = resp_rx.recv().map_err(|_| anyhow!("engine dropped"))?;
+                writer.write_all(resp.as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+            }
+            Err(e) => {
+                let msg = format!("{{\"error\": \"{}\"}}\n", json_escape(&e.to_string()));
+                writer.write_all(msg.as_bytes())?;
+                writer.flush()?;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_requests() {
+        let r = parse_request(r#"{"id": 3, "prompt": "hi", "max_new_tokens": 5}"#).unwrap();
+        assert_eq!(r, WireRequest { id: 3, prompt: "hi".into(), max_new_tokens: 5 });
+        // default max_new_tokens
+        let r = parse_request(r#"{"id": 1, "prompt": "x"}"#).unwrap();
+        assert_eq!(r.max_new_tokens, 16);
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"prompt": "x"}"#).is_err());
+    }
+
+    #[test]
+    fn formats_responses() {
+        let line = format_response(7, 3, &[104, 105, 257], Some(FinishReason::Eos));
+        assert!(line.contains("\"id\": 7"));
+        assert!(line.contains("\"text\": \"hi\""));
+        assert!(line.contains("\"finish\": \"eos\""));
+        // round-trips through our own parser
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("prompt_tokens").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn escaping_is_safe() {
+        let line = format_response(1, 0, &[34, 92, 10], None);
+        assert!(Json::parse(&line).is_ok(), "{line}");
+    }
+}

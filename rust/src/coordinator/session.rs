@@ -1,0 +1,101 @@
+//! Request and generation-session state.
+
+use std::time::Instant;
+
+/// An inference request as submitted to the engine.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub arrival: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            arrival: Instant::now(),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    Length,
+    Eos,
+    CacheFull,
+}
+
+/// A running generation (occupies one batch slot).
+#[derive(Debug)]
+pub struct Session {
+    pub request: Request,
+    pub prompt_len: usize,
+    pub generated: Vec<i32>,
+    pub first_token_at: Option<Instant>,
+    pub finished: Option<FinishReason>,
+}
+
+impl Session {
+    pub fn new(request: Request, prompt_len: usize) -> Self {
+        Session {
+            request,
+            prompt_len,
+            generated: Vec::new(),
+            first_token_at: None,
+            finished: None,
+        }
+    }
+
+    /// Total cache length = prompt + generated (the decode `pos`).
+    pub fn cache_len(&self) -> usize {
+        self.prompt_len + self.generated.len()
+    }
+
+    pub fn push_token(&mut self, tok: i32, eos: i32, tmax: usize) {
+        if self.first_token_at.is_none() {
+            self.first_token_at = Some(Instant::now());
+        }
+        self.generated.push(tok);
+        if tok == eos {
+            self.finished = Some(FinishReason::Eos);
+        } else if self.generated.len() >= self.request.max_new_tokens {
+            self.finished = Some(FinishReason::Length);
+        } else if self.cache_len() >= tmax {
+            self.finished = Some(FinishReason::CacheFull);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finishes_on_length() {
+        let mut s = Session::new(Request::new(1, vec![1, 2], 3), 2);
+        for t in 0..3 {
+            s.push_token(t, 257, 100);
+        }
+        assert_eq!(s.finished, Some(FinishReason::Length));
+        assert_eq!(s.cache_len(), 5);
+    }
+
+    #[test]
+    fn finishes_on_eos() {
+        let mut s = Session::new(Request::new(1, vec![1], 10), 1);
+        s.push_token(257, 257, 100);
+        assert_eq!(s.finished, Some(FinishReason::Eos));
+    }
+
+    #[test]
+    fn finishes_on_cache_full() {
+        let mut s = Session::new(Request::new(1, vec![1, 2, 3], 10), 3);
+        s.push_token(5, 257, 5);
+        s.push_token(6, 257, 5);
+        assert_eq!(s.finished, Some(FinishReason::CacheFull));
+    }
+}

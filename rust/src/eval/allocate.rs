@@ -1,0 +1,120 @@
+//! Greedy per-layer bit allocation — an EXTENSION beyond the paper's
+//! early-boost heuristic (§3.2 stops at contiguous/selective hand
+//! schedules; the paper's future-work direction is automatic allocation).
+//!
+//! Algorithm: start from the uniform baseline; repeatedly take the single
+//! (layer, side) doubling with the best measured ΔPPL improvement per
+//! added bit, until the bit budget is exhausted or no doubling helps.
+//! Pure measurement-driven, still zero calibration *data* (only the same
+//! eval chunks every config search uses).
+
+use super::ppl::PplHarness;
+use crate::quant::{LayerBins, QuantConfig};
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct AllocStep {
+    pub layer: usize,
+    pub side: char, // 'K' or 'V'
+    pub new_bins: u32,
+    pub delta_ppl: f64,
+    pub bits: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct AllocResult {
+    pub steps: Vec<AllocStep>,
+    pub best: QuantConfig,
+    pub best_delta: f64,
+    pub evals_used: usize,
+}
+
+/// Greedy allocation. `bit_budget` is the max average angle bits/element
+/// (Eq. 1); `group` coarsens the search: layers are moved in blocks of
+/// `group` to keep the eval count practical.
+pub fn greedy_allocate(
+    h: &PplHarness,
+    bit_budget: f64,
+    group: usize,
+    max_bins: u32,
+) -> Result<AllocResult> {
+    let l = h.n_layers();
+    let mut cfg = QuantConfig::paper_uniform(l);
+    let mut cur_delta = h.delta_ppl(&cfg)?;
+    let mut evals = 1usize;
+    let mut steps = Vec::new();
+    let n_groups = l.div_ceil(group);
+
+    loop {
+        // candidate moves: double n_K or n_V of one group
+        let mut best_move: Option<(QuantConfig, f64, usize, char, u32)> = None;
+        for g in 0..n_groups {
+            let lo = g * group;
+            let hi = ((g + 1) * group).min(l);
+            for side in ['K', 'V'] {
+                let mut cand = cfg.clone();
+                let mut new_bins = 0;
+                for layer in lo..hi {
+                    let LayerBins { n_k, n_v } = cand.layers[layer];
+                    match side {
+                        'K' if n_k < max_bins => {
+                            cand.layers[layer].n_k = n_k * 2;
+                            new_bins = n_k * 2;
+                        }
+                        'V' if n_v < max_bins => {
+                            cand.layers[layer].n_v = n_v * 2;
+                            new_bins = n_v * 2;
+                        }
+                        _ => {}
+                    }
+                }
+                if new_bins == 0 || cand.angle_bits_per_element() > bit_budget {
+                    continue;
+                }
+                let d = h.delta_ppl(&cand)?;
+                evals += 1;
+                if best_move.as_ref().map_or(true, |(_, bd, ..)| d < *bd) {
+                    best_move = Some((cand, d, lo, side, new_bins));
+                }
+            }
+        }
+        match best_move {
+            Some((cand, d, layer, side, new_bins)) if d < cur_delta => {
+                steps.push(AllocStep {
+                    layer,
+                    side,
+                    new_bins,
+                    delta_ppl: d,
+                    bits: cand.angle_bits_per_element(),
+                });
+                cfg = cand;
+                cur_delta = d;
+            }
+            _ => break, // no improving move within budget
+        }
+    }
+    Ok(AllocResult {
+        steps,
+        best_delta: cur_delta,
+        best: cfg,
+        evals_used: evals,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_formula_guard() {
+        // a doubling of one side of one 4-layer group on L=24 adds
+        // 4 * (1/4) / 24 bits — make sure Eq.1 in QuantConfig agrees
+        let base = QuantConfig::paper_uniform(24);
+        let mut boosted = base.clone();
+        for l in 0..4 {
+            boosted.layers[l].n_k *= 2;
+        }
+        let diff = boosted.angle_bits_per_element() - base.angle_bits_per_element();
+        assert!((diff - 4.0 * 0.25 / 24.0).abs() < 1e-12);
+    }
+}

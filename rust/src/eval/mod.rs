@@ -1,0 +1,11 @@
+//! Evaluation harness: the perplexity protocol and every table's sweep
+//! driver (DESIGN.md §4 maps tables → functions here).
+
+pub mod allocate;
+pub mod ppl;
+pub mod search;
+pub mod seeds;
+pub mod sensitivity;
+pub mod sweep;
+
+pub use ppl::PplHarness;

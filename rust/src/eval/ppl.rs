@@ -1,0 +1,100 @@
+//! Perplexity harness — the paper's measurement protocol (§4.1).
+//!
+//! Held-out chunks (non-overlapping, fixed length; paper: 32×1024 on
+//! WikiText-2, scaled via the manifest) are teacher-forced through the
+//! eval_fwd artifact; PPL = exp(Σ nll / Σ tokens) and ΔPPL is relative to
+//! the unquantized (mode=None) run of the SAME weights — mirroring the
+//! paper's "relative to fp16 inference" convention.
+
+use crate::quant::QuantConfig;
+use crate::runtime::{tensorfile, Manifest, ModelExecutor};
+use anyhow::{ensure, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+pub struct PplHarness {
+    pub exec: ModelExecutor,
+    chunks: Vec<i32>,
+    n_chunks: usize,
+    chunk_len: usize,
+    cache: RefCell<HashMap<String, f64>>,
+    baseline: RefCell<Option<f64>>,
+    /// Executions performed (for EXPERIMENTS.md bookkeeping).
+    pub evals_run: RefCell<usize>,
+}
+
+impl PplHarness {
+    pub fn new(manifest: &Manifest, exec: ModelExecutor) -> Result<Self> {
+        let t = tensorfile::read(manifest.path("eval_chunks.tang"))?;
+        let chunks_t = &t["chunks"];
+        let n_chunks = chunks_t.shape[0];
+        let chunk_len = chunks_t.shape[1];
+        ensure!(n_chunks == manifest.eval.chunks);
+        ensure!(chunk_len == manifest.eval.chunk_len);
+        Ok(PplHarness {
+            exec,
+            chunks: chunks_t.as_i32()?,
+            n_chunks,
+            chunk_len,
+            cache: RefCell::new(HashMap::new()),
+            baseline: RefCell::new(None),
+            evals_run: RefCell::new(0),
+        })
+    }
+
+    /// PPL for a config (memoized by config tag).
+    pub fn ppl(&self, cfg: &QuantConfig) -> Result<f64> {
+        let key = format!("{cfg:?}");
+        if let Some(&v) = self.cache.borrow().get(&key) {
+            return Ok(v);
+        }
+        let batch = self.exec.eval_proto.batch;
+        let mut nll_sum = 0.0f64;
+        let mut cnt_sum = 0.0f64;
+        let mut i = 0;
+        while i < self.n_chunks {
+            let rows = &self.chunks
+                [i * self.chunk_len..(i + batch) * self.chunk_len];
+            let (nll, cnt) = self.exec.eval_nll(rows, cfg)?;
+            nll_sum += nll.iter().map(|&v| v as f64).sum::<f64>();
+            cnt_sum += cnt.iter().map(|&v| v as f64).sum::<f64>();
+            i += batch;
+        }
+        let ppl = (nll_sum / cnt_sum).exp();
+        *self.evals_run.borrow_mut() += 1;
+        self.cache.borrow_mut().insert(key, ppl);
+        Ok(ppl)
+    }
+
+    /// Unquantized reference PPL (memoized).
+    pub fn baseline_ppl(&self) -> Result<f64> {
+        if let Some(v) = *self.baseline.borrow() {
+            return Ok(v);
+        }
+        let v = self.ppl(&QuantConfig::none(self.exec.profile.n_layers))?;
+        *self.baseline.borrow_mut() = Some(v);
+        Ok(v)
+    }
+
+    /// ΔPPL = PPL(cfg) − PPL(reference).
+    pub fn delta_ppl(&self, cfg: &QuantConfig) -> Result<f64> {
+        Ok(self.ppl(cfg)? - self.baseline_ppl()?)
+    }
+
+    /// Swap the rotation diagonal and invalidate every memoized PPL
+    /// (including the reference run) — used by the D-seed sweep.
+    pub fn set_sign(&mut self, sign: &[f32]) -> Result<()> {
+        self.exec.set_sign(sign)?;
+        self.cache.borrow_mut().clear();
+        *self.baseline.borrow_mut() = None;
+        Ok(())
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.exec.profile.n_layers
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.exec.profile.d_head
+    }
+}

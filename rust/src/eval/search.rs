@@ -1,0 +1,91 @@
+//! The §3.2 configuration-search heuristic, as the paper prescribes it:
+//!
+//!   1. test n_early ∈ {4, 8, 16} with (256,128) and (128,256),
+//!   2. pick whichever gives lower ΔPPL,
+//!   3. adjust n_early while improvement continues.
+//!
+//! Budgeted at 3–5 evaluation runs beyond the two reference runs — this is
+//! the "zero calibration, few evals" deployment story, distinct from the
+//! exhaustive `sweep::early_boost_sweep` used to regenerate Table 2.
+
+use super::ppl::PplHarness;
+use crate::quant::QuantConfig;
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct SearchStep {
+    pub tag: String,
+    pub delta_ppl: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub steps: Vec<SearchStep>,
+    pub best: QuantConfig,
+    pub best_delta: f64,
+    pub evals_used: usize,
+}
+
+pub fn heuristic_search(h: &PplHarness, budget: usize) -> Result<SearchResult> {
+    let l = h.n_layers();
+    let mut steps = Vec::new();
+    let mut evals = 0usize;
+    let mut best = (f64::INFINITY, QuantConfig::paper_uniform(l));
+
+    let try_cfg = |cfg: QuantConfig,
+                       steps: &mut Vec<SearchStep>,
+                       best: &mut (f64, QuantConfig),
+                       evals: &mut usize|
+     -> Result<f64> {
+        let d = h.delta_ppl(&cfg)?;
+        steps.push(SearchStep {
+            tag: cfg.tag(),
+            delta_ppl: d,
+        });
+        *evals += 1;
+        if d < best.0 {
+            *best = (d, cfg);
+        }
+        Ok(d)
+    };
+
+    // step 1: probe direction at E4 (2 evals)
+    let d_k = try_cfg(
+        QuantConfig::early_boost(l, 4, 256, 128),
+        &mut steps,
+        &mut best,
+        &mut evals,
+    )?;
+    let d_v = try_cfg(
+        QuantConfig::early_boost(l, 4, 128, 256),
+        &mut steps,
+        &mut best,
+        &mut evals,
+    )?;
+    let (nk, nv) = if d_k <= d_v { (256, 128) } else { (128, 256) };
+
+    // step 2/3: grow n_early while it helps, within budget
+    let mut prev = best.0;
+    for e in [8usize, 16, l * 2 / 3, l - l / 8] {
+        if evals >= budget || e >= l {
+            break;
+        }
+        let d = try_cfg(
+            QuantConfig::early_boost(l, e, nk, nv),
+            &mut steps,
+            &mut best,
+            &mut evals,
+        )?;
+        if d > prev {
+            break; // §3.2: stop when improvement stops
+        }
+        prev = d;
+    }
+
+    Ok(SearchResult {
+        best_delta: best.0,
+        best: best.1,
+        evals_used: evals,
+        steps,
+    })
+}

@@ -1,0 +1,83 @@
+//! D-seed sensitivity — the paper's stated limitation ("confidence
+//! intervals over multiple seeds for the random diagonal D are not
+//! reported").
+//!
+//! The sign diagonal is a *runtime input* to every artifact here, so we
+//! can re-evaluate any config under fresh ±1 diagonals without
+//! recompiling anything and report ΔPPL mean ± spread across seeds.
+
+use super::ppl::PplHarness;
+use crate::quant::QuantConfig;
+use crate::runtime::{Manifest, ModelExecutor};
+use anyhow::Result;
+
+/// Deterministic ±1 diagonal from a seed (xorshift*; independent of the
+/// numpy-generated build-time diagonal, which is seed index 0).
+pub fn sign_diag(d: usize, seed: u64) -> Vec<f32> {
+    let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+    (0..d)
+        .map(|_| {
+            s ^= s >> 12;
+            s ^= s << 25;
+            s ^= s >> 27;
+            if s.wrapping_mul(0x2545F4914F6CDD1D) >> 63 == 1 {
+                1.0
+            } else {
+                -1.0
+            }
+        })
+        .collect()
+}
+
+#[derive(Clone, Debug)]
+pub struct SeedSweep {
+    pub deltas: Vec<f64>,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// ΔPPL for `cfg` under `n_seeds` independent diagonals (seed 0 = the
+/// build-time numpy diagonal shipped in the weights).
+pub fn seed_sweep(h: &mut PplHarness, cfg: &QuantConfig, n_seeds: usize) -> Result<SeedSweep> {
+    let d = h.d_head();
+    let original = h.exec.sign.clone();
+    let mut deltas = Vec::new();
+    for seed in 0..n_seeds as u64 {
+        let sign = if seed == 0 {
+            original.clone()
+        } else {
+            sign_diag(d, seed)
+        };
+        h.set_sign(&sign)?; // clears the PPL memo (baseline included)
+        deltas.push(h.delta_ppl(cfg)?);
+    }
+    h.set_sign(&original)?;
+    let mean = deltas.iter().sum::<f64>() / deltas.len() as f64;
+    let var = deltas.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+        / (deltas.len() as f64 - 1.0).max(1.0);
+    Ok(SeedSweep {
+        mean,
+        std: var.sqrt(),
+        min: deltas.iter().cloned().fold(f64::INFINITY, f64::min),
+        max: deltas.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        deltas,
+    })
+}
+
+/// Convenience: build a harness and sweep a standard config set.
+pub fn run(manifest: &Manifest, exec: ModelExecutor, n_seeds: usize) -> Result<Vec<(String, SeedSweep)>> {
+    let mut h = PplHarness::new(manifest, exec)?;
+    let l = h.n_layers();
+    let mut out = Vec::new();
+    for cfg in [
+        QuantConfig::paper_uniform(l),
+        QuantConfig::early_boost(l, 4, 256, 128),
+        QuantConfig::paper_uniform(l).with_k8v4_log(),
+    ] {
+        let sweep = seed_sweep(&mut h, &cfg, n_seeds)?;
+        out.push((cfg.tag(), sweep));
+    }
+    Ok(out)
+}

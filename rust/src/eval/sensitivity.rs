@@ -1,0 +1,89 @@
+//! Layer-group sensitivity analysis (paper §4.4, Table 4).
+//!
+//! Partition the layers into groups of `group_size`, boost exactly one
+//! group at a time to (256,128), then test the paper's combination probes
+//! (E8, E8+G4, E8+G5, E8+G4+G5, E8+G2+G4+G5) to expose non-additive and
+//! negative-transfer structure.
+
+use super::ppl::PplHarness;
+use crate::quant::QuantConfig;
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct GroupRow {
+    pub group: String,
+    pub layers: (usize, usize), // inclusive range
+    pub delta_ppl: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct SensitivityReport {
+    pub uniform_delta: f64,
+    pub singles: Vec<GroupRow>,
+    pub combos: Vec<GroupRow>,
+    /// groups whose single-boost ΔPPL exceeds uniform (negative transfer)
+    pub negative_transfer: Vec<String>,
+}
+
+fn group_layers(g: usize, size: usize) -> Vec<usize> {
+    (g * size..(g + 1) * size).collect()
+}
+
+pub fn layer_group_sweep(h: &PplHarness, group_size: usize) -> Result<SensitivityReport> {
+    let l = h.n_layers();
+    let n_groups = l / group_size;
+    let uniform_delta = h.delta_ppl(&QuantConfig::paper_uniform(l))?;
+
+    let mut singles = Vec::new();
+    for g in 0..n_groups {
+        let layers = group_layers(g, group_size);
+        let cfg = QuantConfig::selective_boost(l, &layers, 256, 128);
+        singles.push(GroupRow {
+            group: format!("G{g}"),
+            layers: (layers[0], *layers.last().unwrap()),
+            delta_ppl: h.delta_ppl(&cfg)?,
+        });
+    }
+
+    // the paper's combination probes, generalized to n_groups
+    let mut combos = Vec::new();
+    let mut probe = |name: String, groups: &[usize]| -> Result<()> {
+        let layers: Vec<usize> = groups
+            .iter()
+            .flat_map(|&g| group_layers(g, group_size))
+            .collect();
+        let cfg = QuantConfig::selective_boost(l, &layers, 256, 128);
+        combos.push(GroupRow {
+            group: name,
+            layers: (layers[0], *layers.last().unwrap()),
+            delta_ppl: h.delta_ppl(&cfg)?,
+        });
+        Ok(())
+    };
+    let last = n_groups - 1;
+    let second_last = n_groups - 2;
+    probe("E8 (G0+G1)".into(), &[0, 1])?;
+    probe(format!("E8+G{second_last}"), &[0, 1, second_last])?;
+    probe(format!("E8+G{last}"), &[0, 1, last])?;
+    probe(
+        format!("E8+G{second_last}+G{last}"),
+        &[0, 1, second_last, last],
+    )?;
+    probe(
+        format!("E8+G2+G{second_last}+G{last}"),
+        &[0, 1, 2, second_last, last],
+    )?;
+
+    let negative_transfer = singles
+        .iter()
+        .filter(|r| r.delta_ppl > uniform_delta)
+        .map(|r| r.group.clone())
+        .collect();
+
+    Ok(SensitivityReport {
+        uniform_delta,
+        singles,
+        combos,
+        negative_transfer,
+    })
+}

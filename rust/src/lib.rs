@@ -1,0 +1,40 @@
+//! # TurboAngle — near-lossless KV cache compression via uniform angle
+//! # quantization
+//!
+//! Reproduction of *TurboAngle: Near-Lossless KV Cache Compression via
+//! Uniform Angle Quantization* (Patel, 2026) as a three-layer system:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): FWHT + angular
+//!   quantization, lowered at build time.
+//! * **L2** — JAX transformer with in-graph KV quantization
+//!   (`python/compile/model.py`), AOT-lowered to HLO text.
+//! * **L3** — this crate: the serving coordinator (compressed paged KV
+//!   cache, dynamic batcher, prefill/decode scheduler, router), the PJRT
+//!   runtime that executes the AOT artifacts, the native quantizer mirror,
+//!   and the evaluation harness that regenerates every paper table.
+//!
+//! Quick taste (native quantizer, no artifacts needed — `no_run` only
+//! because rustdoc test binaries lack the libxla_extension rpath; the same
+//! code runs in examples/quickstart.rs):
+//!
+//! ```no_run
+//! use turboangle::quant::{angle, fwht};
+//! let sign = fwht::test_sign_diag(64, 7);
+//! let x: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin()).collect();
+//! let enc = angle::encode(&x, &sign, 64);          // 3.0 angle bits/elem
+//! let xh = angle::decode(&enc.r, &enc.k, &sign, 64, false);
+//! let mse: f32 = x.iter().zip(&xh).map(|(a, b)| (a - b).powi(2)).sum::<f32>() / 64.0;
+//! assert!(mse < 0.05);
+//! ```
+//!
+//! The full pipeline (artifacts required — `make artifacts`):
+//! see `examples/quickstart.rs`, `examples/serve_e2e.rs`, and the
+//! `turboangle` CLI (`table1..table6`, `serve`, `search`, `uniformity`).
+
+pub mod coordinator;
+pub mod eval;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,275 @@
+//! TurboAngle encode / decode (paper Alg. 1 + §3.1), native hot path.
+//!
+//! Encode: y = H·D·x, polar-decompose consecutive pairs, uniform angle
+//! bins. Decode: trig lookup at the bin LEFT edge (paper default) or bin
+//! center (ablation), inverse transform. Matches the python oracle to f32
+//! tolerance (golden-tested).
+
+use super::fwht::{rotate, unrotate};
+
+pub const TWO_PI: f32 = core::f32::consts::TAU;
+
+/// Compressed representation of one head-dim vector: d/2 pair norms and
+/// d/2 angle bin indices (bin count `n` stored by the owner).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Encoded {
+    pub r: Vec<f32>,
+    pub k: Vec<u16>,
+}
+
+/// Quantize one angle to a bin index. theta from atan2 (any range).
+#[inline]
+pub fn angle_to_bin(theta: f32, n: u32) -> u16 {
+    let t = if theta < 0.0 { theta + TWO_PI } else { theta };
+    // floor(n * t / 2pi) mod n — f32 arithmetic kept IDENTICAL to the
+    // jax oracle so bin boundaries agree bit-for-bit on golden inputs.
+    let k = (n as f32 * t / TWO_PI).floor();
+    (k as i64).rem_euclid(n as i64) as u16
+}
+
+/// Bin index back to an angle (left edge by default, matching Alg. 1).
+#[inline]
+pub fn bin_to_angle(k: u16, n: u32, centered: bool) -> f32 {
+    let kk = if centered { k as f32 + 0.5 } else { k as f32 };
+    TWO_PI * kk / n as f32
+}
+
+/// Encode a single vector (length d, power of two). `scratch` must be d
+/// floats; avoids per-call allocation on the hot path.
+pub fn encode_into(
+    x: &[f32],
+    sign: &[f32],
+    n: u32,
+    scratch: &mut [f32],
+    r_out: &mut [f32],
+    k_out: &mut [u16],
+) {
+    let d = x.len();
+    debug_assert!(d.is_power_of_two() && d >= 2);
+    debug_assert_eq!(scratch.len(), d);
+    debug_assert_eq!(r_out.len(), d / 2);
+    debug_assert_eq!(k_out.len(), d / 2);
+    scratch.copy_from_slice(x);
+    rotate(scratch, sign);
+    for i in 0..d / 2 {
+        let even = scratch[2 * i];
+        let odd = scratch[2 * i + 1];
+        r_out[i] = (even * even + odd * odd).sqrt();
+        k_out[i] = angle_to_bin(odd.atan2(even), n);
+    }
+}
+
+/// Allocating convenience wrapper around [`encode_into`].
+pub fn encode(x: &[f32], sign: &[f32], n: u32) -> Encoded {
+    let d = x.len();
+    let mut scratch = vec![0.0; d];
+    let mut r = vec![0.0; d / 2];
+    let mut k = vec![0u16; d / 2];
+    encode_into(x, sign, n, &mut scratch, &mut r, &mut k);
+    Encoded { r, k }
+}
+
+/// Decode into `out` (length d = 2 * r.len()).
+pub fn decode_into(
+    r: &[f32],
+    k: &[u16],
+    sign: &[f32],
+    n: u32,
+    centered: bool,
+    out: &mut [f32],
+) {
+    let half = r.len();
+    debug_assert_eq!(k.len(), half);
+    debug_assert_eq!(out.len(), 2 * half);
+    for i in 0..half {
+        let theta = bin_to_angle(k[i], n, centered);
+        let (s, c) = theta.sin_cos();
+        out[2 * i] = r[i] * c;
+        out[2 * i + 1] = r[i] * s;
+    }
+    unrotate(out, sign);
+}
+
+/// Precomputed per-bin trig table — decode's sin/cos is the hot spot, and
+/// the codebook has only `n` distinct angles. Values are BIT-IDENTICAL to
+/// [`decode_into`] (same `bin_to_angle` + `sin_cos`).
+pub struct TrigLut {
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+}
+
+impl TrigLut {
+    pub fn new(n: u32, centered: bool) -> Self {
+        let mut cos = Vec::with_capacity(n as usize);
+        let mut sin = Vec::with_capacity(n as usize);
+        for k in 0..n {
+            let (s, c) = bin_to_angle(k as u16, n, centered).sin_cos();
+            cos.push(c);
+            sin.push(s);
+        }
+        TrigLut { cos, sin }
+    }
+}
+
+/// LUT-accelerated decode (EXPERIMENTS.md §Perf): identical output to
+/// [`decode_into`], ~3x faster at d=64..128.
+pub fn decode_into_lut(
+    r: &[f32],
+    k: &[u16],
+    sign: &[f32],
+    lut: &TrigLut,
+    out: &mut [f32],
+) {
+    let half = r.len();
+    debug_assert_eq!(k.len(), half);
+    debug_assert_eq!(out.len(), 2 * half);
+    for i in 0..half {
+        let ki = k[i] as usize;
+        out[2 * i] = r[i] * lut.cos[ki];
+        out[2 * i + 1] = r[i] * lut.sin[ki];
+    }
+    unrotate(out, sign);
+}
+
+/// Allocating convenience wrapper around [`decode_into`].
+pub fn decode(r: &[f32], k: &[u16], sign: &[f32], n: u32, centered: bool) -> Vec<f32> {
+    let mut out = vec![0.0; 2 * r.len()];
+    decode_into(r, k, sign, n, centered, &mut out);
+    out
+}
+
+/// encode→decode roundtrip (fp32 norms — the Table 1/2 setting).
+pub fn quant_dequant(x: &[f32], sign: &[f32], n: u32, centered: bool) -> Vec<f32> {
+    let e = encode(x, sign, n);
+    decode(&e.r, &e.k, sign, n, centered)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::fwht::test_sign_diag;
+
+    fn rand_vec(d: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed | 1;
+        (0..d)
+            .map(|_| {
+                s ^= s >> 12;
+                s ^= s << 25;
+                s ^= s >> 27;
+                ((s.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32 / (1u64 << 24) as f32)
+                    * 6.0
+                    - 3.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn bins_in_range() {
+        let sign = test_sign_diag(64, 1);
+        for n in [3u32, 48, 56, 64, 128, 512] {
+            let e = encode(&rand_vec(64, 9), &sign, n);
+            assert!(e.k.iter().all(|&k| (k as u32) < n), "n={n}");
+        }
+    }
+
+    #[test]
+    fn angle_to_bin_boundaries() {
+        // theta exactly 0 -> bin 0; theta just below 2pi -> last bin
+        assert_eq!(angle_to_bin(0.0, 64), 0);
+        // f32: 2pi + (-1e-7) rounds back to 2pi -> bin 0 (mod n), same as jax
+        assert_eq!(angle_to_bin(-1e-7, 64), 0);
+        assert_eq!(angle_to_bin(-1e-3, 64), 63);
+        assert_eq!(angle_to_bin(TWO_PI - 1e-4, 64), 63);
+        // quadrants at n=4
+        assert_eq!(angle_to_bin(0.1, 4), 0);
+        assert_eq!(angle_to_bin(std::f32::consts::FRAC_PI_2 + 0.1, 4), 1);
+        assert_eq!(angle_to_bin(std::f32::consts::PI + 0.1, 4), 2);
+        assert_eq!(angle_to_bin(-0.1, 4), 3);
+    }
+
+    #[test]
+    fn roundtrip_error_bound() {
+        // ||x - x_hat|| <= ||x|| * 2pi/n (left-edge worst case, orthonormal H)
+        let d = 128;
+        let sign = test_sign_diag(d, 2);
+        for n in [32u32, 64, 256] {
+            let x = rand_vec(d, 5);
+            let xq = quant_dequant(&x, &sign, n, false);
+            let err: f32 = x
+                .iter()
+                .zip(&xq)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                .sqrt();
+            let norm: f32 = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!(err <= norm * TWO_PI / n as f32 + 1e-3, "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn error_shrinks_with_bins() {
+        let d = 64;
+        let sign = test_sign_diag(d, 3);
+        let x = rand_vec(d, 8);
+        let mut prev = f32::INFINITY;
+        for n in [8u32, 32, 128, 512] {
+            let xq = quant_dequant(&x, &sign, n, true);
+            let mse: f32 = x
+                .iter()
+                .zip(&xq)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                / d as f32;
+            assert!(mse < prev, "n={n}");
+            prev = mse;
+        }
+    }
+
+    #[test]
+    fn norms_preserved() {
+        let d = 64;
+        let sign = test_sign_diag(d, 4);
+        let x = rand_vec(d, 6);
+        let e0 = encode(&x, &sign, 16);
+        let xq = quant_dequant(&x, &sign, 16, false);
+        let e1 = encode(&xq, &sign, 16);
+        for (a, b) in e0.r.iter().zip(&e1.r) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn lut_decode_bit_identical() {
+        let d = 128;
+        let sign = test_sign_diag(d, 6);
+        for n in [48u32, 64, 512] {
+            for centered in [false, true] {
+                let x = rand_vec(d, 9 + n as u64);
+                let e = encode(&x, &sign, n);
+                let want = decode(&e.r, &e.k, &sign, n, centered);
+                let lut = TrigLut::new(n, centered);
+                let mut got = vec![0.0; d];
+                decode_into_lut(&e.r, &e.k, &sign, &lut, &mut got);
+                assert_eq!(want, got, "n={n} centered={centered}");
+            }
+        }
+    }
+
+    #[test]
+    fn into_variants_match_allocating() {
+        let d = 64;
+        let sign = test_sign_diag(d, 5);
+        let x = rand_vec(d, 7);
+        let e = encode(&x, &sign, 48);
+        let mut scratch = vec![0.0; d];
+        let mut r = vec![0.0; d / 2];
+        let mut k = vec![0u16; d / 2];
+        encode_into(&x, &sign, 48, &mut scratch, &mut r, &mut k);
+        assert_eq!(e.r, r);
+        assert_eq!(e.k, k);
+        let dec = decode(&e.r, &e.k, &sign, 48, false);
+        let mut out = vec![0.0; d];
+        decode_into(&r, &k, &sign, 48, false, &mut out);
+        assert_eq!(dec, out);
+    }
+}

@@ -1,0 +1,85 @@
+//! Native TurboQuant sym-b-g4 baseline (paper §4.2 / [13]).
+//!
+//! FWHT + random-sign rotation, then symmetric scalar quantization with a
+//! per-group absmax scale. The comparison point for Table 1.
+
+use super::fwht::{rotate, unrotate};
+
+/// quant-dequant at `bits` with group size `group` along the head dim.
+pub fn tq_scalar_g(x: &[f32], sign: &[f32], bits: u32, group: usize) -> Vec<f32> {
+    let d = x.len();
+    assert_eq!(d % group, 0);
+    let mut y = x.to_vec();
+    rotate(&mut y, sign);
+    let qmax = ((1u32 << (bits.min(16) - 1)) - 1) as f32;
+    for g in y.chunks_mut(group) {
+        let scale = g.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let scale = if scale > 0.0 { scale } else { 1.0 };
+        for v in g.iter_mut() {
+            let q = (*v / scale * qmax).round_ties_even().clamp(-qmax, qmax);
+            *v = q / qmax * scale;
+        }
+    }
+    unrotate(&mut y, sign);
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::angle::quant_dequant as angle_qd;
+    use crate::quant::fwht::test_sign_diag;
+
+    fn rand_vec(d: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed | 1;
+        (0..d)
+            .map(|_| {
+                s ^= s >> 12;
+                s ^= s << 25;
+                s ^= s >> 27;
+                ((s.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32 / (1u64 << 24) as f32)
+                    * 6.0
+                    - 3.0
+            })
+            .collect()
+    }
+
+    fn mse(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>() / a.len() as f32
+    }
+
+    #[test]
+    fn error_shrinks_with_bits() {
+        let sign = test_sign_diag(64, 1);
+        let x = rand_vec(64, 2);
+        let e3 = mse(&x, &tq_scalar_g(&x, &sign, 3, 4));
+        let e4 = mse(&x, &tq_scalar_g(&x, &sign, 4, 4));
+        let e8 = mse(&x, &tq_scalar_g(&x, &sign, 8, 4));
+        assert!(e8 < e4 && e4 < e3);
+    }
+
+    #[test]
+    fn angular_beats_scalar_at_matched_bits() {
+        // Table 1 shape: TurboAngle n=64 (3.0 bits) vs TQ-sym3-g4 (3.0 bits)
+        let d = 128;
+        let sign = test_sign_diag(d, 3);
+        let mut ea = 0.0;
+        let mut et = 0.0;
+        for seed in 0..32u64 {
+            let x = rand_vec(d, 10 + seed);
+            ea += mse(&x, &angle_qd(&x, &sign, 64, true));
+            et += mse(&x, &tq_scalar_g(&x, &sign, 3, 4));
+        }
+        assert!(ea < et, "angle {ea} vs tq {et}");
+    }
+
+    #[test]
+    fn exact_at_high_bits() {
+        let sign = test_sign_diag(32, 4);
+        let x = rand_vec(32, 5);
+        let xq = tq_scalar_g(&x, &sign, 16, 4);
+        for (a, b) in x.iter().zip(&xq) {
+            assert!((a - b).abs() < 2e-3);
+        }
+    }
+}

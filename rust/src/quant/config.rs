@@ -1,0 +1,372 @@
+//! Per-layer MixedKV configuration and bit-rate accounting (Eq. 1 / Eq. 3).
+//!
+//! A [`QuantConfig`] is the single object every harness, bench and the
+//! serving engine share: per-layer (n_K, n_V) codebook sizes, the norm
+//! quantization modes, and the quantizer mode. Constructors express the
+//! paper's schedules: uniform, contiguous early-boost (§3.2), and selective
+//! boosts (phi-1.5's 0–7 + 16–23).
+
+use super::norm::NormMode;
+
+/// Quantizer mode — must match `manifest.json: modes` (L2 lax.switch order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(i32)]
+pub enum Mode {
+    None = 0,
+    Angle = 1,
+    AngleCentered = 2,
+    /// TurboQuant sym-g4 baseline; per-layer arrays carry BITS not bins.
+    TqSymG4 = 3,
+    /// KIVI-style per-channel asymmetric baseline (bits in arrays).
+    Kivi = 4,
+    /// KVQuant-style per-vector + 1% outliers baseline (bits in arrays).
+    KvQuant = 5,
+}
+
+/// Per-layer codebook sizes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerBins {
+    pub n_k: u32,
+    pub n_v: u32,
+}
+
+/// Full quantizer configuration for one model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantConfig {
+    pub mode: Mode,
+    pub layers: Vec<LayerBins>,
+    pub k_norm: NormMode,
+    pub v_norm: NormMode,
+}
+
+/// The paper's uniform baseline: K128 V64, 3.25 angle bits (§4.1).
+pub const UNIFORM_NK: u32 = 128;
+pub const UNIFORM_NV: u32 = 64;
+
+impl QuantConfig {
+    /// Uniform baseline at (n_k, n_v) for all layers, fp32 norms.
+    pub fn uniform(n_layers: usize, n_k: u32, n_v: u32) -> Self {
+        QuantConfig {
+            mode: Mode::Angle,
+            layers: vec![LayerBins { n_k, n_v }; n_layers],
+            k_norm: NormMode::FP32,
+            v_norm: NormMode::FP32,
+        }
+    }
+
+    /// The K128V64 paper baseline.
+    pub fn paper_uniform(n_layers: usize) -> Self {
+        Self::uniform(n_layers, UNIFORM_NK, UNIFORM_NV)
+    }
+
+    /// Contiguous early-boost: layers `0..n_early` at (nk_hi, nv_hi), the
+    /// rest at the uniform baseline (§3.2).
+    pub fn early_boost(n_layers: usize, n_early: usize, nk_hi: u32, nv_hi: u32) -> Self {
+        let mut cfg = Self::paper_uniform(n_layers);
+        for l in 0..n_early.min(n_layers) {
+            cfg.layers[l] = LayerBins { n_k: nk_hi, n_v: nv_hi };
+        }
+        cfg
+    }
+
+    /// Selective boost of an arbitrary layer set (phi-1.5's 0–7 ∪ 16–23).
+    pub fn selective_boost(
+        n_layers: usize,
+        boosted: &[usize],
+        nk_hi: u32,
+        nv_hi: u32,
+    ) -> Self {
+        let mut cfg = Self::paper_uniform(n_layers);
+        for &l in boosted {
+            if l < n_layers {
+                cfg.layers[l] = LayerBins { n_k: nk_hi, n_v: nv_hi };
+            }
+        }
+        cfg
+    }
+
+    /// Disable quantization (the fp16-reference run).
+    pub fn none(n_layers: usize) -> Self {
+        let mut cfg = Self::paper_uniform(n_layers);
+        cfg.mode = Mode::None;
+        cfg
+    }
+
+    /// Scalar-baseline configs: per-layer arrays carry bits.
+    pub fn scalar_baseline(n_layers: usize, mode: Mode, bits: u32) -> Self {
+        QuantConfig {
+            mode,
+            layers: vec![LayerBins { n_k: bits, n_v: bits }; n_layers],
+            k_norm: NormMode::FP32,
+            v_norm: NormMode::FP32,
+        }
+    }
+
+    pub fn with_norms(mut self, k: NormMode, v: NormMode) -> Self {
+        self.k_norm = k;
+        self.v_norm = v;
+        self
+    }
+
+    /// K8V4-log (§3.3): 8-bit linear K norms, 4-bit log V norms.
+    pub fn with_k8v4_log(self) -> Self {
+        self.with_norms(NormMode::LINEAR8, NormMode::LOG4)
+    }
+
+    /// norm8: 8-bit linear norms on both sides.
+    pub fn with_norm8(self) -> Self {
+        self.with_norms(NormMode::LINEAR8, NormMode::LINEAR8)
+    }
+
+    // --- rate accounting -------------------------------------------------
+
+    /// Eq. 1: average angle bits per element across layers,
+    /// (log2 n_K + log2 n_V) / 4 summed over layers / L.
+    pub fn angle_bits_per_element(&self) -> f64 {
+        let l = self.layers.len() as f64;
+        self.layers
+            .iter()
+            .map(|b| ((b.n_k as f64).log2() + (b.n_v as f64).log2()) / 4.0)
+            .sum::<f64>()
+            / l
+    }
+
+    /// Eq. 3 for one side: b_angle + b_norm/2 + 64/d (fp32 norms charge the
+    /// paper's reference 16 bits/element, i.e. 32/2, with no minmax term).
+    fn side_bits(bins: u32, norm: NormMode, d: usize) -> f64 {
+        let angle = (bins as f64).log2() / 2.0;
+        if norm.bits == 0 {
+            angle + 16.0
+        } else {
+            angle + norm.bits as f64 / 2.0 + 64.0 / d as f64
+        }
+    }
+
+    /// Eq. 3, K/V- and layer-averaged total bits per element.
+    pub fn total_bits_per_element(&self, d: usize) -> f64 {
+        let l = self.layers.len() as f64;
+        self.layers
+            .iter()
+            .map(|b| {
+                (Self::side_bits(b.n_k, self.k_norm, d)
+                    + Self::side_bits(b.n_v, self.v_norm, d))
+                    / 2.0
+            })
+            .sum::<f64>()
+            / l
+    }
+
+    /// Angle-bits-only variant of Eq. 3 (Tables 1/2 count only angle bits).
+    pub fn angle_bits_only(&self) -> f64 {
+        self.angle_bits_per_element()
+    }
+
+    /// Physical compressed bytes per token per layer (what kv_manager
+    /// actually stores): packed angle bits + norm codes + minmax pairs.
+    pub fn stored_bytes_per_token_layer(&self, layer: usize, d: usize, n_kv_heads: usize) -> usize {
+        use super::packing::bits_for;
+        let b = &self.layers[layer];
+        let half = d / 2;
+        let angle_bits = (bits_for(b.n_k) as usize + bits_for(b.n_v) as usize) * half;
+        let norm_bits = |m: NormMode| {
+            if m.bits == 0 {
+                32 * half
+            } else {
+                m.bits as usize * half + 64
+            }
+        };
+        n_kv_heads * (angle_bits + norm_bits(self.k_norm) + norm_bits(self.v_norm) + 7) / 8
+    }
+
+    // --- serialization to the HLO runtime inputs -------------------------
+
+    /// Per-layer f32 arrays (nk, nv) as the eval/prefill/decode HLOs expect.
+    pub fn to_bin_arrays(&self) -> (Vec<f32>, Vec<f32>) {
+        (
+            self.layers.iter().map(|b| b.n_k as f32).collect(),
+            self.layers.iter().map(|b| b.n_v as f32).collect(),
+        )
+    }
+
+    /// norm_cfg = [k_bits, k_log, v_bits, v_log].
+    pub fn to_norm_cfg(&self) -> [f32; 4] {
+        [
+            self.k_norm.bits as f32,
+            self.k_norm.log_space as u8 as f32,
+            self.v_norm.bits as f32,
+            self.v_norm.log_space as u8 as f32,
+        ]
+    }
+
+    /// The baseline (majority) per-layer bins — boosted layers are the
+    /// minority that differ from this.
+    pub fn majority_bins(&self) -> LayerBins {
+        let mut counts: Vec<(LayerBins, usize)> = Vec::new();
+        for b in &self.layers {
+            match counts.iter_mut().find(|(k, _)| k == b) {
+                Some((_, c)) => *c += 1,
+                None => counts.push((*b, 1)),
+            }
+        }
+        counts.into_iter().max_by_key(|&(_, c)| c).unwrap().0
+    }
+
+    /// Short human tag for reports, e.g. "E4(256,128)+K8V4log".
+    pub fn tag(&self) -> String {
+        let base = &self.majority_bins();
+        let boosted: Vec<usize> = self
+            .layers
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| **b != *base)
+            .map(|(i, _)| i)
+            .collect();
+        let head = match self.mode {
+            Mode::None => return "fp-ref".into(),
+            Mode::Angle => String::new(),
+            Mode::AngleCentered => "c:".into(),
+            Mode::TqSymG4 => format!("TQ-sym{}-g4", base.n_k),
+            Mode::Kivi => format!("KIVI-{}b", base.n_k),
+            Mode::KvQuant => format!("KVQ-{}b", base.n_k),
+        };
+        if matches!(self.mode, Mode::TqSymG4 | Mode::Kivi | Mode::KvQuant) {
+            return head;
+        }
+        let norms = match (self.k_norm, self.v_norm) {
+            (NormMode::FP32, NormMode::FP32) => String::new(),
+            (k, v) => format!(
+                "+K{}{}V{}{}",
+                k.bits,
+                if k.log_space { "log" } else { "" },
+                v.bits,
+                if v.log_space { "log" } else { "" }
+            ),
+        };
+        if boosted.is_empty() {
+            format!("{head}U(K{},V{}){norms}", base.n_k, base.n_v)
+        } else {
+            let hi = self.layers[boosted[0]];
+            format!(
+                "{head}B[{}](K{},V{}){norms}",
+                compact_ranges(&boosted),
+                hi.n_k,
+                hi.n_v
+            )
+        }
+    }
+}
+
+/// "0-3,16-23" style range formatting for layer sets.
+pub fn compact_ranges(sorted: &[usize]) -> String {
+    let mut out = String::new();
+    let mut i = 0;
+    while i < sorted.len() {
+        let start = sorted[i];
+        let mut end = start;
+        while i + 1 < sorted.len() && sorted[i + 1] == end + 1 {
+            i += 1;
+            end = sorted[i];
+        }
+        if !out.is_empty() {
+            out.push(',');
+        }
+        if start == end {
+            out.push_str(&start.to_string());
+        } else {
+            out.push_str(&format!("{start}-{end}"));
+        }
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq1_uniform_baseline_is_3_25() {
+        let cfg = QuantConfig::paper_uniform(32);
+        assert!((cfg.angle_bits_per_element() - 3.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq1_early_boost_matches_paper() {
+        // E4 with (256,128) on L=32: 4 layers at (8+7)/4=3.75, 28 at 3.25
+        let cfg = QuantConfig::early_boost(32, 4, 256, 128);
+        let expect = (4.0 * 3.75 + 28.0 * 3.25) / 32.0;
+        assert!((cfg.angle_bits_per_element() - expect).abs() < 1e-12);
+        // paper Table 2 Mistral-7B best per-layer = 3.31 bits
+        assert!((cfg.angle_bits_per_element() - 3.3125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq3_worked_example_from_paper() {
+        // §3.3: K8V4-log, b_angle=3.25, d=128 -> K side 7.75, V side 5.75,
+        // average 6.75
+        let cfg = QuantConfig::paper_uniform(32).with_k8v4_log();
+        let total = cfg.total_bits_per_element(128);
+        assert!((total - 6.75).abs() < 1e-9, "{total}");
+        // d=64 overhead: 64/d = 1.0 -> 7.25
+        let total64 = cfg.total_bits_per_element(64);
+        assert!((total64 - 7.25).abs() < 1e-9, "{total64}");
+    }
+
+    #[test]
+    fn eq3_norm8() {
+        // norm8 at d=128: 3.25 + 8/2 + 0.5 = 7.75 on both sides
+        let cfg = QuantConfig::paper_uniform(32).with_norm8();
+        assert!((cfg.total_bits_per_element(128) - 7.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fp32_norms_charge_16_bits() {
+        let cfg = QuantConfig::paper_uniform(8);
+        assert!((cfg.total_bits_per_element(128) - (3.25 + 16.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn selective_matches_manual() {
+        let sel = QuantConfig::selective_boost(24, &(0..8).chain(16..24).collect::<Vec<_>>(), 256, 128);
+        // phi-1.5 optimal: 16 of 24 layers boosted -> paper says 3.58 bits
+        let bits = sel.angle_bits_per_element();
+        assert!((bits - (16.0 * 3.75 + 8.0 * 3.25) / 24.0).abs() < 1e-12);
+        assert!((bits - 3.5833).abs() < 1e-3);
+    }
+
+    #[test]
+    fn stored_bytes_accounting() {
+        let cfg = QuantConfig::paper_uniform(2).with_k8v4_log();
+        // d=128: angle bits = (7+6)*64 = 832; K norms 8*64+64=576;
+        // V norms 4*64+64=320; total 1728 bits = 216 bytes
+        assert_eq!(cfg.stored_bytes_per_token_layer(0, 128, 1), 216);
+    }
+
+    #[test]
+    fn compact_ranges_format() {
+        assert_eq!(compact_ranges(&[0, 1, 2, 3]), "0-3");
+        assert_eq!(
+            compact_ranges(&[0, 1, 2, 3, 4, 5, 6, 7, 16, 17, 18, 19, 20, 21, 22, 23]),
+            "0-7,16-23"
+        );
+        assert_eq!(compact_ranges(&[5]), "5");
+    }
+
+    #[test]
+    fn tags_are_stable() {
+        assert_eq!(QuantConfig::paper_uniform(4).tag(), "U(K128,V64)");
+        assert_eq!(
+            QuantConfig::early_boost(8, 4, 256, 128).tag(),
+            "B[0-3](K256,V128)"
+        );
+        assert_eq!(QuantConfig::none(4).tag(), "fp-ref");
+    }
+
+    #[test]
+    fn majority_base_handles_suffix_boost() {
+        // boosting a suffix set must not invert the tag
+        let cfg7 = QuantConfig::selective_boost(7, &[0, 5, 6], 256, 128);
+        assert_eq!(cfg7.majority_bins(), LayerBins { n_k: 128, n_v: 64 });
+        assert_eq!(cfg7.tag(), "B[0,5-6](K256,V128)");
+    }
+}

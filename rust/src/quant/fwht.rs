@@ -1,0 +1,163 @@
+//! Normalized Fast Walsh-Hadamard transform over the head dimension.
+//!
+//! Native mirror of `python/compile/kernels/fwht.py` for the L3 hot path
+//! (kv_manager pack/unpack and native quant benches). Self-inverse and
+//! orthonormal; validated against the python oracle via golden vectors.
+
+/// In-place unnormalized FWHT butterfly. `x.len()` must be a power of two.
+#[inline]
+pub fn fwht_raw(x: &mut [f32]) {
+    let d = x.len();
+    debug_assert!(d.is_power_of_two());
+    let mut h = 1;
+    while h < d {
+        let mut i = 0;
+        while i < d {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// In-place normalized FWHT (orthonormal, self-inverse).
+#[inline]
+pub fn fwht(x: &mut [f32]) {
+    fwht_raw(x);
+    let scale = 1.0 / (x.len() as f32).sqrt();
+    for v in x.iter_mut() {
+        *v *= scale;
+    }
+}
+
+/// y = H·D·x : multiply by the ±1 diagonal, then normalized FWHT.
+#[inline]
+pub fn rotate(x: &mut [f32], sign: &[f32]) {
+    debug_assert_eq!(x.len(), sign.len());
+    for (v, s) in x.iter_mut().zip(sign) {
+        *v *= s;
+    }
+    fwht(x);
+}
+
+/// x = D·H·y : normalized FWHT then the ±1 diagonal (both self-inverse).
+#[inline]
+pub fn unrotate(y: &mut [f32], sign: &[f32]) {
+    fwht(y);
+    for (v, s) in y.iter_mut().zip(sign) {
+        *v *= s;
+    }
+}
+
+/// The shared random ±1 diagonal D. Mirrors
+/// `ref.make_sign_diag(d, seed)` = numpy `default_rng(seed)` — we do NOT
+/// reimplement PCG64 here; runtime code loads the actual diagonal from the
+/// weights tensorfile. This helper exists for self-contained tests/benches.
+pub fn test_sign_diag(d: usize, seed: u64) -> Vec<f32> {
+    // xorshift* — deterministic test-only source, NOT numpy-compatible.
+    let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+    (0..d)
+        .map(|_| {
+            s ^= s >> 12;
+            s ^= s << 25;
+            s ^= s >> 27;
+            if (s.wrapping_mul(0x2545F4914F6CDD1D) >> 63) & 1 == 1 {
+                1.0
+            } else {
+                -1.0
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_vec(d: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed | 1;
+        (0..d)
+            .map(|_| {
+                s ^= s >> 12;
+                s ^= s << 25;
+                s ^= s >> 27;
+                ((s.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32 / (1u64 << 24) as f32)
+                    * 4.0
+                    - 2.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn self_inverse() {
+        for d in [2usize, 8, 64, 128] {
+            let x = rand_vec(d, 3);
+            let mut y = x.clone();
+            fwht(&mut y);
+            fwht(&mut y);
+            for (a, b) in x.iter().zip(&y) {
+                assert!((a - b).abs() < 1e-5, "d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn preserves_norm() {
+        for d in [4usize, 32, 128] {
+            let x = rand_vec(d, 9);
+            let n0: f32 = x.iter().map(|v| v * v).sum();
+            let mut y = x.clone();
+            fwht(&mut y);
+            let n1: f32 = y.iter().map(|v| v * v).sum();
+            assert!((n0 - n1).abs() < 1e-3 * n0.max(1.0));
+        }
+    }
+
+    #[test]
+    fn matches_dense_hadamard() {
+        let d = 8;
+        // Sylvester construction
+        let mut h = vec![vec![1.0f32]];
+        while h.len() < d {
+            let n = h.len();
+            let mut nh = vec![vec![0.0; 2 * n]; 2 * n];
+            for i in 0..n {
+                for j in 0..n {
+                    nh[i][j] = h[i][j];
+                    nh[i][j + n] = h[i][j];
+                    nh[i + n][j] = h[i][j];
+                    nh[i + n][j + n] = -h[i][j];
+                }
+            }
+            h = nh;
+        }
+        let x = rand_vec(d, 5);
+        let scale = 1.0 / (d as f32).sqrt();
+        let expect: Vec<f32> = (0..d)
+            .map(|i| (0..d).map(|j| h[i][j] * x[j]).sum::<f32>() * scale)
+            .collect();
+        let mut y = x.clone();
+        fwht(&mut y);
+        for (a, b) in expect.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rotate_unrotate_roundtrip() {
+        let d = 64;
+        let sign = test_sign_diag(d, 11);
+        let x = rand_vec(d, 7);
+        let mut y = x.clone();
+        rotate(&mut y, &sign);
+        unrotate(&mut y, &sign);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}

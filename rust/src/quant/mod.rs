@@ -1,0 +1,17 @@
+//! Native TurboAngle quantizer — the L3 mirror of the Pallas kernels.
+//!
+//! The serving kv_manager uses this path to pack/unpack the compressed
+//! cache without touching PJRT; the eval/bench paths use it for workload
+//! generation and ablations. Cross-validated against the python oracle via
+//! `rust/tests/golden.rs` (golden vectors emitted by `compile.aot`).
+
+pub mod angle;
+pub mod baseline;
+pub mod config;
+pub mod fwht;
+pub mod norm;
+pub mod packing;
+
+pub use angle::{decode, decode_into, encode, encode_into, Encoded};
+pub use config::{LayerBins, Mode, QuantConfig};
+pub use norm::NormMode;

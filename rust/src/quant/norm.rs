@@ -1,0 +1,183 @@
+//! Per-vector min-max norm quantization (paper §3.3, Eq. 2).
+//!
+//! Linear or log-space codes at `bits` ∈ {1..16}; the per-vector fp32
+//! (min, max) pair is the 64/d overhead term of Eq. 3. The K8V4-log
+//! configuration is 8-bit linear for K norms, 4-bit log for V norms.
+
+/// Norm quantization mode for one cache side (K or V).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NormMode {
+    /// 0 = fp32 passthrough.
+    pub bits: u8,
+    pub log_space: bool,
+}
+
+impl NormMode {
+    pub const FP32: NormMode = NormMode { bits: 0, log_space: false };
+    pub const LINEAR8: NormMode = NormMode { bits: 8, log_space: false };
+    pub const LOG4: NormMode = NormMode { bits: 4, log_space: true };
+
+    pub fn levels(&self) -> f32 {
+        ((1u32 << self.bits) - 1) as f32
+    }
+}
+
+/// Quantized norms for one vector: codes + the min/max window.
+#[derive(Clone, Debug)]
+pub struct QuantizedNorms {
+    pub codes: Vec<u16>,
+    pub vmin: f32,
+    pub vmax: f32,
+}
+
+#[inline]
+fn fwd(v: f32, log_space: bool) -> f32 {
+    if log_space {
+        v.max(1e-12).ln()
+    } else {
+        v
+    }
+}
+
+#[inline]
+fn bwd(v: f32, log_space: bool) -> f32 {
+    if log_space {
+        v.exp()
+    } else {
+        v
+    }
+}
+
+/// Quantize one vector of pair norms. `mode.bits == 0` is rejected here —
+/// the caller keeps fp32 norms and never materializes codes.
+pub fn quantize(r: &[f32], mode: NormMode) -> QuantizedNorms {
+    assert!(mode.bits >= 1 && mode.bits <= 16);
+    let mut vmin = f32::INFINITY;
+    let mut vmax = f32::NEG_INFINITY;
+    for &v in r {
+        let t = fwd(v, mode.log_space);
+        vmin = vmin.min(t);
+        vmax = vmax.max(t);
+    }
+    let scale = if vmax > vmin { vmax - vmin } else { 1.0 };
+    let levels = mode.levels();
+    let codes = r
+        .iter()
+        .map(|&v| {
+            let t = (fwd(v, mode.log_space) - vmin) / scale * levels;
+            // round-half-to-even to match numpy/jax rounding
+            t.round_ties_even() as u16
+        })
+        .collect();
+    QuantizedNorms { codes, vmin, vmax }
+}
+
+/// Dequantize codes back to norms.
+pub fn dequantize_into(q: &QuantizedNorms, mode: NormMode, out: &mut [f32]) {
+    let scale = if q.vmax > q.vmin { q.vmax - q.vmin } else { 1.0 };
+    let levels = mode.levels().max(1.0);
+    for (o, &c) in out.iter_mut().zip(&q.codes) {
+        *o = bwd(q.vmin + c as f32 * scale / levels, mode.log_space);
+    }
+}
+
+pub fn dequantize(q: &QuantizedNorms, mode: NormMode) -> Vec<f32> {
+    let mut out = vec![0.0; q.codes.len()];
+    dequantize_into(q, mode, &mut out);
+    out
+}
+
+/// quant-dequant in one step (eval paths / tests). fp32 mode passes through.
+pub fn quant_dequant(r: &[f32], mode: NormMode) -> Vec<f32> {
+    if mode.bits == 0 {
+        return r.to_vec();
+    }
+    dequantize(&quantize(r, mode), mode)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn skewed(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed | 1;
+        (0..n)
+            .map(|_| {
+                s ^= s >> 12;
+                s ^= s << 25;
+                s ^= s >> 27;
+                let u = (s.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32
+                    / (1u64 << 24) as f32;
+                // right-skewed, strictly positive (lognormal-ish)
+                (3.0 * (u - 0.5)).exp()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let r = skewed(64, 1);
+        for mode in [NormMode::LINEAR8, NormMode::LOG4, NormMode { bits: 2, log_space: false }] {
+            let q = quantize(&r, mode);
+            let max = (1u32 << mode.bits) - 1;
+            assert!(q.codes.iter().all(|&c| (c as u32) <= max));
+        }
+    }
+
+    #[test]
+    fn dequant_within_window() {
+        let r = skewed(64, 2);
+        let rq = quant_dequant(&r, NormMode::LINEAR8);
+        let lo = r.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = r.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        for v in rq {
+            assert!(v >= lo - 1e-4 && v <= hi + 1e-3);
+        }
+    }
+
+    #[test]
+    fn eight_bit_half_step_bound() {
+        let r = skewed(128, 3);
+        let rq = quant_dequant(&r, NormMode::LINEAR8);
+        let lo = r.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = r.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let step = (hi - lo) / 255.0;
+        for (a, b) in r.iter().zip(&rq) {
+            assert!((a - b).abs() <= step * 0.51);
+        }
+    }
+
+    #[test]
+    fn log4_beats_linear4_on_skewed() {
+        let r = skewed(512, 4);
+        let lin = quant_dequant(&r, NormMode { bits: 4, log_space: false });
+        let log = quant_dequant(&r, NormMode::LOG4);
+        let rel = |q: &[f32]| -> f32 {
+            r.iter()
+                .zip(q)
+                .map(|(a, b)| ((b / a) - 1.0).abs())
+                .sum::<f32>()
+                / r.len() as f32
+        };
+        assert!(rel(&log) < rel(&lin));
+    }
+
+    #[test]
+    fn fp32_passthrough() {
+        let r = skewed(32, 5);
+        assert_eq!(quant_dequant(&r, NormMode::FP32), r);
+    }
+
+    #[test]
+    fn constant_vector_stable() {
+        let r = vec![2.5f32; 16];
+        let rq = quant_dequant(&r, NormMode::LINEAR8);
+        for v in rq {
+            assert!((v - 2.5).abs() < 1e-6);
+        }
+        let rq = quant_dequant(&r, NormMode::LOG4);
+        for v in rq {
+            assert!((v - 2.5).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Bit-packed storage for angle indices and norm codes.
+//!
+//! The kv_manager stores angle bins at exactly `ceil(log2(n))` bits each in
+//! a little-endian u64 bitstream — this is where the paper's `log2(n)/2`
+//! bits-per-element rate physically lives in RAM.
+
+/// Bits needed for a bin index in `0..n`.
+#[inline]
+pub fn bits_for(n: u32) -> u32 {
+    debug_assert!(n >= 2);
+    32 - (n - 1).leading_zeros()
+}
+
+/// A little-endian bitstream of fixed-width codes.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len_bits: usize,
+}
+
+impl BitVec {
+    pub fn with_capacity(codes: usize, width: u32) -> Self {
+        BitVec {
+            words: Vec::with_capacity((codes * width as usize + 63) / 64),
+            len_bits: 0,
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, code: u32, width: u32) {
+        debug_assert!(width >= 1 && width <= 32);
+        debug_assert!(code < (1u64 << width) as u32 || width == 32);
+        let bit = self.len_bits;
+        let word = bit / 64;
+        let off = (bit % 64) as u32;
+        if word >= self.words.len() {
+            self.words.push(0);
+        }
+        self.words[word] |= (code as u64) << off;
+        if off + width > 64 {
+            self.words.push((code as u64) >> (64 - off));
+        }
+        self.len_bits += width as usize;
+    }
+
+    #[inline]
+    pub fn get(&self, idx: usize, width: u32) -> u32 {
+        let bit = idx * width as usize;
+        let word = bit / 64;
+        let off = (bit % 64) as u32;
+        let mask = if width == 32 { u32::MAX as u64 } else { (1u64 << width) - 1 };
+        let mut v = self.words[word] >> off;
+        if off + width > 64 {
+            v |= self.words[word + 1] << (64 - off);
+        }
+        (v & mask) as u32
+    }
+
+    pub fn len_codes(&self, width: u32) -> usize {
+        self.len_bits / width as usize
+    }
+
+    pub fn len_bits(&self) -> usize {
+        self.len_bits
+    }
+
+    /// Heap bytes actually used for storage (memory accounting).
+    pub fn storage_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    pub fn clear(&mut self) {
+        self.words.clear();
+        self.len_bits = 0;
+    }
+}
+
+/// Pack a slice of codes at fixed width.
+pub fn pack(codes: &[u16], width: u32) -> BitVec {
+    let mut bv = BitVec::with_capacity(codes.len(), width);
+    for &c in codes {
+        bv.push(c as u32, width);
+    }
+    bv
+}
+
+/// Unpack `count` codes.
+pub fn unpack(bv: &BitVec, count: usize, width: u32) -> Vec<u16> {
+    (0..count).map(|i| bv.get(i, width) as u16).collect()
+}
+
+/// Unpack straight into an f32 buffer (what the HLO decode input wants).
+pub fn unpack_f32_into(bv: &BitVec, width: u32, out: &mut [f32]) {
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = bv.get(i, width) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_for_known() {
+        assert_eq!(bits_for(2), 1);
+        assert_eq!(bits_for(3), 2);
+        assert_eq!(bits_for(48), 6);
+        assert_eq!(bits_for(56), 6);
+        assert_eq!(bits_for(64), 6);
+        assert_eq!(bits_for(65), 7);
+        assert_eq!(bits_for(128), 7);
+        assert_eq!(bits_for(256), 8);
+        assert_eq!(bits_for(512), 9);
+    }
+
+    #[test]
+    fn roundtrip_all_widths() {
+        for width in 1..=16u32 {
+            let max = ((1u32 << width) - 1) as u16;
+            let codes: Vec<u16> = (0..257u32)
+                .map(|i| ((i * 2654435761u32.wrapping_mul(i + 1)) as u16) & max)
+                .collect();
+            let bv = pack(&codes, width);
+            assert_eq!(unpack(&bv, codes.len(), width), codes, "w={width}");
+        }
+    }
+
+    #[test]
+    fn storage_is_tight() {
+        let codes = vec![0u16; 1024];
+        let bv = pack(&codes, 7);
+        // 1024 codes * 7 bits = 7168 bits = 112 u64 words
+        assert_eq!(bv.storage_bytes(), 112 * 8);
+    }
+
+    #[test]
+    fn word_boundary_crossing() {
+        // width 7 crosses a 64-bit boundary at code 9 (63 -> 70 bits)
+        let codes: Vec<u16> = (0..20).map(|i| (i * 11 % 128) as u16).collect();
+        let bv = pack(&codes, 7);
+        assert_eq!(unpack(&bv, 20, 7), codes);
+    }
+
+    #[test]
+    fn unpack_f32_matches() {
+        let codes: Vec<u16> = (0..100).map(|i| (i % 64) as u16).collect();
+        let bv = pack(&codes, 6);
+        let mut out = vec![0.0f32; 100];
+        unpack_f32_into(&bv, 6, &mut out);
+        for (c, o) in codes.iter().zip(&out) {
+            assert_eq!(*c as f32, *o);
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! Paper-style table rendering for the CLI and benches.
+
+use crate::eval::sensitivity::SensitivityReport;
+use crate::eval::sweep::{BoostResult, KvSensRow, Table1Row, Table5Row, Table6Row};
+
+fn hrule(widths: &[usize]) -> String {
+    widths
+        .iter()
+        .map(|w| "-".repeat(w + 2))
+        .collect::<Vec<_>>()
+        .join("+")
+}
+
+/// Render a simple aligned table.
+pub fn render(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, c) in row.iter().enumerate() {
+            widths[i] = widths[i].max(c.len());
+        }
+    }
+    let fmt_row = |cells: &[String]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!(" {:<w$} ", c, w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("|")
+    };
+    let mut out = String::new();
+    out.push_str(&fmt_row(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+    ));
+    out.push('\n');
+    out.push_str(&hrule(&widths));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row));
+        out.push('\n');
+    }
+    out
+}
+
+pub fn fmt_delta(d: f64) -> String {
+    format!("{d:+.4}")
+}
+
+pub fn table1(title: &str, rows: &[Table1Row]) -> String {
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.method.clone(),
+                format!("{:.2}", r.bits),
+                fmt_delta(r.delta_ppl),
+            ]
+        })
+        .collect();
+    format!(
+        "Table 1 — angular vs scalar quantization ({title})\n{}",
+        render(&["Method", "Bits/elem", "dPPL"], &body)
+    )
+}
+
+pub fn table2(rows: &[BoostResult]) -> String {
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.model.clone(),
+                r.n_layers.to_string(),
+                format!("{:.3}", r.ppl_base),
+                fmt_delta(r.uniform_delta),
+                fmt_delta(r.best_delta),
+                format!("{:.2}", r.best_bits),
+            ]
+        })
+        .collect();
+    format!(
+        "Table 2 — per-layer early-boost (uniform = K128V64, 3.25 angle bits)\n{}",
+        render(
+            &["Model", "L", "PPL_base", "Uniform dPPL", "Best dPPL", "bits"],
+            &body
+        )
+    )
+}
+
+pub fn table3(rows: &[BoostResult]) -> String {
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let hi = r
+                .boosted_layers
+                .first()
+                .map(|&l| r.best_cfg.layers[l])
+                .unwrap_or_else(|| r.best_cfg.majority_bins());
+            vec![
+                r.model.clone(),
+                r.boosted_range(),
+                hi.n_k.to_string(),
+                hi.n_v.to_string(),
+                r.bottleneck.clone(),
+            ]
+        })
+        .collect();
+    format!(
+        "Table 3 — optimal per-layer configurations\n{}",
+        render(&["Model", "Boosted layers", "nK", "nV", "Type"], &body)
+    )
+}
+
+pub fn table4(rep: &SensitivityReport) -> String {
+    let mut body: Vec<Vec<String>> = rep
+        .singles
+        .iter()
+        .map(|r| {
+            vec![
+                r.group.clone(),
+                format!("{}-{}", r.layers.0, r.layers.1),
+                fmt_delta(r.delta_ppl),
+            ]
+        })
+        .collect();
+    body.push(vec!["uniform".into(), "-".into(), fmt_delta(rep.uniform_delta)]);
+    let mut out = format!(
+        "Table 4 — layer-group sensitivity (each row boosts one group to K256V128)\n{}",
+        render(&["Group", "Layers", "dPPL"], &body)
+    );
+    out.push_str("\nCombination probes:\n");
+    let body: Vec<Vec<String>> = rep
+        .combos
+        .iter()
+        .map(|r| vec![r.group.clone(), fmt_delta(r.delta_ppl)])
+        .collect();
+    out.push_str(&render(&["Combo", "dPPL"], &body));
+    if !rep.negative_transfer.is_empty() {
+        out.push_str(&format!(
+            "\nNegative-transfer groups (worse than uniform): {:?}\n",
+            rep.negative_transfer
+        ));
+    }
+    out
+}
+
+pub fn table5(rows: &[Table5Row]) -> String {
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.model.clone(),
+                r.d_head.to_string(),
+                fmt_delta(r.fp32_delta),
+                fmt_delta(r.norm8_delta),
+                fmt_delta(r.k8v4_delta),
+                format!("~{:.2}", r.k8v4_bits),
+            ]
+        })
+        .collect();
+    format!(
+        "Table 5 — norm quantization\n{}",
+        render(
+            &["Model", "d", "FP32 dPPL", "norm8 dPPL", "K8V4-log dPPL", "K8V4 bits"],
+            &body
+        )
+    )
+}
+
+pub fn table6(rows: &[Table6Row]) -> String {
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.method.clone(),
+                format!("{:.2}", r.total_bits),
+                fmt_delta(r.delta_ppl),
+                if r.calibration { "Yes" } else { "No" }.into(),
+                r.source.clone(),
+            ]
+        })
+        .collect();
+    format!(
+        "Table 6 — vs calibration-style quantizers (all rows RUN on the same\n\
+         model+data here; the paper's Table 6 quotes foreign setups)\n{}",
+        render(
+            &["Method", "Total bits", "dPPL", "Calibration", "Source"],
+            &body
+        )
+    )
+}
+
+pub fn kv_sens(model: &str, rows: &[KvSensRow]) -> String {
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| vec![r.variant.clone(), fmt_delta(r.delta_ppl)])
+        .collect();
+    format!(
+        "K vs V sensitivity ({model})\n{}",
+        render(&["Variant", "dPPL"], &body)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns() {
+        let s = render(
+            &["A", "Bcd"],
+            &[
+                vec!["x".into(), "y".into()],
+                vec!["longer".into(), "z".into()],
+            ],
+        );
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+
+    #[test]
+    fn fmt_delta_sign() {
+        assert_eq!(fmt_delta(0.0014), "+0.0014");
+        assert_eq!(fmt_delta(-0.0022), "-0.0022");
+    }
+}

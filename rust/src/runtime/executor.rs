@@ -1,0 +1,242 @@
+//! Model executor: weights + compiled entry points for one profile.
+//!
+//! Owns the three AOT programs (eval / prefill / decode) and the weight
+//! literals, and translates [`QuantConfig`] into the runtime input arrays.
+//! Everything above this layer (coordinator, eval harness) is PJRT-free.
+
+use super::manifest::{Manifest, Profile};
+use super::pjrt::{lit_f32, lit_i32, lit_scalar_i32, to_f32, Program, Runtime};
+use super::tensorfile;
+use crate::quant::QuantConfig;
+use anyhow::{anyhow, ensure, Result};
+
+/// Which entry points to compile (eval-only is much faster to start).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Entry {
+    Eval,
+    Serve,
+    All,
+}
+
+pub struct ModelExecutor {
+    pub profile: Profile,
+    pub serve: super::manifest::ServeProtocol,
+    pub eval_proto: super::manifest::EvalProtocol,
+    weights: Vec<xla::Literal>,
+    pub sign: Vec<f32>,
+    sign_lit: xla::Literal,
+    eval: Option<Program>,
+    prefill: Option<Program>,
+    decode: Option<Program>,
+}
+
+/// Outputs of a prefill call: last-token logits + the compressed cache
+/// (pair norms are RAW f32 here; the kv_manager owns norm quantization).
+pub struct PrefillOut {
+    pub logits: Vec<f32>,       // (B, V)
+    pub kr: Vec<f32>,           // (L, B, H, Tp, d/2)
+    pub ki: Vec<f32>,
+    pub vr: Vec<f32>,
+    pub vi: Vec<f32>,
+}
+
+/// Outputs of a decode step: next-token logits + this token's compressed KV.
+pub struct DecodeOut {
+    pub logits: Vec<f32>,       // (B, V)
+    pub kr: Vec<f32>,           // (L, B, H, d/2)
+    pub ki: Vec<f32>,
+    pub vr: Vec<f32>,
+    pub vi: Vec<f32>,
+}
+
+impl ModelExecutor {
+    pub fn load(rt: &Runtime, manifest: &Manifest, name: &str, entry: Entry) -> Result<Self> {
+        let profile = manifest.profile(name)?.clone();
+        let tensors = tensorfile::read(manifest.path(&profile.weights))?;
+        let mut weights = Vec::new();
+        // weight order == the leading names of eval_inputs (the param list)
+        let n_params = profile.eval_inputs.len() - 5; // tokens,sign,nk,nv,norm_cfg,mode... see below
+        // eval_inputs = PARAM_ORDER + [tokens, sign, nk, nv, norm_cfg, mode]
+        let param_names = &profile.eval_inputs[..profile.eval_inputs.len() - 6];
+        ensure!(n_params - 1 == param_names.len(), "manifest param arity");
+        for pname in param_names {
+            let t = tensors
+                .get(pname)
+                .ok_or_else(|| anyhow!("weights missing tensor '{pname}'"))?;
+            weights.push(lit_f32(&t.shape, &t.as_f32()?)?);
+        }
+        let sign_t = tensors
+            .get("sign")
+            .ok_or_else(|| anyhow!("weights missing 'sign'"))?;
+        let sign = sign_t.as_f32()?;
+        let sign_lit = lit_f32(&[profile.d_head], &sign)?;
+
+        let load = |rel: &str| rt.load(manifest.path(rel));
+        let (eval, prefill, decode) = match entry {
+            Entry::Eval => (Some(load(&profile.eval_hlo)?), None, None),
+            Entry::Serve => (
+                None,
+                Some(load(&profile.prefill_hlo)?),
+                Some(load(&profile.decode_hlo)?),
+            ),
+            Entry::All => (
+                Some(load(&profile.eval_hlo)?),
+                Some(load(&profile.prefill_hlo)?),
+                Some(load(&profile.decode_hlo)?),
+            ),
+        };
+        Ok(ModelExecutor {
+            profile,
+            serve: manifest.serve.clone(),
+            eval_proto: manifest.eval.clone(),
+            weights,
+            sign,
+            sign_lit,
+            eval,
+            prefill,
+            decode,
+        })
+    }
+
+    fn cfg_literals(&self, cfg: &QuantConfig) -> Result<[xla::Literal; 4]> {
+        let l = self.profile.n_layers;
+        ensure!(cfg.layers.len() == l, "config has {} layers, model has {l}",
+                cfg.layers.len());
+        let (nk, nv) = cfg.to_bin_arrays();
+        Ok([
+            lit_f32(&[l], &nk)?,
+            lit_f32(&[l], &nv)?,
+            lit_f32(&[4], &cfg.to_norm_cfg())?,
+            lit_scalar_i32(cfg.mode as i32),
+        ])
+    }
+
+    /// Teacher-forced NLL over one chunk batch. `tokens` is
+    /// (eval.batch, eval.chunk_len) row-major. Returns (nll_sum, count) per row.
+    pub fn eval_nll(&self, tokens: &[i32], cfg: &QuantConfig) -> Result<(Vec<f32>, Vec<f32>)> {
+        let prog = self.eval.as_ref().ok_or_else(|| anyhow!("eval not loaded"))?;
+        let b = self.eval_proto.batch;
+        let cl = self.eval_proto.chunk_len;
+        ensure!(tokens.len() == b * cl, "tokens must be {b}x{cl}");
+        let tokens_lit = lit_i32(&[b, cl], tokens)?;
+        let [nk, nv, ncfg, mode] = self.cfg_literals(cfg)?;
+        let mut args: Vec<&xla::Literal> = self.weights.iter().collect();
+        args.push(&tokens_lit);
+        args.push(&self.sign_lit);
+        args.push(&nk);
+        args.push(&nv);
+        args.push(&ncfg);
+        args.push(&mode);
+        let out = prog.run(&args)?;
+        ensure!(out.len() == 2, "eval returns 2 outputs");
+        Ok((to_f32(&out[0])?, to_f32(&out[1])?))
+    }
+
+    /// Prompt prefill (serve.batch × serve.prefill_len, PAD-padded).
+    pub fn run_prefill(
+        &self,
+        tokens: &[i32],
+        lengths: &[i32],
+        cfg: &QuantConfig,
+    ) -> Result<PrefillOut> {
+        let prog = self
+            .prefill
+            .as_ref()
+            .ok_or_else(|| anyhow!("prefill not loaded"))?;
+        let b = self.serve.batch;
+        let tp = self.serve.prefill_len;
+        ensure!(tokens.len() == b * tp && lengths.len() == b);
+        let tokens_lit = lit_i32(&[b, tp], tokens)?;
+        let len_lit = lit_i32(&[b], lengths)?;
+        let [nk, nv, ncfg, mode] = self.cfg_literals(cfg)?;
+        let mut args: Vec<&xla::Literal> = self.weights.iter().collect();
+        args.push(&tokens_lit);
+        args.push(&len_lit);
+        args.push(&self.sign_lit);
+        args.push(&nk);
+        args.push(&nv);
+        args.push(&ncfg);
+        args.push(&mode);
+        let out = prog.run(&args)?;
+        ensure!(out.len() == 5, "prefill returns 5 outputs");
+        Ok(PrefillOut {
+            logits: to_f32(&out[0])?,
+            kr: to_f32(&out[1])?,
+            ki: to_f32(&out[2])?,
+            vr: to_f32(&out[3])?,
+            vi: to_f32(&out[4])?,
+        })
+    }
+
+    /// One decode step over the dense (norm-dequantized) compressed cache.
+    /// Cache slices are (L, B, H, Tmax, d/2) row-major f32.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_decode(
+        &self,
+        token: &[i32],
+        pos: &[i32],
+        cfg: &QuantConfig,
+        kr: &[f32],
+        ki: &[f32],
+        vr: &[f32],
+        vi: &[f32],
+    ) -> Result<DecodeOut> {
+        let prog = self
+            .decode
+            .as_ref()
+            .ok_or_else(|| anyhow!("decode not loaded"))?;
+        let (l, b, h, tmax, half) = self.cache_dims();
+        let cshape = [l, b, h, tmax, half];
+        ensure!(token.len() == b && pos.len() == b);
+        ensure!(kr.len() == l * b * h * tmax * half, "cache shape mismatch");
+        let token_lit = lit_i32(&[b], token)?;
+        let pos_lit = lit_i32(&[b], pos)?;
+        let [nk, nv, ncfg, mode] = self.cfg_literals(cfg)?;
+        let kr_l = lit_f32(&cshape, kr)?;
+        let ki_l = lit_f32(&cshape, ki)?;
+        let vr_l = lit_f32(&cshape, vr)?;
+        let vi_l = lit_f32(&cshape, vi)?;
+        let mut args: Vec<&xla::Literal> = self.weights.iter().collect();
+        args.push(&token_lit);
+        args.push(&pos_lit);
+        args.push(&self.sign_lit);
+        args.push(&nk);
+        args.push(&nv);
+        args.push(&ncfg);
+        args.push(&mode);
+        args.push(&kr_l);
+        args.push(&ki_l);
+        args.push(&vr_l);
+        args.push(&vi_l);
+        let out = prog.run(&args)?;
+        ensure!(out.len() == 5, "decode returns 5 outputs");
+        Ok(DecodeOut {
+            logits: to_f32(&out[0])?,
+            kr: to_f32(&out[1])?,
+            ki: to_f32(&out[2])?,
+            vr: to_f32(&out[3])?,
+            vi: to_f32(&out[4])?,
+        })
+    }
+
+    /// Swap the ±1 diagonal used by every entry point (D-seed sweeps —
+    /// the diagonal is a runtime input, so no recompilation happens).
+    pub fn set_sign(&mut self, sign: &[f32]) -> Result<()> {
+        ensure!(sign.len() == self.profile.d_head, "sign length");
+        ensure!(sign.iter().all(|v| *v == 1.0 || *v == -1.0), "sign must be ±1");
+        self.sign = sign.to_vec();
+        self.sign_lit = lit_f32(&[self.profile.d_head], sign)?;
+        Ok(())
+    }
+
+    /// (L, B, H, Tmax, d/2) for the serving cache tensors.
+    pub fn cache_dims(&self) -> (usize, usize, usize, usize, usize) {
+        (
+            self.profile.n_layers,
+            self.serve.batch,
+            self.profile.n_kv_heads,
+            self.serve.tmax,
+            self.profile.d_head / 2,
+        )
+    }
+}

@@ -1,0 +1,178 @@
+//! `artifacts/manifest.json` — the build→runtime contract emitted by
+//! `python/compile/aot.py`: profile hyperparameters, artifact paths,
+//! input orderings, and the eval/serve protocol shapes.
+//!
+//! Parsed with the in-tree JSON parser (util::json) — serde is unavailable
+//! in this offline environment.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, ensure, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub version: u32,
+    pub sign_seed: u64,
+    pub eval: EvalProtocol,
+    pub serve: ServeProtocol,
+    pub modes: BTreeMap<String, i32>,
+    pub profiles: BTreeMap<String, Profile>,
+    pub kernels: BTreeMap<String, String>,
+    pub root: PathBuf,
+}
+
+#[derive(Clone, Debug)]
+pub struct EvalProtocol {
+    pub chunks: usize,
+    pub chunk_len: usize,
+    pub batch: usize,
+    pub paper_protocol: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ServeProtocol {
+    pub batch: usize,
+    pub prefill_len: usize,
+    pub tmax: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Profile {
+    pub name: String,
+    pub mirrors: String,
+    pub n_layers: usize,
+    pub d_head: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub gqa_ratio: usize,
+    pub param_count: u64,
+    pub weights: String,
+    pub eval_hlo: String,
+    pub prefill_hlo: String,
+    pub decode_hlo: String,
+    pub eval_inputs: Vec<String>,
+    pub prefill_inputs: Vec<String>,
+    pub decode_inputs: Vec<String>,
+}
+
+fn profile_from_json(j: &Json) -> Result<Profile> {
+    Ok(Profile {
+        name: j.get("name")?.as_str()?.to_string(),
+        mirrors: j.get("mirrors")?.as_str()?.to_string(),
+        n_layers: j.get("n_layers")?.as_usize()?,
+        d_head: j.get("d_head")?.as_usize()?,
+        n_q_heads: j.get("n_q_heads")?.as_usize()?,
+        n_kv_heads: j.get("n_kv_heads")?.as_usize()?,
+        d_model: j.get("d_model")?.as_usize()?,
+        d_ff: j.get("d_ff")?.as_usize()?,
+        vocab: j.get("vocab")?.as_usize()?,
+        gqa_ratio: j.get("gqa_ratio")?.as_usize()?,
+        param_count: j.get("param_count")?.as_u64()?,
+        weights: j.get("weights")?.as_str()?.to_string(),
+        eval_hlo: j.get("eval_hlo")?.as_str()?.to_string(),
+        prefill_hlo: j.get("prefill_hlo")?.as_str()?.to_string(),
+        decode_hlo: j.get("decode_hlo")?.as_str()?.to_string(),
+        eval_inputs: j.get("eval_inputs")?.str_vec()?,
+        prefill_inputs: j.get("prefill_inputs")?.str_vec()?,
+        decode_inputs: j.get("decode_inputs")?.str_vec()?,
+    })
+}
+
+impl Manifest {
+    pub fn from_json_text(text: &str, root: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let version = j.get("version")?.as_usize()? as u32;
+        ensure!(version == 1, "unsupported manifest version {version}");
+        let ev = j.get("eval")?;
+        let sv = j.get("serve")?;
+        let mut modes = BTreeMap::new();
+        for (k, v) in j.get("modes")?.as_obj()? {
+            modes.insert(k.clone(), v.as_usize()? as i32);
+        }
+        let mut profiles = BTreeMap::new();
+        for (k, v) in j.get("profiles")?.as_obj()? {
+            profiles.insert(k.clone(), profile_from_json(v)?);
+        }
+        let mut kernels = BTreeMap::new();
+        if let Some(ks) = j.opt("kernels") {
+            for (k, v) in ks.as_obj()? {
+                kernels.insert(k.clone(), v.as_str()?.to_string());
+            }
+        }
+        Ok(Manifest {
+            version,
+            sign_seed: j.get("sign_seed")?.as_u64()?,
+            eval: EvalProtocol {
+                chunks: ev.get("chunks")?.as_usize()?,
+                chunk_len: ev.get("chunk_len")?.as_usize()?,
+                batch: ev.get("batch")?.as_usize()?,
+                paper_protocol: ev
+                    .opt("paper_protocol")
+                    .and_then(|v| v.as_str().ok())
+                    .unwrap_or("")
+                    .to_string(),
+            },
+            serve: ServeProtocol {
+                batch: sv.get("batch")?.as_usize()?,
+                prefill_len: sv.get("prefill_len")?.as_usize()?,
+                tmax: sv.get("tmax")?.as_usize()?,
+            },
+            modes,
+            profiles,
+            kernels,
+            root,
+        })
+    }
+
+    pub fn load<P: AsRef<Path>>(artifacts_dir: P) -> Result<Manifest> {
+        let root = artifacts_dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow!("read {path:?}: {e} (run `make artifacts`?)"))?;
+        Self::from_json_text(&text, root)
+    }
+
+    /// Locate the artifacts dir: $TURBOANGLE_ARTIFACTS or ./artifacts.
+    pub fn discover() -> Result<Manifest> {
+        let dir = std::env::var("TURBOANGLE_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(dir)
+    }
+
+    pub fn profile(&self, name: &str) -> Result<&Profile> {
+        self.profiles.get(name).ok_or_else(|| {
+            anyhow!(
+                "unknown profile '{name}' (have: {:?})",
+                self.profiles.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let json = r#"{
+            "version": 1, "sign_seed": 1,
+            "eval": {"chunks": 2, "chunk_len": 3, "batch": 1},
+            "serve": {"batch": 1, "prefill_len": 4, "tmax": 8},
+            "modes": {"none": 0, "angle": 1},
+            "profiles": {}
+        }"#;
+        let m = Manifest::from_json_text(json, PathBuf::from(".")).unwrap();
+        assert_eq!(m.eval.chunks, 2);
+        assert_eq!(m.modes["angle"], 1);
+        assert!(m.profile("nope").is_err());
+    }
+}

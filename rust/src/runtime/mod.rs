@@ -1,0 +1,11 @@
+//! Runtime layer: PJRT client, AOT artifact loading, weights, and the
+//! model executor. Python never runs here — artifacts are self-contained.
+
+pub mod executor;
+pub mod manifest;
+pub mod pjrt;
+pub mod tensorfile;
+
+pub use executor::{DecodeOut, Entry, ModelExecutor, PrefillOut};
+pub use manifest::{Manifest, Profile};
+pub use pjrt::{Program, Runtime};

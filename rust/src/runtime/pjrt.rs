@@ -1,0 +1,95 @@
+//! PJRT plumbing: HLO text → compile → execute (the
+//! /opt/xla-example/load_hlo pattern, wrapped for reuse).
+//!
+//! All artifacts are lowered by `python/compile/aot.py` with
+//! `return_tuple=True`, so every execution returns one tuple literal that
+//! we decompose. HLO *text* is the interchange format (see aot.py docstring).
+
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// Shared PJRT CPU client (one per process).
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load<P: AsRef<Path>>(&self, path: P) -> Result<Program> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+        Ok(Program {
+            exe,
+            name: path.file_name().unwrap().to_string_lossy().into_owned(),
+        })
+    }
+}
+
+/// One compiled executable.
+pub struct Program {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Program {
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    pub fn run(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {}: {e:?}", self.name))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {}: {e:?}", self.name))
+    }
+}
+
+/// f32 literal with shape.
+pub fn lit_f32(shape: &[usize], values: &[f32]) -> Result<xla::Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>(), values.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(values)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("{e:?}"))
+}
+
+/// i32 literal with shape.
+pub fn lit_i32(shape: &[usize], values: &[i32]) -> Result<xla::Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>(), values.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(values)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("{e:?}"))
+}
+
+/// scalar i32 literal.
+pub fn lit_scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// scalar f32 literal.
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Fetch a literal's f32 payload.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+}

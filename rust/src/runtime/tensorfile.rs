@@ -1,0 +1,171 @@
+//! Reader/writer for the TANG tensor container (see
+//! `python/compile/tensorfile.py` for the format spec). Build-time python
+//! writes weights/golden vectors; this side loads them at runtime.
+
+use anyhow::{bail, ensure, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"TANG";
+const VERSION: u32 = 1;
+
+/// Element type codes (must match python `_CODES`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32 = 0,
+    I32 = 1,
+    U8 = 2,
+}
+
+/// One named tensor: shape + raw little-endian payload.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        ensure!(self.dtype == DType::F32, "tensor is not f32");
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        ensure!(self.dtype == DType::I32, "tensor is not i32");
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    pub fn from_f32(shape: &[usize], values: &[f32]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        Tensor {
+            dtype: DType::F32,
+            shape: shape.to_vec(),
+            data: values.iter().flat_map(|v| v.to_le_bytes()).collect(),
+        }
+    }
+
+    pub fn from_i32(shape: &[usize], values: &[i32]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        Tensor {
+            dtype: DType::I32,
+            shape: shape.to_vec(),
+            data: values.iter().flat_map(|v| v.to_le_bytes()).collect(),
+        }
+    }
+}
+
+/// Load every tensor in a TANG file (order-preserving by name).
+pub fn read<P: AsRef<Path>>(path: P) -> Result<BTreeMap<String, Tensor>> {
+    let mut data = Vec::new();
+    std::fs::File::open(path.as_ref())?.read_to_end(&mut data)?;
+    parse(&data)
+}
+
+pub fn parse(data: &[u8]) -> Result<BTreeMap<String, Tensor>> {
+    ensure!(data.len() >= 12 && &data[..4] == MAGIC, "bad magic");
+    let version = u32::from_le_bytes(data[4..8].try_into()?);
+    ensure!(version == VERSION, "unsupported version {version}");
+    let count = u32::from_le_bytes(data[8..12].try_into()?) as usize;
+    let mut off = 12;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+            ensure!(*off + n <= data.len(), "truncated tensorfile");
+            let s = &data[*off..*off + n];
+            *off += n;
+            Ok(s)
+        };
+        let nlen = u16::from_le_bytes(take(&mut off, 2)?.try_into()?) as usize;
+        let name = String::from_utf8(take(&mut off, nlen)?.to_vec())?;
+        let code = take(&mut off, 1)?[0];
+        let ndim = take(&mut off, 1)?[0] as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(u32::from_le_bytes(take(&mut off, 4)?.try_into()?) as usize);
+        }
+        let plen = u64::from_le_bytes(take(&mut off, 8)?.try_into()?) as usize;
+        let payload = take(&mut off, plen)?.to_vec();
+        let dtype = match code {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::U8,
+            c => bail!("unknown dtype code {c}"),
+        };
+        out.insert(
+            name,
+            Tensor {
+                dtype,
+                shape,
+                data: payload,
+            },
+        );
+    }
+    Ok(out)
+}
+
+/// Write tensors (used by tests to round-trip against the python reader).
+pub fn write<P: AsRef<Path>>(path: P, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+    let mut f = std::fs::File::create(path.as_ref())?;
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u16).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&[t.dtype as u8, t.shape.len() as u8])?;
+        for &d in &t.shape {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        f.write_all(&(t.data.len() as u64).to_le_bytes())?;
+        f.write_all(&t.data)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut m = BTreeMap::new();
+        m.insert("a".into(), Tensor::from_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]));
+        m.insert("b".into(), Tensor::from_i32(&[4], &[7, -8, 9, 0]));
+        let dir = std::env::temp_dir().join("tang_test.tang");
+        write(&dir, &m).unwrap();
+        let back = read(&dir).unwrap();
+        assert_eq!(back["a"].as_f32().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(back["a"].shape, vec![2, 3]);
+        assert_eq!(back["b"].as_i32().unwrap(), vec![7, -8, 9, 0]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse(b"NOPE\x01\x00\x00\x00\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut m = BTreeMap::new();
+        m.insert("x".into(), Tensor::from_f32(&[8], &[0.0; 8]));
+        let p = std::env::temp_dir().join("tang_trunc.tang");
+        write(&p, &m).unwrap();
+        let data = std::fs::read(&p).unwrap();
+        assert!(parse(&data[..data.len() - 4]).is_err());
+    }
+}

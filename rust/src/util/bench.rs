@@ -1,0 +1,96 @@
+//! Micro-bench harness (criterion is unavailable offline).
+//!
+//! Measures wall time over warmup + timed iterations, reports mean / p50 /
+//! p95 / min and derived throughput. Used by every file in rust/benches/.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    /// items/second at `items` per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.mean.as_secs_f64()
+    }
+
+    pub fn line(&self, items: Option<(f64, &str)>) -> String {
+        let tp = items
+            .map(|(n, unit)| format!("  {:>12.2} {unit}/s", self.throughput(n)))
+            .unwrap_or_default();
+        format!(
+            "{:<44} {:>10.2?} mean  {:>10.2?} p50  {:>10.2?} p95  {:>10.2?} min{tp}",
+            self.name, self.mean, self.p50, self.p95, self.min
+        )
+    }
+}
+
+/// Time `f` with auto-calibrated iteration count targeting ~`budget`.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().max(Duration::from_nanos(100));
+    let iters = (budget.as_secs_f64() / one.as_secs_f64()).clamp(3.0, 10_000.0) as usize;
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort_unstable();
+    let sum: Duration = samples.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: sum / iters as u32,
+        p50: samples[iters / 2],
+        p95: samples[((iters as f64 * 0.95) as usize).min(iters - 1)],
+        min: samples[0],
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench("spin", Duration::from_millis(20), || {
+            let mut s = 0u64;
+            for i in 0..10_000 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(r.iters >= 3);
+        assert!(r.min <= r.p50 && r.p50 <= r.p95);
+        assert!(r.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean: Duration::from_millis(10),
+            p50: Duration::from_millis(10),
+            p95: Duration::from_millis(10),
+            min: Duration::from_millis(10),
+        };
+        assert!((r.throughput(100.0) - 10_000.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,127 @@
+//! Tiny CLI flag parser (clap is unavailable offline).
+//!
+//! Grammar: `prog [--global-flags] <subcommand> [--flags]`, where flags are
+//! `--name value` or bare `--name` (boolean). Unknown flags error with the
+//! accepted set.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` style input (excluding program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        let v = it.next().unwrap();
+                        out.flags.insert(name.to_string(), v);
+                    }
+                    _ => out.bools.push(name.to_string()),
+                }
+            } else if out.subcommand.is_empty() {
+                out.subcommand = tok;
+            } else {
+                bail!("unexpected positional argument '{tok}'");
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_u32(&self, name: &str, default: u32) -> Result<u32> {
+        match self.flag(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    /// Comma-separated list flag.
+    pub fn get_list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.flag(name) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Error on unrecognized flags (catches typos).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys().chain(self.bools.iter()) {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k}; accepted: {known:?}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("table1 --models a,b --fine");
+        assert_eq!(a.subcommand, "table1");
+        assert_eq!(a.get_list("models", &[]), vec!["a", "b"]);
+        assert!(a.get_bool("fine"));
+        assert!(!a.get_bool("centered"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("serve");
+        assert_eq!(a.get_str("model", "smollm2-sim"), "smollm2-sim");
+        assert_eq!(a.get_usize("requests", 12).unwrap(), 12);
+    }
+
+    #[test]
+    fn numeric_values() {
+        let a = parse("eval --nk 256 --n-early 4");
+        assert_eq!(a.get_u32("nk", 0).unwrap(), 256);
+        assert_eq!(a.get_usize("n-early", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let a = parse("x --typo 1");
+        assert!(a.check_known(&["model"]).is_err());
+        assert!(a.check_known(&["typo"]).is_ok());
+    }
+
+    #[test]
+    fn rejects_extra_positional() {
+        assert!(Args::parse(["a".into(), "b".into()]).is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! In-tree substrates for the offline environment: JSON parsing, CLI flag
+//! parsing, a micro-bench harness, and property-testing helpers.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;

@@ -1,0 +1,87 @@
+//! Mini property-testing helpers (proptest is unavailable offline).
+//!
+//! `Gen` is a seeded generator; `run_cases` executes a property over N
+//! seeded cases and reports the failing seed so cases reproduce exactly.
+
+/// Seeded xorshift* generator for property inputs.
+pub struct Gen(u64);
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen(seed | 1)
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.0 ^= self.0 >> 12;
+        self.0 ^= self.0 << 25;
+        self.0 ^= self.0 >> 27;
+        self.0.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.u64() as usize) % (hi - lo + 1).max(1)
+    }
+
+    pub fn u32_in(&mut self, lo: u32, hi: u32) -> u32 {
+        lo + (self.u64() as u32) % (hi - lo + 1).max(1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (self.u64() >> 40) as f32 / (1u64 << 24) as f32 * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.u64() & 1 == 1
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+
+    pub fn f32_vec(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+}
+
+/// Run `prop` over `cases` seeded generators; panic with the failing seed.
+pub fn run_cases<F: FnMut(&mut Gen)>(cases: u64, mut prop: F) {
+    for seed in 1..=cases {
+        let mut g = Gen::new(seed.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut g);
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed on case seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_ranges_hold() {
+        let mut g = Gen::new(7);
+        for _ in 0..1000 {
+            let v = g.usize_in(3, 9);
+            assert!((3..=9).contains(&v));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn run_cases_executes_all() {
+        let mut n = 0;
+        run_cases(25, |_| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn run_cases_propagates_failure() {
+        run_cases(10, |g| assert!(g.u64() % 3 != 0));
+    }
+}

@@ -1,0 +1,138 @@
+//! Synthetic serving workloads (the testbed stand-in for production
+//! request traces — DESIGN.md §2).
+
+use crate::coordinator::session::Request;
+
+/// Deterministic xorshift RNG so workloads are reproducible.
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 ^= self.0 >> 12;
+        self.0 ^= self.0 << 25;
+        self.0 ^= self.0 >> 27;
+        self.0.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Exponential inter-arrival (Poisson process), seconds.
+    pub fn exp(&mut self, rate_per_s: f64) -> f64 {
+        -self.uniform().max(1e-12).ln() / rate_per_s
+    }
+
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        if hi <= lo {
+            return lo;
+        }
+        lo + (self.next_u64() as usize) % (hi - lo)
+    }
+}
+
+/// Prompt-length / generation-length mix.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadSpec {
+    pub prompt_min: usize,
+    pub prompt_max: usize,
+    pub gen_min: usize,
+    pub gen_max: usize,
+    pub n_requests: usize,
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            prompt_min: 16,
+            prompt_max: 64,
+            gen_min: 8,
+            gen_max: 32,
+            n_requests: 16,
+            seed: 42,
+        }
+    }
+}
+
+/// Byte-level prompts drawn from the corpus alphabet (lowercase + space).
+pub fn generate(spec: &WorkloadSpec) -> Vec<Request> {
+    let mut rng = Rng::new(spec.seed);
+    // clamp inverted bounds (e.g. a CLI --gen-max below the default min)
+    let gen_min = spec.gen_min.min(spec.gen_max);
+    let prompt_min = spec.prompt_min.min(spec.prompt_max);
+    (0..spec.n_requests)
+        .map(|i| {
+            let plen = rng.range(prompt_min, spec.prompt_max + 1);
+            let glen = rng.range(gen_min, spec.gen_max + 1);
+            let prompt: Vec<i32> = (0..plen)
+                .map(|_| {
+                    let r = rng.range(0, 27);
+                    if r == 26 {
+                        32
+                    } else {
+                        97 + r as i32
+                    }
+                })
+                .collect();
+            Request::new(i as u64, prompt, glen)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = generate(&WorkloadSpec::default());
+        let b = generate(&WorkloadSpec::default());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+        }
+    }
+
+    #[test]
+    fn inverted_bounds_clamp() {
+        let spec = WorkloadSpec {
+            gen_min: 8,
+            gen_max: 3,
+            n_requests: 20,
+            ..Default::default()
+        };
+        for r in generate(&spec) {
+            assert!(r.max_new_tokens <= 3, "{}", r.max_new_tokens);
+        }
+    }
+
+    #[test]
+    fn respects_bounds() {
+        let spec = WorkloadSpec {
+            prompt_min: 4,
+            prompt_max: 8,
+            gen_min: 2,
+            gen_max: 3,
+            n_requests: 50,
+            seed: 7,
+        };
+        for r in generate(&spec) {
+            assert!(r.prompt.len() >= 4 && r.prompt.len() <= 8);
+            assert!(r.max_new_tokens >= 2 && r.max_new_tokens <= 3);
+            assert!(r.prompt.iter().all(|&t| t == 32 || (97..123).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn poisson_interarrivals_positive() {
+        let mut rng = Rng::new(3);
+        let mean: f64 = (0..1000).map(|_| rng.exp(10.0)).sum::<f64>() / 1000.0;
+        assert!(mean > 0.05 && mean < 0.2, "mean {mean}");
+    }
+}

@@ -1,0 +1,125 @@
+//! Golden-vector cross-validation: the native rust quantizer must match
+//! the python oracle (compile.kernels.ref) on vectors emitted at
+//! `make artifacts` time. Requires artifacts/.
+
+use turboangle::quant::{angle, baseline, fwht, norm, NormMode};
+use turboangle::runtime::tensorfile;
+
+fn golden(d: usize) -> std::collections::BTreeMap<String, tensorfile::Tensor> {
+    let dir = std::env::var("TURBOANGLE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    tensorfile::read(format!("{dir}/golden/golden_d{d}.tang"))
+        .expect("golden vectors missing — run `make artifacts`")
+}
+
+#[test]
+fn rotate_matches_oracle() {
+    for d in [64usize, 128] {
+        let g = golden(d);
+        let x = g["x"].as_f32().unwrap();
+        let sign = g["sign"].as_f32().unwrap();
+        let want = g["rotated"].as_f32().unwrap();
+        let rows = g["x"].shape[0];
+        for r in 0..rows {
+            let mut y = x[r * d..(r + 1) * d].to_vec();
+            fwht::rotate(&mut y, &sign);
+            for (a, b) in y.iter().zip(&want[r * d..(r + 1) * d]) {
+                assert!((a - b).abs() < 1e-4, "d={d} row={r}");
+            }
+        }
+    }
+}
+
+#[test]
+fn encode_decode_matches_oracle_all_bins() {
+    for d in [64usize, 128] {
+        let g = golden(d);
+        let x = g["x"].as_f32().unwrap();
+        let sign = g["sign"].as_f32().unwrap();
+        let rows = g["x"].shape[0];
+        let half = d / 2;
+        for n in [48u32, 64, 128, 256] {
+            let want_r = g[&format!("r_n{n}")].as_f32().unwrap();
+            let want_k = g[&format!("k_n{n}")].as_f32().unwrap();
+            let want_dec = g[&format!("dec_n{n}")].as_f32().unwrap();
+            let want_decc = g[&format!("decc_n{n}")].as_f32().unwrap();
+            let mut mismatches = 0usize;
+            for row in 0..rows {
+                let e = angle::encode(&x[row * d..(row + 1) * d], &sign, n);
+                for i in 0..half {
+                    assert!((e.r[i] - want_r[row * half + i]).abs() < 1e-3);
+                    mismatches += (e.k[i] as f32 != want_k[row * half + i]) as usize;
+                }
+                let dec = angle::decode(&e.r, &e.k, &sign, n, false);
+                let decc = angle::decode(&e.r, &e.k, &sign, n, true);
+                for i in 0..d {
+                    assert!((dec[i] - want_dec[row * d + i]).abs() < 1e-2);
+                    assert!((decc[i] - want_decc[row * d + i]).abs() < 1e-2);
+                }
+            }
+            // f32 boundary ties may flip the rare bin; must be ~0
+            assert!(mismatches <= rows * half / 100, "d={d} n={n}: {mismatches}");
+        }
+    }
+}
+
+#[test]
+fn norm_quant_matches_oracle() {
+    for d in [64usize, 128] {
+        let g = golden(d);
+        let r = g["r_n64"].as_f32().unwrap();
+        let rows = g["r_n64"].shape[0];
+        let half = d / 2;
+        for (name, mode) in [
+            ("normq_b8_log0", NormMode::LINEAR8),
+            ("normq_b4_log1", NormMode::LOG4),
+            ("normq_b4_log0", NormMode { bits: 4, log_space: false }),
+        ] {
+            let want = g[name].as_f32().unwrap();
+            for row in 0..rows {
+                let rq = norm::quant_dequant(&r[row * half..(row + 1) * half], mode);
+                for (a, b) in rq.iter().zip(&want[row * half..(row + 1) * half]) {
+                    assert!(
+                        (a - b).abs() / b.abs().max(1e-3) < 1e-2,
+                        "d={d} {name} row={row}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn tq_baseline_matches_oracle() {
+    for d in [64usize, 128] {
+        let g = golden(d);
+        let x = g["x"].as_f32().unwrap();
+        let sign = g["sign"].as_f32().unwrap();
+        let rows = g["x"].shape[0];
+        for (name, bits) in [("tq4", 4u32), ("tq3", 3)] {
+            let want = g[name].as_f32().unwrap();
+            for row in 0..rows {
+                let got = baseline::tq_scalar_g(&x[row * d..(row + 1) * d], &sign, bits, 4);
+                for (a, b) in got.iter().zip(&want[row * d..(row + 1) * d]) {
+                    assert!((a - b).abs() < 1e-3, "d={d} {name} row={row}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn tensorfile_rust_write_python_layout() {
+    // round-trip through our writer matches the reader (same format the
+    // python side writes; parse() is layout-compatible by construction)
+    use std::collections::BTreeMap;
+    let mut m = BTreeMap::new();
+    m.insert(
+        "w".to_string(),
+        tensorfile::Tensor::from_f32(&[3, 2], &[1., 2., 3., 4., 5., 6.]),
+    );
+    let p = std::env::temp_dir().join("golden_rt.tang");
+    tensorfile::write(&p, &m).unwrap();
+    let back = tensorfile::read(&p).unwrap();
+    assert_eq!(back["w"].shape, vec![3, 2]);
+    assert_eq!(back["w"].as_f32().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+}

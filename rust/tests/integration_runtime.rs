@@ -1,0 +1,228 @@
+//! Integration over the PJRT runtime: real artifacts, real executions.
+//! Requires `make artifacts`. Uses one shared CPU client per test binary.
+
+use turboangle::eval::PplHarness;
+use turboangle::quant::{angle, fwht, Mode, QuantConfig};
+use turboangle::runtime::{pjrt, tensorfile, Entry, Manifest, ModelExecutor, Runtime};
+
+fn manifest() -> Manifest {
+    Manifest::discover().expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_contract_complete() {
+    let m = manifest();
+    assert_eq!(m.profiles.len(), 7, "all seven simulated models");
+    for (name, p) in &m.profiles {
+        assert_eq!(&p.name, name);
+        assert!(p.d_head == 64 || p.d_head == 128);
+        assert_eq!(p.eval_inputs.len(), 11 + 6);
+        assert_eq!(p.decode_inputs.len(), 11 + 11);
+        assert!(m.path(&p.eval_hlo).exists(), "{name} eval artifact");
+        assert!(m.path(&p.prefill_hlo).exists());
+        assert!(m.path(&p.decode_hlo).exists());
+        assert!(m.path(&p.weights).exists());
+    }
+    // paper layer counts preserved exactly
+    assert_eq!(m.profiles["tinyllama-sim"].n_layers, 22);
+    assert_eq!(m.profiles["mistral-sim"].n_layers, 32);
+    assert_eq!(m.profiles["mistral-sim"].d_head, 128);
+    assert_eq!(m.profiles["starcoder2-sim"].n_layers, 40);
+}
+
+#[test]
+fn hlo_kernel_artifacts_match_native() {
+    let m = manifest();
+    let rt = Runtime::cpu().unwrap();
+    for d in [64usize, 128] {
+        // sign from the model weights (the real shared diagonal)
+        let prof = m
+            .profiles
+            .values()
+            .find(|p| p.d_head == d)
+            .unwrap();
+        let w = tensorfile::read(m.path(&prof.weights)).unwrap();
+        let sign = w["sign"].as_f32().unwrap();
+
+        let rows = 1024usize;
+        let mut g = turboangle::util::prop::Gen::new(5 + d as u64);
+        let x = g.f32_vec(rows * d, -3.0, 3.0);
+
+        // encode kernel
+        let enc = rt.load(m.path(&format!("kernels.encode.d{d}.hlo.txt"))).unwrap();
+        let args = [
+            pjrt::lit_f32(&[rows, d], &x).unwrap(),
+            pjrt::lit_f32(&[d], &sign).unwrap(),
+            pjrt::lit_scalar_f32(128.0),
+        ];
+        let out = enc.run(&args.iter().collect::<Vec<_>>()).unwrap();
+        let hr = pjrt::to_f32(&out[0]).unwrap();
+        let hk = pjrt::to_f32(&out[1]).unwrap();
+        let half = d / 2;
+        let mut mismatch = 0;
+        for row in 0..rows {
+            let e = angle::encode(&x[row * d..(row + 1) * d], &sign, 128);
+            for i in 0..half {
+                assert!((e.r[i] - hr[row * half + i]).abs() < 1e-3);
+                mismatch += (e.k[i] as f32 != hk[row * half + i]) as usize;
+            }
+        }
+        assert!(mismatch <= rows * half / 500, "d={d}: {mismatch} bin mismatches");
+
+        // decode kernel closes the loop
+        let dec = rt.load(m.path(&format!("kernels.decode.d{d}.hlo.txt"))).unwrap();
+        let args = [
+            pjrt::lit_f32(&[rows, half], &hr).unwrap(),
+            pjrt::lit_f32(&[rows, half], &hk).unwrap(),
+            pjrt::lit_f32(&[d], &sign).unwrap(),
+            pjrt::lit_scalar_f32(128.0),
+        ];
+        let out = dec.run(&args.iter().collect::<Vec<_>>()).unwrap();
+        let xh = pjrt::to_f32(&out[0]).unwrap();
+        for row in 0..rows.min(64) {
+            let native = angle::decode(
+                &hr[row * half..(row + 1) * half]
+                    .iter()
+                    .cloned()
+                    .collect::<Vec<_>>(),
+                &hk[row * half..(row + 1) * half]
+                    .iter()
+                    .map(|&v| v as u16)
+                    .collect::<Vec<_>>(),
+                &sign,
+                128,
+                false,
+            );
+            for (a, b) in native.iter().zip(&xh[row * d..(row + 1) * d]) {
+                assert!((a - b).abs() < 1e-3);
+            }
+        }
+
+        // fwht kernel is orthonormal on-device
+        let fw = rt.load(m.path(&format!("kernels.fwht.d{d}.hlo.txt"))).unwrap();
+        let args = [pjrt::lit_f32(&[rows, d], &x).unwrap()];
+        let out = fw.run(&args.iter().collect::<Vec<_>>()).unwrap();
+        let y = pjrt::to_f32(&out[0]).unwrap();
+        for row in 0..rows.min(64) {
+            let mut native = x[row * d..(row + 1) * d].to_vec();
+            fwht::fwht(&mut native);
+            for (a, b) in native.iter().zip(&y[row * d..(row + 1) * d]) {
+                assert!((a - b).abs() < 1e-3);
+            }
+        }
+    }
+}
+
+#[test]
+fn eval_modes_ordering_sane() {
+    // On a trained model: no-quant <= angle(high bins) <= angle(low bins)
+    let m = manifest();
+    let rt = Runtime::cpu().unwrap();
+    let exec = ModelExecutor::load(&rt, &m, "smollm2-sim", Entry::Eval).unwrap();
+    let h = PplHarness::new(&m, exec).unwrap();
+    let l = h.n_layers();
+    let base = h.baseline_ppl().unwrap();
+    assert!(base > 1.0 && base < 50.0, "trained model PPL sane: {base}");
+    let hi = h.ppl(&QuantConfig::uniform(l, 512, 512)).unwrap();
+    let lo = h.ppl(&QuantConfig::uniform(l, 8, 8)).unwrap();
+    assert!(hi - base < 0.05, "512 bins nearly lossless: {hi} vs {base}");
+    assert!(lo > hi + 0.05, "8 bins clearly worse: {lo} vs {hi}");
+    // centered-bin ablation should not be catastrophically different
+    let mut c = QuantConfig::paper_uniform(l);
+    c.mode = Mode::AngleCentered;
+    let cent = h.ppl(&c).unwrap();
+    assert!((cent - base).abs() < 0.05);
+}
+
+#[test]
+fn eval_scalar_baselines_execute() {
+    let m = manifest();
+    let rt = Runtime::cpu().unwrap();
+    let exec = ModelExecutor::load(&rt, &m, "smollm2-sim", Entry::Eval).unwrap();
+    let h = PplHarness::new(&m, exec).unwrap();
+    let l = h.n_layers();
+    let base = h.baseline_ppl().unwrap();
+    for mode in [Mode::TqSymG4, Mode::Kivi, Mode::KvQuant] {
+        let d8 = h.ppl(&QuantConfig::scalar_baseline(l, mode, 8)).unwrap();
+        let d3 = h.ppl(&QuantConfig::scalar_baseline(l, mode, 3)).unwrap();
+        assert!(d8.is_finite() && d3.is_finite(), "{mode:?} finite");
+        assert!(d8 - base < 0.2, "{mode:?} 8-bit near-lossless: {d8} vs {base}");
+        assert!(d3 >= d8 - 0.01, "{mode:?} 3-bit not better than 8-bit");
+    }
+}
+
+#[test]
+fn prefill_then_decode_consistent_with_eval_forward() {
+    // greedy continuation via serving path == teacher-forced argmax:
+    // run prefill + one decode, then check the decode logits argmax matches
+    // a second prefill over the extended prompt.
+    let m = manifest();
+    let rt = Runtime::cpu().unwrap();
+    let exec = ModelExecutor::load(&rt, &m, "smollm2-sim", Entry::All).unwrap();
+    let cfg = QuantConfig::paper_uniform(exec.profile.n_layers);
+    let b = m.serve.batch;
+    let tp = m.serve.prefill_len;
+    let (l, _, h_n, tmax, half) = exec.cache_dims();
+    let vocab = exec.profile.vocab;
+
+    let prompt: Vec<i32> = "the wodu zatu vebo ki"
+        .bytes()
+        .map(|c| c as i32)
+        .collect();
+    let plen = prompt.len();
+    let mut tokens = vec![258i32; b * tp];
+    tokens[..plen].copy_from_slice(&prompt);
+    let mut lengths = vec![1i32; b];
+    lengths[0] = plen as i32;
+    let out = exec.run_prefill(&tokens, &lengths, &cfg).unwrap();
+    let t1 = argmax(&out.logits[..vocab]);
+
+    // place prefill cache into dense buffers, decode one step
+    let n = l * b * h_n * tmax * half;
+    let (mut kr, mut ki, mut vr, mut vi) =
+        (vec![0.0f32; n], vec![0.0f32; n], vec![0.0f32; n], vec![0.0f32; n]);
+    for li in 0..l {
+        for hh in 0..h_n {
+            for t in 0..plen {
+                let src = (((li * b) * h_n + hh) * tp + t) * half;
+                let dst = (((li * b) * h_n + hh) * tmax + t) * half;
+                kr[dst..dst + half].copy_from_slice(&out.kr[src..src + half]);
+                ki[dst..dst + half].copy_from_slice(&out.ki[src..src + half]);
+                vr[dst..dst + half].copy_from_slice(&out.vr[src..src + half]);
+                vi[dst..dst + half].copy_from_slice(&out.vi[src..src + half]);
+            }
+        }
+    }
+    let mut tok = vec![0i32; b];
+    tok[0] = t1;
+    let mut pos = vec![0i32; b];
+    pos[0] = plen as i32;
+    let dec = exec.run_decode(&tok, &pos, &cfg, &kr, &ki, &vr, &vi).unwrap();
+    let t2_decode = argmax(&dec.logits[..vocab]);
+
+    // reference: prefill over prompt + t1
+    let mut tokens2 = vec![258i32; b * tp];
+    tokens2[..plen].copy_from_slice(&prompt);
+    tokens2[plen] = t1;
+    let mut lengths2 = vec![1i32; b];
+    lengths2[0] = (plen + 1) as i32;
+    let out2 = exec.run_prefill(&tokens2, &lengths2, &cfg).unwrap();
+    let t2_prefill = argmax(&out2.logits[..vocab]);
+
+    assert_eq!(
+        t2_decode, t2_prefill,
+        "decode-over-compressed-cache disagrees with prefill continuation"
+    );
+}
+
+fn argmax(xs: &[f32]) -> i32 {
+    let mut bi = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            bi = i;
+        }
+    }
+    bi as i32
+}

@@ -1,0 +1,224 @@
+//! Property-based tests (util::prop) over the quantizer, packing, rate
+//! accounting, and coordinator policies — the invariants DESIGN.md §8 lists.
+
+use turboangle::coordinator::batcher::{BatchPolicy, DynamicBatcher};
+use turboangle::coordinator::router::{RoutePolicy, Router};
+use turboangle::coordinator::session::Request;
+use turboangle::quant::packing::{bits_for, pack, unpack};
+use turboangle::quant::{angle, baseline, fwht, norm, Mode, NormMode, QuantConfig};
+use turboangle::util::prop::{run_cases, Gen};
+
+const DIMS: [usize; 5] = [4, 16, 32, 64, 128];
+const BIN_SET: [u32; 8] = [3, 8, 31, 48, 56, 64, 128, 512];
+
+#[test]
+fn prop_fwht_self_inverse_and_isometric() {
+    run_cases(200, |g| {
+        let d = *g.choice(&DIMS);
+        let x = g.f32_vec(d, -5.0, 5.0);
+        let mut y = x.clone();
+        fwht::fwht(&mut y);
+        let n0: f32 = x.iter().map(|v| v * v).sum();
+        let n1: f32 = y.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() <= 1e-3 * n0.max(1.0), "norm not preserved");
+        fwht::fwht(&mut y);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-4, "not self-inverse");
+        }
+    });
+}
+
+#[test]
+fn prop_encode_decode_error_bound() {
+    // ||x - x̂|| <= ||x|| * 2π/n for left-edge decode, any input, any n
+    run_cases(150, |g| {
+        let d = *g.choice(&DIMS);
+        let n = *g.choice(&BIN_SET);
+        let sign = fwht::test_sign_diag(d, g.u64());
+        let x = g.f32_vec(d, -8.0, 8.0);
+        let xq = angle::quant_dequant(&x, &sign, n, false);
+        let err: f32 = x.iter().zip(&xq).map(|(a, b)| (a - b).powi(2)).sum::<f32>().sqrt();
+        let nrm: f32 = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!(
+            err <= nrm * angle::TWO_PI / n as f32 + 1e-3,
+            "d={d} n={n} err={err} bound={}",
+            nrm * angle::TWO_PI / n as f32
+        );
+    });
+}
+
+#[test]
+fn prop_encode_preserves_pair_norms() {
+    run_cases(100, |g| {
+        let d = *g.choice(&DIMS);
+        let n = *g.choice(&BIN_SET);
+        let sign = fwht::test_sign_diag(d, g.u64());
+        let x = g.f32_vec(d, -4.0, 4.0);
+        let e0 = angle::encode(&x, &sign, n);
+        let xq = angle::decode(&e0.r, &e0.k, &sign, n, g.bool());
+        let e1 = angle::encode(&xq, &sign, n);
+        for (a, b) in e0.r.iter().zip(&e1.r) {
+            assert!((a - b).abs() < 1e-3, "pair norm changed");
+        }
+    });
+}
+
+#[test]
+fn prop_packing_roundtrip_any_width() {
+    run_cases(300, |g| {
+        let n = *g.choice(&BIN_SET);
+        let width = bits_for(n);
+        let len = g.usize_in(0, 600);
+        let codes: Vec<u16> = (0..len).map(|_| (g.u64() % n as u64) as u16).collect();
+        let bv = pack(&codes, width);
+        assert_eq!(unpack(&bv, len, width), codes);
+        // bit-tightness: stored bits == len * width, rounded to u64 words
+        assert_eq!(bv.len_bits(), len * width as usize);
+        assert!(bv.storage_bytes() <= (len * width as usize).div_ceil(64) * 8);
+    });
+}
+
+#[test]
+fn prop_norm_quant_monotone_and_bounded() {
+    run_cases(200, |g| {
+        let len = g.usize_in(2, 128);
+        let bits = g.u32_in(2, 8) as u8;
+        let log = g.bool();
+        let mode = NormMode { bits, log_space: log };
+        let r = g.f32_vec(len, 0.01, 20.0);
+        let q = norm::quantize(&r, mode);
+        let deq = norm::dequantize(&q, mode);
+        let lo = r.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = r.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        for v in &deq {
+            assert!(*v >= lo - 1e-3 && *v <= hi * 1.001 + 1e-3, "out of window");
+        }
+        // monotone: sorting inputs sorts the codes
+        let mut idx: Vec<usize> = (0..len).collect();
+        idx.sort_by(|&a, &b| r[a].partial_cmp(&r[b]).unwrap());
+        for w in idx.windows(2) {
+            assert!(q.codes[w[0]] <= q.codes[w[1]], "codes not monotone");
+        }
+    });
+}
+
+#[test]
+fn prop_tq_more_bits_never_worse() {
+    run_cases(60, |g| {
+        let d = *g.choice(&[16usize, 64, 128]);
+        let sign = fwht::test_sign_diag(d, g.u64());
+        let x = g.f32_vec(d, -3.0, 3.0);
+        let mse = |b: u32| -> f32 {
+            baseline::tq_scalar_g(&x, &sign, b, 4)
+                .iter()
+                .zip(&x)
+                .map(|(a, b)| (a - b).powi(2))
+                .sum::<f32>()
+        };
+        assert!(mse(8) <= mse(4) + 1e-4);
+        assert!(mse(4) <= mse(2) + 1e-4);
+    });
+}
+
+#[test]
+fn prop_rate_accounting_identities() {
+    run_cases(200, |g| {
+        let l = g.usize_in(1, 48);
+        let n_early = g.usize_in(0, l);
+        let cfg = QuantConfig::early_boost(l, n_early, 256, 128);
+        // Eq.1 via explicit sum
+        let expect: f64 = cfg
+            .layers
+            .iter()
+            .map(|b| ((b.n_k as f64).log2() + (b.n_v as f64).log2()) / 4.0)
+            .sum::<f64>()
+            / l as f64;
+        assert!((cfg.angle_bits_per_element() - expect).abs() < 1e-12);
+        // boost never decreases the rate; uniform is the floor
+        let uni = QuantConfig::paper_uniform(l);
+        assert!(cfg.angle_bits_per_element() >= uni.angle_bits_per_element() - 1e-12);
+        // Eq.3 dominates Eq.1 (norm bits are non-negative)
+        for d in [64usize, 128] {
+            assert!(
+                cfg.clone().with_k8v4_log().total_bits_per_element(d)
+                    > cfg.angle_bits_per_element()
+            );
+        }
+        // physical storage within 1 byte/token of the idealized Eq.3 rate
+        let cfgq = cfg.with_k8v4_log();
+        for d in [64usize, 128] {
+            let ideal_bits = cfgq.total_bits_per_element(0usize.max(d)) * d as f64 * 2.0;
+            let phys_bits = (cfgq.stored_bytes_per_token_layer(0, d, 1) * 8) as f64;
+            // stored uses ceil(log2 n) not log2 n and per-layer-0 bins;
+            // allow the packing slack
+            assert!(
+                phys_bits <= ideal_bits + d as f64,
+                "physical {phys_bits} vs ideal {ideal_bits}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_batcher_never_exceeds_slots_and_preserves_fifo() {
+    run_cases(200, |g| {
+        let mut b = DynamicBatcher::new(BatchPolicy::default());
+        let n = g.usize_in(0, 20);
+        for i in 0..n {
+            b.submit(Request::new(i as u64, vec![1], 4));
+        }
+        let free = g.usize_in(0, 8);
+        let batch = b.take_batch(free, |_| true);
+        assert!(batch.len() <= free);
+        assert!(batch.len() <= n);
+        for (i, r) in batch.iter().enumerate() {
+            assert_eq!(r.id, i as u64, "FIFO violated");
+        }
+        assert_eq!(b.pending(), n - batch.len());
+    });
+}
+
+#[test]
+fn prop_router_load_conservation() {
+    run_cases(100, |g| {
+        let replicas = g.usize_in(1, 8);
+        let policy = *g.choice(&[
+            RoutePolicy::RoundRobin,
+            RoutePolicy::LeastLoaded,
+            RoutePolicy::SessionAffinity,
+        ]);
+        let mut r = Router::new(replicas, policy);
+        let mut outstanding = Vec::new();
+        let mut completed_any = false;
+        for _ in 0..g.usize_in(0, 100) {
+            if g.bool() || outstanding.is_empty() {
+                let key = if g.bool() { Some(g.u64() % 10) } else { None };
+                outstanding.push(r.route(key));
+            } else {
+                let i = g.usize_in(0, outstanding.len() - 1);
+                r.complete(outstanding.swap_remove(i));
+                completed_any = true;
+            }
+        }
+        let total: usize = r.loads().iter().sum();
+        assert_eq!(total, outstanding.len(), "load accounting drifted");
+        // least-loaded balance bound — only guaranteed when no completion
+        // skewed the loads mid-stream (completions can empty one replica)
+        if policy == RoutePolicy::LeastLoaded && !outstanding.is_empty() && !completed_any {
+            let max = *r.loads().iter().max().unwrap();
+            let min = *r.loads().iter().min().unwrap();
+            assert!(max - min <= 1, "pure least-loaded fills evenly");
+        }
+    });
+}
+
+#[test]
+fn prop_mode_values_match_manifest_contract() {
+    // the lax.switch order in python/compile/model.py
+    assert_eq!(Mode::None as i32, 0);
+    assert_eq!(Mode::Angle as i32, 1);
+    assert_eq!(Mode::AngleCentered as i32, 2);
+    assert_eq!(Mode::TqSymG4 as i32, 3);
+    assert_eq!(Mode::Kivi as i32, 4);
+    assert_eq!(Mode::KvQuant as i32, 5);
+}
