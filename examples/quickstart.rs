@@ -66,7 +66,10 @@ fn main() {
         .sum::<f32>()
         / d as f32;
     let sig: f32 = x.iter().map(|v| v * v).sum::<f32>() / d as f32;
-    println!("per-element MSE {mse:.5} (signal power {sig:.3}, SNR {:.1} dB)", 10.0 * (sig / mse).log10());
+    println!(
+        "per-element MSE {mse:.5} (signal power {sig:.3}, SNR {:.1} dB)",
+        10.0 * (sig / mse).log10()
+    );
 
     // Rate accounting on a realistic config (Eq. 1 / Eq. 3)
     println!("\n== rate accounting (Mistral-7B-like: L=32, d=128) ==");

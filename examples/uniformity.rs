@@ -104,8 +104,10 @@ fn main() {
             let (c_rot, m_rot) = stats(&rot, d);
             let (c_raw, m_raw) = stats(&raw, d);
             println!("\n  {name}");
-            println!("    rotated {}  chi2 {c_rot:>9.1}  maxdev {:>5.1}%", bar(&rot), m_rot * 100.0);
-            println!("    raw     {}  chi2 {c_raw:>9.1}  maxdev {:>5.1}%", bar(&raw), m_raw * 100.0);
+            let (pr, pm) = (bar(&rot), m_rot * 100.0);
+            println!("    rotated {pr}  chi2 {c_rot:>9.1}  maxdev {pm:>5.1}%");
+            let (pr, pm) = (bar(&raw), m_raw * 100.0);
+            println!("    raw     {pr}  chi2 {c_raw:>9.1}  maxdev {pm:>5.1}%");
         }
         println!();
     }

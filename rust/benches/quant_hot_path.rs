@@ -1,40 +1,81 @@
-//! Hot-path micro-benchmarks: native quantizer, bit-packing, cache
-//! reinflation, and the AOT kernel HLOs. The L3 perf numbers in
-//! EXPERIMENTS.md §Perf come from here.
+//! Hot-path micro-benchmarks: native quantizer (single-row and batched,
+//! serial vs rayon-parallel), bit-packing, cache reinflation, and the AOT
+//! kernel HLOs. The L3 perf numbers in EXPERIMENTS.md §Perf come from here.
 //!
-//!     cargo bench --bench quant_hot_path
+//! Emits `BENCH_quant_hot_path.json` (see `util::bench::JsonReport`) so CI
+//! archives the perf trajectory; `--smoke` shrinks the per-measurement
+//! budget for a fast correctness-of-harness pass.
+//!
+//!     cargo bench --bench quant_hot_path [-- --smoke]
 
 use std::time::Duration;
 use turboangle::coordinator::PagedKvCache;
-use turboangle::quant::{angle, baseline, fwht, norm, packing, NormMode, QuantConfig};
+use turboangle::quant::{angle, baseline, batch, fwht, norm, packing, NormMode, QuantConfig};
 use turboangle::runtime::{pjrt, Manifest, Runtime};
-use turboangle::util::bench::{bench, black_box};
+use turboangle::util::bench::{bench, black_box, BenchResult, JsonReport};
 use turboangle::util::prop::Gen;
 
-const BUDGET: Duration = Duration::from_millis(400);
+const OUT_JSON: &str = "BENCH_quant_hot_path.json";
+
+#[allow(clippy::too_many_arguments)]
+fn record(
+    rep: &mut JsonReport,
+    r: &BenchResult,
+    items: f64,
+    unit: &str,
+    op: &str,
+    mode: &str,
+    d: usize,
+    rows: usize,
+) {
+    println!("{}", r.line(Some((items, unit))));
+    rep.push(
+        r,
+        items,
+        unit,
+        &[
+            ("op", op.into()),
+            ("mode", mode.into()),
+            ("d", d.into()),
+            ("rows", rows.into()),
+        ],
+    );
+}
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let budget = if smoke {
+        Duration::from_millis(30)
+    } else {
+        Duration::from_millis(400)
+    };
+    let mut rep = JsonReport::new();
+    rep.summary("smoke", if smoke { 1.0 } else { 0.0 });
+    rep.summary("rayon_threads", rayon::current_num_threads());
+
     let rows = 4096usize;
     println!("== native quantizer hot path ({rows} rows/iter) ==");
     for d in [64usize, 128] {
+        let half = d / 2;
         let mut g = Gen::new(7);
         let sign = fwht::test_sign_diag(d, 3);
         let x = g.f32_vec(rows * d, -3.0, 3.0);
         let elems = (rows * d) as f64;
 
         let mut buf = x.clone();
-        let r = bench(&format!("fwht d={d}"), BUDGET, || {
+        let r = bench(&format!("fwht d={d}"), budget, || {
             for row in 0..rows {
                 fwht::fwht(&mut buf[row * d..(row + 1) * d]);
             }
             black_box(&buf);
         });
-        println!("{}", r.line(Some((elems, "elem"))));
+        record(&mut rep, &r, elems, "elem", "fwht", "serial", d, rows);
 
+        // single-row encode loop (the pre-batch baseline shape)
         let mut scratch = vec![0.0f32; d];
-        let mut rr = vec![0.0f32; d / 2];
-        let mut kk = vec![0u16; d / 2];
-        let r = bench(&format!("encode d={d} n=128"), BUDGET, || {
+        let mut rr = vec![0.0f32; half];
+        let mut kk = vec![0u16; half];
+        let r = bench(&format!("encode-row d={d} n=128"), budget, || {
             for row in 0..rows {
                 angle::encode_into(
                     &x[row * d..(row + 1) * d],
@@ -47,55 +88,107 @@ fn main() {
             }
             black_box(&rr);
         });
-        println!("{}", r.line(Some((elems, "elem"))));
+        record(&mut rep, &r, elems, "elem", "encode", "row-loop", d, rows);
 
+        // batched encode: serial vs parallel over the same slab
+        let mut rb = vec![0.0f32; rows * half];
+        let mut kb = vec![0u16; rows * half];
+        let r = bench(&format!("encode-batch serial d={d} n=128"), budget, || {
+            batch::encode_batch_serial(&x, &sign, 128, &mut rb, &mut kb);
+            black_box(&rb);
+        });
+        let enc_serial = r.throughput(elems);
+        record(&mut rep, &r, elems, "elem", "encode", "serial", d, rows);
+        let r = bench(&format!("encode-batch parallel d={d} n=128"), budget, || {
+            batch::encode_batch_parallel(&x, &sign, 128, &mut rb, &mut kb);
+            black_box(&rb);
+        });
+        let enc_parallel = r.throughput(elems);
+        record(&mut rep, &r, elems, "elem", "encode", "parallel", d, rows);
+        rep.summary(
+            &format!("encode_parallel_speedup_d{d}_rows{rows}"),
+            enc_parallel / enc_serial,
+        );
+        println!(
+            "  -> encode parallel speedup d={d}: {:.2}x over serial",
+            enc_parallel / enc_serial
+        );
+
+        // single-row decode loop
         let mut out = vec![0.0f32; d];
-        let r = bench(&format!("decode d={d} n=128"), BUDGET, || {
-            for _ in 0..rows {
-                angle::decode_into(&rr, &kk, &sign, 128, false, &mut out);
+        let r = bench(&format!("decode-row d={d} n=128"), budget, || {
+            for row in 0..rows {
+                angle::decode_into(
+                    &rb[row * half..(row + 1) * half],
+                    &kb[row * half..(row + 1) * half],
+                    &sign,
+                    128,
+                    false,
+                    &mut out,
+                );
             }
             black_box(&out);
         });
-        println!("{}", r.line(Some((elems, "elem"))));
+        record(&mut rep, &r, elems, "elem", "decode", "row-loop", d, rows);
 
+        // batched decode (shared LUT): serial vs parallel
         let lut = angle::TrigLut::new(128, false);
-        let r = bench(&format!("decode-LUT d={d} n=128"), BUDGET, || {
-            for _ in 0..rows {
-                angle::decode_into_lut(&rr, &kk, &sign, &lut, &mut out);
-            }
-            black_box(&out);
+        let mut ob = vec![0.0f32; rows * d];
+        let r = bench(&format!("decode-batch serial d={d} n=128"), budget, || {
+            batch::decode_batch_serial(&rb, &kb, &sign, &lut, &mut ob);
+            black_box(&ob);
         });
-        println!("{}", r.line(Some((elems, "elem"))));
+        let dec_serial = r.throughput(elems);
+        record(&mut rep, &r, elems, "elem", "decode", "serial", d, rows);
+        let r = bench(&format!("decode-batch parallel d={d} n=128"), budget, || {
+            batch::decode_batch_parallel(&rb, &kb, &sign, &lut, &mut ob);
+            black_box(&ob);
+        });
+        let dec_parallel = r.throughput(elems);
+        record(&mut rep, &r, elems, "elem", "decode", "parallel", d, rows);
+        rep.summary(
+            &format!("decode_parallel_speedup_d{d}_rows{rows}"),
+            dec_parallel / dec_serial,
+        );
 
-        let r = bench(&format!("tq_sym4_g4 d={d}"), BUDGET, || {
+        let r = bench(&format!("tq_sym4_g4 d={d}"), budget, || {
             for row in 0..rows.min(512) {
                 black_box(baseline::tq_scalar_g(&x[row * d..(row + 1) * d], &sign, 4, 4));
             }
         });
-        println!("{}", r.line(Some(((rows.min(512) * d) as f64, "elem"))));
+        record(
+            &mut rep,
+            &r,
+            (rows.min(512) * d) as f64,
+            "elem",
+            "tq_sym4_g4",
+            "serial",
+            d,
+            rows.min(512),
+        );
 
         // bit packing
-        let codes: Vec<u16> = (0..rows * d / 2).map(|i| (i % 128) as u16).collect();
-        let r = bench(&format!("pack w=7 ({} codes)", codes.len()), BUDGET, || {
+        let codes: Vec<u16> = (0..rows * half).map(|i| (i % 128) as u16).collect();
+        let r = bench(&format!("pack w=7 d={d} ({} codes)", codes.len()), budget, || {
             black_box(packing::pack(&codes, 7));
         });
-        println!("{}", r.line(Some((codes.len() as f64, "code"))));
+        record(&mut rep, &r, codes.len() as f64, "code", "pack", "serial", d, rows);
         let bv = packing::pack(&codes, 7);
         let mut outf = vec![0.0f32; codes.len()];
-        let r = bench("unpack->f32 w=7", BUDGET, || {
+        let r = bench(&format!("unpack->f32 w=7 d={d}"), budget, || {
             packing::unpack_f32_into(&bv, 7, &mut outf);
             black_box(&outf);
         });
-        println!("{}", r.line(Some((codes.len() as f64, "code"))));
+        record(&mut rep, &r, codes.len() as f64, "code", "unpack", "serial", d, rows);
 
         // norm quant
-        let norms = g.f32_vec(d / 2, 0.1, 8.0);
-        let r = bench(&format!("norm quant+dequant 8b d={d}"), BUDGET, || {
+        let norms = g.f32_vec(half, 0.1, 8.0);
+        let r = bench(&format!("norm quant+dequant 8b d={d}"), budget, || {
             for _ in 0..rows {
                 black_box(norm::quant_dequant(&norms, NormMode::LINEAR8));
             }
         });
-        println!("{}", r.line(Some(((rows * d / 2) as f64, "norm"))));
+        record(&mut rep, &r, (rows * half) as f64, "norm", "norm_quant", "serial", d, rows);
     }
 
     // cache reinflation (the per-decode-step coordinator cost)
@@ -120,17 +213,18 @@ fn main() {
         let n = l * b * h * tmax * half;
         let (mut kr, mut ki, mut vr, mut vi) =
             (vec![0.0f32; n], vec![0.0f32; n], vec![0.0f32; n], vec![0.0f32; n]);
-        let r = bench("fill_dense 128tok L24 k8v4", BUDGET, || {
+        let decoded = (128 * l * h * d * 2) as f64;
+        let r = bench("fill_dense 128tok L24 k8v4 (parallel)", budget, || {
             kv.fill_dense(1, 0, b, &mut kr, &mut ki, &mut vr, &mut vi).unwrap();
         });
-        let decoded = (128 * l * h * d * 2) as f64;
-        println!("{}", r.line(Some((decoded, "elem"))));
+        record(&mut rep, &r, decoded, "elem", "reinflate", "parallel", d, 128);
         // incremental top-up: what the engine actually pays per decode step
-        let r = bench("fill_dense_range last-token only", BUDGET, || {
+        // (stays on the serial path below the work threshold)
+        let r = bench("fill_dense_range last-token only", budget, || {
             kv.fill_dense_range(1, 0, b, 127, &mut kr, &mut ki, &mut vr, &mut vi)
                 .unwrap();
         });
-        println!("{}", r.line(Some(((l * h * d * 2) as f64, "elem"))));
+        record(&mut rep, &r, (l * h * d * 2) as f64, "elem", "reinflate", "serial", d, 1);
         let stats = kv.memory_stats();
         println!(
             "cache: {} tokens, {} compressed bytes, {:.2}x vs fp16",
@@ -138,30 +232,42 @@ fn main() {
             stats.compressed_bytes,
             stats.compression_ratio()
         );
+        rep.summary("kv_compression_ratio", stats.compression_ratio());
     }
 
-    // HLO kernel artifacts through PJRT (transfer + execute)
+    // HLO kernel artifacts through PJRT (transfer + execute); skipped when
+    // artifacts are missing or the xla backend is the stub
     println!("\n== AOT kernel HLOs (PJRT CPU, incl. literal transfer) ==");
-    if let Ok(m) = Manifest::discover() {
-        let rt = Runtime::cpu().unwrap();
-        for d in [64usize, 128] {
-            let rows_k = 1024usize;
-            let mut g = Gen::new(11);
-            let x = g.f32_vec(rows_k * d, -3.0, 3.0);
-            let sign = fwht::test_sign_diag(d, 3);
-            let enc = rt.load(m.path(&format!("kernels.encode.d{d}.hlo.txt"))).unwrap();
-            let args = [
-                pjrt::lit_f32(&[rows_k, d], &x).unwrap(),
-                pjrt::lit_f32(&[d], &sign).unwrap(),
-                pjrt::lit_scalar_f32(128.0),
-            ];
-            let argrefs: Vec<&xla::Literal> = args.iter().collect();
-            let r = bench(&format!("HLO encode d={d} ({rows_k} rows)"), BUDGET, || {
-                black_box(enc.run(&argrefs).unwrap());
-            });
-            println!("{}", r.line(Some(((rows_k * d) as f64, "elem"))));
+    match (Manifest::discover(), Runtime::cpu()) {
+        (Ok(m), Ok(rt)) => {
+            for d in [64usize, 128] {
+                let rows_k = 1024usize;
+                let mut g = Gen::new(11);
+                let x = g.f32_vec(rows_k * d, -3.0, 3.0);
+                let sign = fwht::test_sign_diag(d, 3);
+                let enc = rt.load(m.path(&format!("kernels.encode.d{d}.hlo.txt"))).unwrap();
+                let args = [
+                    pjrt::lit_f32(&[rows_k, d], &x).unwrap(),
+                    pjrt::lit_f32(&[d], &sign).unwrap(),
+                    pjrt::lit_scalar_f32(128.0),
+                ];
+                let argrefs: Vec<&xla::Literal> = args.iter().collect();
+                let r = bench(&format!("HLO encode d={d} ({rows_k} rows)"), budget, || {
+                    black_box(enc.run(&argrefs).unwrap());
+                });
+                record(&mut rep, &r, (rows_k * d) as f64, "elem", "hlo_encode", "pjrt", d, rows_k);
+            }
         }
-    } else {
-        println!("(artifacts missing — skipped; run `make artifacts`)");
+        (m, rt) => {
+            if let Err(e) = m {
+                println!("(artifacts missing — skipped: {e})");
+            }
+            if let Err(e) = rt {
+                println!("(PJRT unavailable — skipped: {e:#})");
+            }
+        }
     }
+
+    rep.write(OUT_JSON).expect("write bench json");
+    println!("\nwrote {OUT_JSON}");
 }

@@ -158,33 +158,29 @@ impl Engine {
         let out = self.exec.run_prefill(&tokens, &lengths, &self.quant)?;
         self.metrics.prefill_batches += 1;
 
-        let (l_n, b_n, h_n, _tp, half) = (
-            self.exec.profile.n_layers,
+        let (b_n, h_n, half) = (
             b_total,
             self.exec.profile.n_kv_heads,
-            tp,
             self.exec.profile.d_head / 2,
         );
         let vocab = self.exec.profile.vocab;
         for (lane, req) in reqs.into_iter().enumerate() {
             let plen = req.prompt.len().min(tp);
             self.kv.new_seq(req.id)?;
-            // pack the prompt's compressed entries: only t < plen
+            // pack the prompt's compressed entries: only t < plen. One
+            // strided append per token covers every (layer, head) at once
+            // (kv_manager fans layers out across rayon when worthwhile).
             for t in 0..plen {
-                for l in 0..l_n {
-                    for h in 0..h_n {
-                        let base = (((l * b_n + lane) * h_n + h) * tp + t) * half;
-                        self.kv.append_token_lh(
-                            req.id,
-                            l,
-                            h,
-                            &out.kr[base..base + half],
-                            &out.ki[base..base + half],
-                            &out.vr[base..base + half],
-                            &out.vi[base..base + half],
-                        )?;
-                    }
-                }
+                self.kv.append_token_strided(
+                    req.id,
+                    &out.kr,
+                    &out.ki,
+                    &out.vr,
+                    &out.vi,
+                    (lane * h_n * tp + t) * half,
+                    b_n * h_n * tp * half,
+                    tp * half,
+                )?;
                 self.kv.commit_token(req.id)?;
             }
             self.metrics.prefill_sequences += 1;
@@ -240,32 +236,25 @@ impl Engine {
         self.metrics.decode_slot_steps += b_total as u64;
 
         let t_post = Instant::now();
-        let (l_n, h_n, half) = (
-            self.exec.profile.n_layers,
-            self.exec.profile.n_kv_heads,
-            self.exec.profile.d_head / 2,
-        );
+        let (h_n, half) = (self.exec.profile.n_kv_heads, self.exec.profile.d_head / 2);
         let vocab = self.exec.profile.vocab;
         let tmax = self.exec.serve.tmax;
         for b in 0..b_total {
             let Some(sess) = self.slots[b].as_mut() else {
                 continue;
             };
-            // append the *processed* token's compressed KV
-            for l in 0..l_n {
-                for h in 0..h_n {
-                    let base = ((l * b_total + b) * h_n + h) * half;
-                    self.kv.append_token_lh(
-                        sess.request.id,
-                        l,
-                        h,
-                        &out.kr[base..base + half],
-                        &out.ki[base..base + half],
-                        &out.vr[base..base + half],
-                        &out.vi[base..base + half],
-                    )?;
-                }
-            }
+            // append the *processed* token's compressed KV across all
+            // (layer, head) pairs in one batched call
+            self.kv.append_token_strided(
+                sess.request.id,
+                &out.kr,
+                &out.ki,
+                &out.vr,
+                &out.vi,
+                b * h_n * half,
+                b_total * h_n * half,
+                half,
+            )?;
             self.kv.commit_token(sess.request.id)?;
             let tok = argmax(&out.logits[b * vocab..(b + 1) * vocab]);
             sess.push_token(tok, EOS, tmax);

@@ -14,9 +14,21 @@
 
 use crate::quant::norm::{self, NormMode};
 use crate::quant::packing::{bits_for, BitVec};
-use crate::quant::QuantConfig;
+use crate::quant::{LayerBins, QuantConfig};
 use anyhow::{bail, ensure, Result};
+use rayon::prelude::*;
 use std::collections::HashMap;
+
+/// Below this many touched elements a reinflation runs single-threaded.
+/// Multi-token refills only — the one-token incremental top-up never goes
+/// parallel regardless of model size (see `fill_dense_range`).
+const PAR_FILL_ELEM_THRESHOLD: usize = 4096;
+
+/// Per-token append work (L·H·d/2 elements) below which the strided append
+/// stays single-threaded. Higher than the fill threshold because each
+/// element is only a few bit-pushes — layer tasks must be worth a rayon
+/// dispatch on their own.
+const PAR_APPEND_ELEM_THRESHOLD: usize = 8192;
 
 /// Global page-pool accounting (pages are bookkeeping units; bytes live in
 /// the per-sequence stores).
@@ -220,6 +232,66 @@ impl PagedKvCache {
         Ok(())
     }
 
+    /// Append one token's compressed KV across ALL (layer, head) pairs in
+    /// one call — the batched form of [`Self::append_token_lh`]. The slabs
+    /// are dense prefill/decode HLO outputs; the d/2-length row for
+    /// (layer `l`, head `h`) starts at `offset + l*l_stride + h*h_stride`.
+    /// Layers fan out across rayon when the per-token work is large enough;
+    /// output is identical to calling `append_token_lh` per (layer, head)
+    /// in order, since each (layer, head) owns a disjoint store.
+    #[allow(clippy::too_many_arguments)]
+    pub fn append_token_strided(
+        &mut self,
+        id: u64,
+        kr: &[f32],
+        ki: &[f32],
+        vr: &[f32],
+        vi: &[f32],
+        offset: usize,
+        l_stride: usize,
+        h_stride: usize,
+    ) -> Result<()> {
+        let half = self.d_head / 2;
+        let (l_n, h_n) = (self.n_layers, self.n_kv_heads);
+        if l_n == 0 || h_n == 0 {
+            return Ok(());
+        }
+        let max_base = offset + (l_n - 1) * l_stride + (h_n - 1) * h_stride;
+        ensure!(
+            kr.len() >= max_base + half
+                && ki.len() >= max_base + half
+                && vr.len() >= max_base + half
+                && vi.len() >= max_base + half,
+            "strided append: slab too small for (L={l_n}, H={h_n}) layout"
+        );
+        let layers = &self.cfg.layers;
+        let (k_norm, v_norm) = (self.cfg.k_norm, self.cfg.v_norm);
+        let seq = match self.seqs.get_mut(&id) {
+            Some(s) => s,
+            None => bail!("unknown sequence {id}"),
+        };
+        let append_layer = |l: usize, stores_l: &mut Vec<(SideStore, SideStore)>| {
+            let bins = layers[l];
+            for (h, (ks, vs)) in stores_l.iter_mut().enumerate() {
+                let base = offset + l * l_stride + h * h_stride;
+                let end = base + half;
+                Self::append_side(ks, &kr[base..end], &ki[base..end], bins.n_k, k_norm);
+                Self::append_side(vs, &vr[base..end], &vi[base..end], bins.n_v, v_norm);
+            }
+        };
+        if l_n * h_n * half >= PAR_APPEND_ELEM_THRESHOLD {
+            seq.stores
+                .par_iter_mut()
+                .enumerate()
+                .for_each(|(l, s)| append_layer(l, s));
+        } else {
+            for (l, s) in seq.stores.iter_mut().enumerate() {
+                append_layer(l, s);
+            }
+        }
+        Ok(())
+    }
+
     /// Advance the sequence length by one token (after all layers/heads of
     /// that token were appended), allocating pages as needed.
     pub fn commit_token(&mut self, id: u64) -> Result<()> {
@@ -263,7 +335,11 @@ impl PagedKvCache {
     /// Incremental variant: reinflate only tokens `from_t..len` — the
     /// engine keeps per-slot dense buffers warm and tops up one token per
     /// decode step, making the per-step coordinator cost O(1) in sequence
-    /// length instead of O(T) (EXPERIMENTS.md §Perf).
+    /// length instead of O(T) (EXPERIMENTS.md §Perf). Full refills (new
+    /// sequences, large `len - from_t`) fan layers out across rayon: each
+    /// layer writes a disjoint `batch*H*Tmax*d/2` chunk of the dense
+    /// tensors, so the split is safe and the output identical to the
+    /// serial loop.
     #[allow(clippy::too_many_arguments)]
     pub fn fill_dense_range(
         &self,
@@ -282,37 +358,51 @@ impl PagedKvCache {
             .ok_or_else(|| anyhow::anyhow!("unknown sequence {id}"))?;
         let half = self.d_head / 2;
         let (h_n, tmax) = (self.n_kv_heads, self.tmax);
-        for l in 0..self.n_layers {
-            let bins = self.cfg.layers[l];
-            for h in 0..h_n {
-                let (ks, vs) = &seq.stores[l][h];
-                for (store, bins_n, mode, out_r, out_i) in [
-                    (ks, bins.n_k, self.cfg.k_norm, &mut *kr, &mut *ki),
-                    (vs, bins.n_v, self.cfg.v_norm, &mut *vr, &mut *vi),
-                ] {
-                    let width = bits_for(bins_n);
-                    for t in from_t..seq.len {
-                        let base = (((l * batch + b) * h_n + h) * tmax + t) * half;
-                        for i in 0..half {
-                            out_i[base + i] = store.angles.get(t * half + i, width) as f32;
-                        }
-                        if mode.bits == 0 {
-                            out_r[base..base + half]
-                                .copy_from_slice(&store.raw_norms[t * half..(t + 1) * half]);
-                        } else {
-                            // alloc-free dequant straight from the bitstream
-                            let (vmin, vmax) = store.windows[t];
-                            let scale = if vmax > vmin { vmax - vmin } else { 1.0 };
-                            let levels = mode.levels().max(1.0);
-                            let log_space = mode.log_space;
-                            for i in 0..half {
-                                let c = store.norm_codes.get(t * half + i, mode.bits as u32);
-                                let v = vmin + c as f32 * scale / levels;
-                                out_r[base + i] = if log_space { v.exp() } else { v };
-                            }
-                        }
-                    }
-                }
+        let layer_elems = batch * h_n * tmax * half;
+        if self.n_layers == 0 || layer_elems == 0 {
+            return Ok(seq.len);
+        }
+        ensure!(
+            kr.len() >= self.n_layers * layer_elems
+                && ki.len() >= self.n_layers * layer_elems
+                && vr.len() >= self.n_layers * layer_elems
+                && vi.len() >= self.n_layers * layer_elems,
+            "dense buffers too small for (L,B,H,Tmax,d/2)"
+        );
+        let job = FillJob {
+            b,
+            h_n,
+            tmax,
+            half,
+            from_t,
+            len: seq.len,
+        };
+        let (k_norm, v_norm) = (self.cfg.k_norm, self.cfg.v_norm);
+        let span = seq.len.saturating_sub(from_t);
+        let work = span * self.n_layers * h_n * half;
+        // span > 1: the per-decode-step one-token top-up must stay on the
+        // serial path at ANY model size — it is the engine's O(1) cost
+        if span > 1 && work >= PAR_FILL_ELEM_THRESHOLD {
+            kr.par_chunks_mut(layer_elems)
+                .zip(ki.par_chunks_mut(layer_elems))
+                .zip(vr.par_chunks_mut(layer_elems))
+                .zip(vi.par_chunks_mut(layer_elems))
+                .take(self.n_layers)
+                .enumerate()
+                .for_each(|(l, (((kr, ki), vr), vi))| {
+                    let bins = self.cfg.layers[l];
+                    fill_layer(job, &seq.stores[l], bins, k_norm, v_norm, kr, ki, vr, vi);
+                });
+        } else {
+            for (l, (((kr, ki), vr), vi)) in kr
+                .chunks_mut(layer_elems)
+                .zip(ki.chunks_mut(layer_elems))
+                .zip(vr.chunks_mut(layer_elems))
+                .zip(vi.chunks_mut(layer_elems))
+                .take(self.n_layers)
+                .enumerate()
+            {
+                fill_layer(job, &seq.stores[l], self.cfg.layers[l], k_norm, v_norm, kr, ki, vr, vi);
             }
         }
         Ok(seq.len)
@@ -337,6 +427,65 @@ impl PagedKvCache {
                 2 * self.n_layers * self.n_kv_heads * s.len * self.d_head * 2;
         }
         st
+    }
+}
+
+/// Geometry of one reinflation pass (shared by every layer's worker).
+#[derive(Clone, Copy)]
+struct FillJob {
+    b: usize,
+    h_n: usize,
+    tmax: usize,
+    half: usize,
+    from_t: usize,
+    len: usize,
+}
+
+/// Reinflate one layer's stores into that layer's chunk of the dense
+/// tensors. `kr/ki/vr/vi` are the `batch*H*Tmax*d/2` slices for this layer,
+/// so the base index drops the leading layer term of the (L,B,H,Tmax,d/2)
+/// layout.
+#[allow(clippy::too_many_arguments)]
+fn fill_layer(
+    job: FillJob,
+    stores: &[(SideStore, SideStore)],
+    bins: LayerBins,
+    k_norm: NormMode,
+    v_norm: NormMode,
+    kr: &mut [f32],
+    ki: &mut [f32],
+    vr: &mut [f32],
+    vi: &mut [f32],
+) {
+    let FillJob { b, h_n, tmax, half, from_t, len } = job;
+    for (h, (ks, vs)) in stores.iter().enumerate() {
+        for (store, bins_n, mode, out_r, out_i) in [
+            (ks, bins.n_k, k_norm, &mut *kr, &mut *ki),
+            (vs, bins.n_v, v_norm, &mut *vr, &mut *vi),
+        ] {
+            let width = bits_for(bins_n);
+            for t in from_t..len {
+                let base = ((b * h_n + h) * tmax + t) * half;
+                for i in 0..half {
+                    out_i[base + i] = store.angles.get(t * half + i, width) as f32;
+                }
+                if mode.bits == 0 {
+                    out_r[base..base + half]
+                        .copy_from_slice(&store.raw_norms[t * half..(t + 1) * half]);
+                } else {
+                    // alloc-free dequant straight from the bitstream
+                    let (vmin, vmax) = store.windows[t];
+                    let scale = if vmax > vmin { vmax - vmin } else { 1.0 };
+                    let levels = mode.levels().max(1.0);
+                    let log_space = mode.log_space;
+                    for i in 0..half {
+                        let c = store.norm_codes.get(t * half + i, mode.bits as u32);
+                        let v = vmin + c as f32 * scale / levels;
+                        out_r[base + i] = if log_space { v.exp() } else { v };
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -491,5 +640,112 @@ mod tests {
         let (kr, ki) = fake_entry(1, 4, 128);
         assert!(c.append_token_lh(9, 0, 0, &kr, &ki, &kr, &ki).is_err());
         assert!(c.commit_token(9).is_err());
+        assert!(c
+            .append_token_strided(9, &kr, &ki, &kr, &ki, 0, 0, 0)
+            .is_err());
+    }
+
+    #[test]
+    fn strided_append_matches_per_lh() {
+        // two caches fed the same prefill-style slab: one through the
+        // per-(layer,head) path, one through the batched strided path —
+        // every reinflated byte must agree
+        let (l_n, h_n, d, tp) = (2usize, 2usize, 8usize, 3usize);
+        let half = d / 2;
+        let cfg = QuantConfig::paper_uniform(l_n).with_norms(NormMode::LINEAR8, NormMode::LOG4);
+        let mut via_lh = PagedKvCache::new(cfg.clone(), l_n, h_n, d, 16, 64, 4);
+        let mut via_strided = PagedKvCache::new(cfg, l_n, h_n, d, 16, 64, 4);
+        via_lh.new_seq(1).unwrap();
+        via_strided.new_seq(1).unwrap();
+        // dense (L, B=1, H, Tp, d/2) slabs
+        let n = l_n * h_n * tp * half;
+        let (mut kr, mut ki, mut vr, mut vi) =
+            (vec![0.0; n], vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+        for l in 0..l_n {
+            for h in 0..h_n {
+                for t in 0..tp {
+                    let base = ((l * h_n + h) * tp + t) * half;
+                    let seed = (l * 100 + h * 10 + t) as u64 + 1;
+                    let (r, i) = fake_entry(seed, half, 128);
+                    kr[base..base + half].copy_from_slice(&r);
+                    ki[base..base + half].copy_from_slice(&i);
+                    let (r, i) = fake_entry(seed + 500, half, 64);
+                    vr[base..base + half].copy_from_slice(&r);
+                    vi[base..base + half].copy_from_slice(&i);
+                }
+            }
+        }
+        for t in 0..tp {
+            for l in 0..l_n {
+                for h in 0..h_n {
+                    let base = ((l * h_n + h) * tp + t) * half;
+                    via_lh
+                        .append_token_lh(
+                            1,
+                            l,
+                            h,
+                            &kr[base..base + half],
+                            &ki[base..base + half],
+                            &vr[base..base + half],
+                            &vi[base..base + half],
+                        )
+                        .unwrap();
+                }
+            }
+            via_lh.commit_token(1).unwrap();
+            via_strided
+                .append_token_strided(1, &kr, &ki, &vr, &vi, t * half, h_n * tp * half, tp * half)
+                .unwrap();
+            via_strided.commit_token(1).unwrap();
+        }
+        let m = l_n * h_n * 16 * half;
+        let mut a = (vec![0.0; m], vec![0.0; m], vec![0.0; m], vec![0.0; m]);
+        let mut b = (vec![0.0; m], vec![0.0; m], vec![0.0; m], vec![0.0; m]);
+        via_lh.fill_dense(1, 0, 1, &mut a.0, &mut a.1, &mut a.2, &mut a.3).unwrap();
+        via_strided.fill_dense(1, 0, 1, &mut b.0, &mut b.1, &mut b.2, &mut b.3).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(
+            via_lh.memory_stats().compressed_bytes,
+            via_strided.memory_stats().compressed_bytes
+        );
+    }
+
+    #[test]
+    fn parallel_fill_exact_for_fp32_norms() {
+        // large enough that fill_dense takes the rayon path (work =
+        // 10 tokens * 24 layers * 32 half = 7680 >= threshold); fp32 norms
+        // make the expected reinflated values exactly the appended ones
+        let (l_n, d, tmax, toks) = (24usize, 64usize, 32usize, 10usize);
+        let half = d / 2;
+        let cfg = QuantConfig::paper_uniform(l_n);
+        let mut c = PagedKvCache::new(cfg, l_n, 1, d, tmax, 1024, 16);
+        c.new_seq(1).unwrap();
+        let mut want = Vec::new();
+        for t in 0..toks {
+            let mut per_layer = Vec::new();
+            for l in 0..l_n {
+                let seed = (t * 64 + l) as u64 + 3;
+                let (kr, ki) = fake_entry(seed, half, 128);
+                let (vr, vi) = fake_entry(seed + 9000, half, 64);
+                c.append_token_lh(1, l, 0, &kr, &ki, &vr, &vi).unwrap();
+                per_layer.push((kr, ki, vr, vi));
+            }
+            c.commit_token(1).unwrap();
+            want.push(per_layer);
+        }
+        let n = l_n * tmax * half;
+        let (mut kr, mut ki, mut vr, mut vi) =
+            (vec![0.0; n], vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+        let len = c.fill_dense(1, 0, 1, &mut kr, &mut ki, &mut vr, &mut vi).unwrap();
+        assert_eq!(len, toks);
+        for (t, per_layer) in want.iter().enumerate() {
+            for (l, (wkr, wki, wvr, wvi)) in per_layer.iter().enumerate() {
+                let base = (l * tmax + t) * half;
+                assert_eq!(&kr[base..base + half], &wkr[..], "t={t} l={l}");
+                assert_eq!(&ki[base..base + half], &wki[..], "t={t} l={l}");
+                assert_eq!(&vr[base..base + half], &wvr[..], "t={t} l={l}");
+                assert_eq!(&vi[base..base + half], &wvi[..], "t={t} l={l}");
+            }
+        }
     }
 }

@@ -3,21 +3,11 @@
 use std::time::Duration;
 
 /// Log-scale histogram from 1µs to ~17s (doubling buckets).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct Histogram {
     buckets: [u64; 25],
     count: u64,
     sum_us: u64,
-}
-
-impl Default for Histogram {
-    fn default() -> Self {
-        Histogram {
-            buckets: [0; 25],
-            count: 0,
-            sum_us: 0,
-        }
-    }
 }
 
 impl Histogram {

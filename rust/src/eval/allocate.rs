@@ -73,7 +73,7 @@ pub fn greedy_allocate(
                 }
                 let d = h.delta_ppl(&cand)?;
                 evals += 1;
-                if best_move.as_ref().map_or(true, |(_, bd, ..)| d < *bd) {
+                if best_move.as_ref().is_none_or(|(_, bd, ..)| d < *bd) {
                     best_move = Some((cand, d, lo, side, new_bins));
                 }
             }

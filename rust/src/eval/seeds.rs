@@ -67,7 +67,11 @@ pub fn seed_sweep(h: &mut PplHarness, cfg: &QuantConfig, n_seeds: usize) -> Resu
 }
 
 /// Convenience: build a harness and sweep a standard config set.
-pub fn run(manifest: &Manifest, exec: ModelExecutor, n_seeds: usize) -> Result<Vec<(String, SeedSweep)>> {
+pub fn run(
+    manifest: &Manifest,
+    exec: ModelExecutor,
+    n_seeds: usize,
+) -> Result<Vec<(String, SeedSweep)>> {
     let mut h = PplHarness::new(manifest, exec)?;
     let l = h.n_layers();
     let mut out = Vec::new();

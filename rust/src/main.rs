@@ -326,7 +326,13 @@ fn bits_calculator(layers: usize, d: usize) {
     }
 }
 
-fn serve(artifacts: &str, model: &str, requests: usize, gen_max: usize, no_quant: bool) -> Result<()> {
+fn serve(
+    artifacts: &str,
+    model: &str,
+    requests: usize,
+    gen_max: usize,
+    no_quant: bool,
+) -> Result<()> {
     let manifest = Manifest::load(artifacts)?;
     let rt = Runtime::cpu()?;
     eprintln!("compiling prefill+decode for {model} ...");

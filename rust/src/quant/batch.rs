@@ -1,0 +1,198 @@
+//! Batched TurboAngle encode/decode over `[rows × d]` slabs — the
+//! throughput form of the per-vector hot path in [`super::angle`].
+//!
+//! The serving engine and benches process thousands of head-dim vectors per
+//! step; doing that one `encode_into` call at a time leaves every core but
+//! one idle. This module fans rows out across rayon with per-thread scratch
+//! buffers (the `encode_into` pattern, amortized per worker instead of per
+//! row) and falls back to a single-thread loop below [`PAR_ROW_THRESHOLD`]
+//! rows, where fork/join overhead would dominate.
+//!
+//! Bit-exactness contract: every variant produces output BIT-IDENTICAL to
+//! row-by-row [`super::angle::encode_into`] / [`super::angle::decode_into`]
+//! — the per-row kernel is the same code, and the decode LUT is the proven
+//! bit-identical [`TrigLut`] path — so golden agreement with the JAX oracle
+//! is inherited, not re-established.
+
+use super::angle::{decode_into_lut, encode_into, TrigLut};
+use rayon::prelude::*;
+
+/// Below this many rows the serial loop wins: a fork/join dispatch costs
+/// more than encoding the rows outright (measured in
+/// `benches/quant_hot_path.rs`).
+pub const PAR_ROW_THRESHOLD: usize = 128;
+
+fn batch_dims(x_len: usize, d: usize, r_len: usize, k_len: usize) -> (usize, usize) {
+    assert!(d.is_power_of_two() && d >= 2, "d must be a power of two >= 2");
+    assert_eq!(x_len % d, 0, "slab length must be a multiple of d");
+    let rows = x_len / d;
+    let half = d / 2;
+    assert_eq!(r_len, rows * half, "r buffer must be rows*d/2");
+    assert_eq!(k_len, rows * half, "k buffer must be rows*d/2");
+    (rows, half)
+}
+
+/// Encode a `[rows × d]` slab; picks serial or parallel by row count.
+pub fn encode_batch(x: &[f32], sign: &[f32], n: u32, r_out: &mut [f32], k_out: &mut [u16]) {
+    let d = sign.len();
+    let (rows, _) = batch_dims(x.len(), d, r_out.len(), k_out.len());
+    if rows >= PAR_ROW_THRESHOLD {
+        encode_batch_parallel(x, sign, n, r_out, k_out);
+    } else {
+        encode_batch_serial(x, sign, n, r_out, k_out);
+    }
+}
+
+/// Single-thread slab encode with one reused scratch buffer.
+pub fn encode_batch_serial(x: &[f32], sign: &[f32], n: u32, r_out: &mut [f32], k_out: &mut [u16]) {
+    let d = sign.len();
+    let (_, half) = batch_dims(x.len(), d, r_out.len(), k_out.len());
+    let mut scratch = vec![0.0f32; d];
+    for ((row, r), k) in x
+        .chunks_exact(d)
+        .zip(r_out.chunks_exact_mut(half))
+        .zip(k_out.chunks_exact_mut(half))
+    {
+        encode_into(row, sign, n, &mut scratch, r, k);
+    }
+}
+
+/// Rayon slab encode: rows fan out across the pool, each worker keeps its
+/// own scratch buffer alive across the rows it processes.
+pub fn encode_batch_parallel(
+    x: &[f32],
+    sign: &[f32],
+    n: u32,
+    r_out: &mut [f32],
+    k_out: &mut [u16],
+) {
+    let d = sign.len();
+    let (_, half) = batch_dims(x.len(), d, r_out.len(), k_out.len());
+    x.par_chunks_exact(d)
+        .zip(r_out.par_chunks_exact_mut(half))
+        .zip(k_out.par_chunks_exact_mut(half))
+        .for_each_init(
+            || vec![0.0f32; d],
+            |scratch, ((row, r), k)| encode_into(row, sign, n, scratch, r, k),
+        );
+}
+
+/// Decode a `[rows × d/2]` pair of (norm, bin) slabs back into `[rows × d]`;
+/// picks serial or parallel by row count. Builds the `n`-entry trig LUT
+/// once for the whole slab.
+pub fn decode_batch(r: &[f32], k: &[u16], sign: &[f32], n: u32, centered: bool, out: &mut [f32]) {
+    let d = sign.len();
+    let (rows, _) = batch_dims(out.len(), d, r.len(), k.len());
+    let lut = TrigLut::new(n, centered);
+    if rows >= PAR_ROW_THRESHOLD {
+        decode_batch_parallel(r, k, sign, &lut, out);
+    } else {
+        decode_batch_serial(r, k, sign, &lut, out);
+    }
+}
+
+/// Single-thread slab decode through a prebuilt LUT.
+pub fn decode_batch_serial(r: &[f32], k: &[u16], sign: &[f32], lut: &TrigLut, out: &mut [f32]) {
+    let d = sign.len();
+    let (_, half) = batch_dims(out.len(), d, r.len(), k.len());
+    for ((r_row, k_row), out_row) in r
+        .chunks_exact(half)
+        .zip(k.chunks_exact(half))
+        .zip(out.chunks_exact_mut(d))
+    {
+        decode_into_lut(r_row, k_row, sign, lut, out_row);
+    }
+}
+
+/// Rayon slab decode through a shared prebuilt LUT.
+pub fn decode_batch_parallel(r: &[f32], k: &[u16], sign: &[f32], lut: &TrigLut, out: &mut [f32]) {
+    let d = sign.len();
+    let (_, half) = batch_dims(out.len(), d, r.len(), k.len());
+    r.par_chunks_exact(half)
+        .zip(k.par_chunks_exact(half))
+        .zip(out.par_chunks_exact_mut(d))
+        .for_each(|((r_row, k_row), out_row)| decode_into_lut(r_row, k_row, sign, lut, out_row));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::angle::{decode_into, encode};
+    use crate::quant::fwht::test_sign_diag;
+    use crate::util::prop::Gen;
+
+    fn slab(rows: usize, d: usize, seed: u64) -> Vec<f32> {
+        Gen::new(seed).f32_vec(rows * d, -4.0, 4.0)
+    }
+
+    #[test]
+    fn encode_batch_bit_identical_to_rowwise() {
+        for (rows, d, n) in [(1usize, 8usize, 48u32), (7, 64, 128), (300, 32, 64)] {
+            let sign = test_sign_diag(d, 5);
+            let x = slab(rows, d, 9 + rows as u64);
+            let half = d / 2;
+            let (mut r, mut k) = (vec![0.0f32; rows * half], vec![0u16; rows * half]);
+            encode_batch(&x, &sign, n, &mut r, &mut k);
+            for row in 0..rows {
+                let e = encode(&x[row * d..(row + 1) * d], &sign, n);
+                assert_eq!(&r[row * half..(row + 1) * half], &e.r[..], "rows={rows} d={d}");
+                assert_eq!(&k[row * half..(row + 1) * half], &e.k[..], "rows={rows} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_batch_bit_identical_to_rowwise() {
+        for (rows, d, n, centered) in
+            [(1usize, 8usize, 48u32, false), (7, 64, 128, true), (300, 32, 64, false)]
+        {
+            let sign = test_sign_diag(d, 6);
+            let x = slab(rows, d, 11 + rows as u64);
+            let half = d / 2;
+            let (mut r, mut k) = (vec![0.0f32; rows * half], vec![0u16; rows * half]);
+            encode_batch_serial(&x, &sign, n, &mut r, &mut k);
+            let mut out = vec![0.0f32; rows * d];
+            decode_batch(&r, &k, &sign, n, centered, &mut out);
+            let mut want = vec![0.0f32; d];
+            for row in 0..rows {
+                decode_into(
+                    &r[row * half..(row + 1) * half],
+                    &k[row * half..(row + 1) * half],
+                    &sign,
+                    n,
+                    centered,
+                    &mut want,
+                );
+                assert_eq!(&out[row * d..(row + 1) * d], &want[..], "rows={rows} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_exactly() {
+        let (rows, d, n) = (513usize, 64usize, 128u32);
+        let sign = test_sign_diag(d, 7);
+        let x = slab(rows, d, 21);
+        let half = d / 2;
+        let (mut rs, mut ks) = (vec![0.0f32; rows * half], vec![0u16; rows * half]);
+        let (mut rp, mut kp) = (vec![0.0f32; rows * half], vec![0u16; rows * half]);
+        encode_batch_serial(&x, &sign, n, &mut rs, &mut ks);
+        encode_batch_parallel(&x, &sign, n, &mut rp, &mut kp);
+        assert_eq!(rs, rp);
+        assert_eq!(ks, kp);
+        let lut = TrigLut::new(n, false);
+        let (mut os, mut op) = (vec![0.0f32; rows * d], vec![0.0f32; rows * d]);
+        decode_batch_serial(&rs, &ks, &sign, &lut, &mut os);
+        decode_batch_parallel(&rp, &kp, &sign, &lut, &mut op);
+        assert_eq!(os, op);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of d")]
+    fn rejects_ragged_slab() {
+        let sign = test_sign_diag(8, 1);
+        let x = vec![0.0f32; 13];
+        let (mut r, mut k) = (vec![0.0f32; 4], vec![0u16; 4]);
+        encode_batch(&x, &sign, 64, &mut r, &mut k);
+    }
+}

@@ -327,7 +327,8 @@ mod tests {
 
     #[test]
     fn selective_matches_manual() {
-        let sel = QuantConfig::selective_boost(24, &(0..8).chain(16..24).collect::<Vec<_>>(), 256, 128);
+        let boosted: Vec<usize> = (0..8).chain(16..24).collect();
+        let sel = QuantConfig::selective_boost(24, &boosted, 256, 128);
         // phi-1.5 optimal: 16 of 24 layers boosted -> paper says 3.58 bits
         let bits = sel.angle_bits_per_element();
         assert!((bits - (16.0 * 3.75 + 8.0 * 3.25) / 24.0).abs() < 1e-12);

@@ -7,11 +7,13 @@
 
 pub mod angle;
 pub mod baseline;
+pub mod batch;
 pub mod config;
 pub mod fwht;
 pub mod norm;
 pub mod packing;
 
 pub use angle::{decode, decode_into, encode, encode_into, Encoded};
+pub use batch::{decode_batch, encode_batch};
 pub use config::{LayerBins, Mode, QuantConfig};
 pub use norm::NormMode;

@@ -51,7 +51,7 @@ fn bwd(v: f32, log_space: bool) -> f32 {
 /// Quantize one vector of pair norms. `mode.bits == 0` is rejected here —
 /// the caller keeps fp32 norms and never materializes codes.
 pub fn quantize(r: &[f32], mode: NormMode) -> QuantizedNorms {
-    assert!(mode.bits >= 1 && mode.bits <= 16);
+    assert!((1..=16).contains(&mode.bits));
     let mut vmin = f32::INFINITY;
     let mut vmax = f32::NEG_INFINITY;
     for &v in r {

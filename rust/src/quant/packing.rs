@@ -21,14 +21,14 @@ pub struct BitVec {
 impl BitVec {
     pub fn with_capacity(codes: usize, width: u32) -> Self {
         BitVec {
-            words: Vec::with_capacity((codes * width as usize + 63) / 64),
+            words: Vec::with_capacity((codes * width as usize).div_ceil(64)),
             len_bits: 0,
         }
     }
 
     #[inline]
     pub fn push(&mut self, code: u32, width: u32) {
-        debug_assert!(width >= 1 && width <= 32);
+        debug_assert!((1..=32).contains(&width));
         debug_assert!(code < (1u64 << width) as u32 || width == 32);
         let bit = self.len_bits;
         let word = bit / 64;

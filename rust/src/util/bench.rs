@@ -2,6 +2,8 @@
 //!
 //! Measures wall time over warmup + timed iterations, reports mean / p50 /
 //! p95 / min and derived throughput. Used by every file in rust/benches/.
+//! [`JsonReport`] collects results into a machine-readable `BENCH_*.json`
+//! so CI can archive the perf trajectory run over run.
 
 use std::time::{Duration, Instant};
 
@@ -63,6 +65,124 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Quote + escape a string as a JSON string literal (Rust's `{:?}` is NOT
+/// JSON: it emits `\u{NN}` escapes that JSON parsers reject).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// One JSON scalar for a [`JsonReport`] tag.
+#[derive(Clone, Debug)]
+pub enum JsonVal {
+    Num(f64),
+    Str(String),
+}
+
+impl JsonVal {
+    fn render(&self) -> String {
+        match self {
+            // {:?} on f64 always keeps a decimal point/exponent — valid JSON
+            JsonVal::Num(n) if n.is_finite() => format!("{n:?}"),
+            JsonVal::Num(_) => "null".to_string(),
+            JsonVal::Str(s) => json_str(s),
+        }
+    }
+}
+
+impl From<f64> for JsonVal {
+    fn from(n: f64) -> Self {
+        JsonVal::Num(n)
+    }
+}
+
+impl From<usize> for JsonVal {
+    fn from(n: usize) -> Self {
+        JsonVal::Num(n as f64)
+    }
+}
+
+impl From<&str> for JsonVal {
+    fn from(s: &str) -> Self {
+        JsonVal::Str(s.to_string())
+    }
+}
+
+/// Machine-readable bench collector: each [`BenchResult`] becomes one
+/// object in a `results` array, tagged with caller-supplied dimensions
+/// (op, mode, d, rows, …); `summary` holds derived scalars like parallel
+/// speedups. Serialized with the same no-serde discipline as util::json.
+#[derive(Debug, Default)]
+pub struct JsonReport {
+    results: Vec<String>,
+    summary: Vec<(String, JsonVal)>,
+}
+
+impl JsonReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one result with its throughput and identifying tags.
+    pub fn push(&mut self, r: &BenchResult, items: f64, unit: &str, tags: &[(&str, JsonVal)]) {
+        let mut obj = format!(
+            "{{\"name\": {}, \"iters\": {}, \"mean_ns\": {}, \"p50_ns\": {}, \
+             \"p95_ns\": {}, \"min_ns\": {}, \"items_per_iter\": {}, \
+             \"unit\": {}, \"items_per_sec\": {}",
+            json_str(&r.name),
+            r.iters,
+            r.mean.as_nanos(),
+            r.p50.as_nanos(),
+            r.p95.as_nanos(),
+            r.min.as_nanos(),
+            JsonVal::Num(items).render(),
+            json_str(unit),
+            JsonVal::Num(r.throughput(items)).render(),
+        );
+        for (k, v) in tags {
+            obj.push_str(&format!(", {}: {}", json_str(k), v.render()));
+        }
+        obj.push('}');
+        self.results.push(obj);
+    }
+
+    /// Add a derived top-level scalar (e.g. a speedup ratio).
+    pub fn summary(&mut self, key: &str, val: impl Into<JsonVal>) {
+        self.summary.push((key.to_string(), val.into()));
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::from("{\n  \"results\": [\n    ");
+        out.push_str(&self.results.join(",\n    "));
+        out.push_str("\n  ],\n  \"summary\": {");
+        let entries: Vec<String> = self
+            .summary
+            .iter()
+            .map(|(k, v)| format!("{}: {}", json_str(k), v.render()))
+            .collect();
+        out.push_str(&entries.join(", "));
+        out.push_str("}\n}\n");
+        out
+    }
+
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.render())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,5 +212,44 @@ mod tests {
             min: Duration::from_millis(10),
         };
         assert!((r.throughput(100.0) - 10_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn json_report_is_valid_json() {
+        use crate::util::json::Json;
+        let r = BenchResult {
+            name: "encode d=64 \"quoted\"".into(),
+            iters: 5,
+            mean: Duration::from_micros(250),
+            p50: Duration::from_micros(240),
+            p95: Duration::from_micros(300),
+            min: Duration::from_micros(200),
+        };
+        let mut rep = JsonReport::new();
+        rep.push(
+            &r,
+            4096.0 * 64.0,
+            "elem",
+            &[("op", "encode".into()), ("d", 64usize.into()), ("rows", 4096usize.into())],
+        );
+        rep.summary("encode_parallel_speedup_d128", 2.5);
+        let j = Json::parse(&rep.render()).unwrap();
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("d").unwrap().as_usize().unwrap(), 64);
+        assert_eq!(results[0].get("unit").unwrap().as_str().unwrap(), "elem");
+        let tput = results[0].get("items_per_sec").unwrap().as_f64().unwrap();
+        assert!((tput - 4096.0 * 64.0 / 250e-6).abs() / tput < 1e-9);
+        let s = j.get("summary").unwrap();
+        let speedup = s.get("encode_parallel_speedup_d128").unwrap().as_f64().unwrap();
+        assert!((speedup - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_report_empty_still_parses() {
+        use crate::util::json::Json;
+        let rep = JsonReport::new();
+        let j = Json::parse(&rep.render()).unwrap();
+        assert_eq!(j.get("results").unwrap().as_arr().unwrap().len(), 0);
     }
 }

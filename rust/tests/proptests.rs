@@ -5,7 +5,7 @@ use turboangle::coordinator::batcher::{BatchPolicy, DynamicBatcher};
 use turboangle::coordinator::router::{RoutePolicy, Router};
 use turboangle::coordinator::session::Request;
 use turboangle::quant::packing::{bits_for, pack, unpack};
-use turboangle::quant::{angle, baseline, fwht, norm, Mode, NormMode, QuantConfig};
+use turboangle::quant::{angle, baseline, batch, fwht, norm, Mode, NormMode, QuantConfig};
 use turboangle::util::prop::{run_cases, Gen};
 
 const DIMS: [usize; 5] = [4, 16, 32, 64, 128];
@@ -99,6 +99,85 @@ fn prop_norm_quant_monotone_and_bounded() {
         for w in idx.windows(2) {
             assert!(q.codes[w[0]] <= q.codes[w[1]], "codes not monotone");
         }
+    });
+}
+
+#[test]
+fn prop_encode_batch_bit_identical_to_rowwise() {
+    // the batched slab API must be indistinguishable from row-by-row
+    // encode_into for ANY shape — bins, sign diagonal, and bit patterns
+    // included (golden equivalence is inherited through this identity)
+    run_cases(60, |g| {
+        let d = *g.choice(&DIMS);
+        let n = *g.choice(&BIN_SET);
+        let rows = g.usize_in(1, 200);
+        let half = d / 2;
+        let sign = fwht::test_sign_diag(d, g.u64());
+        let x = g.f32_vec(rows * d, -6.0, 6.0);
+        let (mut rb, mut kb) = (vec![0.0f32; rows * half], vec![0u16; rows * half]);
+        batch::encode_batch(&x, &sign, n, &mut rb, &mut kb);
+        let mut scratch = vec![0.0f32; d];
+        let (mut r1, mut k1) = (vec![0.0f32; half], vec![0u16; half]);
+        for row in 0..rows {
+            let xr = &x[row * d..(row + 1) * d];
+            angle::encode_into(xr, &sign, n, &mut scratch, &mut r1, &mut k1);
+            assert_eq!(&rb[row * half..(row + 1) * half], &r1[..], "r row {row}");
+            assert_eq!(&kb[row * half..(row + 1) * half], &k1[..], "k row {row}");
+        }
+    });
+}
+
+#[test]
+fn prop_decode_batch_bit_identical_to_rowwise() {
+    run_cases(60, |g| {
+        let d = *g.choice(&DIMS);
+        let n = *g.choice(&BIN_SET);
+        let rows = g.usize_in(1, 200);
+        let centered = g.bool();
+        let half = d / 2;
+        let sign = fwht::test_sign_diag(d, g.u64());
+        let x = g.f32_vec(rows * d, -6.0, 6.0);
+        let (mut rb, mut kb) = (vec![0.0f32; rows * half], vec![0u16; rows * half]);
+        batch::encode_batch_serial(&x, &sign, n, &mut rb, &mut kb);
+        let mut out = vec![0.0f32; rows * d];
+        batch::decode_batch(&rb, &kb, &sign, n, centered, &mut out);
+        let mut want = vec![0.0f32; d];
+        for row in 0..rows {
+            angle::decode_into(
+                &rb[row * half..(row + 1) * half],
+                &kb[row * half..(row + 1) * half],
+                &sign,
+                n,
+                centered,
+                &mut want,
+            );
+            assert_eq!(&out[row * d..(row + 1) * d], &want[..], "row {row}");
+        }
+    });
+}
+
+#[test]
+fn prop_batch_parallel_equals_serial() {
+    // the rayon fan-out and the single-thread loop must agree to the bit
+    // regardless of row count (crossing the dispatch threshold or not)
+    run_cases(40, |g| {
+        let d = *g.choice(&DIMS);
+        let n = *g.choice(&BIN_SET);
+        let rows = g.usize_in(1, 400);
+        let half = d / 2;
+        let sign = fwht::test_sign_diag(d, g.u64());
+        let x = g.f32_vec(rows * d, -6.0, 6.0);
+        let (mut rs, mut ks) = (vec![0.0f32; rows * half], vec![0u16; rows * half]);
+        let (mut rp, mut kp) = (vec![0.0f32; rows * half], vec![0u16; rows * half]);
+        batch::encode_batch_serial(&x, &sign, n, &mut rs, &mut ks);
+        batch::encode_batch_parallel(&x, &sign, n, &mut rp, &mut kp);
+        assert_eq!(rs, rp, "encode norms diverged");
+        assert_eq!(ks, kp, "encode bins diverged");
+        let lut = angle::TrigLut::new(n, g.bool());
+        let (mut os, mut op) = (vec![0.0f32; rows * d], vec![0.0f32; rows * d]);
+        batch::decode_batch_serial(&rs, &ks, &sign, &lut, &mut os);
+        batch::decode_batch_parallel(&rp, &kp, &sign, &lut, &mut op);
+        assert_eq!(os, op, "decode diverged");
     });
 }
 

@@ -1,0 +1,255 @@
+//! STUB of the PJRT/XLA client binding used by `turboangle::runtime`.
+//!
+//! The real binding needs `libxla_extension` (see `/opt/xla-example` in the
+//! build image), which is not linkable in every environment this repo must
+//! compile in. This crate mirrors the exact API surface `runtime/pjrt.rs`
+//! consumes so the whole workspace builds and tests everywhere:
+//!
+//! * [`Literal`] is a fully functional host-side tensor container
+//!   (construct / reshape / read back round-trip for real),
+//! * everything that would touch a device — [`PjRtClient::cpu`],
+//!   compilation, execution — returns [`Error`] with an actionable message.
+//!
+//! Code that needs PJRT (artifact-backed tests, the serving CLI against
+//! real HLOs) detects the error and skips or reports it. To use a real
+//! binding, replace this crate or add a `[patch]` section in the root
+//! `Cargo.toml` pointing `xla` at it.
+
+use std::path::Path;
+
+const UNAVAILABLE: &str = "PJRT/XLA backend unavailable: this build links the in-tree `xla` stub \
+     crate (rust/xla). Native quantizer paths work; HLO execution requires \
+     a real xla binding (see rust/xla/src/lib.rs)";
+
+/// Error type matching the real binding's usage pattern (`{e:?}` formatting).
+pub struct Error(String);
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable() -> Error {
+    Error(UNAVAILABLE.to_string())
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {
+    const ELEM_BYTES: usize;
+    fn write_le(self, out: &mut Vec<u8>);
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+macro_rules! native {
+    ($t:ty, $n:expr) => {
+        impl NativeType for $t {
+            const ELEM_BYTES: usize = $n;
+            fn write_le(self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_le_bytes());
+            }
+            fn read_le(bytes: &[u8]) -> Self {
+                <$t>::from_le_bytes(bytes.try_into().expect("element width"))
+            }
+        }
+    };
+}
+
+native!(f32, 4);
+native!(f64, 8);
+native!(i32, 4);
+native!(i64, 8);
+native!(u8, 1);
+
+/// Host-side tensor literal: raw little-endian payload + dims.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Vec<u8>,
+    dims: Vec<i64>,
+    elem_bytes: usize,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(values: &[T]) -> Literal {
+        let mut data = Vec::with_capacity(values.len() * T::ELEM_BYTES);
+        for &v in values {
+            v.write_le(&mut data);
+        }
+        Literal {
+            data,
+            dims: vec![values.len() as i64],
+            elem_bytes: T::ELEM_BYTES,
+        }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(value: T) -> Literal {
+        let mut data = Vec::with_capacity(T::ELEM_BYTES);
+        value.write_le(&mut data);
+        Literal {
+            data,
+            dims: Vec::new(),
+            elem_bytes: T::ELEM_BYTES,
+        }
+    }
+
+    /// Same payload under new dims; errors when the element count differs.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let want: i64 = dims.iter().product();
+        let have = (self.data.len() / self.elem_bytes) as i64;
+        if want != have {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count {have} != {want}",
+                self.dims
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+            elem_bytes: self.elem_bytes,
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len() / self.elem_bytes
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Read the payload back as `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        if self.elem_bytes != T::ELEM_BYTES {
+            return Err(Error(format!(
+                "to_vec: literal holds {}-byte elements, requested {}-byte",
+                self.elem_bytes,
+                T::ELEM_BYTES
+            )));
+        }
+        Ok(self
+            .data
+            .chunks_exact(T::ELEM_BYTES)
+            .map(T::read_le)
+            .collect())
+    }
+
+    /// Decompose a tuple literal. Stub literals are never tuples (only real
+    /// executions produce them), so this always errors.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module (stub: retains the source path for error messages).
+pub struct HloModuleProto {
+    path: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto, Error> {
+        let path = path.as_ref();
+        if !path.exists() {
+            return Err(Error(format!("no such HLO artifact: {}", path.display())));
+        }
+        Ok(HloModuleProto {
+            path: path.display().to_string(),
+        })
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation {
+    origin: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            origin: proto.path.clone(),
+        }
+    }
+}
+
+/// PJRT client (stub: construction fails so callers can gate early).
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error(format!(
+            "cannot compile {}: {UNAVAILABLE}",
+            computation.origin
+        )))
+    }
+}
+
+/// A compiled executable (unreachable through the stub client).
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable())
+    }
+}
+
+/// A device buffer (unreachable through the stub client).
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, -2.5, 3.25]);
+        assert_eq!(l.dims(), &[3]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, -2.5, 3.25]);
+    }
+
+    #[test]
+    fn literal_reshape_checks_count() {
+        let l = Literal::vec1(&[0i32; 6]);
+        assert_eq!(l.reshape(&[2, 3]).unwrap().dims(), &[2, 3]);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_and_type_mismatch() {
+        let l = Literal::scalar(7i32);
+        assert_eq!(l.element_count(), 1);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![7]);
+        // same width type punning is allowed (f32/i32 both 4 bytes)…
+        assert!(l.to_vec::<f32>().is_ok());
+        // …but width mismatch is not
+        assert!(l.to_vec::<f64>().is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{e:?}").contains("stub"));
+    }
+}
