@@ -30,6 +30,14 @@ bench:
 smoke:
 	cargo bench --bench quant_hot_path -- --smoke
 
+# Multi-replica serving sweep (sim backend, real TCP): replicas 1/2/4,
+# writes BENCH_serving_throughput.json.
+bench-serving:
+	cargo bench --bench serving_throughput
+
+smoke-serving:
+	cargo bench --bench serving_throughput -- --smoke
+
 fmt:
 	cargo fmt --all
 
@@ -39,4 +47,4 @@ lint:
 
 clean:
 	cargo clean
-	rm -f BENCH_quant_hot_path.json
+	rm -f BENCH_quant_hot_path.json BENCH_serving_throughput.json

@@ -43,6 +43,7 @@ fn run_engine(
         gen_min: 8,
         gen_max: 24,
         seed: 7,
+        sessions: 0,
     };
     let reqs = workload::generate(&spec);
     let total_gen: usize = reqs.iter().map(|r| r.max_new_tokens).sum();

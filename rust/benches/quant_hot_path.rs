@@ -198,7 +198,7 @@ fn main() {
         let half = d / 2;
         let cfg = QuantConfig::paper_uniform(l).with_k8v4_log();
         let mut kv = PagedKvCache::new(cfg, l, h, d, tmax, 4096, 16);
-        kv.new_seq(1).unwrap();
+        kv.new_seq(1, 128).unwrap();
         let mut g = Gen::new(9);
         for _ in 0..128 {
             for li in 0..l {

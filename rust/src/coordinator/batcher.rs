@@ -31,7 +31,29 @@ impl Default for BatchPolicy {
 pub struct BatcherStats {
     pub submitted: u64,
     pub admitted: u64,
+    /// head-of-line deferrals: the pool cannot admit the head *right now*
     pub rejected_cache: u64,
+    /// terminal rejections: the request can never fit the pool at all
+    pub rejected_capacity: u64,
+}
+
+/// Admission verdict for one queued request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// fits now — seat it
+    Admit,
+    /// cannot fit *yet* — keep it queued (FIFO head-of-line blocking)
+    Defer,
+    /// can NEVER fit (exceeds total pool capacity) — pop it so the caller
+    /// finishes it with `CacheFull` instead of starving the queue forever
+    Reject,
+}
+
+/// Result of one batch-formation pass.
+#[derive(Debug, Default)]
+pub struct TakenBatch {
+    pub admitted: Vec<Request>,
+    pub rejected: Vec<Request>,
 }
 
 pub struct DynamicBatcher {
@@ -73,24 +95,38 @@ impl DynamicBatcher {
             .unwrap_or(false)
     }
 
-    /// Pop up to `free_slots` admissible requests. `can_admit` is the kv
-    /// pool check (expected tokens -> fits?). Non-admissible requests stay
-    /// queued (head-of-line blocking is intentional: FIFO fairness).
-    pub fn take_batch<F>(&mut self, free_slots: usize, mut can_admit: F) -> Vec<Request>
+    /// Peek the queue head (the request head-of-line blocking waits on).
+    pub fn peek(&self) -> Option<&Request> {
+        self.queue.front()
+    }
+
+    /// Pop up to `free_slots` admissible requests. `admit` is the kv pool
+    /// check. `Defer` keeps the head queued and stops the pass (head-of-line
+    /// blocking is intentional: FIFO fairness); `Reject` pops the request
+    /// into `rejected` — it can never be served and must be finished with
+    /// `CacheFull` — and keeps scanning, so an impossible request no longer
+    /// starves everything behind it.
+    pub fn take_batch<F>(&mut self, free_slots: usize, mut admit: F) -> TakenBatch
     where
-        F: FnMut(&Request) -> bool,
+        F: FnMut(&Request) -> Admission,
     {
-        let mut out = Vec::new();
-        while out.len() < free_slots {
+        let mut out = TakenBatch::default();
+        while out.admitted.len() < free_slots {
             match self.queue.front() {
-                Some(req) if can_admit(req) => {
-                    self.stats.admitted += 1;
-                    out.push(self.queue.pop_front().unwrap());
-                }
-                Some(_) => {
-                    self.stats.rejected_cache += 1;
-                    break;
-                }
+                Some(req) => match admit(req) {
+                    Admission::Admit => {
+                        self.stats.admitted += 1;
+                        out.admitted.push(self.queue.pop_front().unwrap());
+                    }
+                    Admission::Reject => {
+                        self.stats.rejected_capacity += 1;
+                        out.rejected.push(self.queue.pop_front().unwrap());
+                    }
+                    Admission::Defer => {
+                        self.stats.rejected_cache += 1;
+                        break;
+                    }
+                },
                 None => break,
             }
         }
@@ -117,8 +153,9 @@ mod tests {
         assert!(!b.should_prefill(4, now));
         b.submit(req(2));
         assert!(b.should_prefill(4, now));
-        let batch = b.take_batch(4, |_| true);
-        assert_eq!(batch.len(), 2);
+        let batch = b.take_batch(4, |_| Admission::Admit);
+        assert_eq!(batch.admitted.len(), 2);
+        assert!(batch.rejected.is_empty());
         assert_eq!(b.pending(), 0);
     }
 
@@ -147,22 +184,50 @@ mod tests {
         for i in 0..5 {
             b.submit(req(i));
         }
-        let batch = b.take_batch(3, |_| true);
-        assert_eq!(batch.len(), 3);
+        let batch = b.take_batch(3, |_| Admission::Admit);
+        assert_eq!(batch.admitted.len(), 3);
         assert_eq!(b.pending(), 2);
         // FIFO order preserved
-        assert_eq!(batch[0].id, 0);
-        assert_eq!(batch[2].id, 2);
+        assert_eq!(batch.admitted[0].id, 0);
+        assert_eq!(batch.admitted[2].id, 2);
     }
 
     #[test]
-    fn cache_rejection_blocks_head() {
+    fn cache_deferral_blocks_head() {
         let mut b = DynamicBatcher::new(BatchPolicy::default());
         b.submit(req(1));
         b.submit(req(2));
-        let batch = b.take_batch(2, |r| r.id != 1);
-        assert!(batch.is_empty(), "FIFO head blocked => no batch");
+        let batch = b.take_batch(2, |r| {
+            if r.id == 1 {
+                Admission::Defer
+            } else {
+                Admission::Admit
+            }
+        });
+        assert!(batch.admitted.is_empty(), "FIFO head blocked => no batch");
         assert_eq!(b.stats.rejected_cache, 1);
         assert_eq!(b.pending(), 2);
+    }
+
+    #[test]
+    fn capacity_rejection_unblocks_queue() {
+        // an impossible head request is popped for CacheFull finishing and
+        // the requests behind it are admitted in the same pass
+        let mut b = DynamicBatcher::new(BatchPolicy::default());
+        b.submit(req(1));
+        b.submit(req(2));
+        b.submit(req(3));
+        let batch = b.take_batch(2, |r| {
+            if r.id == 1 {
+                Admission::Reject
+            } else {
+                Admission::Admit
+            }
+        });
+        assert_eq!(batch.rejected.len(), 1);
+        assert_eq!(batch.rejected[0].id, 1);
+        assert_eq!(batch.admitted.len(), 2);
+        assert_eq!(b.stats.rejected_capacity, 1);
+        assert_eq!(b.pending(), 0);
     }
 }

@@ -6,21 +6,64 @@
 //!   * Decode — active slots' caches reinflated (norm dequant + angle
 //!     unpack) into the dense HLO inputs, one fused decode step, new
 //!     tokens sampled greedily, new compressed entries appended.
+//!   * Preempt — a prefill tick that could not admit the queue head evicts
+//!     the youngest active session instead: its compressed `SeqCache`
+//!     (angles + norm codes + windows, a few hundred bytes per token) moves
+//!     verbatim into the kv_manager's swap pool and the session joins the
+//!     preemption queue. Re-admission restores the stream bit-identically,
+//!     so generation resumes exactly where it left off.
 //!
-//! Python is never involved; the HLOs were lowered at build time.
+//! The engine is generic over [`ModelBackend`], so the same tick loop runs
+//! against PJRT-compiled HLOs in production and the deterministic
+//! [`crate::runtime::SimExecutor`] in tests. [`EngineCore`] is the
+//! object-safe surface replica worker threads program against — the
+//! multi-replica server (`server.rs`) only ever sees `dyn EngineCore`.
 
-use super::batcher::{BatchPolicy, DynamicBatcher};
+use super::batcher::{Admission, BatchPolicy, DynamicBatcher};
 use super::kv_manager::{MemoryStats, PagedKvCache};
 use super::metrics::EngineMetrics;
 use super::scheduler::{next_action, Action, SchedulerPolicy};
-use super::session::{Request, Session};
+use super::session::{FinishReason, Request, Session};
 use crate::quant::QuantConfig;
-use crate::runtime::ModelExecutor;
+use crate::runtime::{ModelBackend, ModelExecutor};
 use anyhow::Result;
+use std::collections::VecDeque;
 use std::time::Instant;
 
 pub const PAD: i32 = 258;
 pub const EOS: i32 = 257;
+
+/// The object-safe engine surface a serving replica exposes: submit work,
+/// advance the tick loop, drain results, report memory and load. Worker
+/// threads in the multi-replica server own one `Box<dyn EngineCore>` each;
+/// everything model- or backend-specific stays behind this trait.
+pub trait EngineCore: Send {
+    /// Enqueue a request (may finish it immediately with `CacheFull` when
+    /// it can never fit the page pool).
+    fn submit(&mut self, req: Request);
+
+    /// One scheduler tick. Returns the action taken.
+    fn tick(&mut self) -> Result<Action>;
+
+    /// Drain finished sessions accumulated since the last call.
+    fn take_finished(&mut self) -> Vec<Session>;
+
+    fn memory_stats(&self) -> MemoryStats;
+
+    /// Replica depth gauge: queued + active + preempted sessions. The TCP
+    /// front-end's `Router` tracks its own dispatched-minus-completed
+    /// counts for routing; this gauge is the engine-side truth for
+    /// embedders, tests, and future schedulers that want queue depth
+    /// rather than in-flight request count.
+    fn load(&self) -> usize;
+
+    fn has_work(&self) -> bool {
+        self.load() > 0
+    }
+
+    /// Snapshot of the serving counters/histograms.
+    fn metrics(&self) -> EngineMetrics;
+}
 
 pub struct EngineConfig {
     pub quant: QuantConfig,
@@ -31,14 +74,17 @@ pub struct EngineConfig {
     pub page_tokens: usize,
 }
 
-pub struct Engine {
-    pub exec: ModelExecutor,
+pub struct Engine<B: ModelBackend = ModelExecutor> {
+    pub exec: B,
     pub kv: PagedKvCache,
     pub batcher: DynamicBatcher,
     pub scheduler: SchedulerPolicy,
     pub metrics: EngineMetrics,
     pub quant: QuantConfig,
     slots: Vec<Option<Session>>,
+    /// Sessions evicted under memory pressure, FIFO. Their compressed
+    /// caches live in the kv_manager swap pool until re-admission.
+    preempted: VecDeque<Session>,
     // reusable dense cache buffers (L,B,H,Tmax,d/2)
     kr: Vec<f32>,
     ki: Vec<f32>,
@@ -47,18 +93,23 @@ pub struct Engine {
     /// tokens already reinflated into the dense buffers, per slot — the
     /// incremental fill keeps per-step coordinator cost O(1) in seq length
     slot_filled: Vec<usize>,
+    /// whether the slot's session has survived >= 1 decode step since it
+    /// was (re)seated — the anti-thrash gate: only such sessions are
+    /// eviction candidates, so admission churn cannot starve token
+    /// progress (every preemption cycle advances its victim first)
+    slot_decoded: Vec<bool>,
     finished: Vec<Session>,
 }
 
-impl Engine {
-    pub fn new(exec: ModelExecutor, cfg: EngineConfig) -> Self {
+impl<B: ModelBackend> Engine<B> {
+    pub fn new(exec: B, cfg: EngineConfig) -> Self {
         let (l, b, h, tmax, half) = exec.cache_dims();
         let n = l * b * h * tmax * half;
         let kv = PagedKvCache::new(
             cfg.quant.clone(),
             l,
             h,
-            exec.profile.d_head,
+            exec.profile().d_head,
             tmax,
             cfg.capacity_pages,
             cfg.page_tokens,
@@ -71,7 +122,9 @@ impl Engine {
             metrics: EngineMetrics::default(),
             quant: cfg.quant,
             slots: (0..b).map(|_| None).collect(),
+            preempted: VecDeque::new(),
             slot_filled: vec![0; b],
+            slot_decoded: vec![false; b],
             kr: vec![0.0; n],
             ki: vec![0.0; n],
             vr: vec![0.0; n],
@@ -82,7 +135,37 @@ impl Engine {
 
     pub fn submit(&mut self, req: Request) {
         self.metrics.requests_submitted += 1;
+        let tp = self.exec.serve().prefill_len;
+        let tmax = self.exec.serve().tmax;
+        let expected = expected_tokens(req.prompt.len(), req.max_new_tokens, tp, tmax);
+        if !self.kv.fits_capacity(expected) {
+            // can never fit even an empty pool: finish NOW — needs no slot,
+            // no pages, and must not block the queue behind it
+            self.reject_cache_full(req);
+            return;
+        }
         self.batcher.submit(req);
+    }
+
+    /// Terminally finish a request that can never fit the page pool.
+    fn reject_cache_full(&mut self, req: Request) {
+        let plen = req.prompt.len().min(self.exec.serve().prefill_len);
+        let mut sess = Session::new(req, plen);
+        sess.finished = Some(FinishReason::CacheFull);
+        self.metrics.rejected_cache_full += 1;
+        self.retire(sess);
+    }
+
+    /// The single retire path: every finished session — rejected, done at
+    /// prefill, or done at decode — goes through here so the finish-side
+    /// counters and histograms cannot drift apart. Callers free the kv
+    /// sequence first when one exists.
+    fn retire(&mut self, sess: Session) {
+        self.metrics
+            .e2e
+            .record(Instant::now().duration_since(sess.request.arrival));
+        self.metrics.requests_finished += 1;
+        self.finished.push(sess);
     }
 
     pub fn active_sessions(&self) -> usize {
@@ -90,7 +173,7 @@ impl Engine {
     }
 
     pub fn has_work(&self) -> bool {
-        self.batcher.pending() > 0 || self.active_sessions() > 0
+        self.batcher.pending() > 0 || self.active_sessions() > 0 || !self.preempted.is_empty()
     }
 
     /// Drain finished sessions accumulated since the last call.
@@ -104,6 +187,7 @@ impl Engine {
 
     /// One scheduler tick. Returns the action taken.
     pub fn tick(&mut self) -> Result<Action> {
+        self.try_readmit()?;
         let action = next_action(
             &self.scheduler,
             &self.batcher,
@@ -112,14 +196,24 @@ impl Engine {
             Instant::now(),
         );
         match action {
-            Action::Prefill => self.run_prefill()?,
+            Action::Prefill => {
+                let took = self.run_prefill()?;
+                // work-conserving: a prefill tick that seated nothing
+                // (head blocked, nothing evictable) must not stall the
+                // active sessions — run the decode step it displaced
+                if took != Action::Prefill && self.active_sessions() > 0 {
+                    self.run_decode()?;
+                    return Ok(Action::Decode);
+                }
+                return Ok(took);
+            }
             Action::Decode => self.run_decode()?,
-            Action::Idle => {}
+            Action::Preempt | Action::Idle => {}
         }
         Ok(action)
     }
 
-    /// Run ticks until queue and slots drain.
+    /// Run ticks until queue, slots, and the preemption queue drain.
     pub fn run_to_completion(&mut self) -> Result<()> {
         while self.has_work() {
             self.tick()?;
@@ -136,17 +230,142 @@ impl Engine {
             .collect()
     }
 
-    fn run_prefill(&mut self) -> Result<()> {
-        let free = self.free_slot_indices();
-        let tp = self.exec.serve.prefill_len;
-        let tmax = self.exec.serve.tmax;
-        let kv = &self.kv;
-        let reqs = self.batcher.take_batch(free.len(), |r| {
-            kv.can_admit(r.prompt.len().min(tp) + r.max_new_tokens)
-        });
-        if reqs.is_empty() {
-            return Ok(());
+    /// Restore preempted sessions (FIFO) into free slots while the pool can
+    /// re-promise their remaining footprint. The swap-in moves the
+    /// compressed stream back verbatim; a full dense refill on the next
+    /// decode tick resumes generation bit-identically.
+    fn try_readmit(&mut self) -> Result<()> {
+        while !self.preempted.is_empty() {
+            let Some(slot) = self.slots.iter().position(|s| s.is_none()) else {
+                break;
+            };
+            let sess = self.preempted.front().expect("checked non-empty");
+            let remaining = sess
+                .request
+                .max_new_tokens
+                .saturating_sub(sess.generated.len());
+            // same bound as admission: cache_len + remaining == prompt +
+            // max_new, so the re-reservation never exceeds the original
+            let expected = (sess.cache_len() + remaining).min(self.exec.serve().tmax);
+            if !self.kv.swap_in(sess.request.id, expected)? {
+                break; // FIFO: don't let younger preemptees jump the queue
+            }
+            let sess = self.preempted.pop_front().expect("checked non-empty");
+            self.metrics.swap_ins += 1;
+            self.slot_filled[slot] = 0; // restored stream: full refill
+            self.slot_decoded[slot] = false; // must decode before re-eviction
+            self.slots[slot] = Some(sess);
         }
+        Ok(())
+    }
+
+    /// The eviction candidate: among sessions that have decoded at least
+    /// once since being (re)seated (the anti-thrash gate), the one with
+    /// the latest request arrival. Sustained overload therefore cycles
+    /// admissions at a bounded rate — every victim generated a token
+    /// first — instead of thrashing prefill-only sessions through the
+    /// swap pool.
+    fn youngest_active_slot(&self) -> Option<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| self.slot_decoded[*i])
+            .filter_map(|(i, s)| s.as_ref().map(|sess| (i, sess.request.arrival)))
+            .max_by_key(|&(i, arrival)| (arrival, i))
+            .map(|(i, _)| i)
+    }
+
+    /// Evict one active session: compressed cache → swap pool, session →
+    /// preemption queue. No dequantization happens; the page pool gets the
+    /// session's pages AND its admission reservation back.
+    fn evict_slot(&mut self, slot: usize) -> Result<()> {
+        let mut sess = self.slots[slot].take().expect("evicting an empty slot");
+        self.kv.swap_out(sess.request.id)?;
+        sess.preemptions += 1;
+        self.metrics.preemptions += 1;
+        self.preempted.push_back(sess);
+        Ok(())
+    }
+
+    /// A prefill tick. Forms a batch; requests that can never fit the pool
+    /// are finished immediately with `CacheFull` (no more head-of-line
+    /// starvation). When the queue head is blocked only by *current*
+    /// memory pressure, active sessions are evicted youngest-first until it
+    /// fits — each eviction loop iteration either seats new work or
+    /// shrinks the active set, so this terminates.
+    fn run_prefill(&mut self) -> Result<Action> {
+        let mut evicted = false;
+        loop {
+            let free = self.free_slot_indices();
+            if free.is_empty() {
+                return Ok(if evicted { Action::Preempt } else { Action::Idle });
+            }
+            let tp = self.exec.serve().prefill_len;
+            let tmax = self.exec.serve().tmax;
+            let kv = &self.kv;
+            // pages promised to requests admitted earlier in THIS pass —
+            // the pool won't see their reservations until seat_prefill, so
+            // the check must accumulate them or a jointly-over-capacity
+            // batch would pass admission and fail its reservation later
+            let mut batch_pages = 0usize;
+            let taken = self.batcher.take_batch(free.len(), |r| {
+                let expected = expected_tokens(r.prompt.len(), r.max_new_tokens, tp, tmax);
+                let pages = kv.pages_for_tokens(expected);
+                if !kv.fits_capacity(expected) {
+                    Admission::Reject
+                } else if kv.can_admit_pages(batch_pages + pages) {
+                    batch_pages += pages;
+                    Admission::Admit
+                } else {
+                    Admission::Defer
+                }
+            });
+            // submit() already rejects capacity-impossible requests, but
+            // keep the take_batch Reject arm as belt-and-braces (e.g. for
+            // requests enqueued through a raw DynamicBatcher)
+            for req in taken.rejected {
+                self.reject_cache_full(req);
+            }
+            if !taken.admitted.is_empty() {
+                self.seat_prefill(taken.admitted, &free)?;
+                return Ok(Action::Prefill);
+            }
+            if self.batcher.pending() == 0 {
+                // nothing admissible and nothing deferred: only rejects ran
+                return Ok(if evicted { Action::Preempt } else { Action::Idle });
+            }
+            // head deferred on memory pressure: evict eligible victims
+            // until its pages fit, THEN retry the batch pass once — a
+            // single deferral count per blocked tick, not one per victim
+            let head_pages = {
+                let head = self.batcher.peek().expect("pending > 0");
+                self.kv.pages_for_tokens(expected_tokens(
+                    head.prompt.len(),
+                    head.max_new_tokens,
+                    tp,
+                    tmax,
+                ))
+            };
+            while !self.kv.can_admit_pages(head_pages) {
+                match self.youngest_active_slot() {
+                    Some(victim) => {
+                        self.evict_slot(victim)?;
+                        evicted = true;
+                    }
+                    None => {
+                        // nothing (more) evictable; the head waits for
+                        // running sessions to finish or decode first
+                        return Ok(if evicted { Action::Preempt } else { Action::Idle });
+                    }
+                }
+            }
+        }
+    }
+
+    /// Run the prefill HLO for an admitted batch and seat the sessions.
+    fn seat_prefill(&mut self, reqs: Vec<Request>, free: &[usize]) -> Result<()> {
+        let tp = self.exec.serve().prefill_len;
+        let tmax = self.exec.serve().tmax;
         let b_total = self.slots.len();
         let mut tokens = vec![PAD; b_total * tp];
         let mut lengths = vec![1i32; b_total]; // dummy lanes: len 1
@@ -160,13 +379,14 @@ impl Engine {
 
         let (b_n, h_n, half) = (
             b_total,
-            self.exec.profile.n_kv_heads,
-            self.exec.profile.d_head / 2,
+            self.exec.profile().n_kv_heads,
+            self.exec.profile().d_head / 2,
         );
-        let vocab = self.exec.profile.vocab;
+        let vocab = self.exec.profile().vocab;
         for (lane, req) in reqs.into_iter().enumerate() {
             let plen = req.prompt.len().min(tp);
-            self.kv.new_seq(req.id)?;
+            let expected = expected_tokens(req.prompt.len(), req.max_new_tokens, tp, tmax);
+            self.kv.new_seq(req.id, expected)?;
             // pack the prompt's compressed entries: only t < plen. One
             // strided append per token covers every (layer, head) at once
             // (kv_manager fans layers out across rayon when worthwhile).
@@ -192,8 +412,16 @@ impl Engine {
             self.metrics
                 .ttft
                 .record(Instant::now().duration_since(sess.request.arrival));
+            if sess.finished.is_some() {
+                // finished on its very first token (EOS, or max_new_tokens
+                // == 1): retire now instead of burning a decode step
+                self.kv.free_seq(sess.request.id);
+                self.retire(sess);
+                continue;
+            }
             let slot = free[lane];
             self.slot_filled[slot] = 0; // new sequence: full refill needed
+            self.slot_decoded[slot] = false; // evictable only after a decode
             self.slots[slot] = Some(sess);
         }
         Ok(())
@@ -236,13 +464,17 @@ impl Engine {
         self.metrics.decode_slot_steps += b_total as u64;
 
         let t_post = Instant::now();
-        let (h_n, half) = (self.exec.profile.n_kv_heads, self.exec.profile.d_head / 2);
-        let vocab = self.exec.profile.vocab;
-        let tmax = self.exec.serve.tmax;
+        let (h_n, half) = (
+            self.exec.profile().n_kv_heads,
+            self.exec.profile().d_head / 2,
+        );
+        let vocab = self.exec.profile().vocab;
+        let tmax = self.exec.serve().tmax;
         for b in 0..b_total {
             let Some(sess) = self.slots[b].as_mut() else {
                 continue;
             };
+            self.slot_decoded[b] = true;
             // append the *processed* token's compressed KV across all
             // (layer, head) pairs in one batched call
             self.kv.append_token_strided(
@@ -262,11 +494,7 @@ impl Engine {
             if sess.finished.is_some() {
                 let sess = self.slots[b].take().unwrap();
                 self.kv.free_seq(sess.request.id);
-                self.metrics
-                    .e2e
-                    .record(Instant::now().duration_since(sess.request.arrival));
-                self.metrics.requests_finished += 1;
-                self.finished.push(sess);
+                self.retire(sess);
             }
         }
         self.metrics
@@ -274,6 +502,44 @@ impl Engine {
             .record(coord_prep + t_post.elapsed());
         Ok(())
     }
+}
+
+impl<B: ModelBackend> EngineCore for Engine<B> {
+    fn submit(&mut self, req: Request) {
+        Engine::submit(self, req)
+    }
+
+    fn tick(&mut self) -> Result<Action> {
+        Engine::tick(self)
+    }
+
+    fn take_finished(&mut self) -> Vec<Session> {
+        Engine::take_finished(self)
+    }
+
+    fn memory_stats(&self) -> MemoryStats {
+        Engine::memory_stats(self)
+    }
+
+    fn load(&self) -> usize {
+        self.batcher.pending() + self.active_sessions() + self.preempted.len()
+    }
+
+    fn has_work(&self) -> bool {
+        Engine::has_work(self)
+    }
+
+    fn metrics(&self) -> EngineMetrics {
+        self.metrics.clone()
+    }
+}
+
+/// Worst-case cache tokens a request can consume: prompt truncated to the
+/// prefill window, plus its full generation budget, capped at tmax. The
+/// SINGLE formula behind admission verdicts and page reservations — they
+/// must never disagree, or admission re-opens the over-admission hole.
+fn expected_tokens(prompt_len: usize, max_new: usize, prefill_len: usize, tmax: usize) -> usize {
+    (prompt_len.min(prefill_len) + max_new).min(tmax)
 }
 
 fn argmax(xs: &[f32]) -> i32 {

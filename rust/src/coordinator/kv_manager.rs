@@ -32,11 +32,19 @@ const PAR_APPEND_ELEM_THRESHOLD: usize = 8192;
 
 /// Global page-pool accounting (pages are bookkeeping units; bytes live in
 /// the per-sequence stores).
+///
+/// The pool tracks two numbers: `allocated_pages` (pages physically held
+/// by resident sequences) and `reserved_pages` (worst-case pages *promised*
+/// to resident sequences at admission). Admission checks reservations, not
+/// allocations — so a sequence admitted for `prompt + max_new_tokens` can
+/// always grow to that bound without a mid-decode "pool exhausted" failure,
+/// and preemption's swap-out releases a well-defined quantity.
 #[derive(Debug)]
 pub struct PagePool {
     page_tokens: usize,
     capacity_pages: usize,
     allocated_pages: usize,
+    reserved_pages: usize,
 }
 
 impl PagePool {
@@ -45,25 +53,51 @@ impl PagePool {
             page_tokens,
             capacity_pages,
             allocated_pages: 0,
+            reserved_pages: 0,
         }
     }
 
-    fn try_alloc(&mut self, pages: usize) -> bool {
-        if self.allocated_pages + pages <= self.capacity_pages {
-            self.allocated_pages += pages;
+    fn can_reserve(&self, pages: usize) -> bool {
+        self.reserved_pages + pages <= self.capacity_pages
+    }
+
+    fn try_reserve(&mut self, pages: usize) -> bool {
+        if self.can_reserve(pages) {
+            self.reserved_pages += pages;
             true
         } else {
             false
         }
     }
 
-    fn free(&mut self, pages: usize) {
-        debug_assert!(self.allocated_pages >= pages);
-        self.allocated_pages -= pages;
+    /// Move pages from "promised" to "physically held". Only valid within
+    /// an existing reservation — admission already accounted for them.
+    fn alloc_reserved(&mut self, pages: usize) {
+        self.allocated_pages += pages;
+        debug_assert!(self.allocated_pages <= self.reserved_pages);
+    }
+
+    /// Take over a swapped-in sequence's footprint: `allocated` pages it
+    /// physically holds again plus its fresh `reserved` promise. The
+    /// caller has already checked `can_reserve(reserved)`.
+    fn adopt(&mut self, allocated: usize, reserved: usize) {
+        debug_assert!(allocated <= reserved && self.can_reserve(reserved));
+        self.reserved_pages += reserved;
+        self.allocated_pages += allocated;
+    }
+
+    fn release(&mut self, allocated: usize, reserved: usize) {
+        debug_assert!(self.allocated_pages >= allocated && self.reserved_pages >= reserved);
+        self.allocated_pages -= allocated;
+        self.reserved_pages -= reserved;
     }
 
     pub fn allocated(&self) -> usize {
         self.allocated_pages
+    }
+
+    pub fn reserved(&self) -> usize {
+        self.reserved_pages
     }
 
     pub fn capacity(&self) -> usize {
@@ -94,8 +128,21 @@ impl SideStore {
 struct SeqCache {
     len: usize,
     pages: usize,
+    /// worst-case pages promised at admission (`pages` never exceeds it
+    /// while resident; zero while swapped out)
+    reserved: usize,
     /// [layer][head] -> (K store, V store)
     stores: Vec<Vec<(SideStore, SideStore)>>,
+}
+
+impl SeqCache {
+    fn bytes(&self) -> usize {
+        self.stores
+            .iter()
+            .flatten()
+            .map(|(k, v)| k.bytes() + v.bytes())
+            .sum()
+    }
 }
 
 pub struct PagedKvCache {
@@ -106,6 +153,10 @@ pub struct PagedKvCache {
     pub tmax: usize,
     pool: PagePool,
     seqs: HashMap<u64, SeqCache>,
+    /// Preempted sequences: compressed streams moved out of the page pool
+    /// verbatim (a few hundred bytes/token — no dequantization). Swap-in
+    /// moves them back bit-identically.
+    swapped: HashMap<u64, SeqCache>,
 }
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -115,7 +166,11 @@ pub struct MemoryStats {
     pub compressed_bytes: usize,
     pub fp16_reference_bytes: usize,
     pub pages_allocated: usize,
+    pub pages_reserved: usize,
     pub pages_capacity: usize,
+    pub swapped_sequences: usize,
+    pub swapped_tokens: usize,
+    pub swapped_bytes: usize,
 }
 
 impl MemoryStats {
@@ -146,17 +201,49 @@ impl PagedKvCache {
             tmax,
             pool: PagePool::new(capacity_pages, page_tokens),
             seqs: HashMap::new(),
+            swapped: HashMap::new(),
         }
     }
 
-    /// Admission: do we have pages for a sequence of `expected_tokens`?
-    pub fn can_admit(&self, expected_tokens: usize) -> bool {
-        let pages = expected_tokens.div_ceil(self.pool.page_tokens);
-        self.pool.allocated_pages + pages <= self.pool.capacity_pages
+    fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.pool.page_tokens)
     }
 
-    pub fn new_seq(&mut self, id: u64) -> Result<()> {
+    /// Pages a sequence of `tokens` tokens needs — for callers that batch
+    /// several admissions in one pass and must sum their footprints.
+    pub fn pages_for_tokens(&self, tokens: usize) -> usize {
+        self.pages_for(tokens)
+    }
+
+    /// Admission: can the pool *promise* `pages` more pages on top of what
+    /// resident sequences already hold? Callers admitting several requests
+    /// in one pass accumulate their page counts into a single check — each
+    /// request alone fitting does NOT mean they fit together.
+    pub fn can_admit_pages(&self, pages: usize) -> bool {
+        self.pool.can_reserve(pages)
+    }
+
+    /// Admission for one sequence of `expected_tokens`.
+    pub fn can_admit(&self, expected_tokens: usize) -> bool {
+        self.can_admit_pages(self.pages_for(expected_tokens))
+    }
+
+    /// Could a sequence of `expected_tokens` fit an *empty* pool? A request
+    /// failing this can never be admitted — the engine finishes it with
+    /// `CacheFull` instead of letting it starve at the head of the queue.
+    pub fn fits_capacity(&self, expected_tokens: usize) -> bool {
+        self.pages_for(expected_tokens) <= self.pool.capacity_pages
+    }
+
+    /// Start a sequence, reserving worst-case pages for `expected_tokens`.
+    pub fn new_seq(&mut self, id: u64, expected_tokens: usize) -> Result<()> {
         ensure!(!self.seqs.contains_key(&id), "sequence {id} exists");
+        ensure!(!self.swapped.contains_key(&id), "sequence {id} is swapped out");
+        let reserve = self.pages_for(expected_tokens);
+        ensure!(
+            self.pool.try_reserve(reserve),
+            "page pool cannot reserve {reserve} pages for sequence {id}"
+        );
         let stores = (0..self.n_layers)
             .map(|_| {
                 (0..self.n_kv_heads)
@@ -169,6 +256,7 @@ impl PagedKvCache {
             SeqCache {
                 len: 0,
                 pages: 0,
+                reserved: reserve,
                 stores,
             },
         );
@@ -177,8 +265,46 @@ impl PagedKvCache {
 
     pub fn free_seq(&mut self, id: u64) {
         if let Some(s) = self.seqs.remove(&id) {
-            self.pool.free(s.pages);
+            self.pool.release(s.pages, s.reserved);
         }
+        self.swapped.remove(&id); // swapped sequences hold no pool pages
+    }
+
+    /// Preempt: move the sequence's compressed streams out of the pool into
+    /// the swap store, releasing its pages AND its reservation. The bytes
+    /// are moved verbatim — no dequantization, no re-encoding.
+    pub fn swap_out(&mut self, id: u64) -> Result<()> {
+        let mut s = match self.seqs.remove(&id) {
+            Some(s) => s,
+            None => bail!("unknown sequence {id}"),
+        };
+        self.pool.release(s.pages, s.reserved);
+        s.reserved = 0;
+        self.swapped.insert(id, s);
+        Ok(())
+    }
+
+    /// Re-admit a swapped sequence, reserving for `expected_tokens` total
+    /// (current length + remaining generation). Returns false — leaving the
+    /// sequence swapped — when the pool cannot promise that much yet.
+    pub fn swap_in(&mut self, id: u64, expected_tokens: usize) -> Result<bool> {
+        let s = match self.swapped.get(&id) {
+            Some(s) => s,
+            None => bail!("sequence {id} is not swapped out"),
+        };
+        let reserve = self.pages_for(expected_tokens).max(s.pages);
+        if !self.pool.can_reserve(reserve) {
+            return Ok(false);
+        }
+        let mut s = self.swapped.remove(&id).unwrap();
+        self.pool.adopt(s.pages, reserve);
+        s.reserved = reserve;
+        self.seqs.insert(id, s);
+        Ok(true)
+    }
+
+    pub fn is_swapped(&self, id: u64) -> bool {
+        self.swapped.contains_key(&id)
     }
 
     fn append_side(
@@ -293,7 +419,10 @@ impl PagedKvCache {
     }
 
     /// Advance the sequence length by one token (after all layers/heads of
-    /// that token were appended), allocating pages as needed.
+    /// that token were appended), allocating pages as needed. Allocation
+    /// inside the admission reservation cannot fail; growth beyond it
+    /// (a sequence outliving its declared bound) extends the reservation
+    /// when capacity allows and errors otherwise.
     pub fn commit_token(&mut self, id: u64) -> Result<()> {
         let page_tokens = self.pool.page_tokens;
         let seq = match self.seqs.get_mut(&id) {
@@ -302,9 +431,15 @@ impl PagedKvCache {
         };
         ensure!(seq.len < self.tmax, "sequence {id} at tmax");
         if seq.len % page_tokens == 0 {
-            if !self.pool.try_alloc(1) {
-                bail!("page pool exhausted");
+            if seq.pages + 1 > seq.reserved {
+                // outgrew the admission promise (shouldn't happen for
+                // engine-admitted sequences): extend if capacity allows
+                if !self.pool.try_reserve(1) {
+                    bail!("page pool exhausted");
+                }
+                seq.reserved += 1;
             }
+            self.pool.alloc_reserved(1);
             seq.pages += 1;
         }
         seq.len += 1;
@@ -412,19 +547,21 @@ impl PagedKvCache {
         let mut st = MemoryStats {
             sequences: self.seqs.len(),
             pages_allocated: self.pool.allocated(),
+            pages_reserved: self.pool.reserved(),
             pages_capacity: self.pool.capacity(),
+            swapped_sequences: self.swapped.len(),
             ..Default::default()
         };
         for s in self.seqs.values() {
             st.tokens += s.len;
-            for lh in &s.stores {
-                for (k, v) in lh {
-                    st.compressed_bytes += k.bytes() + v.bytes();
-                }
-            }
+            st.compressed_bytes += s.bytes();
             // fp16 reference: K and V, n_layers*n_heads*len*d_head*2 bytes each
             st.fp16_reference_bytes +=
                 2 * self.n_layers * self.n_kv_heads * s.len * self.d_head * 2;
+        }
+        for s in self.swapped.values() {
+            st.swapped_tokens += s.len;
+            st.swapped_bytes += s.bytes();
         }
         st
     }
@@ -516,7 +653,7 @@ mod tests {
     #[test]
     fn roundtrip_fp32_norms() {
         let mut c = mk_cache((NormMode::FP32, NormMode::FP32));
-        c.new_seq(7).unwrap();
+        c.new_seq(7, 16).unwrap();
         let half = 4;
         let mut want = Vec::new();
         for t in 0..5u64 {
@@ -547,7 +684,7 @@ mod tests {
     #[test]
     fn norm_quant_roundtrip_within_step() {
         let mut c = mk_cache((NormMode::LINEAR8, NormMode::LOG4));
-        c.new_seq(1).unwrap();
+        c.new_seq(1, 16).unwrap();
         let half = 4;
         let (kr, ki) = fake_entry(3, half, 128);
         let (vr, vi) = fake_entry(4, half, 64);
@@ -576,7 +713,7 @@ mod tests {
     #[test]
     fn page_accounting() {
         let mut c = mk_cache((NormMode::FP32, NormMode::FP32));
-        c.new_seq(1).unwrap();
+        c.new_seq(1, 12).unwrap();
         let half = 4;
         let (kr, ki) = fake_entry(1, half, 128);
         for t in 0..9 {
@@ -596,7 +733,7 @@ mod tests {
     fn pool_exhaustion_rejects() {
         let cfg = QuantConfig::paper_uniform(1);
         let mut c = PagedKvCache::new(cfg, 1, 1, 8, 64, 2, 4);
-        c.new_seq(1).unwrap();
+        c.new_seq(1, 8).unwrap();
         let (kr, ki) = fake_entry(1, 4, 128);
         let mut committed = 0;
         for _ in 0..12 {
@@ -619,7 +756,7 @@ mod tests {
         let mut ratios = Vec::new();
         for cfg in [cfg_a, cfg_b] {
             let mut c = PagedKvCache::new(cfg, 2, 1, 64, 64, 1024, 16);
-            c.new_seq(1).unwrap();
+            c.new_seq(1, 48).unwrap();
             let (kr, ki) = fake_entry(1, 32, 128);
             let (vr, vi) = fake_entry(2, 32, 64);
             for _ in 0..48 {
@@ -655,8 +792,8 @@ mod tests {
         let cfg = QuantConfig::paper_uniform(l_n).with_norms(NormMode::LINEAR8, NormMode::LOG4);
         let mut via_lh = PagedKvCache::new(cfg.clone(), l_n, h_n, d, 16, 64, 4);
         let mut via_strided = PagedKvCache::new(cfg, l_n, h_n, d, 16, 64, 4);
-        via_lh.new_seq(1).unwrap();
-        via_strided.new_seq(1).unwrap();
+        via_lh.new_seq(1, 16).unwrap();
+        via_strided.new_seq(1, 16).unwrap();
         // dense (L, B=1, H, Tp, d/2) slabs
         let n = l_n * h_n * tp * half;
         let (mut kr, mut ki, mut vr, mut vi) =
@@ -711,6 +848,86 @@ mod tests {
     }
 
     #[test]
+    fn swap_roundtrip_is_bit_identical_and_frees_pages() {
+        let mut c = mk_cache((NormMode::LINEAR8, NormMode::LOG4));
+        c.new_seq(5, 12).unwrap();
+        let half = 4;
+        for t in 0..6u64 {
+            for l in 0..2 {
+                let (kr, ki) = fake_entry(t * 9 + l as u64 + 1, half, 128);
+                let (vr, vi) = fake_entry(t * 9 + l as u64 + 77, half, 64);
+                c.append_token_lh(5, l, 0, &kr, &ki, &vr, &vi).unwrap();
+            }
+            c.commit_token(5).unwrap();
+        }
+        let n = 2 * 16 * half;
+        let mut before = (vec![0.0; n], vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+        c.fill_dense(5, 0, 1, &mut before.0, &mut before.1, &mut before.2, &mut before.3)
+            .unwrap();
+        let resident = c.memory_stats();
+        assert!(resident.pages_allocated > 0 && resident.pages_reserved > 0);
+
+        c.swap_out(5).unwrap();
+        assert!(c.is_swapped(5));
+        let st = c.memory_stats();
+        assert_eq!(st.pages_allocated, 0, "swap releases pages");
+        assert_eq!(st.pages_reserved, 0, "swap releases the reservation");
+        assert_eq!(st.swapped_sequences, 1);
+        assert_eq!(st.swapped_tokens, 6);
+        assert!(st.swapped_bytes > 0);
+        let mut scratch = (vec![0.0; n], vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+        assert!(
+            c.fill_dense(5, 0, 1, &mut scratch.0, &mut scratch.1, &mut scratch.2, &mut scratch.3)
+                .is_err(),
+            "swapped sequences are not reinflatable"
+        );
+
+        assert!(c.swap_in(5, 12).unwrap());
+        assert!(!c.is_swapped(5));
+        let mut after = (vec![0.0; n], vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+        c.fill_dense(5, 0, 1, &mut after.0, &mut after.1, &mut after.2, &mut after.3)
+            .unwrap();
+        assert_eq!(before, after, "restore must be bit-identical");
+        assert_eq!(c.memory_stats().pages_allocated, resident.pages_allocated);
+    }
+
+    #[test]
+    fn swap_in_respects_pool_pressure() {
+        // capacity 2 pages of 4 tokens; seq 1 takes both, seq 2 must wait
+        let cfg = QuantConfig::paper_uniform(1);
+        let mut c = PagedKvCache::new(cfg, 1, 1, 8, 64, 2, 4);
+        let (kr, ki) = fake_entry(1, 4, 128);
+        c.new_seq(1, 8).unwrap();
+        for _ in 0..8 {
+            c.append_token_lh(1, 0, 0, &kr, &ki, &kr, &ki).unwrap();
+            c.commit_token(1).unwrap();
+        }
+        c.swap_out(1).unwrap();
+        c.new_seq(2, 8).unwrap();
+        assert!(!c.swap_in(1, 8).unwrap(), "no room while seq 2 holds the pool");
+        c.free_seq(2);
+        assert!(c.swap_in(1, 8).unwrap(), "room after seq 2 freed");
+        assert_eq!(c.seq_len(1), 8);
+        // unknown / double operations error
+        assert!(c.swap_in(1, 8).is_err());
+        assert!(c.swap_out(99).is_err());
+    }
+
+    #[test]
+    fn reservation_blocks_overadmission() {
+        // seq 1 reserves the whole pool up-front: a second sequence must
+        // not be admitted even though few pages are *allocated* yet
+        let cfg = QuantConfig::paper_uniform(1);
+        let mut c = PagedKvCache::new(cfg, 1, 1, 8, 64, 4, 4);
+        c.new_seq(1, 16).unwrap(); // reserves all 4 pages
+        assert_eq!(c.memory_stats().pages_allocated, 0);
+        assert!(!c.can_admit(4), "reservation counts against admission");
+        assert!(c.new_seq(2, 4).is_err());
+        c.free_seq(1);
+        assert!(c.can_admit(16));
+    }
+
+    #[test]
     fn parallel_fill_exact_for_fp32_norms() {
         // large enough that fill_dense takes the rayon path (work =
         // 10 tokens * 24 layers * 32 half = 7680 >= threshold); fp32 norms
@@ -719,7 +936,7 @@ mod tests {
         let half = d / 2;
         let cfg = QuantConfig::paper_uniform(l_n);
         let mut c = PagedKvCache::new(cfg, l_n, 1, d, tmax, 1024, 16);
-        c.new_seq(1).unwrap();
+        c.new_seq(1, toks).unwrap();
         let mut want = Vec::new();
         for t in 0..toks {
             let mut per_layer = Vec::new();

@@ -56,6 +56,12 @@ pub struct EngineMetrics {
     pub prefill_sequences: u64,
     pub decode_steps: u64,
     pub decode_slot_steps: u64,
+    /// sessions swapped out under memory pressure (compressed-cache evictions)
+    pub preemptions: u64,
+    /// preempted sessions restored from the swap pool
+    pub swap_ins: u64,
+    /// requests that could never fit the pool, finished with `CacheFull`
+    pub rejected_cache_full: u64,
     /// time-to-first-token
     pub ttft: Histogram,
     /// per decode step (whole batch)
@@ -79,6 +85,7 @@ impl EngineMetrics {
         format!(
             "requests: {} submitted, {} finished | tokens: {}\n\
              prefill: {} batches ({} seqs) | decode: {} steps (util {:.2})\n\
+             preempt: {} out / {} in | rejected cache_full: {}\n\
              ttft   p50 {:?} p95 {:?} mean {:?}\n\
              step   p50 {:?} p95 {:?} mean {:?}\n\
              e2e    p50 {:?} p95 {:?} mean {:?}\n\
@@ -90,6 +97,9 @@ impl EngineMetrics {
             self.prefill_sequences,
             self.decode_steps,
             self.decode_utilization(),
+            self.preemptions,
+            self.swap_ins,
+            self.rejected_cache_full,
             self.ttft.quantile(0.5),
             self.ttft.quantile(0.95),
             self.ttft.mean(),

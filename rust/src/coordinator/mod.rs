@@ -1,13 +1,20 @@
-//! The serving coordinator — the paper-as-a-system: a vLLM-router-style
-//! engine whose resident KV cache is TurboAngle-compressed.
+//! The serving coordinator — the paper-as-a-system: a multi-replica
+//! vLLM-router-style serving stack whose resident KV cache is
+//! TurboAngle-compressed.
 //!
 //! * [`kv_manager`] — paged compressed cache (bit-packed angles + quantized
-//!   norms), block allocator, memory accounting
+//!   norms), reservation-aware block allocator, swap pool for preempted
+//!   sequences, memory accounting
 //! * [`batcher`] / [`scheduler`] — dynamic batching and prefill/decode
-//!   interleave
-//! * [`router`] — replica routing policies
-//! * [`engine`] — the tick loop gluing slots, cache, and the AOT programs
-//! * [`metrics`] — latency histograms and counters
+//!   interleave, with terminal `CacheFull` rejection of impossible requests
+//! * [`router`] — replica routing policies (round-robin, least-loaded,
+//!   consistent-hash session affinity)
+//! * [`engine`] — the tick loop gluing slots, cache, and the AOT programs;
+//!   [`engine::EngineCore`] is the object-safe replica surface, and the
+//!   engine is generic over [`crate::runtime::ModelBackend`]
+//! * [`server`] — line-delimited-JSON TCP front-end dispatching through the
+//!   router into N replica worker threads
+//! * [`metrics`] — latency histograms and counters (incl. preemption/swap)
 
 pub mod batcher;
 pub mod engine;
@@ -18,9 +25,10 @@ pub mod scheduler;
 pub mod server;
 pub mod session;
 
-pub use batcher::{BatchPolicy, DynamicBatcher};
-pub use engine::{Engine, EngineConfig};
+pub use batcher::{Admission, BatchPolicy, DynamicBatcher, TakenBatch};
+pub use engine::{Engine, EngineConfig, EngineCore};
 pub use kv_manager::PagedKvCache;
-pub use router::{RoutePolicy, Router};
+pub use metrics::EngineMetrics;
+pub use router::{hash_session_key, RoutePolicy, Router};
 pub use scheduler::SchedulerPolicy;
 pub use session::{FinishReason, Request, Session};

@@ -5,6 +5,7 @@
 //! (consistent hashing on a session key keeps multi-turn requests on the
 //! replica that may still hold their prefix).
 
+use crate::util::hash::splitmix64;
 use std::collections::BTreeMap;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -24,12 +25,15 @@ pub struct Router {
     ring: BTreeMap<u64, usize>,
 }
 
-fn hash64(x: u64) -> u64 {
-    // splitmix64
-    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-    z ^ (z >> 31)
+/// Hash a wire-level string session key into the u64 the ring consumes
+/// (FNV-1a then splitmix for avalanche). Numeric wire keys skip this.
+pub fn hash_session_key(key: &str) -> u64 {
+    let mut h: u64 = 0xCBF29CE484222325;
+    for b in key.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001B3);
+    }
+    splitmix64(h)
 }
 
 impl Router {
@@ -37,7 +41,7 @@ impl Router {
         let mut ring = BTreeMap::new();
         for r in 0..replicas {
             for v in 0..16u64 {
-                ring.insert(hash64((r as u64) << 32 | v), r);
+                ring.insert(splitmix64((r as u64) << 32 | v), r);
             }
         }
         Router {
@@ -62,7 +66,7 @@ impl Router {
             }
             RoutePolicy::LeastLoaded => self.least_loaded(),
             RoutePolicy::SessionAffinity => match session_key {
-                Some(key) => self.ring_lookup(hash64(key)),
+                Some(key) => self.ring_lookup(splitmix64(key)),
                 None => self.least_loaded(),
             },
         };

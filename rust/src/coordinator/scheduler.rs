@@ -12,6 +12,11 @@ use std::time::Instant;
 pub enum Action {
     Prefill,
     Decode,
+    /// A prefill tick that evicted active sessions (compressed-cache
+    /// swap-out) to make room instead of seating new work. `next_action`
+    /// never chooses this directly — the engine reports it when a
+    /// `Prefill` tick turned into eviction under memory pressure.
+    Preempt,
     Idle,
 }
 

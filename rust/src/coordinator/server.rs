@@ -1,23 +1,48 @@
-//! Line-delimited-JSON TCP front-end for the engine — the deployable
-//! surface: one request per line, one response per line.
+//! Line-delimited-JSON TCP front-end for the multi-replica serving stack —
+//! the deployable surface: one request per line, one response per line.
 //!
-//!   → {"id": 1, "prompt": "the wodu zatu", "max_new_tokens": 8}
+//!   → {"id": 1, "prompt": "the wodu zatu", "max_new_tokens": 8,
+//!      "session_key": "user-42"}
 //!   ← {"id": 1, "text": "...", "tokens": [ ... ], "prompt_tokens": 13,
-//!      "finish": "length"}
+//!      "replica": 0, "finish": "length"}
 //!
-//! Connections are handled by threads that feed an mpsc queue; the engine
-//! runs its tick loop on the serving thread (PJRT handles stay on one
-//! thread). Responses travel back through per-request channels.
+//! Topology:
+//!
+//!   conns ──(reader threads)──► ingest ──► dispatcher ──► per-replica
+//!                                            │ Router       mpsc queues
+//!   conns ◄──(writer threads)◄── responses ◄─┴─ N replica worker threads,
+//!                                               each owning one
+//!                                               `Box<dyn EngineCore>`
+//!
+//! * Connections are **pipelined**: the reader forwards every parsed line
+//!   immediately and a dedicated writer thread sends responses as they
+//!   complete, so one connection can have many ids in flight (responses
+//!   are matched by `id`, order is not guaranteed).
+//! * The dispatcher routes each request through [`Router`] — round-robin,
+//!   least-loaded, or consistent-hash session affinity via the optional
+//!   `session_key` field (string keys are hashed, numeric keys used
+//!   directly).
+//! * Replica workers block on `recv_timeout` when idle — an idle replica
+//!   burns no CPU — and keep ticking while they still hold work after the
+//!   dispatcher hangs up, so shutdown drains cleanly.
 
-use super::engine::Engine;
+use super::engine::EngineCore;
+use super::router::{hash_session_key, RoutePolicy, Router};
+use super::scheduler::Action;
 use super::session::{FinishReason, Request};
+use crate::coordinator::metrics::EngineMetrics;
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
+
+/// How long an idle replica (or the dispatcher) blocks waiting for work
+/// before re-checking shutdown conditions.
+const IDLE_WAIT: Duration = Duration::from_millis(25);
 
 /// A parsed wire request.
 #[derive(Debug, Clone, PartialEq)]
@@ -25,11 +50,20 @@ pub struct WireRequest {
     pub id: u64,
     pub prompt: String,
     pub max_new_tokens: usize,
+    /// Optional routing affinity key (`"session_key"`: string or number).
+    pub session_key: Option<u64>,
 }
 
 /// Parse one request line.
 pub fn parse_request(line: &str) -> Result<WireRequest> {
     let j = Json::parse(line)?;
+    let session_key = match j.opt("session_key") {
+        None => None,
+        Some(v) => Some(match v.as_u64() {
+            Ok(n) => n,
+            Err(_) => hash_session_key(v.as_str()?),
+        }),
+    };
     Ok(WireRequest {
         id: j.get("id")?.as_u64()?,
         prompt: j.get("prompt")?.as_str()?.to_string(),
@@ -38,6 +72,7 @@ pub fn parse_request(line: &str) -> Result<WireRequest> {
             .map(|v| v.as_usize())
             .transpose()?
             .unwrap_or(16),
+        session_key,
     })
 }
 
@@ -60,6 +95,7 @@ fn json_escape(s: &str) -> String {
 /// Format one response line (no trailing newline).
 pub fn format_response(
     id: u64,
+    replica: usize,
     prompt_tokens: usize,
     generated: &[i32],
     finish: Option<FinishReason>,
@@ -81,68 +117,255 @@ pub fn format_response(
         None => "unknown",
     };
     format!(
-        "{{\"id\": {id}, \"text\": \"{}\", \"tokens\": [{toks}], \"prompt_tokens\": {prompt_tokens}, \"finish\": \"{finish}\"}}",
+        "{{\"id\": {id}, \"text\": \"{}\", \"tokens\": [{toks}], \"prompt_tokens\": {prompt_tokens}, \"replica\": {replica}, \"finish\": \"{finish}\"}}",
         json_escape(&text)
     )
 }
 
-type Queued = (WireRequest, mpsc::Sender<String>);
+/// One line headed for a connection's writer thread. `counts` marks real
+/// responses (not error lines): the WRITER increments the served counter
+/// after pushing the bytes to the socket, so a bounded serve cannot
+/// return — and let the process exit — with a response still buffered.
+struct ConnLine {
+    line: String,
+    counts: bool,
+}
 
-/// Serve until `max_requests` have completed (0 = forever). Returns the
-/// number served. Binds `addr`; prints the bound address to stderr.
-pub fn serve(engine: &mut Engine, addr: &str, max_requests: usize) -> Result<usize> {
+/// One parsed request plus the channel its response line travels back on.
+type Ingest = (WireRequest, mpsc::Sender<ConnLine>);
+
+/// What the dispatcher hands a replica worker.
+struct ReplicaJob {
+    req: Request,
+    wire_id: u64,
+    conn: mpsc::Sender<ConnLine>,
+}
+
+/// Aggregate result of one `serve` run.
+#[derive(Debug)]
+pub struct ServeSummary {
+    pub served: usize,
+    /// Final metrics snapshot per replica, index-aligned with the engines.
+    pub replicas: Vec<EngineMetrics>,
+}
+
+/// Bind `addr` and serve until `max_requests` have completed (0 = forever).
+pub fn serve(
+    engines: Vec<Box<dyn EngineCore>>,
+    addr: &str,
+    policy: RoutePolicy,
+    max_requests: usize,
+) -> Result<ServeSummary> {
     let listener = TcpListener::bind(addr)?;
+    serve_on(listener, engines, policy, max_requests)
+}
+
+/// Serve on an already-bound listener (tests bind port 0 themselves to
+/// learn the address). One worker thread per engine replica; the calling
+/// thread runs the dispatcher.
+pub fn serve_on(
+    listener: TcpListener,
+    engines: Vec<Box<dyn EngineCore>>,
+    policy: RoutePolicy,
+    max_requests: usize,
+) -> Result<ServeSummary> {
+    anyhow::ensure!(!engines.is_empty(), "need at least one engine replica");
+    let n_replicas = engines.len();
     let local = listener.local_addr()?;
-    eprintln!("turboangle serving on {local}");
-    let (tx, rx) = mpsc::channel::<Queued>();
+    eprintln!("turboangle serving on {local} ({n_replicas} replicas, {policy:?})");
 
-    // acceptor thread: one handler thread per connection
-    std::thread::spawn(move || {
-        for stream in listener.incoming().flatten() {
-            let tx = tx.clone();
-            std::thread::spawn(move || {
-                let _ = handle_conn(stream, tx);
-            });
-        }
-    });
+    let (ingest_tx, ingest_rx) = mpsc::channel::<Ingest>();
+    // served = responses actually written to sockets (incremented by the
+    // per-connection writer threads, or by workers for dead connections)
+    let served = Arc::new(AtomicUsize::new(0));
+    // acceptor thread: one reader thread per connection. The listener is
+    // non-blocking so the acceptor can observe shutdown and release the
+    // port when a bounded serve finishes (late clients get
+    // connection-refused instead of silently-swallowed requests).
+    listener.set_nonblocking(true)?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let acceptor = {
+        let shutdown = Arc::clone(&shutdown);
+        let served = Arc::clone(&served);
+        std::thread::spawn(move || {
+            while !shutdown.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        // accepted sockets may inherit non-blocking mode
+                        if stream.set_nonblocking(false).is_err() {
+                            continue;
+                        }
+                        let tx = ingest_tx.clone();
+                        let served = Arc::clone(&served);
+                        std::thread::spawn(move || {
+                            let _ = handle_conn(stream, tx, served);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(IDLE_WAIT);
+                    }
+                    Err(_) => break,
+                }
+            }
+        })
+    };
 
+    let router = Arc::new(Mutex::new(Router::new(n_replicas, policy)));
+    let mut replica_txs = Vec::with_capacity(n_replicas);
+    let mut workers = Vec::with_capacity(n_replicas);
+    for (idx, engine) in engines.into_iter().enumerate() {
+        let (tx, rx) = mpsc::channel::<ReplicaJob>();
+        replica_txs.push(tx);
+        let router = Arc::clone(&router);
+        let served = Arc::clone(&served);
+        workers.push(std::thread::spawn(move || {
+            replica_worker(idx, engine, rx, router, served)
+        }));
+    }
+
+    // dispatcher: route every ingested request to a replica queue
     let mut next_id: u64 = 1 << 32; // engine-side ids; wire ids are echoed
-    let mut pending: HashMap<u64, (u64, mpsc::Sender<String>)> = HashMap::new();
-    let mut served = 0usize;
     loop {
-        // ingest whatever arrived
-        while let Ok((wire, resp_tx)) = rx.try_recv() {
-            let prompt: Vec<i32> = wire.prompt.bytes().map(|b| b as i32).collect();
-            let id = next_id;
-            next_id += 1;
-            pending.insert(id, (wire.id, resp_tx));
-            engine.submit(Request::new(id, prompt, wire.max_new_tokens));
+        if max_requests > 0 && served.load(Ordering::Relaxed) >= max_requests {
+            break;
+        }
+        // a worker can only exit mid-serve on error (normal exit requires
+        // the queues we still hold to disconnect) — stop instead of waiting
+        // forever for a served-count that will never arrive
+        if workers.iter().any(|w| w.is_finished()) {
+            break;
+        }
+        match ingest_rx.recv_timeout(IDLE_WAIT) {
+            Ok((wire, conn)) => {
+                let prompt: Vec<i32> = wire.prompt.bytes().map(|b| b as i32).collect();
+                let id = next_id;
+                next_id += 1;
+                let mut req = Request::new(id, prompt, wire.max_new_tokens);
+                req.session_key = wire.session_key;
+                let replica = router.lock().unwrap().route(wire.session_key);
+                let job = ReplicaJob {
+                    req,
+                    wire_id: wire.id,
+                    conn,
+                };
+                if replica_txs[replica].send(job).is_err() {
+                    break; // worker died; surface its error below
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    drop(replica_txs); // workers drain their queues and exit
+    shutdown.store(true, Ordering::Relaxed);
+    let _ = acceptor.join(); // closes the listener, releasing the port
+
+    let mut replicas = Vec::with_capacity(n_replicas);
+    for w in workers {
+        let metrics = w
+            .join()
+            .map_err(|_| anyhow!("replica worker panicked"))??;
+        replicas.push(metrics);
+    }
+    Ok(ServeSummary {
+        served: served.load(Ordering::Relaxed),
+        replicas,
+    })
+}
+
+/// One replica's serving loop: ingest from its queue, tick the engine,
+/// push finished responses to their connections. Blocks on `recv_timeout`
+/// when idle (no busy-wait); after the dispatcher hangs up it keeps
+/// ticking until its remaining work drains.
+fn replica_worker(
+    idx: usize,
+    mut engine: Box<dyn EngineCore>,
+    rx: mpsc::Receiver<ReplicaJob>,
+    router: Arc<Mutex<Router>>,
+    served: Arc<AtomicUsize>,
+) -> Result<EngineMetrics> {
+    let mut pending: HashMap<u64, (u64, mpsc::Sender<String>)> = HashMap::new();
+    let mut open = true;
+    while open || engine.has_work() {
+        // drain whatever the dispatcher routed here
+        loop {
+            match rx.try_recv() {
+                Ok(job) => {
+                    pending.insert(job.req.id, (job.wire_id, job.conn));
+                    engine.submit(job.req);
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
         }
         if engine.has_work() {
-            engine.tick()?;
-        } else {
-            std::thread::sleep(Duration::from_millis(2));
+            if engine.tick()? == Action::Idle {
+                // work queued but the batcher is inside its max_wait
+                // window: yield briefly rather than spinning the tick loop
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        } else if open {
+            // idle replica: block instead of spinning
+            match rx.recv_timeout(IDLE_WAIT) {
+                Ok(job) => {
+                    pending.insert(job.req.id, (job.wire_id, job.conn));
+                    engine.submit(job.req);
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+            }
         }
         for sess in engine.take_finished() {
-            if let Some((wire_id, resp_tx)) = pending.remove(&sess.request.id) {
+            if let Some((wire_id, conn)) = pending.remove(&sess.request.id) {
                 let line = format_response(
                     wire_id,
+                    idx,
                     sess.prompt_len,
                     &sess.generated,
                     sess.finished,
                 );
-                let _ = resp_tx.send(line);
-                served += 1;
+                // the writer thread counts the response once it reaches
+                // the socket; a dead connection counts here so a bounded
+                // serve still terminates
+                if conn.send(ConnLine { line, counts: true }).is_err() {
+                    served.fetch_add(1, Ordering::Relaxed);
+                }
+                router.lock().unwrap().complete(idx);
             }
         }
-        if max_requests > 0 && served >= max_requests && pending.is_empty() {
-            return Ok(served);
-        }
     }
+    Ok(engine.metrics())
 }
 
-fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Queued>) -> Result<()> {
-    let mut writer = stream.try_clone()?;
+/// Connection handler: this thread reads and parses lines; a paired writer
+/// thread owns the write half and serializes responses from all in-flight
+/// requests. Multiple requests per connection proceed concurrently.
+fn handle_conn(
+    stream: TcpStream,
+    ingest: mpsc::Sender<Ingest>,
+    served: Arc<AtomicUsize>,
+) -> Result<()> {
+    let mut write_half = stream.try_clone()?;
+    let (conn_tx, conn_rx) = mpsc::channel::<ConnLine>();
+    let writer = std::thread::spawn(move || {
+        // never exits early: even with a dead socket, every queued
+        // response must still be counted or a bounded serve would wait
+        // forever for deliveries that can no longer happen
+        let mut dead = false;
+        for msg in conn_rx {
+            if !dead {
+                dead = write_half.write_all(msg.line.as_bytes()).is_err()
+                    || write_half.write_all(b"\n").is_err()
+                    || write_half.flush().is_err();
+            }
+            if msg.counts {
+                served.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    });
     let reader = BufReader::new(stream);
     for line in reader.lines() {
         let line = line?;
@@ -151,22 +374,20 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Queued>) -> Result<()> {
         }
         match parse_request(&line) {
             Ok(wire) => {
-                let (resp_tx, resp_rx) = mpsc::channel();
-                tx.send((wire, resp_tx))
-                    .map_err(|_| anyhow!("engine gone"))?;
-                // block this connection until its response is ready
-                let resp = resp_rx.recv().map_err(|_| anyhow!("engine dropped"))?;
-                writer.write_all(resp.as_bytes())?;
-                writer.write_all(b"\n")?;
-                writer.flush()?;
+                ingest
+                    .send((wire, conn_tx.clone()))
+                    .map_err(|_| anyhow!("server gone"))?;
             }
             Err(e) => {
-                let msg = format!("{{\"error\": \"{}\"}}\n", json_escape(&e.to_string()));
-                writer.write_all(msg.as_bytes())?;
-                writer.flush()?;
+                let line = format!("{{\"error\": \"{}\"}}", json_escape(&e.to_string()));
+                let _ = conn_tx.send(ConnLine { line, counts: false });
             }
         }
     }
+    // reader EOF: drop our sender; the writer exits once every in-flight
+    // response (whose jobs hold clones) has been delivered
+    drop(conn_tx);
+    let _ = writer.join();
     Ok(())
 }
 
@@ -177,7 +398,15 @@ mod tests {
     #[test]
     fn parses_requests() {
         let r = parse_request(r#"{"id": 3, "prompt": "hi", "max_new_tokens": 5}"#).unwrap();
-        assert_eq!(r, WireRequest { id: 3, prompt: "hi".into(), max_new_tokens: 5 });
+        assert_eq!(
+            r,
+            WireRequest {
+                id: 3,
+                prompt: "hi".into(),
+                max_new_tokens: 5,
+                session_key: None
+            }
+        );
         // default max_new_tokens
         let r = parse_request(r#"{"id": 1, "prompt": "x"}"#).unwrap();
         assert_eq!(r.max_new_tokens, 16);
@@ -186,20 +415,32 @@ mod tests {
     }
 
     #[test]
+    fn parses_session_keys() {
+        let n = parse_request(r#"{"id": 1, "prompt": "x", "session_key": 42}"#).unwrap();
+        assert_eq!(n.session_key, Some(42));
+        let s = parse_request(r#"{"id": 1, "prompt": "x", "session_key": "user-7"}"#).unwrap();
+        assert_eq!(s.session_key, Some(hash_session_key("user-7")));
+        let s2 = parse_request(r#"{"id": 2, "prompt": "y", "session_key": "user-7"}"#).unwrap();
+        assert_eq!(s.session_key, s2.session_key, "string keys hash stably");
+    }
+
+    #[test]
     fn formats_responses() {
-        let line = format_response(7, 3, &[104, 105, 257], Some(FinishReason::Eos));
+        let line = format_response(7, 1, 3, &[104, 105, 257], Some(FinishReason::Eos));
         assert!(line.contains("\"id\": 7"));
         assert!(line.contains("\"text\": \"hi\""));
+        assert!(line.contains("\"replica\": 1"));
         assert!(line.contains("\"finish\": \"eos\""));
         // round-trips through our own parser
         let j = Json::parse(&line).unwrap();
         assert_eq!(j.get("prompt_tokens").unwrap().as_usize().unwrap(), 3);
         assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(j.get("replica").unwrap().as_usize().unwrap(), 1);
     }
 
     #[test]
     fn escaping_is_safe() {
-        let line = format_response(1, 0, &[34, 92, 10], None);
+        let line = format_response(1, 0, 0, &[34, 92, 10], None);
         assert!(Json::parse(&line).is_ok(), "{line}");
     }
 }

@@ -9,6 +9,9 @@ pub struct Request {
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
     pub arrival: Instant,
+    /// Router affinity key (multi-turn conversations set it so follow-ups
+    /// land on the replica that may still hold their prefix).
+    pub session_key: Option<u64>,
 }
 
 impl Request {
@@ -18,7 +21,13 @@ impl Request {
             prompt,
             max_new_tokens,
             arrival: Instant::now(),
+            session_key: None,
         }
+    }
+
+    pub fn with_session_key(mut self, key: u64) -> Self {
+        self.session_key = Some(key);
+        self
     }
 }
 
@@ -29,7 +38,8 @@ pub enum FinishReason {
     CacheFull,
 }
 
-/// A running generation (occupies one batch slot).
+/// A running generation (occupies one batch slot, or the preemption queue
+/// while its compressed cache sits in the swap pool).
 #[derive(Debug)]
 pub struct Session {
     pub request: Request,
@@ -37,6 +47,8 @@ pub struct Session {
     pub generated: Vec<i32>,
     pub first_token_at: Option<Instant>,
     pub finished: Option<FinishReason>,
+    /// How many times this session was swapped out under memory pressure.
+    pub preemptions: u32,
 }
 
 impl Session {
@@ -47,6 +59,7 @@ impl Session {
             generated: Vec::new(),
             first_token_at: None,
             finished: None,
+            preemptions: 0,
         }
     }
 

@@ -6,7 +6,9 @@
 //! quantizer against python golden vectors AND the AOT kernel artifacts.
 
 use anyhow::{bail, Result};
-use turboangle::coordinator::{BatchPolicy, Engine, EngineConfig, SchedulerPolicy};
+use turboangle::coordinator::{
+    BatchPolicy, Engine, EngineConfig, EngineCore, RoutePolicy, SchedulerPolicy,
+};
 use turboangle::eval::{search, sensitivity, sweep, PplHarness};
 use turboangle::quant::{angle, fwht, norm, Mode, NormMode, QuantConfig};
 use turboangle::report;
@@ -42,10 +44,22 @@ SUBCOMMANDS
   serve      [--model M] [--requests N] [--gen-max N] [--no-quant]
   seed-sweep [--model M] [--seeds N]                dPPL spread over random D (paper limitation)
   allocate   [--model M] [--budget B] [--group G]   greedy per-layer bit allocation (extension)
-  listen     [--model M] [--addr A] [--max-requests N]  TCP JSON-lines server
+  listen     [--model M] [--addr A] [--max-requests N] [--replicas N]
+             [--route-policy rr|least-loaded|affinity] [--sim]
+             multi-replica TCP JSON-lines server (--sim: deterministic
+             simulated backend, no artifacts needed)
   selfcheck                                         golden + HLO cross-validation
   eval       [--model M] [--nk N] [--nv N] [--n-early E] [--nk-hi N] [--nv-hi N] [--norms fp32|norm8|k8v4log]
 ";
+
+fn parse_route_policy(s: &str) -> Result<RoutePolicy> {
+    Ok(match s {
+        "rr" | "round-robin" => RoutePolicy::RoundRobin,
+        "least-loaded" => RoutePolicy::LeastLoaded,
+        "affinity" | "session-affinity" => RoutePolicy::SessionAffinity,
+        other => bail!("unknown route policy '{other}' (rr|least-loaded|affinity)"),
+    })
+}
 
 fn harness(artifacts: &str, model: &str) -> Result<PplHarness> {
     let manifest = Manifest::load(artifacts)?;
@@ -187,23 +201,38 @@ fn main() -> Result<()> {
             let model = args.get_str("model", "smollm2-sim");
             let addr = args.get_str("addr", "127.0.0.1:7777");
             let max_requests = args.get_usize("max-requests", 0)?;
-            let manifest = Manifest::load(&artifacts)?;
-            let rt = Runtime::cpu()?;
-            let exec = ModelExecutor::load(&rt, &manifest, &model, Entry::Serve)?;
-            let l = exec.profile.n_layers;
-            let mut engine = Engine::new(
-                exec,
-                EngineConfig {
-                    quant: QuantConfig::paper_uniform(l).with_k8v4_log(),
-                    batch_policy: BatchPolicy::default(),
-                    scheduler: SchedulerPolicy::default(),
-                    capacity_pages: 4096,
-                    page_tokens: 16,
-                },
-            );
-            let served = turboangle::coordinator::server::serve(&mut engine, &addr, max_requests)?;
-            println!("served {served} requests");
-            println!("{}", engine.metrics.report());
+            let replicas = args.get_usize("replicas", 1)?;
+            let policy = parse_route_policy(&args.get_str("route-policy", "affinity"))?;
+            let engine_cfg = |l: usize| EngineConfig {
+                quant: QuantConfig::paper_uniform(l).with_k8v4_log(),
+                batch_policy: BatchPolicy::default(),
+                scheduler: SchedulerPolicy::default(),
+                capacity_pages: 4096,
+                page_tokens: 16,
+            };
+            let mut engines: Vec<Box<dyn EngineCore>> = Vec::with_capacity(replicas);
+            if args.get_bool("sim") {
+                // identical seeds: the replicas serve the same "model"
+                for _ in 0..replicas {
+                    let sim = turboangle::runtime::SimExecutor::new(1);
+                    let l = turboangle::runtime::ModelBackend::profile(&sim).n_layers;
+                    engines.push(Box::new(Engine::new(sim, engine_cfg(l))));
+                }
+            } else {
+                let manifest = Manifest::load(&artifacts)?;
+                let rt = Runtime::cpu()?;
+                for _ in 0..replicas {
+                    let exec = ModelExecutor::load(&rt, &manifest, &model, Entry::Serve)?;
+                    let l = exec.profile.n_layers;
+                    engines.push(Box::new(Engine::new(exec, engine_cfg(l))));
+                }
+            }
+            let summary =
+                turboangle::coordinator::server::serve(engines, &addr, policy, max_requests)?;
+            println!("served {} requests across {replicas} replicas", summary.served);
+            for (i, m) in summary.replicas.iter().enumerate() {
+                println!("-- replica {i} --\n{}", m.report());
+            }
         }
         "selfcheck" => selfcheck(&artifacts)?,
         "eval" => {

@@ -1,0 +1,88 @@
+//! The model-execution contract the serving engine programs against.
+//!
+//! [`ModelBackend`] is the seam between the coordinator and whatever runs
+//! the transformer math: the PJRT-backed [`ModelExecutor`] in production,
+//! or [`super::sim::SimExecutor`] — a closed-form deterministic stand-in —
+//! in tests, benches, and environments without compiled artifacts. The
+//! engine only ever sees this trait, so every replica of the serving stack
+//! is backend-agnostic.
+
+use super::executor::{DecodeOut, ModelExecutor, PrefillOut};
+use super::manifest::{Profile, ServeProtocol};
+use crate::quant::QuantConfig;
+use anyhow::Result;
+
+/// Everything the engine needs from a model: static shape info plus the
+/// two serving entry points. `Send` because replicas run on dedicated
+/// worker threads (each backend instance is owned by exactly one thread).
+pub trait ModelBackend: Send {
+    fn profile(&self) -> &Profile;
+    fn serve(&self) -> &ServeProtocol;
+
+    /// (L, B, H, Tmax, d/2) for the dense serving-cache tensors.
+    fn cache_dims(&self) -> (usize, usize, usize, usize, usize) {
+        let p = self.profile();
+        let s = self.serve();
+        (p.n_layers, s.batch, p.n_kv_heads, s.tmax, p.d_head / 2)
+    }
+
+    /// Prompt prefill over (serve.batch × serve.prefill_len) PAD-padded
+    /// tokens. Output slabs are (L, B, H, Tp, d/2) row-major: raw pair
+    /// norms + angle bin indices (as f32 codes), plus last-token logits.
+    fn run_prefill(
+        &self,
+        tokens: &[i32],
+        lengths: &[i32],
+        cfg: &QuantConfig,
+    ) -> Result<PrefillOut>;
+
+    /// One decode step over the dense reinflated cache; cache slices are
+    /// (L, B, H, Tmax, d/2) row-major f32.
+    #[allow(clippy::too_many_arguments)]
+    fn run_decode(
+        &self,
+        token: &[i32],
+        pos: &[i32],
+        cfg: &QuantConfig,
+        kr: &[f32],
+        ki: &[f32],
+        vr: &[f32],
+        vi: &[f32],
+    ) -> Result<DecodeOut>;
+}
+
+impl ModelBackend for ModelExecutor {
+    fn profile(&self) -> &Profile {
+        &self.profile
+    }
+
+    fn serve(&self) -> &ServeProtocol {
+        &self.serve
+    }
+
+    fn cache_dims(&self) -> (usize, usize, usize, usize, usize) {
+        ModelExecutor::cache_dims(self)
+    }
+
+    fn run_prefill(
+        &self,
+        tokens: &[i32],
+        lengths: &[i32],
+        cfg: &QuantConfig,
+    ) -> Result<PrefillOut> {
+        ModelExecutor::run_prefill(self, tokens, lengths, cfg)
+    }
+
+    fn run_decode(
+        &self,
+        token: &[i32],
+        pos: &[i32],
+        cfg: &QuantConfig,
+        kr: &[f32],
+        ki: &[f32],
+        vr: &[f32],
+        vi: &[f32],
+    ) -> Result<DecodeOut> {
+        ModelExecutor::run_decode(self, token, pos, cfg, kr, ki, vr, vi)
+    }
+}

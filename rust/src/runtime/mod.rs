@@ -1,11 +1,15 @@
 //! Runtime layer: PJRT client, AOT artifact loading, weights, and the
 //! model executor. Python never runs here — artifacts are self-contained.
 
+pub mod backend;
 pub mod executor;
 pub mod manifest;
 pub mod pjrt;
+pub mod sim;
 pub mod tensorfile;
 
+pub use backend::ModelBackend;
 pub use executor::{DecodeOut, Entry, ModelExecutor, PrefillOut};
 pub use manifest::{Manifest, Profile};
 pub use pjrt::{Program, Runtime};
+pub use sim::SimExecutor;

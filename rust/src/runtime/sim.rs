@@ -1,0 +1,310 @@
+//! Deterministic simulated model backend — the serving stack's test
+//! double when no compiled artifacts / PJRT runtime exist.
+//!
+//! [`SimExecutor`] implements [`super::ModelBackend`] with closed-form
+//! hashing instead of a transformer. Two properties make it useful beyond
+//! a stub:
+//!
+//! * **Deterministic**: the same prompt always generates the same tokens,
+//!   so end-to-end tests can compare runs exactly.
+//! * **Cache-sensitive**: each decode step folds a checksum of the lane's
+//!   *reinflated dense cache* (every kr/ki/vr/vi element up to `pos`) into
+//!   the next token. Any corruption anywhere in the compressed store —
+//!   a bad bit-unpack, a lossy swap-out/swap-in, a stale dense refill —
+//!   changes the generated text. That is exactly the property preemption
+//!   tests need: swap a sequence out and back in, and bit-identical
+//!   restoration is *observable from the tokens*.
+//!
+//! The emitted "compressed" entries respect the [`QuantConfig`] the engine
+//! passes (angle codes < n_bins, positive raw norms), so the kv_manager
+//! packs them at the exact widths production uses.
+
+use super::backend::ModelBackend;
+use super::executor::{DecodeOut, PrefillOut};
+use super::manifest::{Profile, ServeProtocol};
+use crate::quant::QuantConfig;
+use crate::util::hash::splitmix64 as mix;
+use anyhow::{ensure, Result};
+
+pub struct SimExecutor {
+    profile: Profile,
+    serve: ServeProtocol,
+    seed: u64,
+}
+
+impl SimExecutor {
+    /// Small default geometry: 2 layers, 2 KV heads, d_head 8, batch 4,
+    /// prefill 32, tmax 64 — big enough to exercise paging and batching,
+    /// small enough that a full serve run is microseconds.
+    pub fn new(seed: u64) -> Self {
+        Self::with_dims(seed, 2, 2, 8, 4, 32, 64)
+    }
+
+    pub fn with_dims(
+        seed: u64,
+        n_layers: usize,
+        n_kv_heads: usize,
+        d_head: usize,
+        batch: usize,
+        prefill_len: usize,
+        tmax: usize,
+    ) -> Self {
+        assert!(d_head % 2 == 0, "d_head must be even (polar pairs)");
+        SimExecutor {
+            profile: Profile {
+                name: "sim".to_string(),
+                mirrors: "none (deterministic hash model)".to_string(),
+                n_layers,
+                d_head,
+                n_q_heads: n_kv_heads,
+                n_kv_heads,
+                d_model: n_kv_heads * d_head,
+                d_ff: 4 * n_kv_heads * d_head,
+                vocab: 259,
+                gqa_ratio: 1,
+                param_count: 0,
+                weights: String::new(),
+                eval_hlo: String::new(),
+                prefill_hlo: String::new(),
+                decode_hlo: String::new(),
+                eval_inputs: Vec::new(),
+                prefill_inputs: Vec::new(),
+                decode_inputs: Vec::new(),
+            },
+            serve: ServeProtocol {
+                batch,
+                prefill_len,
+                tmax,
+            },
+            seed,
+        }
+    }
+
+    /// Fold one prompt prefix into a rolling state.
+    fn prompt_state(&self, tokens: &[i32]) -> u64 {
+        let mut h = mix(self.seed ^ 0x5EED);
+        for &t in tokens {
+            h = mix(h ^ t as u64);
+        }
+        h
+    }
+
+    /// Derive a (raw norm, angle code) pair for one element.
+    fn entry(h: u64, bins: u32) -> (f32, f32) {
+        let r = 0.1 + (h % 1009) as f32 / 252.0; // positive, spread
+        let k = (mix(h) % bins as u64) as f32; // valid code for this layer
+        (r, k)
+    }
+
+    fn next_token(state: u64) -> i32 {
+        // rare EOS keeps most runs length-bounded but exercises both paths
+        if state % 97 == 0 {
+            257 // EOS (engine::EOS)
+        } else {
+            (state % 250) as i32
+        }
+    }
+
+    /// One-hot logits for `tok`, with low state bits folded into the peak
+    /// value: argmax is unchanged, but distinct states produce distinct
+    /// logit vectors even when they pick the same token (tests compare
+    /// whole vectors).
+    fn set_logits(logits: &mut [f32], lane: usize, vocab: usize, tok: i32, state: u64) {
+        let idx = lane * vocab + tok.rem_euclid(vocab as i32) as usize;
+        logits[idx] = 1.0 + (state % 65536) as f32 / 1.0e6;
+    }
+}
+
+impl ModelBackend for SimExecutor {
+    fn profile(&self) -> &Profile {
+        &self.profile
+    }
+
+    fn serve(&self) -> &ServeProtocol {
+        &self.serve
+    }
+
+    fn run_prefill(
+        &self,
+        tokens: &[i32],
+        lengths: &[i32],
+        cfg: &QuantConfig,
+    ) -> Result<PrefillOut> {
+        let (b_n, tp) = (self.serve.batch, self.serve.prefill_len);
+        let (l_n, h_n, half) = (
+            self.profile.n_layers,
+            self.profile.n_kv_heads,
+            self.profile.d_head / 2,
+        );
+        ensure!(tokens.len() == b_n * tp && lengths.len() == b_n);
+        ensure!(cfg.layers.len() == l_n, "config/profile layer mismatch");
+        let vocab = self.profile.vocab;
+        let n = l_n * b_n * h_n * tp * half;
+        let mut out = PrefillOut {
+            logits: vec![0.0; b_n * vocab],
+            kr: vec![0.0; n],
+            ki: vec![0.0; n],
+            vr: vec![0.0; n],
+            vi: vec![0.0; n],
+        };
+        for lane in 0..b_n {
+            let plen = (lengths[lane] as usize).min(tp);
+            let prompt = &tokens[lane * tp..lane * tp + plen];
+            // per-position states: fold of the prompt prefix up to t
+            let mut h = mix(self.seed ^ 0x5EED);
+            for (t, &tok) in prompt.iter().enumerate() {
+                h = mix(h ^ tok as u64);
+                for l in 0..l_n {
+                    let bins = cfg.layers[l];
+                    for hd in 0..h_n {
+                        let base = (((l * b_n + lane) * h_n + hd) * tp + t) * half;
+                        for i in 0..half {
+                            let tag = ((l as u64) << 40) | ((hd as u64) << 32) | (i as u64);
+                            let e = mix(h ^ tag);
+                            let (r, k) = Self::entry(e, bins.n_k);
+                            out.kr[base + i] = r;
+                            out.ki[base + i] = k;
+                            let (r, k) = Self::entry(mix(e ^ 0x56), bins.n_v);
+                            out.vr[base + i] = r;
+                            out.vi[base + i] = k;
+                        }
+                    }
+                }
+            }
+            let state = self.prompt_state(prompt);
+            Self::set_logits(&mut out.logits, lane, vocab, Self::next_token(state), state);
+        }
+        Ok(out)
+    }
+
+    fn run_decode(
+        &self,
+        token: &[i32],
+        pos: &[i32],
+        cfg: &QuantConfig,
+        kr: &[f32],
+        ki: &[f32],
+        vr: &[f32],
+        vi: &[f32],
+    ) -> Result<DecodeOut> {
+        let (l_n, b_n, h_n, tmax, half) = self.cache_dims();
+        ensure!(token.len() == b_n && pos.len() == b_n);
+        ensure!(kr.len() == l_n * b_n * h_n * tmax * half, "cache shape");
+        ensure!(cfg.layers.len() == l_n, "config/profile layer mismatch");
+        let vocab = self.profile.vocab;
+        let mut out = DecodeOut {
+            logits: vec![0.0; b_n * vocab],
+            kr: vec![0.0; l_n * b_n * h_n * half],
+            ki: vec![0.0; l_n * b_n * h_n * half],
+            vr: vec![0.0; l_n * b_n * h_n * half],
+            vi: vec![0.0; l_n * b_n * h_n * half],
+        };
+        for lane in 0..b_n {
+            // rows [0, pos) are the KV-resident prefix — exactly what the
+            // real decode HLO reads from the dense cache (the current
+            // token's KV is computed in-graph, and the engine only refills
+            // rows below the committed kv length, which equals `pos`)
+            let len = (pos[lane].max(0) as usize).min(tmax);
+            // checksum over every reinflated element of this lane's cache:
+            // the "attention" — any single-bit change in the compressed
+            // store flips the generated token stream
+            let mut acc: u64 = 0;
+            for l in 0..l_n {
+                for hd in 0..h_n {
+                    for t in 0..len {
+                        let base = (((l * b_n + lane) * h_n + hd) * tmax + t) * half;
+                        for i in 0..half {
+                            acc = mix(
+                                acc ^ (kr[base + i].to_bits() as u64)
+                                    ^ ((ki[base + i].to_bits() as u64) << 16)
+                                    ^ ((vr[base + i].to_bits() as u64) << 32)
+                                    ^ ((vi[base + i].to_bits() as u64) << 8),
+                            );
+                        }
+                    }
+                }
+            }
+            let state = mix(acc ^ (token[lane] as u64) ^ ((pos[lane] as u64) << 48));
+            let tok = Self::next_token(state);
+            Self::set_logits(&mut out.logits, lane, vocab, tok, state);
+            // this step's compressed KV entries
+            for l in 0..l_n {
+                let bins = cfg.layers[l];
+                for hd in 0..h_n {
+                    let base = ((l * b_n + lane) * h_n + hd) * half;
+                    for i in 0..half {
+                        let tag = ((l as u64) << 40) | ((hd as u64) << 32) | (i as u64);
+                        let e = mix(state ^ tag);
+                        let (r, k) = Self::entry(e, bins.n_k);
+                        out.kr[base + i] = r;
+                        out.ki[base + i] = k;
+                        let (r, k) = Self::entry(mix(e ^ 0x56), bins.n_v);
+                        out.vr[base + i] = r;
+                        out.vi[base + i] = k;
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> QuantConfig {
+        QuantConfig::paper_uniform(2).with_k8v4_log()
+    }
+
+    #[test]
+    fn prefill_is_deterministic_and_code_bounded() {
+        let sim = SimExecutor::new(7);
+        let (b, tp) = (sim.serve().batch, sim.serve().prefill_len);
+        let mut tokens = vec![0i32; b * tp];
+        tokens[..3].copy_from_slice(&[10, 20, 30]);
+        let mut lengths = vec![1i32; b];
+        lengths[0] = 3;
+        let a = sim.run_prefill(&tokens, &lengths, &cfg()).unwrap();
+        let b2 = sim.run_prefill(&tokens, &lengths, &cfg()).unwrap();
+        assert_eq!(a.logits, b2.logits);
+        assert_eq!(a.ki, b2.ki);
+        for &k in &a.ki {
+            assert!(k >= 0.0 && k < 128.0, "K code {k} out of range");
+        }
+        for &k in &a.vi {
+            assert!(k >= 0.0 && k < 64.0, "V code {k} out of range");
+        }
+        for &r in &a.kr {
+            assert!(r >= 0.0, "norms must be non-negative");
+        }
+    }
+
+    #[test]
+    fn decode_depends_on_cache_contents() {
+        let sim = SimExecutor::new(7);
+        let (l, b, h, tmax, half) = sim.cache_dims();
+        let n = l * b * h * tmax * half;
+        let kr = vec![0.5; n];
+        let token = vec![42i32; b];
+        let pos = vec![2i32; b];
+        let out1 = sim
+            .run_decode(&token, &pos, &cfg(), &kr, &kr, &kr, &kr)
+            .unwrap();
+        let mut kr2 = kr.clone();
+        kr2[half] = 0.75; // one element inside lane 0's attended range
+        let out2 = sim
+            .run_decode(&token, &pos, &cfg(), &kr2, &kr, &kr, &kr)
+            .unwrap();
+        assert_ne!(
+            out1.logits[..sim.profile().vocab],
+            out2.logits[..sim.profile().vocab],
+            "lane 0's token must see the cache change"
+        );
+        // other lanes unaffected (their cache region is unchanged)
+        assert_eq!(
+            out1.logits[sim.profile().vocab..],
+            out2.logits[sim.profile().vocab..]
+        );
+    }
+}

@@ -1,7 +1,9 @@
 //! In-tree substrates for the offline environment: JSON parsing, CLI flag
-//! parsing, a micro-bench harness, and property-testing helpers.
+//! parsing, a micro-bench harness, property-testing helpers, and shared
+//! integer hashing.
 
 pub mod bench;
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod prop;

@@ -44,6 +44,9 @@ pub struct WorkloadSpec {
     pub gen_max: usize,
     pub n_requests: usize,
     pub seed: u64,
+    /// Number of distinct multi-turn sessions to spread requests over
+    /// (0 = no session keys). Exercises session-affinity routing.
+    pub sessions: usize,
 }
 
 impl Default for WorkloadSpec {
@@ -55,6 +58,7 @@ impl Default for WorkloadSpec {
             gen_max: 32,
             n_requests: 16,
             seed: 42,
+            sessions: 0,
         }
     }
 }
@@ -79,7 +83,12 @@ pub fn generate(spec: &WorkloadSpec) -> Vec<Request> {
                     }
                 })
                 .collect();
-            Request::new(i as u64, prompt, glen)
+            let req = Request::new(i as u64, prompt, glen);
+            if spec.sessions > 0 {
+                req.with_session_key((i % spec.sessions) as u64)
+            } else {
+                req
+            }
         })
         .collect()
 }
@@ -121,12 +130,30 @@ mod tests {
             gen_max: 3,
             n_requests: 50,
             seed: 7,
+            sessions: 0,
         };
         for r in generate(&spec) {
             assert!(r.prompt.len() >= 4 && r.prompt.len() <= 8);
             assert!(r.max_new_tokens >= 2 && r.max_new_tokens <= 3);
             assert!(r.prompt.iter().all(|&t| t == 32 || (97..123).contains(&t)));
         }
+    }
+
+    #[test]
+    fn session_keys_assigned_round_robin() {
+        let spec = WorkloadSpec {
+            n_requests: 8,
+            sessions: 3,
+            ..Default::default()
+        };
+        let reqs = generate(&spec);
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.session_key, Some((i % 3) as u64));
+        }
+        // default: no keys
+        assert!(generate(&WorkloadSpec::default())
+            .iter()
+            .all(|r| r.session_key.is_none()));
     }
 
     #[test]

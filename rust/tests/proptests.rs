@@ -1,7 +1,8 @@
 //! Property-based tests (util::prop) over the quantizer, packing, rate
 //! accounting, and coordinator policies — the invariants DESIGN.md §8 lists.
 
-use turboangle::coordinator::batcher::{BatchPolicy, DynamicBatcher};
+use turboangle::coordinator::batcher::{Admission, BatchPolicy, DynamicBatcher};
+use turboangle::coordinator::kv_manager::PagedKvCache;
 use turboangle::coordinator::router::{RoutePolicy, Router};
 use turboangle::coordinator::session::Request;
 use turboangle::quant::packing::{bits_for, pack, unpack};
@@ -247,13 +248,48 @@ fn prop_batcher_never_exceeds_slots_and_preserves_fifo() {
             b.submit(Request::new(i as u64, vec![1], 4));
         }
         let free = g.usize_in(0, 8);
-        let batch = b.take_batch(free, |_| true);
-        assert!(batch.len() <= free);
-        assert!(batch.len() <= n);
-        for (i, r) in batch.iter().enumerate() {
+        let batch = b.take_batch(free, |_| Admission::Admit);
+        assert!(batch.admitted.len() <= free);
+        assert!(batch.admitted.len() <= n);
+        assert!(batch.rejected.is_empty());
+        for (i, r) in batch.admitted.iter().enumerate() {
             assert_eq!(r.id, i as u64, "FIFO violated");
         }
-        assert_eq!(b.pending(), n - batch.len());
+        assert_eq!(b.pending(), n - batch.admitted.len());
+    });
+}
+
+#[test]
+fn prop_batcher_rejects_never_block_admissible_tail() {
+    // capacity-impossible requests are popped and returned, so whatever
+    // fits behind them is still admitted in the same pass (no starvation)
+    run_cases(200, |g| {
+        let mut b = DynamicBatcher::new(BatchPolicy::default());
+        let n = g.usize_in(1, 20);
+        // mark a random subset as impossible via max_new_tokens == 999
+        let mut impossible = 0;
+        for i in 0..n {
+            let doomed = g.bool();
+            impossible += doomed as usize;
+            b.submit(Request::new(i as u64, vec![1], if doomed { 999 } else { 4 }));
+        }
+        let batch = b.take_batch(n, |r| {
+            if r.max_new_tokens == 999 {
+                Admission::Reject
+            } else {
+                Admission::Admit
+            }
+        });
+        assert_eq!(batch.rejected.len(), impossible);
+        assert_eq!(batch.admitted.len(), n - impossible);
+        assert_eq!(b.pending(), 0);
+        // relative FIFO order survives within each class
+        for w in batch.admitted.windows(2) {
+            assert!(w[0].id < w[1].id);
+        }
+        for w in batch.rejected.windows(2) {
+            assert!(w[0].id < w[1].id);
+        }
     });
 }
 
@@ -288,6 +324,95 @@ fn prop_router_load_conservation() {
             let min = *r.loads().iter().min().unwrap();
             assert!(max - min <= 1, "pure least-loaded fills evenly");
         }
+    });
+}
+
+#[test]
+fn prop_session_affinity_stable_under_load_churn() {
+    // a session key's replica never changes, no matter how routing and
+    // completion churn the load vector around it
+    run_cases(150, |g| {
+        let replicas = g.usize_in(1, 8);
+        let mut r = Router::new(replicas, RoutePolicy::SessionAffinity);
+        let mut first: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+        let mut outstanding = Vec::new();
+        for _ in 0..g.usize_in(1, 200) {
+            if g.bool() || outstanding.is_empty() {
+                let key = g.u64() % 12;
+                let picked = r.route(Some(key));
+                let expect = *first.entry(key).or_insert(picked);
+                assert_eq!(picked, expect, "affinity broke for key {key}");
+                outstanding.push(picked);
+            } else {
+                let i = g.usize_in(0, outstanding.len() - 1);
+                r.complete(outstanding.swap_remove(i));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_least_loaded_never_picks_strictly_more_loaded() {
+    run_cases(150, |g| {
+        let replicas = g.usize_in(1, 8);
+        let mut r = Router::new(replicas, RoutePolicy::LeastLoaded);
+        let mut outstanding = Vec::new();
+        for _ in 0..g.usize_in(1, 200) {
+            if g.bool() || outstanding.is_empty() {
+                let min_before = *r.loads().iter().min().unwrap();
+                let picked = r.route(None);
+                // load of `picked` *before* routing is its load now minus 1
+                assert_eq!(
+                    r.loads()[picked] - 1,
+                    min_before,
+                    "least-loaded picked a strictly more-loaded replica"
+                );
+                outstanding.push(picked);
+            } else {
+                let i = g.usize_in(0, outstanding.len() - 1);
+                r.complete(outstanding.swap_remove(i));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_swap_roundtrip_restores_dense_reinflation_bit_identically() {
+    run_cases(60, |g| {
+        let l_n = g.usize_in(1, 3);
+        let h_n = g.usize_in(1, 2);
+        let d = *g.choice(&[8usize, 16]);
+        let half = d / 2;
+        let tokens = g.usize_in(1, 10);
+        let tmax = 16;
+        let norms = *g.choice(&[
+            (NormMode::FP32, NormMode::FP32),
+            (NormMode::LINEAR8, NormMode::LOG4),
+        ]);
+        let cfg = QuantConfig::paper_uniform(l_n).with_norms(norms.0, norms.1);
+        let mut c = PagedKvCache::new(cfg, l_n, h_n, d, tmax, 64, 4);
+        c.new_seq(1, tokens).unwrap();
+        for _ in 0..tokens {
+            for l in 0..l_n {
+                for h in 0..h_n {
+                    let kr = g.f32_vec(half, 0.05, 4.0);
+                    let ki: Vec<f32> = (0..half).map(|_| (g.u64() % 128) as f32).collect();
+                    let vr = g.f32_vec(half, 0.05, 4.0);
+                    let vi: Vec<f32> = (0..half).map(|_| (g.u64() % 64) as f32).collect();
+                    c.append_token_lh(1, l, h, &kr, &ki, &vr, &vi).unwrap();
+                }
+            }
+            c.commit_token(1).unwrap();
+        }
+        let n = l_n * h_n * tmax * half;
+        let mut a = (vec![0.0f32; n], vec![0.0f32; n], vec![0.0f32; n], vec![0.0f32; n]);
+        c.fill_dense(1, 0, 1, &mut a.0, &mut a.1, &mut a.2, &mut a.3).unwrap();
+        c.swap_out(1).unwrap();
+        assert_eq!(c.memory_stats().pages_allocated, 0);
+        assert!(c.swap_in(1, tokens).unwrap());
+        let mut b = (vec![0.0f32; n], vec![0.0f32; n], vec![0.0f32; n], vec![0.0f32; n]);
+        c.fill_dense(1, 0, 1, &mut b.0, &mut b.1, &mut b.2, &mut b.3).unwrap();
+        assert_eq!(a, b, "swap-out → swap-in must reinflate bit-identically");
     });
 }
 
