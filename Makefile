@@ -3,7 +3,8 @@
 
 ARTIFACTS ?= artifacts
 
-.PHONY: all artifacts test bench smoke fmt lint clean
+.PHONY: all artifacts test bench smoke bench-serving smoke-serving \
+        bench-fused smoke-fused fmt lint clean
 
 all: test
 
@@ -38,6 +39,14 @@ bench-serving:
 smoke-serving:
 	cargo bench --bench serving_throughput -- --smoke
 
+# Fused dequant-attention read path vs dense reinflation (steady +
+# post-swap regimes), writes BENCH_fused_attention.json.
+bench-fused:
+	cargo bench --bench fused_attention
+
+smoke-fused:
+	cargo bench --bench fused_attention -- --smoke
+
 fmt:
 	cargo fmt --all
 
@@ -47,4 +56,4 @@ lint:
 
 clean:
 	cargo clean
-	rm -f BENCH_quant_hot_path.json BENCH_serving_throughput.json
+	rm -f BENCH_quant_hot_path.json BENCH_serving_throughput.json BENCH_fused_attention.json

@@ -11,7 +11,7 @@
 //! python is nowhere on the request path.
 
 use anyhow::Result;
-use turboangle::coordinator::{BatchPolicy, Engine, EngineConfig, SchedulerPolicy};
+use turboangle::coordinator::{BatchPolicy, Engine, EngineConfig, ReadPath, SchedulerPolicy};
 use turboangle::eval::{sweep, PplHarness};
 use turboangle::quant::{Mode, NormMode, QuantConfig};
 use turboangle::runtime::{Entry, Manifest, ModelExecutor, Runtime};
@@ -34,6 +34,7 @@ fn run_engine(
             scheduler: SchedulerPolicy::default(),
             capacity_pages: 2048,
             page_tokens: 16,
+            read_path: ReadPath::Auto,
         },
     );
     let spec = WorkloadSpec {

@@ -1,0 +1,280 @@
+//! Fused dequant-attention read path vs dense reinflation — the tentpole
+//! comparison behind `BENCH_fused_attention.json`.
+//!
+//! One "decode step" reads every resident lane's whole attended cache,
+//! exactly like the engine's per-tick attention scoring. Two read paths:
+//!
+//! * **reinflate** — the legacy path: keep `(L,B,H,Tmax,d/2)` dense f32
+//!   tensors warm (`fill_dense_range`) and scan them. Measured in two
+//!   regimes: `steady` (one-token incremental top-up per step — the best
+//!   case) and `postswap` (full refill per step — what every step after a
+//!   swap-in/seat pays, i.e. the preemption-churn regime of an overloaded
+//!   server).
+//! * **fused** — decode compressed pages tile-by-tile into one page-sized
+//!   scratch (`visit_seq_tiles`) and scan the tiles. No dense tensors, no
+//!   refill debt after a swap-in: the compressed stream moved verbatim and
+//!   the next step just reads it.
+//!
+//! Both paths fold the identical checksum over the identical values (tile
+//! decode is bit-identical to `fill_dense` by construction — proptested),
+//! and the bench asserts the checksums agree before timing anything.
+//!
+//! JSON summary fields (documented in README "Fused read path"):
+//! `reinflate_steady_elems_per_s`, `reinflate_postswap_elems_per_s`,
+//! `fused_elems_per_s`, `speedup_vs_steady`, `speedup_vs_postswap`,
+//! `fused_vs_reinflate_speedup` (headline: the postswap/churn regime the
+//! fused path exists to kill), `fused_scratch_peak_bytes`,
+//! `reinflate_dense_bytes`, `lanes`/`layers`/`heads`/`tokens`/`d_head`.
+//!
+//!     cargo bench --bench fused_attention [-- --smoke]
+
+use rayon::prelude::*;
+use std::time::Duration;
+use turboangle::coordinator::{PagedKvCache, TileScratch};
+use turboangle::quant::{NormMode, QuantConfig};
+use turboangle::util::bench::{bench, black_box, BenchResult, JsonReport};
+use turboangle::util::prop::Gen;
+
+const OUT_JSON: &str = "BENCH_fused_attention.json";
+
+/// Cheap order-sensitive fold — identical for both paths, so the checksum
+/// equality assert catches any divergence between tile and dense decode.
+#[inline(always)]
+fn fold(acc: u64, kr: f32, ki: f32, vr: f32, vi: f32) -> u64 {
+    acc.rotate_left(13)
+        ^ (kr.to_bits() as u64)
+        ^ ((ki.to_bits() as u64) << 16)
+        ^ ((vr.to_bits() as u64) << 32)
+        ^ ((vi.to_bits() as u64) << 8)
+}
+
+struct Geom {
+    l_n: usize,
+    h_n: usize,
+    lanes: usize,
+    d: usize,
+    tokens: usize,
+    page_tokens: usize,
+}
+
+/// Per-lane state: its own dense (L,1,H,Tmax,d/2) buffers (reinflate path)
+/// and its own page-sized tile scratch (fused path), so lanes fan out
+/// across rayon exactly like replica decode work does.
+struct Lane {
+    id: u64,
+    kr: Vec<f32>,
+    ki: Vec<f32>,
+    vr: Vec<f32>,
+    vi: Vec<f32>,
+    scratch: TileScratch,
+    acc: u64,
+}
+
+fn scan_dense(g: &Geom, len: usize, kr: &[f32], ki: &[f32], vr: &[f32], vi: &[f32]) -> u64 {
+    let half = g.d / 2;
+    let mut acc = 0u64;
+    for l in 0..g.l_n {
+        for h in 0..g.h_n {
+            let base = (l * g.h_n + h) * g.tokens * half;
+            for e in 0..len * half {
+                let i = base + e;
+                acc = fold(acc, kr[i], ki[i], vr[i], vi[i]);
+            }
+        }
+    }
+    acc
+}
+
+/// Reinflate lane's dense tensors from token `from_t` on — `from_t = len-1`
+/// is the steady-state incremental top-up, `from_t = 0` the full post-swap
+/// rebuild.
+fn refill(kv: &PagedKvCache, lane: &mut Lane, from_t: usize) {
+    let Lane { id, kr, ki, vr, vi, .. } = lane;
+    kv.fill_dense_range(*id, 0, 1, from_t, kr, ki, vr, vi).unwrap();
+}
+
+fn scan_fused(g: &Geom, kv: &PagedKvCache, lane: &mut Lane, len: usize) -> u64 {
+    let mut acc = 0u64;
+    for l in 0..g.l_n {
+        kv.visit_seq_tiles(lane.id, l, len, &mut lane.scratch, &mut |t| {
+            for i in 0..t.tokens * t.half {
+                acc = fold(acc, t.kr[i], t.ki[i], t.vr[i], t.vi[i]);
+            }
+        })
+        .expect("visit tiles");
+    }
+    acc
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let budget = if smoke {
+        Duration::from_millis(40)
+    } else {
+        Duration::from_millis(500)
+    };
+    let g = if smoke {
+        Geom {
+            l_n: 2,
+            h_n: 2,
+            lanes: 2,
+            d: 32,
+            tokens: 128,
+            page_tokens: 16,
+        }
+    } else {
+        Geom {
+            l_n: 4,
+            h_n: 4,
+            lanes: 4,
+            d: 64,
+            tokens: 2048,
+            page_tokens: 32,
+        }
+    };
+    let half = g.d / 2;
+    // LINEAR8 norms on both sides: the exp-free dequant the fused hot path
+    // is tuned for (log-space V norms would pay one exp per element on
+    // every read — a config choice, reported as-is)
+    let cfg = QuantConfig::paper_uniform(g.l_n).with_norms(NormMode::LINEAR8, NormMode::LINEAR8);
+    let pages_per_lane = g.tokens.div_ceil(g.page_tokens);
+    let mut kv = PagedKvCache::new(
+        cfg,
+        g.l_n,
+        g.h_n,
+        g.d,
+        g.tokens,
+        2 * g.lanes * pages_per_lane,
+        g.page_tokens,
+    );
+
+    println!(
+        "== fused attention read path: {} lanes × L{} H{} d{} × {} tokens (pages of {}) ==",
+        g.lanes, g.l_n, g.h_n, g.d, g.tokens, g.page_tokens
+    );
+    let mut rng = Gen::new(17);
+    let mut lanes: Vec<Lane> = Vec::new();
+    for lane in 0..g.lanes {
+        let id = lane as u64 + 1;
+        kv.new_seq(id, g.tokens).unwrap();
+        for _ in 0..g.tokens {
+            for l in 0..g.l_n {
+                for h in 0..g.h_n {
+                    let kr = rng.f32_vec(half, 0.05, 4.0);
+                    let ki: Vec<f32> = (0..half).map(|_| (rng.u64() % 128) as f32).collect();
+                    let vr = rng.f32_vec(half, 0.05, 4.0);
+                    let vi: Vec<f32> = (0..half).map(|_| (rng.u64() % 64) as f32).collect();
+                    kv.append_token_lh(id, l, h, &kr, &ki, &vr, &vi).unwrap();
+                }
+            }
+            kv.commit_token(id).unwrap();
+        }
+        let n = g.l_n * g.h_n * g.tokens * half;
+        lanes.push(Lane {
+            id,
+            kr: vec![0.0; n],
+            ki: vec![0.0; n],
+            vr: vec![0.0; n],
+            vi: vec![0.0; n],
+            scratch: TileScratch::new(),
+            acc: 0,
+        });
+    }
+    let len = g.tokens;
+    let quads_per_step = (g.lanes * g.l_n * g.h_n * len * half) as f64;
+
+    // cross-validate once: tile decode must fold to the dense checksum
+    for lane in lanes.iter_mut() {
+        refill(&kv, lane, 0);
+        let dense = scan_dense(&g, len, &lane.kr, &lane.ki, &lane.vr, &lane.vi);
+        let fused = scan_fused(&g, &kv, lane, len);
+        assert_eq!(dense, fused, "fused tiles diverged from dense reinflation");
+    }
+
+    let mut rep = JsonReport::new();
+    rep.summary("smoke", if smoke { 1.0 } else { 0.0 });
+    rep.summary("rayon_threads", rayon::current_num_threads());
+    let record = |r: &BenchResult, rep: &mut JsonReport, mode: &str, scenario: &str| -> f64 {
+        println!("{}", r.line(Some((quads_per_step, "elem"))));
+        rep.push(
+            r,
+            quads_per_step,
+            "elem",
+            &[
+                ("op", "decode_read".into()),
+                ("mode", mode.into()),
+                ("scenario", scenario.into()),
+                ("lanes", g.lanes.into()),
+                ("layers", g.l_n.into()),
+                ("heads", g.h_n.into()),
+                ("tokens", len.into()),
+                ("d_head", g.d.into()),
+            ],
+        );
+        r.throughput(quads_per_step)
+    };
+
+    // reinflate, steady state: incremental one-token top-up + dense scan
+    let kv_ref = &kv;
+    let geo = &g;
+    let r = bench("reinflate steady (top-up + dense scan)", budget, || {
+        lanes.par_iter_mut().for_each(|lane| {
+            refill(kv_ref, lane, len - 1);
+            lane.acc = scan_dense(geo, len, &lane.kr, &lane.ki, &lane.vr, &lane.vi);
+        });
+        black_box(lanes[0].acc);
+    });
+    let steady = record(&r, &mut rep, "reinflate", "steady");
+
+    // reinflate, post-swap-in: the dense tensors must be rebuilt from the
+    // compressed stream before the scan — every preemption cycle pays this
+    let r = bench("reinflate postswap (full refill + dense scan)", budget, || {
+        lanes.par_iter_mut().for_each(|lane| {
+            refill(kv_ref, lane, 0);
+            lane.acc = scan_dense(geo, len, &lane.kr, &lane.ki, &lane.vr, &lane.vi);
+        });
+        black_box(lanes[0].acc);
+    });
+    let postswap = record(&r, &mut rep, "reinflate", "postswap");
+
+    // fused: page tiles straight from the compressed store, every step —
+    // swap-ins are free (the stream moved verbatim, nothing to rebuild)
+    let r = bench("fused (page-tile decode + scan)", budget, || {
+        lanes.par_iter_mut().for_each(|lane| {
+            lane.acc = scan_fused(geo, kv_ref, lane, len);
+        });
+        black_box(lanes[0].acc);
+    });
+    let fused = record(&r, &mut rep, "fused", "every-step");
+
+    let scratch_peak: usize = lanes.iter().map(|l| l.scratch.bytes()).max().unwrap_or(0);
+    let dense_bytes: usize = lanes
+        .iter()
+        .map(|l| (l.kr.len() + l.ki.len() + l.vr.len() + l.vi.len()) * 4)
+        .sum();
+    // bounded scratch: one page of four d/2 slabs, never per-token growth
+    assert!(
+        scratch_peak <= g.page_tokens * half * 4 * 4,
+        "tile scratch grew past one page: {scratch_peak}"
+    );
+    rep.summary("reinflate_steady_elems_per_s", steady);
+    rep.summary("reinflate_postswap_elems_per_s", postswap);
+    rep.summary("fused_elems_per_s", fused);
+    rep.summary("speedup_vs_steady", fused / steady);
+    rep.summary("speedup_vs_postswap", fused / postswap);
+    // headline: the churn regime (every step after a swap-in/seat) — the
+    // dense path's refill debt is exactly what the fused path deletes
+    rep.summary("fused_vs_reinflate_speedup", fused / postswap);
+    rep.summary("fused_scratch_peak_bytes", scratch_peak);
+    rep.summary("reinflate_dense_bytes", dense_bytes);
+    println!(
+        "\nfused vs reinflate: {:.2}x steady, {:.2}x postswap (headline)\n\
+         scratch {} B (fused, bounded to one page) vs {} B dense tensors (reinflate)",
+        fused / steady,
+        fused / postswap,
+        scratch_peak,
+        dense_bytes
+    );
+    rep.write(OUT_JSON).expect("write bench json");
+    println!("wrote {OUT_JSON}");
+}

@@ -19,7 +19,7 @@ use std::net::{TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 use turboangle::coordinator::server::serve_on;
 use turboangle::coordinator::{
-    BatchPolicy, Engine, EngineConfig, EngineCore, RoutePolicy, SchedulerPolicy,
+    BatchPolicy, Engine, EngineConfig, EngineCore, ReadPath, RoutePolicy, SchedulerPolicy,
 };
 use turboangle::quant::{Mode, NormMode, QuantConfig};
 use turboangle::runtime::{Entry, Manifest, ModelExecutor, Runtime, SimExecutor};
@@ -40,6 +40,7 @@ fn sim_engines(replicas: usize) -> Vec<Box<dyn EngineCore>> {
                     scheduler: SchedulerPolicy::default(),
                     capacity_pages: 1024,
                     page_tokens: 8,
+                    read_path: ReadPath::Auto,
                 },
             )) as Box<dyn EngineCore>
         })
@@ -122,6 +123,7 @@ fn artifact_section(smoke: bool) -> anyhow::Result<()> {
                 scheduler: SchedulerPolicy::default(),
                 capacity_pages: 4096,
                 page_tokens: 16,
+                read_path: ReadPath::Auto,
             },
         );
         let spec = WorkloadSpec {

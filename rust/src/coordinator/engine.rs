@@ -20,7 +20,7 @@
 //! multi-replica server (`server.rs`) only ever sees `dyn EngineCore`.
 
 use super::batcher::{Admission, BatchPolicy, DynamicBatcher};
-use super::kv_manager::{MemoryStats, PagedKvCache};
+use super::kv_manager::{BatchTileReader, MemoryStats, PagedKvCache, TileScratch};
 use super::metrics::EngineMetrics;
 use super::scheduler::{next_action, Action, SchedulerPolicy};
 use super::session::{FinishReason, Request, Session};
@@ -65,6 +65,20 @@ pub trait EngineCore: Send {
     fn metrics(&self) -> EngineMetrics;
 }
 
+/// How decode reads the compressed cache.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ReadPath {
+    /// Fused when the backend supports it, dense reinflation otherwise.
+    #[default]
+    Auto,
+    /// Force the fused tile path; panics at engine construction if the
+    /// backend has none.
+    Fused,
+    /// Force the legacy path: keep dense (L,B,H,Tmax,d/2) buffers warm via
+    /// incremental reinflation and hand them to `run_decode` every tick.
+    Reinflate,
+}
+
 pub struct EngineConfig {
     pub quant: QuantConfig,
     pub batch_policy: BatchPolicy,
@@ -72,6 +86,8 @@ pub struct EngineConfig {
     /// kv pool capacity in pages of `page_tokens`
     pub capacity_pages: usize,
     pub page_tokens: usize,
+    /// decode read path (fused tiles vs dense reinflation)
+    pub read_path: ReadPath,
 }
 
 pub struct Engine<B: ModelBackend = ModelExecutor> {
@@ -85,7 +101,13 @@ pub struct Engine<B: ModelBackend = ModelExecutor> {
     /// Sessions evicted under memory pressure, FIFO. Their compressed
     /// caches live in the kv_manager swap pool until re-admission.
     preempted: VecDeque<Session>,
-    // reusable dense cache buffers (L,B,H,Tmax,d/2)
+    /// resolved read path: true = decode consumes compressed pages
+    /// tile-by-tile, the dense buffers below stay empty
+    fused: bool,
+    /// page-sized dequant scratch for the fused path (bounded: never grows
+    /// past one page of four d/2 slabs, regardless of sequence length)
+    tile_scratch: TileScratch,
+    // reusable dense cache buffers (L,B,H,Tmax,d/2) — reinflate path only
     kr: Vec<f32>,
     ki: Vec<f32>,
     vr: Vec<f32>,
@@ -104,7 +126,20 @@ pub struct Engine<B: ModelBackend = ModelExecutor> {
 impl<B: ModelBackend> Engine<B> {
     pub fn new(exec: B, cfg: EngineConfig) -> Self {
         let (l, b, h, tmax, half) = exec.cache_dims();
-        let n = l * b * h * tmax * half;
+        let fused = match cfg.read_path {
+            ReadPath::Reinflate => false,
+            ReadPath::Auto => exec.supports_fused_decode(),
+            ReadPath::Fused => {
+                assert!(
+                    exec.supports_fused_decode(),
+                    "ReadPath::Fused requires a backend with a fused decode path"
+                );
+                true
+            }
+        };
+        // the fused path never materializes the dense tensors — this is
+        // the memory the tentpole removes: 4 slabs of L·B·H·Tmax·d/2 f32
+        let n = if fused { 0 } else { l * b * h * tmax * half };
         let kv = PagedKvCache::new(
             cfg.quant.clone(),
             l,
@@ -123,6 +158,8 @@ impl<B: ModelBackend> Engine<B> {
             quant: cfg.quant,
             slots: (0..b).map(|_| None).collect(),
             preempted: VecDeque::new(),
+            fused,
+            tile_scratch: TileScratch::new(),
             slot_filled: vec![0; b],
             slot_decoded: vec![false; b],
             kr: vec![0.0; n],
@@ -131,6 +168,22 @@ impl<B: ModelBackend> Engine<B> {
             vi: vec![0.0; n],
             finished: Vec::new(),
         }
+    }
+
+    /// Whether decode consumes compressed pages directly (the fused path).
+    pub fn is_fused(&self) -> bool {
+        self.fused
+    }
+
+    /// Bytes of fused-path dequant scratch currently held (one page of
+    /// four d/2 slabs once warmed — the bounded-scratch contract).
+    pub fn tile_scratch_bytes(&self) -> usize {
+        self.tile_scratch.bytes()
+    }
+
+    /// Bytes of dense reinflation buffers held (0 on the fused path).
+    pub fn dense_buffer_bytes(&self) -> usize {
+        (self.kr.len() + self.ki.len() + self.vr.len() + self.vi.len()) * 4
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -438,17 +491,21 @@ impl<B: ModelBackend> Engine<B> {
                 any = true;
                 token[b] = *sess.generated.last().expect("session has a token");
                 pos[b] = (sess.cache_len() - 1) as i32;
-                let filled = self.kv.fill_dense_range(
-                    sess.request.id,
-                    b,
-                    b_total,
-                    self.slot_filled[b],
-                    &mut self.kr,
-                    &mut self.ki,
-                    &mut self.vr,
-                    &mut self.vi,
-                )?;
-                self.slot_filled[b] = filled;
+                // fused path: no dense buffers to keep warm — the backend
+                // reads compressed pages directly during the decode call
+                if !self.fused {
+                    let filled = self.kv.fill_dense_range(
+                        sess.request.id,
+                        b,
+                        b_total,
+                        self.slot_filled[b],
+                        &mut self.kr,
+                        &mut self.ki,
+                        &mut self.vr,
+                        &mut self.vi,
+                    )?;
+                    self.slot_filled[b] = filled;
+                }
             }
         }
         if !any {
@@ -456,9 +513,24 @@ impl<B: ModelBackend> Engine<B> {
         }
         let coord_prep = t_coord.elapsed();
         let t0 = Instant::now();
-        let out = self.exec.run_decode(
-            &token, &pos, &self.quant, &self.kr, &self.ki, &self.vr, &self.vi,
-        )?;
+        let out = if self.fused {
+            let lanes: Vec<Option<u64>> = self
+                .slots
+                .iter()
+                .map(|s| s.as_ref().map(|sess| sess.request.id))
+                .collect();
+            let mut reader = BatchTileReader {
+                kv: &self.kv,
+                lanes: &lanes,
+                scratch: &mut self.tile_scratch,
+            };
+            self.exec
+                .run_decode_fused(&token, &pos, &self.quant, &mut reader)?
+        } else {
+            self.exec.run_decode(
+                &token, &pos, &self.quant, &self.kr, &self.ki, &self.vr, &self.vi,
+            )?
+        };
         self.metrics.decode_step_latency.record(t0.elapsed());
         self.metrics.decode_steps += 1;
         self.metrics.decode_slot_steps += b_total as u64;

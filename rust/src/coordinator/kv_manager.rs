@@ -13,8 +13,9 @@
 //! the (L,B,H,Tmax,d/2) tensors the decode_step HLO consumes.
 
 use crate::quant::norm::{self, NormMode};
-use crate::quant::packing::{bits_for, BitVec};
+use crate::quant::packing::{bits_for, BitCursor, BitVec};
 use crate::quant::{LayerBins, QuantConfig};
+use crate::runtime::{KvTileReader, KvTileView};
 use anyhow::{bail, ensure, Result};
 use rayon::prelude::*;
 use std::collections::HashMap;
@@ -193,6 +194,11 @@ impl PagedKvCache {
         page_tokens: usize,
     ) -> Self {
         assert_eq!(cfg.layers.len(), n_layers);
+        // closes the u16-truncation hole for configs whose `layers` were
+        // mutated after construction (constructors assert, mutation
+        // doesn't) — enforced here, in release builds too, because every
+        // serving path builds its cache through this constructor
+        cfg.validate().expect("invalid quant config");
         PagedKvCache {
             cfg,
             n_layers,
@@ -543,6 +549,107 @@ impl PagedKvCache {
         Ok(seq.len)
     }
 
+    /// Tokens per page — also the token depth of a fused-read tile.
+    pub fn page_tokens(&self) -> usize {
+        self.pool.page_tokens
+    }
+
+    /// Random-access tile decode: dequantize tokens `t0..t0+tokens` of
+    /// (`id`, `layer`, `head`) into caller buffers (each ≥ `tokens*d/2`
+    /// f32, token-major rows). The page-granular building block behind
+    /// [`Self::visit_seq_tiles`], exposed for backends that schedule their
+    /// own tile walk. Values are bit-identical to what [`Self::fill_dense`]
+    /// would put in the corresponding dense rows.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_tile_into(
+        &self,
+        id: u64,
+        layer: usize,
+        head: usize,
+        t0: usize,
+        tokens: usize,
+        kr: &mut [f32],
+        ki: &mut [f32],
+        vr: &mut [f32],
+        vi: &mut [f32],
+    ) -> Result<()> {
+        let seq = self
+            .seqs
+            .get(&id)
+            .ok_or_else(|| anyhow::anyhow!("unknown sequence {id}"))?;
+        ensure!(
+            layer < self.n_layers && head < self.n_kv_heads,
+            "tile (layer {layer}, head {head}) out of range"
+        );
+        ensure!(
+            t0 + tokens <= seq.len,
+            "tile {t0}..{} beyond sequence length {}",
+            t0 + tokens,
+            seq.len
+        );
+        let half = self.d_head / 2;
+        let elems = tokens * half;
+        ensure!(
+            kr.len() >= elems && ki.len() >= elems && vr.len() >= elems && vi.len() >= elems,
+            "tile buffers smaller than tokens*d/2"
+        );
+        let bins = self.cfg.layers[layer];
+        let (ks, vs) = &seq.stores[layer][head];
+        decode_side_range(ks, bins.n_k, self.cfg.k_norm, t0, tokens, half, kr, ki);
+        decode_side_range(vs, bins.n_v, self.cfg.v_norm, t0, tokens, half, vr, vi);
+        Ok(())
+    }
+
+    /// The fused read path: visit `id`'s cache for one layer as dequantized
+    /// page tiles — heads ascending, then token ranges ascending, covering
+    /// exactly tokens `0..upto` (clamped to the sequence length). Each tile
+    /// is at most `page_tokens` rows decoded into `scratch`, which grows
+    /// once to a single page and never again: no per-token allocation, and
+    /// the dense `(L,B,H,Tmax,d/2)` tensors never materialize.
+    pub fn visit_seq_tiles(
+        &self,
+        id: u64,
+        layer: usize,
+        upto: usize,
+        scratch: &mut TileScratch,
+        f: &mut dyn FnMut(&KvTileView<'_>),
+    ) -> Result<()> {
+        let seq = self
+            .seqs
+            .get(&id)
+            .ok_or_else(|| anyhow::anyhow!("unknown sequence {id}"))?;
+        ensure!(layer < self.n_layers, "layer {layer} out of range");
+        let upto = upto.min(seq.len);
+        let half = self.d_head / 2;
+        let tile_tokens = self.pool.page_tokens;
+        scratch.ensure(tile_tokens * half);
+        let bins = self.cfg.layers[layer];
+        let (k_norm, v_norm) = (self.cfg.k_norm, self.cfg.v_norm);
+        for (head, (ks, vs)) in seq.stores[layer].iter().enumerate() {
+            let mut t0 = 0usize;
+            while t0 < upto {
+                let tokens = tile_tokens.min(upto - t0);
+                let elems = tokens * half;
+                let s = &mut *scratch;
+                decode_side_range(ks, bins.n_k, k_norm, t0, tokens, half, &mut s.kr, &mut s.ki);
+                decode_side_range(vs, bins.n_v, v_norm, t0, tokens, half, &mut s.vr, &mut s.vi);
+                f(&KvTileView {
+                    layer,
+                    head,
+                    t0,
+                    tokens,
+                    half,
+                    kr: &scratch.kr[..elems],
+                    ki: &scratch.ki[..elems],
+                    vr: &scratch.vr[..elems],
+                    vi: &scratch.vi[..elems],
+                });
+                t0 += tokens;
+            }
+        }
+        Ok(())
+    }
+
     pub fn memory_stats(&self) -> MemoryStats {
         let mut st = MemoryStats {
             sequences: self.seqs.len(),
@@ -567,6 +674,65 @@ impl PagedKvCache {
     }
 }
 
+/// Reused dequant scratch for the fused read path: four page-sized
+/// `(page_tokens × d/2)` slabs. Grows once to the page size and stays
+/// there — the bounded-scratch contract the fused bench reports via
+/// [`TileScratch::bytes`]. Contrast with the dense reinflation buffers,
+/// which are `L·B·H·Tmax·d/2` floats *each*.
+#[derive(Debug, Default)]
+pub struct TileScratch {
+    kr: Vec<f32>,
+    ki: Vec<f32>,
+    vr: Vec<f32>,
+    vi: Vec<f32>,
+}
+
+impl TileScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, elems: usize) {
+        if self.kr.len() < elems {
+            self.kr.resize(elems, 0.0);
+            self.ki.resize(elems, 0.0);
+            self.vr.resize(elems, 0.0);
+            self.vi.resize(elems, 0.0);
+        }
+    }
+
+    /// Bytes held across all four slabs.
+    pub fn bytes(&self) -> usize {
+        (self.kr.len() + self.ki.len() + self.vr.len() + self.vi.len()) * 4
+    }
+}
+
+/// Adapter handing a decode batch's lanes to
+/// [`crate::runtime::ModelBackend::run_decode_fused`]: maps each lane to
+/// its live sequence (if any) and walks [`PagedKvCache::visit_seq_tiles`]
+/// with one shared scratch. Empty lanes visit nothing, matching the dense
+/// path's zero-length scan of an inactive slot.
+pub struct BatchTileReader<'a> {
+    pub kv: &'a PagedKvCache,
+    pub lanes: &'a [Option<u64>],
+    pub scratch: &'a mut TileScratch,
+}
+
+impl KvTileReader for BatchTileReader<'_> {
+    fn visit(
+        &mut self,
+        lane: usize,
+        layer: usize,
+        upto: usize,
+        f: &mut dyn FnMut(&KvTileView<'_>),
+    ) -> Result<()> {
+        match self.lanes.get(lane).copied().flatten() {
+            Some(id) => self.kv.visit_seq_tiles(id, layer, upto, self.scratch, f),
+            None => Ok(()),
+        }
+    }
+}
+
 /// Geometry of one reinflation pass (shared by every layer's worker).
 #[derive(Clone, Copy)]
 struct FillJob {
@@ -581,7 +747,9 @@ struct FillJob {
 /// Reinflate one layer's stores into that layer's chunk of the dense
 /// tensors. `kr/ki/vr/vi` are the `batch*H*Tmax*d/2` slices for this layer,
 /// so the base index drops the leading layer term of the (L,B,H,Tmax,d/2)
-/// layout.
+/// layout. Consecutive tokens of one (head, side) are contiguous in the
+/// dense layout, so the whole `from_t..len` span is one
+/// [`decode_side_range`] call per side.
 #[allow(clippy::too_many_arguments)]
 fn fill_layer(
     job: FillJob,
@@ -595,31 +763,65 @@ fn fill_layer(
     vi: &mut [f32],
 ) {
     let FillJob { b, h_n, tmax, half, from_t, len } = job;
+    if from_t >= len {
+        return;
+    }
+    let tokens = len - from_t;
     for (h, (ks, vs)) in stores.iter().enumerate() {
-        for (store, bins_n, mode, out_r, out_i) in [
-            (ks, bins.n_k, k_norm, &mut *kr, &mut *ki),
-            (vs, bins.n_v, v_norm, &mut *vr, &mut *vi),
-        ] {
-            let width = bits_for(bins_n);
-            for t in from_t..len {
-                let base = ((b * h_n + h) * tmax + t) * half;
-                for i in 0..half {
-                    out_i[base + i] = store.angles.get(t * half + i, width) as f32;
+        let base = ((b * h_n + h) * tmax + from_t) * half;
+        let end = base + tokens * half;
+        let (kr, ki) = (&mut kr[base..end], &mut ki[base..end]);
+        let (vr, vi) = (&mut vr[base..end], &mut vi[base..end]);
+        decode_side_range(ks, bins.n_k, k_norm, from_t, tokens, half, kr, ki);
+        decode_side_range(vs, bins.n_v, v_norm, from_t, tokens, half, vr, vi);
+    }
+}
+
+/// Dequantize tokens `t0..t0+tokens` of one side store into contiguous
+/// token-major (norms, codes-as-f32) rows. This is THE dequant kernel for
+/// both read paths — the dense reinflation ([`fill_layer`]) and the fused
+/// tile iterator ([`PagedKvCache::visit_seq_tiles`]) call it, so their
+/// outputs cannot drift: fused-vs-reinflate bit-identity holds by
+/// construction. Streams the bit-packed codes through [`BitCursor`]s
+/// instead of random-access `get`s.
+#[allow(clippy::too_many_arguments)]
+fn decode_side_range(
+    store: &SideStore,
+    bins: u32,
+    mode: NormMode,
+    t0: usize,
+    tokens: usize,
+    half: usize,
+    out_r: &mut [f32],
+    out_i: &mut [f32],
+) {
+    let elems = tokens * half;
+    debug_assert!(out_r.len() >= elems && out_i.len() >= elems);
+    let width = bits_for(bins);
+    let mut ang = BitCursor::new(&store.angles, t0 * half, width);
+    for o in out_i[..elems].iter_mut() {
+        *o = ang.next(width) as f32;
+    }
+    if mode.bits == 0 {
+        out_r[..elems].copy_from_slice(&store.raw_norms[t0 * half..t0 * half + elems]);
+    } else {
+        let bits = mode.bits as u32;
+        let levels = mode.levels().max(1.0);
+        let mut codes = BitCursor::new(&store.norm_codes, t0 * half, bits);
+        for (t, row) in out_r[..elems].chunks_exact_mut(half).enumerate() {
+            let (vmin, vmax) = store.windows[t0 + t];
+            let scale = if vmax > vmin { vmax - vmin } else { 1.0 };
+            // `(c*scale)/levels` — the exact expression of
+            // `norm::dequantize_into` and the pre-tile reinflation; do NOT
+            // hoist `scale/levels` (it shifts the result by 1 ulp and
+            // breaks bit-parity with the norm module / oracle)
+            if mode.log_space {
+                for o in row.iter_mut() {
+                    *o = (vmin + codes.next(bits) as f32 * scale / levels).exp();
                 }
-                if mode.bits == 0 {
-                    out_r[base..base + half]
-                        .copy_from_slice(&store.raw_norms[t * half..(t + 1) * half]);
-                } else {
-                    // alloc-free dequant straight from the bitstream
-                    let (vmin, vmax) = store.windows[t];
-                    let scale = if vmax > vmin { vmax - vmin } else { 1.0 };
-                    let levels = mode.levels().max(1.0);
-                    let log_space = mode.log_space;
-                    for i in 0..half {
-                        let c = store.norm_codes.get(t * half + i, mode.bits as u32);
-                        let v = vmin + c as f32 * scale / levels;
-                        out_r[base + i] = if log_space { v.exp() } else { v };
-                    }
+            } else {
+                for o in row.iter_mut() {
+                    *o = vmin + codes.next(bits) as f32 * scale / levels;
                 }
             }
         }
@@ -925,6 +1127,63 @@ mod tests {
         assert!(c.new_seq(2, 4).is_err());
         c.free_seq(1);
         assert!(c.can_admit(16));
+    }
+
+    #[test]
+    fn tiles_bit_identical_to_fill_dense() {
+        // fused tiles and the dense reinflation must agree to the bit for
+        // every (layer, head, token) — page boundaries, quantized norms,
+        // partial visits included
+        let mut c = mk_cache((NormMode::LINEAR8, NormMode::LOG4));
+        let (l_n, h_n, half, tmax) = (2usize, 1usize, 4usize, 16usize);
+        c.new_seq(3, 11).unwrap();
+        for t in 0..11u64 {
+            for l in 0..l_n {
+                let (kr, ki) = fake_entry(t * 13 + l as u64 + 1, half, 128);
+                let (vr, vi) = fake_entry(t * 13 + l as u64 + 99, half, 64);
+                c.append_token_lh(3, l, 0, &kr, &ki, &vr, &vi).unwrap();
+            }
+            c.commit_token(3).unwrap();
+        }
+        let n = l_n * h_n * tmax * half;
+        let mut dense = (vec![0.0f32; n], vec![0.0f32; n], vec![0.0f32; n], vec![0.0f32; n]);
+        c.fill_dense(3, 0, 1, &mut dense.0, &mut dense.1, &mut dense.2, &mut dense.3)
+            .unwrap();
+        let mut scratch = TileScratch::new();
+        for upto in [11usize, 7, 1, 0] {
+            for l in 0..l_n {
+                let mut covered = vec![false; upto];
+                c.visit_seq_tiles(3, l, upto, &mut scratch, &mut |tile| {
+                    assert!(tile.tokens <= c.page_tokens(), "tile beyond one page");
+                    for tr in 0..tile.tokens {
+                        let t = tile.t0 + tr;
+                        covered[t] = true;
+                        let dbase = ((l * h_n + tile.head) * tmax + t) * half;
+                        let tbase = tr * half;
+                        assert_eq!(&tile.kr[tbase..tbase + half], &dense.0[dbase..dbase + half]);
+                        assert_eq!(&tile.ki[tbase..tbase + half], &dense.1[dbase..dbase + half]);
+                        assert_eq!(&tile.vr[tbase..tbase + half], &dense.2[dbase..dbase + half]);
+                        assert_eq!(&tile.vi[tbase..tbase + half], &dense.3[dbase..dbase + half]);
+                    }
+                })
+                .unwrap();
+                assert!(covered.iter().all(|&x| x), "upto={upto} l={l}: gap in tile coverage");
+            }
+        }
+        // random-access tile decode agrees too
+        let mut kr = vec![0.0f32; 3 * half];
+        let mut ki = vec![0.0f32; 3 * half];
+        let mut vr = vec![0.0f32; 3 * half];
+        let mut vi = vec![0.0f32; 3 * half];
+        c.decode_tile_into(3, 1, 0, 5, 3, &mut kr, &mut ki, &mut vr, &mut vi).unwrap();
+        let dbase = (h_n * tmax + 5) * half; // layer 1, head 0, t=5
+        assert_eq!(&kr[..3 * half], &dense.0[dbase..dbase + 3 * half]);
+        assert_eq!(&vi[..3 * half], &dense.3[dbase..dbase + 3 * half]);
+        // bounds are checked, not zipped short
+        assert!(c.decode_tile_into(3, 0, 0, 10, 2, &mut kr, &mut ki, &mut vr, &mut vi).is_err());
+        assert!(c.decode_tile_into(3, 9, 0, 0, 1, &mut kr, &mut ki, &mut vr, &mut vi).is_err());
+        // bounded scratch: one page of four d/2 slabs
+        assert_eq!(scratch.bytes(), c.page_tokens() * half * 4 * 4);
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //!
 //! * [`kv_manager`] — paged compressed cache (bit-packed angles + quantized
 //!   norms), reservation-aware block allocator, swap pool for preempted
-//!   sequences, memory accounting
+//!   sequences, memory accounting, and the fused read path's page-tile
+//!   iterator (`visit_seq_tiles` / `decode_tile_into` + `TileScratch`)
 //! * [`batcher`] / [`scheduler`] — dynamic batching and prefill/decode
 //!   interleave, with terminal `CacheFull` rejection of impossible requests
 //! * [`router`] — replica routing policies (round-robin, least-loaded,
@@ -26,8 +27,8 @@ pub mod server;
 pub mod session;
 
 pub use batcher::{Admission, BatchPolicy, DynamicBatcher, TakenBatch};
-pub use engine::{Engine, EngineConfig, EngineCore};
-pub use kv_manager::PagedKvCache;
+pub use engine::{Engine, EngineConfig, EngineCore, ReadPath};
+pub use kv_manager::{BatchTileReader, PagedKvCache, TileScratch};
 pub use metrics::EngineMetrics;
 pub use router::{hash_session_key, RoutePolicy, Router};
 pub use scheduler::SchedulerPolicy;

@@ -7,7 +7,7 @@
 
 use anyhow::{bail, Result};
 use turboangle::coordinator::{
-    BatchPolicy, Engine, EngineConfig, EngineCore, RoutePolicy, SchedulerPolicy,
+    BatchPolicy, Engine, EngineConfig, EngineCore, ReadPath, RoutePolicy, SchedulerPolicy,
 };
 use turboangle::eval::{search, sensitivity, sweep, PplHarness};
 use turboangle::quant::{angle, fwht, norm, Mode, NormMode, QuantConfig};
@@ -42,12 +42,15 @@ SUBCOMMANDS
   uniformity [--d D] [--rows N]                     angle-uniformity evidence (§2)
   bits       [--layers L] [--d D]                   Eq.1/Eq.3 rate calculator
   serve      [--model M] [--requests N] [--gen-max N] [--no-quant]
+             [--read-path auto|fused|reinflate]
   seed-sweep [--model M] [--seeds N]                dPPL spread over random D (paper limitation)
   allocate   [--model M] [--budget B] [--group G]   greedy per-layer bit allocation (extension)
   listen     [--model M] [--addr A] [--max-requests N] [--replicas N]
              [--route-policy rr|least-loaded|affinity] [--sim]
+             [--read-path auto|fused|reinflate]
              multi-replica TCP JSON-lines server (--sim: deterministic
-             simulated backend, no artifacts needed)
+             simulated backend, no artifacts needed; read-path auto takes
+             the fused compressed-page decode when the backend supports it)
   selfcheck                                         golden + HLO cross-validation
   eval       [--model M] [--nk N] [--nv N] [--n-early E] [--nk-hi N] [--nv-hi N] [--norms fp32|norm8|k8v4log]
 ";
@@ -58,6 +61,15 @@ fn parse_route_policy(s: &str) -> Result<RoutePolicy> {
         "least-loaded" => RoutePolicy::LeastLoaded,
         "affinity" | "session-affinity" => RoutePolicy::SessionAffinity,
         other => bail!("unknown route policy '{other}' (rr|least-loaded|affinity)"),
+    })
+}
+
+fn parse_read_path(s: &str) -> Result<ReadPath> {
+    Ok(match s {
+        "auto" => ReadPath::Auto,
+        "fused" => ReadPath::Fused,
+        "reinflate" | "dense" => ReadPath::Reinflate,
+        other => bail!("unknown read path '{other}' (auto|fused|reinflate)"),
     })
 }
 
@@ -152,6 +164,7 @@ fn main() -> Result<()> {
             args.get_usize("requests", 12)?,
             args.get_usize("gen-max", 8)?,
             args.get_bool("no-quant"),
+            parse_read_path(&args.get_str("read-path", "auto"))?,
         )?,
         "seed-sweep" => {
             let model = args.get_str("model", "smollm2-sim");
@@ -203,12 +216,19 @@ fn main() -> Result<()> {
             let max_requests = args.get_usize("max-requests", 0)?;
             let replicas = args.get_usize("replicas", 1)?;
             let policy = parse_route_policy(&args.get_str("route-policy", "affinity"))?;
+            let read_path = parse_read_path(&args.get_str("read-path", "auto"))?;
+            if read_path == ReadPath::Fused && !args.get_bool("sim") {
+                // fail with a flag error, not an assert mid-construction:
+                // the PJRT executor consumes dense HLO inputs only
+                bail!("--read-path fused requires --sim (the PJRT backend has no fused decode path; use auto or reinflate)");
+            }
             let engine_cfg = |l: usize| EngineConfig {
                 quant: QuantConfig::paper_uniform(l).with_k8v4_log(),
                 batch_policy: BatchPolicy::default(),
                 scheduler: SchedulerPolicy::default(),
                 capacity_pages: 4096,
                 page_tokens: 16,
+                read_path,
             };
             let mut engines: Vec<Box<dyn EngineCore>> = Vec::with_capacity(replicas);
             if args.get_bool("sim") {
@@ -361,7 +381,11 @@ fn serve(
     requests: usize,
     gen_max: usize,
     no_quant: bool,
+    read_path: ReadPath,
 ) -> Result<()> {
+    if read_path == ReadPath::Fused {
+        bail!("--read-path fused requires a fused-capable backend (the PJRT executor has none; use auto or reinflate)");
+    }
     let manifest = Manifest::load(artifacts)?;
     let rt = Runtime::cpu()?;
     eprintln!("compiling prefill+decode for {model} ...");
@@ -380,6 +404,7 @@ fn serve(
             scheduler: SchedulerPolicy::default(),
             capacity_pages: 4096,
             page_tokens: 16,
+            read_path,
         },
     );
     let spec = WorkloadSpec {

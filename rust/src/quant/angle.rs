@@ -9,6 +9,13 @@ use super::fwht::{rotate, unrotate};
 
 pub const TWO_PI: f32 = core::f32::consts::TAU;
 
+/// Largest supported codebook: bin indices travel as `u16` (`Encoded::k`,
+/// the packed streams, `TrigLut`), so `n` beyond 2^16 would silently
+/// truncate and decode garbage. Enforced with a hard error at
+/// [`super::QuantConfig`] construction and a debug assert at the encode
+/// boundary.
+pub const MAX_BINS: u32 = 1 << 16;
+
 /// Compressed representation of one head-dim vector: d/2 pair norms and
 /// d/2 angle bin indices (bin count `n` stored by the owner).
 #[derive(Clone, Debug, PartialEq)]
@@ -20,6 +27,10 @@ pub struct Encoded {
 /// Quantize one angle to a bin index. theta from atan2 (any range).
 #[inline]
 pub fn angle_to_bin(theta: f32, n: u32) -> u16 {
+    debug_assert!(
+        (2..=MAX_BINS).contains(&n),
+        "bin count {n} outside the u16-representable range 2..=65536"
+    );
     let t = if theta < 0.0 { theta + TWO_PI } else { theta };
     // floor(n * t / 2pi) mod n — f32 arithmetic kept IDENTICAL to the
     // jax oracle so bin boundaries agree bit-for-bit on golden inputs.
@@ -100,6 +111,10 @@ pub struct TrigLut {
 
 impl TrigLut {
     pub fn new(n: u32, centered: bool) -> Self {
+        assert!(
+            (2..=MAX_BINS).contains(&n),
+            "TrigLut bin count {n} outside 2..=65536 (u16 codebook limit)"
+        );
         let mut cos = Vec::with_capacity(n as usize);
         let mut sin = Vec::with_capacity(n as usize);
         for k in 0..n {
@@ -108,6 +123,19 @@ impl TrigLut {
             sin.push(s);
         }
         TrigLut { cos, sin }
+    }
+
+    /// (cos θ, sin θ) for bin `k`, clamped to the last bin so a corrupted
+    /// code stays deterministic instead of panicking mid-decode.
+    #[inline]
+    pub fn cos_sin(&self, k: u16) -> (f32, f32) {
+        let k = (k as usize).min(self.cos.len() - 1);
+        (self.cos[k], self.sin[k])
+    }
+
+    /// Number of bins in the table.
+    pub fn bins(&self) -> usize {
+        self.cos.len()
     }
 }
 

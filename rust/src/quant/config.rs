@@ -6,7 +6,9 @@
 //! paper's schedules: uniform, contiguous early-boost (§3.2), and selective
 //! boosts (phi-1.5's 0–7 + 16–23).
 
+use super::angle::MAX_BINS;
 use super::norm::NormMode;
+use anyhow::{ensure, Result};
 
 /// Quantizer mode — must match `manifest.json: modes` (L2 lax.switch order).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -43,9 +45,21 @@ pub struct QuantConfig {
 pub const UNIFORM_NK: u32 = 128;
 pub const UNIFORM_NV: u32 = 64;
 
+/// Codebook sizes ride `u16` bin indices end-to-end (`Encoded::k`, the
+/// packed cache streams, `TrigLut`): `n > 2^16` would truncate silently and
+/// decode garbage, so angle-mode constructors reject it up front.
+fn assert_bins(n: u32, side: &str) {
+    assert!(
+        (2..=MAX_BINS).contains(&n),
+        "{side} bin count {n} outside 2..=65536 (u16 codebook limit)"
+    );
+}
+
 impl QuantConfig {
     /// Uniform baseline at (n_k, n_v) for all layers, fp32 norms.
     pub fn uniform(n_layers: usize, n_k: u32, n_v: u32) -> Self {
+        assert_bins(n_k, "K");
+        assert_bins(n_v, "V");
         QuantConfig {
             mode: Mode::Angle,
             layers: vec![LayerBins { n_k, n_v }; n_layers],
@@ -62,6 +76,8 @@ impl QuantConfig {
     /// Contiguous early-boost: layers `0..n_early` at (nk_hi, nv_hi), the
     /// rest at the uniform baseline (§3.2).
     pub fn early_boost(n_layers: usize, n_early: usize, nk_hi: u32, nv_hi: u32) -> Self {
+        assert_bins(nk_hi, "K boost");
+        assert_bins(nv_hi, "V boost");
         let mut cfg = Self::paper_uniform(n_layers);
         for l in 0..n_early.min(n_layers) {
             cfg.layers[l] = LayerBins { n_k: nk_hi, n_v: nv_hi };
@@ -76,6 +92,8 @@ impl QuantConfig {
         nk_hi: u32,
         nv_hi: u32,
     ) -> Self {
+        assert_bins(nk_hi, "K boost");
+        assert_bins(nv_hi, "V boost");
         let mut cfg = Self::paper_uniform(n_layers);
         for &l in boosted {
             if l < n_layers {
@@ -100,6 +118,24 @@ impl QuantConfig {
             k_norm: NormMode::FP32,
             v_norm: NormMode::FP32,
         }
+    }
+
+    /// Non-panicking variant of the constructor bound, for configs built
+    /// from untrusted input (CLI flags, wire requests, direct `layers`
+    /// mutation): every angle-mode layer must keep its bin counts inside
+    /// the u16-representable range.
+    pub fn validate(&self) -> Result<()> {
+        if matches!(self.mode, Mode::None | Mode::Angle | Mode::AngleCentered) {
+            for (l, b) in self.layers.iter().enumerate() {
+                ensure!(
+                    (2..=MAX_BINS).contains(&b.n_k) && (2..=MAX_BINS).contains(&b.n_v),
+                    "layer {l} bins (K{}, V{}) outside 2..=65536 (u16 codebook limit)",
+                    b.n_k,
+                    b.n_v
+                );
+            }
+        }
+        Ok(())
     }
 
     pub fn with_norms(mut self, k: NormMode, v: NormMode) -> Self {
@@ -361,6 +397,30 @@ mod tests {
             "B[0-3](K256,V128)"
         );
         assert_eq!(QuantConfig::none(4).tag(), "fp-ref");
+    }
+
+    #[test]
+    #[should_panic(expected = "u16 codebook limit")]
+    fn rejects_bins_beyond_u16() {
+        // n > 2^16 used to truncate through `as u16` and decode garbage
+        let _ = QuantConfig::uniform(2, (1 << 16) + 1, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "u16 codebook limit")]
+    fn rejects_oversized_boost_bins() {
+        let _ = QuantConfig::early_boost(8, 4, 1 << 17, 128);
+    }
+
+    #[test]
+    fn validate_checks_mutated_layers() {
+        assert!(QuantConfig::uniform(2, 1 << 16, 2).validate().is_ok());
+        let mut cfg = QuantConfig::paper_uniform(2);
+        cfg.layers[1].n_v = (1 << 16) + 4; // bypasses the constructor
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("layer 1"), "{err}");
+        // scalar baselines carry BITS in the arrays — not bin-bounded
+        assert!(QuantConfig::scalar_baseline(2, Mode::Kivi, 2).validate().is_ok());
     }
 
     #[test]

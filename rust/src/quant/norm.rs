@@ -50,6 +50,16 @@ fn bwd(v: f32, log_space: bool) -> f32 {
 
 /// Quantize one vector of pair norms. `mode.bits == 0` is rejected here —
 /// the caller keeps fp32 norms and never materializes codes.
+///
+/// Non-finite inputs: the pre-round value is clamped into `[0, levels]`
+/// and NaN maps to code 0, so codes are always in range — previously a
+/// NaN/±inf norm rode the saturating `as u16` cast into nonsense codes.
+/// The (vmin, vmax) window still records what the input was (`f32::min`/
+/// `max` skip NaN operands, so a lone NaN element cannot poison it; in
+/// linear mode a ±inf element makes the window non-finite and
+/// dequantization *propagates* that non-finite value rather than hiding
+/// it; log mode forwards through `max(1e-12).ln()`, which absorbs NaN and
+/// -inf to `ln(1e-12)`).
 pub fn quantize(r: &[f32], mode: NormMode) -> QuantizedNorms {
     assert!((1..=16).contains(&mode.bits));
     let mut vmin = f32::INFINITY;
@@ -65,6 +75,9 @@ pub fn quantize(r: &[f32], mode: NormMode) -> QuantizedNorms {
         .iter()
         .map(|&v| {
             let t = (fwd(v, mode.log_space) - vmin) / scale * levels;
+            // NaN -> 0, out-of-window -> nearest edge; a no-op for finite
+            // in-window inputs, so oracle-golden bits are untouched
+            let t = if t.is_nan() { 0.0 } else { t.clamp(0.0, levels) };
             // round-half-to-even to match numpy/jax rounding
             t.round_ties_even() as u16
         })
@@ -72,8 +85,14 @@ pub fn quantize(r: &[f32], mode: NormMode) -> QuantizedNorms {
     QuantizedNorms { codes, vmin, vmax }
 }
 
-/// Dequantize codes back to norms.
+/// Dequantize codes back to norms. `out` must match the code count exactly
+/// — a short buffer used to zip silently and drop the tail.
 pub fn dequantize_into(q: &QuantizedNorms, mode: NormMode, out: &mut [f32]) {
+    assert_eq!(
+        out.len(),
+        q.codes.len(),
+        "dequantize_into: output length must equal the code count"
+    );
     let scale = if q.vmax > q.vmin { q.vmax - q.vmin } else { 1.0 };
     let levels = mode.levels().max(1.0);
     for (o, &c) in out.iter_mut().zip(&q.codes) {
@@ -166,6 +185,45 @@ mod tests {
     fn fp32_passthrough() {
         let r = skewed(32, 5);
         assert_eq!(quant_dequant(&r, NormMode::FP32), r);
+    }
+
+    #[test]
+    fn non_finite_inputs_yield_in_range_codes() {
+        // regression: NaN scale used to push garbage through the `as u16`
+        // saturating cast; codes must stay inside the code range and NaN
+        // elements must map to code 0
+        for mode in [
+            NormMode::LINEAR8,
+            NormMode::LOG4,
+            NormMode { bits: 2, log_space: false },
+        ] {
+            let max = ((1u32 << mode.bits) - 1) as u16;
+            let r = [1.0f32, f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 2.5];
+            let q = quantize(&r, mode);
+            assert!(
+                q.codes.iter().all(|&c| c <= max),
+                "bits={} codes={:?}",
+                mode.bits,
+                q.codes
+            );
+            assert_eq!(q.codes[1], 0, "NaN maps to code 0 (bits={})", mode.bits);
+        }
+        // all-NaN vector: degenerate window, still deterministic codes
+        let q = quantize(&[f32::NAN; 4], NormMode::LINEAR8);
+        assert_eq!(q.codes, vec![0u16; 4]);
+        // linear ±inf: the window is non-finite and dequant propagates it
+        let q = quantize(&[1.0, f32::INFINITY], NormMode::LINEAR8);
+        assert!(q.vmax.is_infinite());
+        let d = dequantize(&q, NormMode::LINEAR8);
+        assert!(!d[1].is_finite(), "non-finite window must stay visible");
+    }
+
+    #[test]
+    #[should_panic(expected = "output length must equal the code count")]
+    fn dequantize_into_rejects_short_buffer() {
+        let q = quantize(&[1.0f32, 2.0, 3.0], NormMode::LINEAR8);
+        let mut out = vec![0.0f32; 2]; // one short: used to zip silently
+        dequantize_into(&q, NormMode::LINEAR8, &mut out);
     }
 
     #[test]

@@ -11,6 +11,12 @@ pub fn bits_for(n: u32) -> u32 {
     32 - (n - 1).leading_zeros()
 }
 
+/// Low-`width` mask for `width` in 1..=32 (fits u64 without overflow).
+#[inline]
+fn width_mask(width: u32) -> u64 {
+    (1u64 << width) - 1
+}
+
 /// A little-endian bitstream of fixed-width codes.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct BitVec {
@@ -26,19 +32,23 @@ impl BitVec {
         }
     }
 
+    /// Append one `width`-bit code. Out-of-range codes are truncated to
+    /// their low `width` bits: before the mask, a stray high bit would OR
+    /// into the *neighboring* codes of the stream and silently corrupt the
+    /// whole cache page in release builds.
     #[inline]
     pub fn push(&mut self, code: u32, width: u32) {
         debug_assert!((1..=32).contains(&width));
-        debug_assert!(code < (1u64 << width) as u32 || width == 32);
+        let code = (code as u64) & width_mask(width);
         let bit = self.len_bits;
         let word = bit / 64;
         let off = (bit % 64) as u32;
         if word >= self.words.len() {
             self.words.push(0);
         }
-        self.words[word] |= (code as u64) << off;
+        self.words[word] |= code << off;
         if off + width > 64 {
-            self.words.push((code as u64) >> (64 - off));
+            self.words.push(code >> (64 - off));
         }
         self.len_bits += width as usize;
     }
@@ -48,7 +58,7 @@ impl BitVec {
         let bit = idx * width as usize;
         let word = bit / 64;
         let off = (bit % 64) as u32;
-        let mask = if width == 32 { u32::MAX as u64 } else { (1u64 << width) - 1 };
+        let mask = width_mask(width);
         let mut v = self.words[word] >> off;
         if off + width > 64 {
             v |= self.words[word + 1] << (64 - off);
@@ -75,6 +85,54 @@ impl BitVec {
     }
 }
 
+/// Sequential fixed-width reader over a [`BitVec`] — the fused read path's
+/// hot loop. [`BitVec::get`] recomputes word index and offset from scratch
+/// per code; the cursor streams through the words with a rolling bit
+/// buffer, which is what lets page-tile decode keep pace with a dense f32
+/// scan. Yields exactly the bits `get` would.
+pub struct BitCursor<'a> {
+    words: &'a [u64],
+    next_word: usize,
+    buf: u128,
+    avail: u32,
+}
+
+impl<'a> BitCursor<'a> {
+    /// Cursor positioned at code index `start` of a `width`-bit stream.
+    pub fn new(bv: &'a BitVec, start: usize, width: u32) -> Self {
+        debug_assert!((1..=32).contains(&width));
+        let bit = start * width as usize;
+        debug_assert!(bit <= bv.len_bits);
+        let word = bit / 64;
+        let off = (bit % 64) as u32;
+        let (buf, avail, next_word) = if word < bv.words.len() {
+            ((bv.words[word] >> off) as u128, 64 - off, word + 1)
+        } else {
+            (0, 0, word)
+        };
+        BitCursor {
+            words: &bv.words,
+            next_word,
+            buf,
+            avail,
+        }
+    }
+
+    /// Read the next code. The caller must not read past the packed length.
+    #[inline]
+    pub fn next(&mut self, width: u32) -> u32 {
+        if self.avail < width {
+            self.buf |= (self.words[self.next_word] as u128) << self.avail;
+            self.next_word += 1;
+            self.avail += 64;
+        }
+        let code = (self.buf as u64 & width_mask(width)) as u32;
+        self.buf >>= width;
+        self.avail -= width;
+        code
+    }
+}
+
 /// Pack a slice of codes at fixed width.
 pub fn pack(codes: &[u16], width: u32) -> BitVec {
     let mut bv = BitVec::with_capacity(codes.len(), width);
@@ -91,8 +149,9 @@ pub fn unpack(bv: &BitVec, count: usize, width: u32) -> Vec<u16> {
 
 /// Unpack straight into an f32 buffer (what the HLO decode input wants).
 pub fn unpack_f32_into(bv: &BitVec, width: u32, out: &mut [f32]) {
-    for (i, o) in out.iter_mut().enumerate() {
-        *o = bv.get(i, width) as f32;
+    let mut cur = BitCursor::new(bv, 0, width);
+    for o in out.iter_mut() {
+        *o = cur.next(width) as f32;
     }
 }
 
@@ -139,6 +198,53 @@ mod tests {
         let codes: Vec<u16> = (0..20).map(|i| (i * 11 % 128) as u16).collect();
         let bv = pack(&codes, 7);
         assert_eq!(unpack(&bv, 20, 7), codes);
+    }
+
+    #[test]
+    fn oversized_code_is_masked_not_smeared() {
+        // regression: push() used to OR the full 32-bit value into the
+        // stream, so an out-of-range code corrupted its *neighbors* in
+        // release builds. The low `width` bits must land, nothing else.
+        let mut bv = BitVec::with_capacity(3, 4);
+        bv.push(0x5, 4);
+        bv.push(0xFFF3, 4); // oversized: pre-fix this smears bits 8..20
+        bv.push(0xA, 4);
+        assert_eq!(bv.get(0, 4), 0x5, "left neighbor");
+        assert_eq!(bv.get(1, 4), 0x3, "oversized code keeps its low bits");
+        assert_eq!(bv.get(2, 4), 0xA, "right neighbor");
+        // and across a word boundary (width 7, code 9 spans bits 63..70)
+        let mut bv = BitVec::with_capacity(12, 7);
+        for i in 0..9 {
+            bv.push(i, 7);
+        }
+        bv.push(u32::MAX, 7);
+        bv.push(0x55, 7);
+        for i in 0..9 {
+            assert_eq!(bv.get(i as usize, 7), i);
+        }
+        assert_eq!(bv.get(9, 7), 0x7F);
+        assert_eq!(bv.get(10, 7), 0x55);
+    }
+
+    #[test]
+    fn cursor_matches_get_at_any_start() {
+        for width in [1u32, 3, 7, 11, 16] {
+            let max = ((1u64 << width) - 1) as u32;
+            let codes: Vec<u16> = (0..300u32)
+                .map(|i| (i.wrapping_mul(2654435761) & max) as u16)
+                .collect();
+            let bv = pack(&codes, width);
+            for start in [0usize, 1, 8, 9, 63, 64, 150] {
+                let mut cur = BitCursor::new(&bv, start, width);
+                for idx in start..codes.len() {
+                    assert_eq!(
+                        cur.next(width),
+                        bv.get(idx, width),
+                        "w={width} start={start} idx={idx}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -10,7 +10,42 @@
 use super::executor::{DecodeOut, ModelExecutor, PrefillOut};
 use super::manifest::{Profile, ServeProtocol};
 use crate::quant::QuantConfig;
-use anyhow::Result;
+use anyhow::{bail, Result};
+
+/// One dequantized tile of a lane's compressed cache: `tokens` consecutive
+/// token rows for one (layer, head), decoded straight from the bit-packed
+/// pages into a small reused scratch. Slabs are token-major `tokens×half`:
+/// `kr`/`vr` carry dequantized pair norms, `ki`/`vi` angle bin indices as
+/// exact f32 codes — the same values a dense reinflation would have put in
+/// the `(L,B,H,Tmax,d/2)` tensors, bit for bit.
+pub struct KvTileView<'a> {
+    pub layer: usize,
+    pub head: usize,
+    /// absolute token index of the tile's first row
+    pub t0: usize,
+    pub tokens: usize,
+    pub half: usize,
+    pub kr: &'a [f32],
+    pub ki: &'a [f32],
+    pub vr: &'a [f32],
+    pub vi: &'a [f32],
+}
+
+/// Tile-granular read access to a decode batch's compressed caches — the
+/// seam the fused read path crosses between the coordinator (which owns
+/// the pages) and a backend (which consumes dequantized tiles). For one
+/// `(lane, layer)` the visitor yields tiles heads-ascending, then token
+/// ranges ascending, covering exactly tokens `0..upto`; empty lanes yield
+/// nothing. Implemented by `coordinator::kv_manager::BatchTileReader`.
+pub trait KvTileReader {
+    fn visit(
+        &mut self,
+        lane: usize,
+        layer: usize,
+        upto: usize,
+        f: &mut dyn FnMut(&KvTileView<'_>),
+    ) -> Result<()>;
+}
 
 /// Everything the engine needs from a model: static shape info plus the
 /// two serving entry points. `Send` because replicas run on dedicated
@@ -49,6 +84,27 @@ pub trait ModelBackend: Send {
         vr: &[f32],
         vi: &[f32],
     ) -> Result<DecodeOut>;
+
+    /// Whether [`Self::run_decode_fused`] is implemented. The engine's
+    /// `ReadPath::Auto` resolves on this: backends that can consume
+    /// compressed pages directly skip the dense reinflation entirely.
+    fn supports_fused_decode(&self) -> bool {
+        false
+    }
+
+    /// One decode step consuming compressed pages tile-by-tile through a
+    /// [`KvTileReader`] instead of pre-reinflated dense tensors. Must emit
+    /// output bit-identical to [`Self::run_decode`] over the dense
+    /// reinflation of the same cache (the sim integration tests pin this).
+    fn run_decode_fused(
+        &self,
+        _token: &[i32],
+        _pos: &[i32],
+        _cfg: &QuantConfig,
+        _cache: &mut dyn KvTileReader,
+    ) -> Result<DecodeOut> {
+        bail!("this backend has no fused decode path (supports_fused_decode() is false)")
+    }
 }
 
 impl ModelBackend for ModelExecutor {

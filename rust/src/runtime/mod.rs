@@ -8,7 +8,7 @@ pub mod pjrt;
 pub mod sim;
 pub mod tensorfile;
 
-pub use backend::ModelBackend;
+pub use backend::{KvTileReader, KvTileView, ModelBackend};
 pub use executor::{DecodeOut, Entry, ModelExecutor, PrefillOut};
 pub use manifest::{Manifest, Profile};
 pub use pjrt::{Program, Runtime};

@@ -7,29 +7,129 @@
 //!
 //! * **Deterministic**: the same prompt always generates the same tokens,
 //!   so end-to-end tests can compare runs exactly.
-//! * **Cache-sensitive**: each decode step folds a checksum of the lane's
-//!   *reinflated dense cache* (every kr/ki/vr/vi element up to `pos`) into
-//!   the next token. Any corruption anywhere in the compressed store —
-//!   a bad bit-unpack, a lossy swap-out/swap-in, a stale dense refill —
-//!   changes the generated text. That is exactly the property preemption
-//!   tests need: swap a sequence out and back in, and bit-identical
-//!   restoration is *observable from the tokens*.
+//! * **Cache-sensitive**: each decode step folds a checksum *and* a
+//!   streaming-softmax score of the lane's cache (every kr/ki/vr/vi
+//!   element up to `pos`) into the next token. Any corruption anywhere in
+//!   the compressed store — a bad bit-unpack, a lossy swap-out/swap-in, a
+//!   stale dense refill — changes the generated text. That is exactly the
+//!   property preemption tests need: swap a sequence out and back in, and
+//!   bit-identical restoration is *observable from the tokens*.
+//!
+//! The scorer ([`LaneScore`]) is shared between `run_decode` (dense
+//! reinflated slabs) and `run_decode_fused` (compressed page tiles via
+//! [`KvTileReader`]), so the engine's two read paths emit bit-identical
+//! tokens by construction.
 //!
 //! The emitted "compressed" entries respect the [`QuantConfig`] the engine
 //! passes (angle codes < n_bins, positive raw norms), so the kv_manager
 //! packs them at the exact widths production uses.
 
-use super::backend::ModelBackend;
+use super::backend::{KvTileReader, KvTileView, ModelBackend};
 use super::executor::{DecodeOut, PrefillOut};
 use super::manifest::{Profile, ServeProtocol};
-use crate::quant::QuantConfig;
+use crate::quant::angle::TrigLut;
+use crate::quant::{LayerBins, QuantConfig};
 use crate::util::hash::splitmix64 as mix;
 use anyhow::{ensure, Result};
+use std::cell::{Ref, RefCell};
+
+/// Streaming per-lane attention state shared by the dense-reinflate and
+/// fused read paths — ONE implementation, so the two paths cannot drift.
+/// The engine's fused-vs-reinflate bit-identity rests on both calling
+/// these methods in the same (layer, head, token, element) order.
+///
+/// Two components fold into the generated token:
+/// * a checksum over the raw slab values (`acc`) — any single-bit change
+///   anywhere in the compressed store flips the token stream, which is
+///   what the preemption/swap tests observe;
+/// * a streaming-softmax accumulator over per-token scores computed from
+///   the *dequantized* polar pairs (`TrigLut` trig × reconstructed pair
+///   norms). Scores live in rotated space on purpose: H·D is orthonormal,
+///   so dot products match x-space and the inverse FWHT never needs to
+///   run on the decode hot path.
+struct LaneScore {
+    acc: u64,
+    /// online-softmax running (max, normalizer, weighted value)
+    m: f32,
+    l: f32,
+    o: f32,
+    /// current row (one token's d/2 pairs) partial score and value
+    s_row: f32,
+    v_row: f32,
+}
+
+impl LaneScore {
+    fn new() -> Self {
+        LaneScore {
+            acc: 0,
+            m: f32::NEG_INFINITY,
+            l: 0.0,
+            o: 0.0,
+            s_row: 0.0,
+            v_row: 0.0,
+        }
+    }
+
+    #[inline]
+    fn element(&mut self, lutk: &TrigLut, lutv: &TrigLut, kr: f32, ki: f32, vr: f32, vi: f32) {
+        self.acc = mix(
+            self.acc
+                ^ (kr.to_bits() as u64)
+                ^ ((ki.to_bits() as u64) << 16)
+                ^ ((vr.to_bits() as u64) << 32)
+                ^ ((vi.to_bits() as u64) << 8),
+        );
+        // reconstructed polar pair: the trig the real decode would apply
+        let (kc, ks) = lutk.cos_sin(ki as u16);
+        let (vc, vs) = lutv.cos_sin(vi as u16);
+        self.s_row += kr * (kc - 0.25 * ks);
+        self.v_row += vr * (vc + 0.5 * vs);
+    }
+
+    /// Close one token row: classic streaming-softmax update (rescale the
+    /// accumulator when a new max arrives, otherwise weight-and-add).
+    #[inline]
+    fn end_row(&mut self) {
+        let (s, v) = (self.s_row, self.v_row);
+        self.s_row = 0.0;
+        self.v_row = 0.0;
+        if s > self.m {
+            let r = (self.m - s).exp(); // first row: exp(-inf) == 0
+            self.l = self.l * r + 1.0;
+            self.o = self.o * r + v;
+            self.m = s;
+        } else {
+            let w = (s - self.m).exp();
+            self.l += w;
+            self.o += w * v;
+        }
+    }
+
+    /// Fold everything into the lane's decode state.
+    fn state(self, token: i32, pos: i32) -> u64 {
+        let mut h = self.acc;
+        if self.l > 0.0 {
+            h = mix(h ^ ((self.o / self.l).to_bits() as u64) ^ ((self.m.to_bits() as u64) << 32));
+        }
+        mix(h ^ (token as u64) ^ ((pos as u64) << 48))
+    }
+}
+
+/// Per-layer (K, V) trig tables memoized on the executor — the config is
+/// fixed per engine, so the tables are built once, not once per token.
+/// `.max(2)` guards degenerate scalar-baseline configs whose arrays carry
+/// bit counts.
+#[derive(Default)]
+struct LutCache {
+    key: Vec<LayerBins>,
+    tabs: Vec<(TrigLut, TrigLut)>,
+}
 
 pub struct SimExecutor {
     profile: Profile,
     serve: ServeProtocol,
     seed: u64,
+    luts: RefCell<LutCache>,
 }
 
 impl SimExecutor {
@@ -77,7 +177,22 @@ impl SimExecutor {
                 tmax,
             },
             seed,
+            luts: RefCell::new(LutCache::default()),
         }
+    }
+
+    /// Borrow the memoized per-layer trig tables, (re)building them only
+    /// when the config's layer bins changed since the last decode.
+    fn luts(&self, cfg: &QuantConfig) -> Ref<'_, LutCache> {
+        {
+            let mut g = self.luts.borrow_mut();
+            if g.key != cfg.layers {
+                let lut = |n: u32| TrigLut::new(n.max(2), false);
+                g.key = cfg.layers.clone();
+                g.tabs = cfg.layers.iter().map(|b| (lut(b.n_k), lut(b.n_v))).collect();
+            }
+        }
+        self.luts.borrow()
     }
 
     /// Fold one prompt prefix into a rolling state.
@@ -112,6 +227,43 @@ impl SimExecutor {
     fn set_logits(logits: &mut [f32], lane: usize, vocab: usize, tok: i32, state: u64) {
         let idx = lane * vocab + tok.rem_euclid(vocab as i32) as usize;
         logits[idx] = 1.0 + (state % 65536) as f32 / 1.0e6;
+    }
+
+    fn empty_decode_out(&self) -> DecodeOut {
+        let (l_n, b_n, h_n, _tmax, half) = self.cache_dims();
+        let step = l_n * b_n * h_n * half;
+        DecodeOut {
+            logits: vec![0.0; b_n * self.profile.vocab],
+            kr: vec![0.0; step],
+            ki: vec![0.0; step],
+            vr: vec![0.0; step],
+            vi: vec![0.0; step],
+        }
+    }
+
+    /// Write one lane's outputs for decode `state`: the logits row plus
+    /// this step's compressed KV entries — shared by both read paths.
+    fn emit_lane(&self, out: &mut DecodeOut, lane: usize, state: u64, cfg: &QuantConfig) {
+        let (l_n, b_n, h_n, _tmax, half) = self.cache_dims();
+        let vocab = self.profile.vocab;
+        let tok = Self::next_token(state);
+        Self::set_logits(&mut out.logits, lane, vocab, tok, state);
+        for l in 0..l_n {
+            let bins = cfg.layers[l];
+            for hd in 0..h_n {
+                let base = ((l * b_n + lane) * h_n + hd) * half;
+                for i in 0..half {
+                    let tag = ((l as u64) << 40) | ((hd as u64) << 32) | (i as u64);
+                    let e = mix(state ^ tag);
+                    let (r, k) = Self::entry(e, bins.n_k);
+                    out.kr[base + i] = r;
+                    out.ki[base + i] = k;
+                    let (r, k) = Self::entry(mix(e ^ 0x56), bins.n_v);
+                    out.vr[base + i] = r;
+                    out.vi[base + i] = k;
+                }
+            }
+        }
     }
 }
 
@@ -191,59 +343,75 @@ impl ModelBackend for SimExecutor {
         ensure!(token.len() == b_n && pos.len() == b_n);
         ensure!(kr.len() == l_n * b_n * h_n * tmax * half, "cache shape");
         ensure!(cfg.layers.len() == l_n, "config/profile layer mismatch");
-        let vocab = self.profile.vocab;
-        let mut out = DecodeOut {
-            logits: vec![0.0; b_n * vocab],
-            kr: vec![0.0; l_n * b_n * h_n * half],
-            ki: vec![0.0; l_n * b_n * h_n * half],
-            vr: vec![0.0; l_n * b_n * h_n * half],
-            vi: vec![0.0; l_n * b_n * h_n * half],
-        };
+        let luts = self.luts(cfg);
+        let mut out = self.empty_decode_out();
         for lane in 0..b_n {
             // rows [0, pos) are the KV-resident prefix — exactly what the
             // real decode HLO reads from the dense cache (the current
             // token's KV is computed in-graph, and the engine only refills
             // rows below the committed kv length, which equals `pos`)
             let len = (pos[lane].max(0) as usize).min(tmax);
-            // checksum over every reinflated element of this lane's cache:
-            // the "attention" — any single-bit change in the compressed
-            // store flips the generated token stream
-            let mut acc: u64 = 0;
-            for l in 0..l_n {
+            // the "attention": checksum + streaming softmax over every
+            // reinflated element of this lane's cache (see [`LaneScore`])
+            let mut sc = LaneScore::new();
+            for (l, (lutk, lutv)) in luts.tabs.iter().enumerate() {
                 for hd in 0..h_n {
                     for t in 0..len {
                         let base = (((l * b_n + lane) * h_n + hd) * tmax + t) * half;
                         for i in 0..half {
-                            acc = mix(
-                                acc ^ (kr[base + i].to_bits() as u64)
-                                    ^ ((ki[base + i].to_bits() as u64) << 16)
-                                    ^ ((vr[base + i].to_bits() as u64) << 32)
-                                    ^ ((vi[base + i].to_bits() as u64) << 8),
-                            );
+                            let j = base + i;
+                            sc.element(lutk, lutv, kr[j], ki[j], vr[j], vi[j]);
                         }
+                        sc.end_row();
                     }
                 }
             }
-            let state = mix(acc ^ (token[lane] as u64) ^ ((pos[lane] as u64) << 48));
-            let tok = Self::next_token(state);
-            Self::set_logits(&mut out.logits, lane, vocab, tok, state);
-            // this step's compressed KV entries
-            for l in 0..l_n {
-                let bins = cfg.layers[l];
-                for hd in 0..h_n {
-                    let base = ((l * b_n + lane) * h_n + hd) * half;
-                    for i in 0..half {
-                        let tag = ((l as u64) << 40) | ((hd as u64) << 32) | (i as u64);
-                        let e = mix(state ^ tag);
-                        let (r, k) = Self::entry(e, bins.n_k);
-                        out.kr[base + i] = r;
-                        out.ki[base + i] = k;
-                        let (r, k) = Self::entry(mix(e ^ 0x56), bins.n_v);
-                        out.vr[base + i] = r;
-                        out.vi[base + i] = k;
+            let state = sc.state(token[lane], pos[lane]);
+            self.emit_lane(&mut out, lane, state, cfg);
+        }
+        Ok(out)
+    }
+
+    fn supports_fused_decode(&self) -> bool {
+        true
+    }
+
+    /// The fused read path: identical scoring to [`Self::run_decode`], but
+    /// the rows arrive as dequantized page tiles straight from the
+    /// compressed store — the dense (L,B,H,Tmax,d/2) tensors never exist.
+    /// Tile order (heads ascending, token ranges ascending) matches the
+    /// dense loop's (head, token) nesting, and both paths share
+    /// [`LaneScore`], so the emitted tokens are bit-identical.
+    fn run_decode_fused(
+        &self,
+        token: &[i32],
+        pos: &[i32],
+        cfg: &QuantConfig,
+        cache: &mut dyn KvTileReader,
+    ) -> Result<DecodeOut> {
+        let (l_n, b_n, _, tmax, half) = self.cache_dims();
+        ensure!(token.len() == b_n && pos.len() == b_n);
+        ensure!(cfg.layers.len() == l_n, "config/profile layer mismatch");
+        let luts = self.luts(cfg);
+        let mut out = self.empty_decode_out();
+        for lane in 0..b_n {
+            let len = (pos[lane].max(0) as usize).min(tmax);
+            let mut sc = LaneScore::new();
+            for (l, (lutk, lutv)) in luts.tabs.iter().enumerate() {
+                cache.visit(lane, l, len, &mut |tile: &KvTileView<'_>| {
+                    debug_assert_eq!(tile.half, half, "tile geometry mismatch");
+                    for t in 0..tile.tokens {
+                        let base = t * tile.half;
+                        for i in 0..tile.half {
+                            let j = base + i;
+                            sc.element(lutk, lutv, tile.kr[j], tile.ki[j], tile.vr[j], tile.vi[j]);
+                        }
+                        sc.end_row();
                     }
-                }
+                })?;
             }
+            let state = sc.state(token[lane], pos[lane]);
+            self.emit_lane(&mut out, lane, state, cfg);
         }
         Ok(out)
     }
@@ -277,6 +445,95 @@ mod tests {
         }
         for &r in &a.kr {
             assert!(r >= 0.0, "norms must be non-negative");
+        }
+    }
+
+    /// Tile reader over plain dense slabs — lets the unit test compare the
+    /// fused scorer against the dense one on the exact same values without
+    /// standing up a PagedKvCache.
+    struct SliceTiles<'a> {
+        b_n: usize,
+        h_n: usize,
+        tmax: usize,
+        half: usize,
+        tile: usize,
+        kr: &'a [f32],
+        ki: &'a [f32],
+        vr: &'a [f32],
+        vi: &'a [f32],
+        buf: Vec<f32>,
+    }
+
+    impl KvTileReader for SliceTiles<'_> {
+        fn visit(
+            &mut self,
+            lane: usize,
+            layer: usize,
+            upto: usize,
+            f: &mut dyn FnMut(&KvTileView<'_>),
+        ) -> Result<()> {
+            let (half, tile) = (self.half, self.tile);
+            for hd in 0..self.h_n {
+                let mut t0 = 0usize;
+                while t0 < upto {
+                    let tokens = tile.min(upto - t0);
+                    let elems = tokens * half;
+                    for (s, slab) in [self.kr, self.ki, self.vr, self.vi].into_iter().enumerate() {
+                        let src =
+                            (((layer * self.b_n + lane) * self.h_n + hd) * self.tmax + t0) * half;
+                        self.buf[s * elems..(s + 1) * elems]
+                            .copy_from_slice(&slab[src..src + elems]);
+                    }
+                    f(&KvTileView {
+                        layer,
+                        head: hd,
+                        t0,
+                        tokens,
+                        half,
+                        kr: &self.buf[..elems],
+                        ki: &self.buf[elems..2 * elems],
+                        vr: &self.buf[2 * elems..3 * elems],
+                        vi: &self.buf[3 * elems..4 * elems],
+                    });
+                    t0 += tokens;
+                }
+            }
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn fused_decode_bit_identical_to_dense() {
+        let sim = SimExecutor::new(11);
+        let (l, b, h, tmax, half) = sim.cache_dims();
+        let n = l * b * h * tmax * half;
+        // valid codes: ki < 128, vi < 64, positive norms
+        let kr: Vec<f32> = (0..n).map(|i| 0.1 + (i % 97) as f32 / 31.0).collect();
+        let ki: Vec<f32> = (0..n).map(|i| (i * 7 % 128) as f32).collect();
+        let vr: Vec<f32> = (0..n).map(|i| 0.2 + (i % 53) as f32 / 17.0).collect();
+        let vi: Vec<f32> = (0..n).map(|i| (i * 11 % 64) as f32).collect();
+        let token: Vec<i32> = (0..b as i32).map(|i| 40 + i).collect();
+        let pos: Vec<i32> = (0..b as i32).map(|i| (i * 5) % tmax as i32).collect();
+        let dense = sim.run_decode(&token, &pos, &cfg(), &kr, &ki, &vr, &vi).unwrap();
+        for tile in [1usize, 3, 4, 64] {
+            let mut tiles = SliceTiles {
+                b_n: b,
+                h_n: h,
+                tmax,
+                half,
+                tile,
+                kr: &kr,
+                ki: &ki,
+                vr: &vr,
+                vi: &vi,
+                buf: vec![0.0; 4 * tile.min(tmax) * half],
+            };
+            let fused = sim.run_decode_fused(&token, &pos, &cfg(), &mut tiles).unwrap();
+            assert_eq!(dense.logits, fused.logits, "tile={tile}");
+            assert_eq!(dense.kr, fused.kr, "tile={tile}");
+            assert_eq!(dense.ki, fused.ki, "tile={tile}");
+            assert_eq!(dense.vr, fused.vr, "tile={tile}");
+            assert_eq!(dense.vi, fused.vi, "tile={tile}");
         }
     }
 

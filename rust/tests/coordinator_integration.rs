@@ -11,7 +11,7 @@ use std::net::{TcpListener, TcpStream};
 use std::time::Duration;
 use turboangle::coordinator::server::serve_on;
 use turboangle::coordinator::{
-    BatchPolicy, Engine, EngineConfig, EngineCore, FinishReason, Request, RoutePolicy,
+    BatchPolicy, Engine, EngineConfig, EngineCore, FinishReason, ReadPath, Request, RoutePolicy,
     SchedulerPolicy,
 };
 use turboangle::quant::{Mode, NormMode, QuantConfig};
@@ -21,7 +21,18 @@ use turboangle::workload::{self, WorkloadSpec};
 
 /// Sim-backed engine: 2 layers, 2 heads, d=8, batch 4 — eager batching so
 /// single requests prefill immediately (deterministic tick sequences).
+/// Auto resolves to the fused read path (the sim supports it), so every
+/// existing test here also exercises tile decode.
 fn sim_engine(seed: u64, capacity_pages: usize, page_tokens: usize) -> Engine<SimExecutor> {
+    sim_engine_path(seed, capacity_pages, page_tokens, ReadPath::Auto)
+}
+
+fn sim_engine_path(
+    seed: u64,
+    capacity_pages: usize,
+    page_tokens: usize,
+    read_path: ReadPath,
+) -> Engine<SimExecutor> {
     Engine::new(
         SimExecutor::new(seed),
         EngineConfig {
@@ -33,6 +44,7 @@ fn sim_engine(seed: u64, capacity_pages: usize, page_tokens: usize) -> Engine<Si
             scheduler: SchedulerPolicy::default(),
             capacity_pages,
             page_tokens,
+            read_path,
         },
     )
 }
@@ -118,6 +130,90 @@ fn preempted_session_resumes_bit_identically() {
     let mem = e.memory_stats();
     assert_eq!(mem.pages_allocated, 0);
     assert_eq!(mem.swapped_sequences, 0);
+}
+
+/// The same guarantee THROUGH a preemption: run the swap-out/swap-in
+/// scenario on both read paths and demand identical token streams — the
+/// fused tile decode must read a restored compressed cache exactly as the
+/// dense reinflation would, and both must match the uninterrupted run.
+#[test]
+fn fused_preemption_matches_reinflate_bit_identically() {
+    let prompt_a: Vec<i32> = vec![10, 20, 30, 40, 50, 60, 70, 80];
+    let prompt_b: Vec<i32> = vec![9, 8, 7, 6, 5, 4, 3, 2];
+    let run = |path: ReadPath| {
+        // 4 pages of 4 tokens: A and B can never be resident together, so
+        // admitting B forces A through the swap pool
+        let mut e = sim_engine_path(7, 4, 4, path);
+        e.submit(Request::new(1, prompt_a.clone(), 8));
+        for _ in 0..100 {
+            if e.tick().unwrap() == turboangle::coordinator::scheduler::Action::Prefill {
+                break;
+            }
+        }
+        e.submit(Request::new(2, prompt_b.clone(), 8));
+        e.run_to_completion().unwrap();
+        assert!(e.metrics.preemptions >= 1, "A must have been swapped out");
+        assert!(e.metrics.swap_ins >= 1, "A must have been restored");
+        let mut finished = e.take_finished();
+        finished.sort_by_key(|s| s.request.id);
+        assert_eq!(finished.len(), 2);
+        (finished[0].generated.clone(), finished[1].generated.clone())
+    };
+    let fused = run(ReadPath::Fused);
+    let reinflate = run(ReadPath::Reinflate);
+    assert_eq!(
+        fused, reinflate,
+        "post-preemption generation must be bit-identical across read paths"
+    );
+}
+
+/// Acceptance criterion of the fused read path: with everything else
+/// identical, an engine that decodes straight from compressed page tiles
+/// emits EXACTLY the tokens of the dense-reinflate engine, for a whole
+/// mixed workload. The sim folds a checksum + streaming-softmax of every
+/// cache element into each token, so even a 1-ulp divergence between the
+/// two dequant paths would change the streams.
+#[test]
+fn fused_read_path_emits_bit_identical_tokens() {
+    let run = |path: ReadPath| {
+        let mut e = sim_engine_path(7, 64, 8, path);
+        assert_eq!(e.is_fused(), path != ReadPath::Reinflate);
+        for req in workload::generate(&WorkloadSpec {
+            n_requests: 8,
+            prompt_min: 3,
+            prompt_max: 24,
+            gen_min: 2,
+            gen_max: 10,
+            seed: 13,
+            sessions: 0,
+        }) {
+            e.submit(req);
+        }
+        e.run_to_completion().unwrap();
+        assert_eq!(e.metrics.requests_finished, 8);
+        if path == ReadPath::Reinflate {
+            assert!(e.dense_buffer_bytes() > 0);
+        } else {
+            // fused: no dense tensors, scratch bounded to one page of
+            // four d/2 slabs (page_tokens=8, d/2=4, 4 slabs, f32)
+            assert_eq!(e.dense_buffer_bytes(), 0, "fused path must not hold dense buffers");
+            assert!(e.tile_scratch_bytes() <= 8 * 4 * 4 * 4, "scratch beyond one page");
+        }
+        let mut out: Vec<(u64, Vec<i32>)> = e
+            .take_finished()
+            .into_iter()
+            .map(|s| (s.request.id, s.generated))
+            .collect();
+        out.sort();
+        out
+    };
+    let fused = run(ReadPath::Fused);
+    let reinflate = run(ReadPath::Reinflate);
+    assert_eq!(
+        fused, reinflate,
+        "fused and reinflate read paths must generate identical tokens"
+    );
+    assert_eq!(run(ReadPath::Auto), fused, "sim Auto must resolve to fused");
 }
 
 #[test]
@@ -256,6 +352,7 @@ fn engine(quant: QuantConfig, capacity_pages: usize) -> Option<Engine> {
             scheduler: SchedulerPolicy::default(),
             capacity_pages,
             page_tokens: 16,
+            read_path: ReadPath::Auto, // PJRT backend: resolves to reinflate
         },
     ))
 }

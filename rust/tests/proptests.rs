@@ -2,10 +2,10 @@
 //! accounting, and coordinator policies — the invariants DESIGN.md §8 lists.
 
 use turboangle::coordinator::batcher::{Admission, BatchPolicy, DynamicBatcher};
-use turboangle::coordinator::kv_manager::PagedKvCache;
+use turboangle::coordinator::kv_manager::{PagedKvCache, TileScratch};
 use turboangle::coordinator::router::{RoutePolicy, Router};
 use turboangle::coordinator::session::Request;
-use turboangle::quant::packing::{bits_for, pack, unpack};
+use turboangle::quant::packing::{bits_for, pack, unpack, BitCursor, BitVec};
 use turboangle::quant::{angle, baseline, batch, fwht, norm, Mode, NormMode, QuantConfig};
 use turboangle::util::prop::{run_cases, Gen};
 
@@ -76,6 +76,62 @@ fn prop_packing_roundtrip_any_width() {
         // bit-tightness: stored bits == len * width, rounded to u64 words
         assert_eq!(bv.len_bits(), len * width as usize);
         assert!(bv.storage_bytes() <= (len * width as usize).div_ceil(64) * 8);
+    });
+}
+
+#[test]
+fn prop_bitvec_roundtrip_all_widths_with_cursor() {
+    // every width 1..=16, random streams with forced max-value codes (all
+    // bits set) and lengths that cross u64 word boundaries; the sequential
+    // BitCursor must agree with random-access get from any start
+    run_cases(250, |g| {
+        let width = g.u32_in(1, 16);
+        let len = g.usize_in(0, 500);
+        let max = ((1u64 << width) - 1) as u16;
+        let mut codes: Vec<u16> = (0..len).map(|_| (g.u64() & max as u64) as u16).collect();
+        if len > 0 {
+            let i = g.usize_in(0, len - 1);
+            codes[i] = max;
+            codes[len - 1] = max;
+        }
+        let bv = pack(&codes, width);
+        assert_eq!(unpack(&bv, len, width), codes, "w={width} len={len}");
+        assert_eq!(bv.len_bits(), len * width as usize);
+        if len > 0 {
+            let start = g.usize_in(0, len - 1);
+            let mut cur = BitCursor::new(&bv, start, width);
+            for (idx, &want) in codes.iter().enumerate().skip(start) {
+                assert_eq!(cur.next(width), want as u32, "w={width} idx={idx}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_oversized_codes_truncate_without_smearing() {
+    // regression for the release-mode push() bug: stray high bits must be
+    // masked off, never ORed into neighboring codes
+    run_cases(200, |g| {
+        let width = g.u32_in(1, 15);
+        let len = g.usize_in(1, 200);
+        let mask = ((1u64 << width) - 1) as u32;
+        let raw: Vec<u32> = (0..len)
+            .map(|_| {
+                let c = (g.u64() as u32) & mask;
+                if g.bool() {
+                    c | ((g.u64() as u32) << width) // garbage above the width
+                } else {
+                    c
+                }
+            })
+            .collect();
+        let mut bv = BitVec::with_capacity(len, width);
+        for &c in &raw {
+            bv.push(c, width);
+        }
+        for (i, &c) in raw.iter().enumerate() {
+            assert_eq!(bv.get(i, width), c & mask, "w={width} idx={i}");
+        }
     });
 }
 
@@ -413,6 +469,92 @@ fn prop_swap_roundtrip_restores_dense_reinflation_bit_identically() {
         let mut b = (vec![0.0f32; n], vec![0.0f32; n], vec![0.0f32; n], vec![0.0f32; n]);
         c.fill_dense(1, 0, 1, &mut b.0, &mut b.1, &mut b.2, &mut b.3).unwrap();
         assert_eq!(a, b, "swap-out → swap-in must reinflate bit-identically");
+    });
+}
+
+#[test]
+fn prop_fused_tiles_match_fill_dense_and_decode_batch() {
+    // the fused read path's tiles must be bit-identical to the dense
+    // reinflation — and running the x-space batch decoder (TrigLut trig +
+    // inverse FWHT) over those tiles must match decode_batch over the
+    // dense rows, for random geometry, page sizes, and norm modes
+    run_cases(40, |g| {
+        let l_n = g.usize_in(1, 3);
+        let h_n = g.usize_in(1, 2);
+        let d = *g.choice(&[8usize, 16]);
+        let half = d / 2;
+        let tokens = g.usize_in(1, 12);
+        let tmax = 16;
+        let page_tokens = g.usize_in(2, 5);
+        let norms = *g.choice(&[
+            (NormMode::FP32, NormMode::FP32),
+            (NormMode::LINEAR8, NormMode::LOG4),
+        ]);
+        let cfg = QuantConfig::paper_uniform(l_n).with_norms(norms.0, norms.1);
+        let mut c = PagedKvCache::new(cfg, l_n, h_n, d, tmax, 64, page_tokens);
+        c.new_seq(1, tokens).unwrap();
+        for _ in 0..tokens {
+            for l in 0..l_n {
+                for h in 0..h_n {
+                    let kr = g.f32_vec(half, 0.05, 4.0);
+                    let ki: Vec<f32> = (0..half).map(|_| (g.u64() % 128) as f32).collect();
+                    let vr = g.f32_vec(half, 0.05, 4.0);
+                    let vi: Vec<f32> = (0..half).map(|_| (g.u64() % 64) as f32).collect();
+                    c.append_token_lh(1, l, h, &kr, &ki, &vr, &vi).unwrap();
+                }
+            }
+            c.commit_token(1).unwrap();
+        }
+        let n = l_n * h_n * tmax * half;
+        let mut dense = (vec![0.0f32; n], vec![0.0f32; n], vec![0.0f32; n], vec![0.0f32; n]);
+        c.fill_dense(1, 0, 1, &mut dense.0, &mut dense.1, &mut dense.2, &mut dense.3)
+            .unwrap();
+        let sign = fwht::test_sign_diag(d, g.u64());
+        let mut scratch = TileScratch::new();
+        let upto = g.usize_in(0, tokens);
+        for l in 0..l_n {
+            // stitch the visited tiles back into per-head contiguous slabs
+            let mut skr: Vec<Vec<f32>> = vec![Vec::new(); h_n];
+            let mut ski: Vec<Vec<f32>> = vec![Vec::new(); h_n];
+            let mut svr: Vec<Vec<f32>> = vec![Vec::new(); h_n];
+            let mut svi: Vec<Vec<f32>> = vec![Vec::new(); h_n];
+            c.visit_seq_tiles(1, l, upto, &mut scratch, &mut |t| {
+                assert!(t.tokens <= page_tokens, "tile larger than a page");
+                assert_eq!(skr[t.head].len(), t.t0 * half, "tiles out of order");
+                skr[t.head].extend_from_slice(t.kr);
+                ski[t.head].extend_from_slice(t.ki);
+                svr[t.head].extend_from_slice(t.vr);
+                svi[t.head].extend_from_slice(t.vi);
+            })
+            .unwrap();
+            for h in 0..h_n {
+                let base = (l * h_n + h) * tmax * half;
+                let span = upto * half;
+                assert_eq!(&skr[h][..], &dense.0[base..base + span], "kr l={l} h={h}");
+                assert_eq!(&ski[h][..], &dense.1[base..base + span], "ki l={l} h={h}");
+                assert_eq!(&svr[h][..], &dense.2[base..base + span], "vr l={l} h={h}");
+                assert_eq!(&svi[h][..], &dense.3[base..base + span], "vi l={l} h={h}");
+                if upto == 0 {
+                    continue;
+                }
+                // x-space: decode_batch over fused tiles vs over dense rows
+                let ku: Vec<u16> = ski[h].iter().map(|&k| k as u16).collect();
+                let mut from_tiles = vec![0.0f32; upto * d];
+                batch::decode_batch(&skr[h], &ku, &sign, 128, false, &mut from_tiles);
+                let dku: Vec<u16> =
+                    dense.1[base..base + span].iter().map(|&k| k as u16).collect();
+                let mut from_dense = vec![0.0f32; upto * d];
+                batch::decode_batch(
+                    &dense.0[base..base + span],
+                    &dku,
+                    &sign,
+                    128,
+                    false,
+                    &mut from_dense,
+                );
+                assert_eq!(from_tiles, from_dense, "x-space decode diverged l={l} h={h}");
+            }
+        }
     });
 }
 
