@@ -4,7 +4,7 @@
 ARTIFACTS ?= artifacts
 
 .PHONY: all artifacts test bench smoke bench-serving smoke-serving \
-        bench-fused smoke-fused fmt lint clean
+        bench-fused smoke-fused bench-prefix smoke-prefix fmt lint clean
 
 all: test
 
@@ -47,6 +47,15 @@ bench-fused:
 smoke-fused:
 	cargo bench --bench fused_attention -- --smoke
 
+# Prefix cache: cold vs warm prefill on a shared-prefix workload (asserts
+# cold/warm token bit-identity and prefix_hit_speedup > 1), writes
+# BENCH_prefix_caching.json.
+bench-prefix:
+	cargo bench --bench prefix_caching
+
+smoke-prefix:
+	cargo bench --bench prefix_caching -- --smoke
+
 fmt:
 	cargo fmt --all
 
@@ -56,4 +65,5 @@ lint:
 
 clean:
 	cargo clean
-	rm -f BENCH_quant_hot_path.json BENCH_serving_throughput.json BENCH_fused_attention.json
+	rm -f BENCH_quant_hot_path.json BENCH_serving_throughput.json \
+	      BENCH_fused_attention.json BENCH_prefix_caching.json

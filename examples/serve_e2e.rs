@@ -35,6 +35,7 @@ fn run_engine(
             capacity_pages: 2048,
             page_tokens: 16,
             read_path: ReadPath::Auto,
+            prefix_cache: false,
         },
     );
     let spec = WorkloadSpec {
@@ -45,6 +46,7 @@ fn run_engine(
         gen_max: 24,
         seed: 7,
         sessions: 0,
+        ..Default::default()
     };
     let reqs = workload::generate(&spec);
     let total_gen: usize = reqs.iter().map(|r| r.max_new_tokens).sum();

@@ -41,6 +41,7 @@ fn sim_engines(replicas: usize) -> Vec<Box<dyn EngineCore>> {
                     capacity_pages: 1024,
                     page_tokens: 8,
                     read_path: ReadPath::Auto,
+                    prefix_cache: false,
                 },
             )) as Box<dyn EngineCore>
         })
@@ -124,6 +125,7 @@ fn artifact_section(smoke: bool) -> anyhow::Result<()> {
                 capacity_pages: 4096,
                 page_tokens: 16,
                 read_path: ReadPath::Auto,
+                prefix_cache: false,
             },
         );
         let spec = WorkloadSpec {
@@ -134,6 +136,7 @@ fn artifact_section(smoke: bool) -> anyhow::Result<()> {
             gen_max: 16,
             seed: 21,
             sessions: 0,
+            ..Default::default()
         };
         let t0 = Instant::now();
         for req in workload::generate(&spec) {

@@ -20,14 +20,15 @@
 //! multi-replica server (`server.rs`) only ever sees `dyn EngineCore`.
 
 use super::batcher::{Admission, BatchPolicy, DynamicBatcher};
-use super::kv_manager::{BatchTileReader, MemoryStats, PagedKvCache, TileScratch};
+use super::kv_manager::{BatchTileReader, MemoryStats, PageId, PagedKvCache, TileScratch};
 use super::metrics::EngineMetrics;
+use super::prefix_cache::PrefixCache;
 use super::scheduler::{next_action, Action, SchedulerPolicy};
 use super::session::{FinishReason, Request, Session};
 use crate::quant::QuantConfig;
 use crate::runtime::{ModelBackend, ModelExecutor};
 use anyhow::Result;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
 
 pub const PAD: i32 = 258;
@@ -88,6 +89,11 @@ pub struct EngineConfig {
     pub page_tokens: usize,
     /// decode read path (fused tiles vs dense reinflation)
     pub read_path: ReadPath,
+    /// share full compressed pages across requests with common prompt
+    /// prefixes (radix-tree prefix cache; CLI `--prefix-cache on|off`).
+    /// Token streams are bit-identical either way — the cache only skips
+    /// recomputing KV entries that deterministic prefill would reproduce.
+    pub prefix_cache: bool,
 }
 
 pub struct Engine<B: ModelBackend = ModelExecutor> {
@@ -101,6 +107,10 @@ pub struct Engine<B: ModelBackend = ModelExecutor> {
     /// Sessions evicted under memory pressure, FIFO. Their compressed
     /// caches live in the kv_manager swap pool until re-admission.
     preempted: VecDeque<Session>,
+    /// Prompt-prefix radix tree over shared compressed pages (None = off).
+    /// Admission matches against it, finished sequences insert into it,
+    /// and pool pressure evicts its unreferenced pages LRU-first.
+    prefix: Option<PrefixCache>,
     /// resolved read path: true = decode consumes compressed pages
     /// tile-by-tile, the dense buffers below stay empty
     fused: bool,
@@ -158,6 +168,7 @@ impl<B: ModelBackend> Engine<B> {
             quant: cfg.quant,
             slots: (0..b).map(|_| None).collect(),
             preempted: VecDeque::new(),
+            prefix: cfg.prefix_cache.then(|| PrefixCache::new(cfg.page_tokens)),
             fused,
             tile_scratch: TileScratch::new(),
             slot_filled: vec![0; b],
@@ -173,6 +184,11 @@ impl<B: ModelBackend> Engine<B> {
     /// Whether decode consumes compressed pages directly (the fused path).
     pub fn is_fused(&self) -> bool {
         self.fused
+    }
+
+    /// Whether the prompt-prefix cache is enabled.
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.prefix.is_some()
     }
 
     /// Bytes of fused-path dequant scratch currently held (one page of
@@ -207,6 +223,38 @@ impl<B: ModelBackend> Engine<B> {
         sess.finished = Some(FinishReason::CacheFull);
         self.metrics.rejected_cache_full += 1;
         self.retire(sess);
+    }
+
+    /// Return a finished session's cache to the pool. With prefix caching
+    /// on, its PROMPT-covered full pages are sealed into the shared store
+    /// (content-addressed, deduped) and indexed in the radix tree so
+    /// future prompts sharing the prefix adopt them. With it off,
+    /// everything is freed outright.
+    ///
+    /// Only prefill-emitted pages are cached: decode-emitted KV is a
+    /// different deterministic function of the token prefix than prefill's
+    /// (sim backend), so sharing generated positions with a future prompt
+    /// that happens to spell the same tokens would break the
+    /// prefix-cache-on/off bit-identity guarantee. Multi-turn reuse is
+    /// unaffected — the next turn's prompt contains this whole
+    /// conversation and gets cached from its OWN prefill when it finishes.
+    fn finish_kv(&mut self, sess: &Session) -> Result<()> {
+        let id = sess.request.id;
+        let Some(p) = self.prefix.as_mut() else {
+            return self.kv.free_seq(id);
+        };
+        let prompt = &sess.request.prompt[..sess.prompt_len];
+        let before = self.kv.shared_page_count();
+        let chain = self.kv.finish_seq_share(id, prompt)?;
+        self.metrics.prefix_pages_inserted += (self.kv.shared_page_count() - before) as u64;
+        // a chain id the tree could not link (hash-collision dedup
+        // fallback) is indexed nowhere — free it or it leaks its pool page
+        for pid in p.insert(prompt, &chain) {
+            if self.kv.shared_page_refs(pid) == Some(0) {
+                self.kv.free_shared_page(pid)?;
+            }
+        }
+        Ok(())
     }
 
     /// The single retire path: every finished session — rejected, done at
@@ -300,7 +348,22 @@ impl<B: ModelBackend> Engine<B> {
             // same bound as admission: cache_len + remaining == prompt +
             // max_new, so the re-reservation never exceeds the original
             let expected = (sess.cache_len() + remaining).min(self.exec.serve().tmax);
-            if !self.kv.swap_in(sess.request.id, expected)? {
+            let id = sess.request.id;
+            let mut admitted = self.kv.swap_in(id, expected)?;
+            if !admitted {
+                // pool full: reclaim cache, bounded by the exact deficit —
+                // the prefix cache must never starve a preempted session's
+                // re-admission, but when live reservations are what blocks
+                // the swap-in, the cache is left alone
+                let need = self.kv.swap_in_reserve(id, expected).unwrap_or(0);
+                let deficit = self.kv.admit_deficit(need);
+                // no exclusions: this sequence's own adopted pages are
+                // already pinned by the refs it kept through the swap
+                if self.reclaim_prefix_cache(deficit, &[])? > 0 {
+                    admitted = self.kv.swap_in(id, expected)?;
+                }
+            }
+            if !admitted {
                 break; // FIFO: don't let younger preemptees jump the queue
             }
             let sess = self.preempted.pop_front().expect("checked non-empty");
@@ -328,6 +391,36 @@ impl<B: ModelBackend> Engine<B> {
             .map(|(i, _)| i)
     }
 
+    /// Reclaim up to `deficit` unreferenced cached prefix pages, LRU-first
+    /// (no-op with the cache off or a zero deficit). Returns how many pool
+    /// pages were freed. Dropping cache is strictly cheaper than
+    /// preempting live work, so both blocked admission and blocked swap-in
+    /// re-admission try this before anything heavier; refcount-0 only, so
+    /// pages referenced by live or swapped sequences always survive.
+    /// `exclude` pins extra pages — the blocked request's own matched
+    /// prefix: evicting those shrinks its discount by exactly as much as
+    /// it frees, so it can never reduce the deficit, only destroy cache.
+    fn reclaim_prefix_cache(&mut self, deficit: usize, exclude: &[PageId]) -> Result<usize> {
+        if deficit == 0 {
+            return Ok(0);
+        }
+        let Some(p) = self.prefix.as_mut() else {
+            return Ok(0);
+        };
+        let kv = &self.kv;
+        let freed = p.evict_lru(deficit, &|pid| {
+            if exclude.contains(&pid) {
+                return 1; // pinned: a net-zero eviction for the caller
+            }
+            kv.shared_page_refs(pid).unwrap_or(0)
+        });
+        for pid in &freed {
+            self.kv.free_shared_page(*pid)?;
+        }
+        self.metrics.prefix_evictions += freed.len() as u64;
+        Ok(freed.len())
+    }
+
     /// Evict one active session: compressed cache → swap pool, session →
     /// preemption queue. No dequantization happens; the page pool gets the
     /// session's pages AND its admission reservation back.
@@ -342,9 +435,13 @@ impl<B: ModelBackend> Engine<B> {
 
     /// A prefill tick. Forms a batch; requests that can never fit the pool
     /// are finished immediately with `CacheFull` (no more head-of-line
-    /// starvation). When the queue head is blocked only by *current*
-    /// memory pressure, active sessions are evicted youngest-first until it
-    /// fits — each eviction loop iteration either seats new work or
+    /// starvation). With prefix caching on, each candidate's longest
+    /// cached prefix is matched here and its reservation charged only for
+    /// the unshared remainder. When the queue head is blocked only by
+    /// *current* memory pressure, unreferenced cached pages are reclaimed
+    /// LRU-first (dropping cache is strictly cheaper than preempting live
+    /// work), then active sessions are evicted youngest-first until it
+    /// fits — every loop iteration seats new work, frees a cached page, or
     /// shrinks the active set, so this terminates.
     fn run_prefill(&mut self) -> Result<Action> {
         let mut evicted = false;
@@ -356,17 +453,36 @@ impl<B: ModelBackend> Engine<B> {
             let tp = self.exec.serve().prefill_len;
             let tmax = self.exec.serve().tmax;
             let kv = &self.kv;
+            let mut prefix = self.prefix.as_mut();
             // pages promised to requests admitted earlier in THIS pass —
             // the pool won't see their reservations until seat_prefill, so
             // the check must accumulate them or a jointly-over-capacity
             // batch would pass admission and fail its reservation later
             let mut batch_pages = 0usize;
+            // longest cached prefix per examined request, matched ONCE here
+            // and reused at seating so the admission discount and the
+            // actual adoption can never disagree
+            let mut matches: HashMap<u64, Vec<PageId>> = HashMap::new();
             let taken = self.batcher.take_batch(free.len(), |r| {
                 let expected = expected_tokens(r.prompt.len(), r.max_new_tokens, tp, tmax);
-                let pages = kv.pages_for_tokens(expected);
+                // capacity verdict deliberately ignores sharing: identical
+                // accept/reject outcomes with the prefix cache on or off
                 if !kv.fits_capacity(expected) {
-                    Admission::Reject
-                } else if kv.can_admit_pages(batch_pages + pages) {
+                    return Admission::Reject;
+                }
+                let mut pages = kv.pages_for_tokens(expected);
+                if let Some(p) = prefix.as_deref_mut() {
+                    let plen = r.prompt.len().min(tp);
+                    let mut shared = p.match_prefix(&r.prompt[..plen]);
+                    // never adopt past the sequence bound (degenerate
+                    // tmax < prefill_len configs clamp `expected` below
+                    // the prompt) — keeps the discount subtraction and
+                    // `new_seq_with_prefix`'s prefix<=expected check sound
+                    shared.truncate(expected / kv.page_tokens());
+                    pages -= shared.len(); // adopted pages are already charged
+                    matches.insert(r.id, shared);
+                }
+                if kv.can_admit_pages(batch_pages + pages) {
                     batch_pages += pages;
                     Admission::Admit
                 } else {
@@ -380,25 +496,33 @@ impl<B: ModelBackend> Engine<B> {
                 self.reject_cache_full(req);
             }
             if !taken.admitted.is_empty() {
-                self.seat_prefill(taken.admitted, &free)?;
+                self.seat_prefill(taken.admitted, &free, &mut matches)?;
                 return Ok(Action::Prefill);
             }
             if self.batcher.pending() == 0 {
                 // nothing admissible and nothing deferred: only rejects ran
                 return Ok(if evicted { Action::Preempt } else { Action::Idle });
             }
-            // head deferred on memory pressure: evict eligible victims
-            // until its pages fit, THEN retry the batch pass once — a
-            // single deferral count per blocked tick, not one per victim
-            let head_pages = {
+            // head deferred on memory pressure: reclaim cache, then evict
+            // eligible victims until its pages fit, THEN retry the batch
+            // pass — a single deferral count per blocked tick
+            let (head_id, head_pages) = {
                 let head = self.batcher.peek().expect("pending > 0");
-                self.kv.pages_for_tokens(expected_tokens(
+                let full = self.kv.pages_for_tokens(expected_tokens(
                     head.prompt.len(),
                     head.max_new_tokens,
                     tp,
                     tmax,
-                ))
+                ));
+                // the head's own matched pages stay charged to the store
+                let matched = matches.get(&head.id).map_or(0, Vec::len);
+                (head.id, full.saturating_sub(matched))
             };
+            let head_matched = matches.get(&head_id).map(Vec::as_slice).unwrap_or(&[]);
+            let deficit = self.kv.admit_deficit(head_pages);
+            if self.reclaim_prefix_cache(deficit, head_matched)? > 0 {
+                continue; // retry the pass with the reclaimed room
+            }
             while !self.kv.can_admit_pages(head_pages) {
                 match self.youngest_active_slot() {
                     Some(victim) => {
@@ -416,18 +540,36 @@ impl<B: ModelBackend> Engine<B> {
     }
 
     /// Run the prefill HLO for an admitted batch and seat the sessions.
-    fn seat_prefill(&mut self, reqs: Vec<Request>, free: &[usize]) -> Result<()> {
+    /// `matches` carries each request's longest cached prefix from the
+    /// admission pass (always empty with prefix caching off): matched
+    /// pages are adopted — refcounts bumped, zero bytes copied — and only
+    /// the suffix tokens are prefilled and appended.
+    fn seat_prefill(
+        &mut self,
+        reqs: Vec<Request>,
+        free: &[usize],
+        matches: &mut HashMap<u64, Vec<PageId>>,
+    ) -> Result<()> {
         let tp = self.exec.serve().prefill_len;
         let tmax = self.exec.serve().tmax;
         let b_total = self.slots.len();
+        let page_tokens = self.kv.page_tokens();
         let mut tokens = vec![PAD; b_total * tp];
         let mut lengths = vec![1i32; b_total]; // dummy lanes: len 1
+        let mut prefix_lens = vec![0usize; b_total];
         for (lane, req) in reqs.iter().enumerate() {
             let plen = req.prompt.len().min(tp);
             tokens[lane * tp..lane * tp + plen].copy_from_slice(&req.prompt[..plen]);
             lengths[lane] = plen as i32;
+            prefix_lens[lane] = matches.get(&req.id).map_or(0, Vec::len) * page_tokens;
         }
-        let out = self.exec.run_prefill(&tokens, &lengths, &self.quant)?;
+        let out = if self.prefix.is_some() {
+            // cached positions skip KV emission in the backend
+            self.exec
+                .run_prefill_suffix(&tokens, &lengths, &prefix_lens, &self.quant)?
+        } else {
+            self.exec.run_prefill(&tokens, &lengths, &self.quant)?
+        };
         self.metrics.prefill_batches += 1;
 
         let (b_n, h_n, half) = (
@@ -439,11 +581,24 @@ impl<B: ModelBackend> Engine<B> {
         for (lane, req) in reqs.into_iter().enumerate() {
             let plen = req.prompt.len().min(tp);
             let expected = expected_tokens(req.prompt.len(), req.max_new_tokens, tp, tmax);
-            self.kv.new_seq(req.id, expected)?;
-            // pack the prompt's compressed entries: only t < plen. One
-            // strided append per token covers every (layer, head) at once
-            // (kv_manager fans layers out across rayon when worthwhile).
-            for t in 0..plen {
+            let shared = matches.remove(&req.id).unwrap_or_default();
+            let shared_tokens = shared.len() * page_tokens;
+            self.kv.new_seq_with_prefix(req.id, expected, &shared)?;
+            if self.prefix.is_some() {
+                if shared.is_empty() {
+                    self.metrics.prefix_misses += 1;
+                } else {
+                    self.metrics.prefix_hits += 1;
+                    self.metrics.prefix_tokens_reused += shared_tokens as u64;
+                    self.metrics.prefix_pages_adopted += shared.len() as u64;
+                }
+            }
+            // pack the SUFFIX tokens' compressed entries: positions below
+            // `shared_tokens` are already resident in the adopted pages.
+            // One strided append per token covers every (layer, head) at
+            // once (kv_manager fans layers out across rayon when
+            // worthwhile).
+            for t in shared_tokens..plen {
                 self.kv.append_token_strided(
                     req.id,
                     &out.kr,
@@ -468,7 +623,7 @@ impl<B: ModelBackend> Engine<B> {
             if sess.finished.is_some() {
                 // finished on its very first token (EOS, or max_new_tokens
                 // == 1): retire now instead of burning a decode step
-                self.kv.free_seq(sess.request.id);
+                self.finish_kv(&sess)?;
                 self.retire(sess);
                 continue;
             }
@@ -565,7 +720,7 @@ impl<B: ModelBackend> Engine<B> {
             self.metrics.tokens_generated += 1;
             if sess.finished.is_some() {
                 let sess = self.slots[b].take().unwrap();
-                self.kv.free_seq(sess.request.id);
+                self.finish_kv(&sess)?;
                 self.retire(sess);
             }
         }

@@ -7,15 +7,28 @@
 //!     (min,max) window per vector (Eq. 3's 64/d overhead term),
 //!   * or raw f32 norms when the config says fp32.
 //!
-//! Pages of `page_tokens` tokens are drawn from a global pool — the
-//! vLLM-style block allocator that gives admission control and a
-//! fragmentation-free memory bound. `fill_dense` reinflates a sequence into
-//! the (L,B,H,Tmax,d/2) tensors the decode_step HLO consumes.
+//! Storage is **page-granular**: a sequence's compressed streams are split
+//! into [`PageBlock`]s of `page_tokens` tokens each, covering every
+//! (layer, head, K/V) chunk of that token window. Only the open tail page
+//! is mutable; a page that fills becomes immutable. Full pages can be
+//! sealed into a content-addressed, refcounted shared store
+//! ([`PagedKvCache::finish_seq_share`]) so later sequences with the same
+//! token prefix adopt one physical copy
+//! ([`PagedKvCache::new_seq_with_prefix`]) — the substrate the
+//! prefix-cache radix tree (`prefix_cache.rs`) indexes.
+//!
+//! Pages are drawn from a global pool — the vLLM-style block allocator
+//! that gives admission control and a fragmentation-free memory bound.
+//! Shared pages are charged to the pool exactly once, no matter how many
+//! sequences reference them. `fill_dense` reinflates a sequence into the
+//! (L,B,H,Tmax,d/2) tensors the decode_step HLO consumes; the fused read
+//! path walks the same chunks page-tile by page-tile.
 
 use crate::quant::norm::{self, NormMode};
 use crate::quant::packing::{bits_for, BitCursor, BitVec};
 use crate::quant::{LayerBins, QuantConfig};
 use crate::runtime::{KvTileReader, KvTileView};
+use crate::util::hash::splitmix64 as mix;
 use anyhow::{bail, ensure, Result};
 use rayon::prelude::*;
 use std::collections::HashMap;
@@ -31,15 +44,27 @@ const PAR_FILL_ELEM_THRESHOLD: usize = 4096;
 /// dispatch on their own.
 const PAR_APPEND_ELEM_THRESHOLD: usize = 8192;
 
+/// Identifier of one immutable shared page in the store. Ids are never
+/// reused, so a stale id can only miss, not alias.
+pub type PageId = u64;
+
+/// Chain-hash parent of a page with no predecessor (ids start at 1).
+const ROOT_PARENT: PageId = 0;
+
 /// Global page-pool accounting (pages are bookkeeping units; bytes live in
 /// the per-sequence stores).
 ///
 /// The pool tracks two numbers: `allocated_pages` (pages physically held
-/// by resident sequences) and `reserved_pages` (worst-case pages *promised*
-/// to resident sequences at admission). Admission checks reservations, not
-/// allocations — so a sequence admitted for `prompt + max_new_tokens` can
-/// always grow to that bound without a mid-decode "pool exhausted" failure,
-/// and preemption's swap-out releases a well-defined quantity.
+/// by resident sequences or the shared store) and `reserved_pages`
+/// (worst-case pages *promised* at admission, plus one per shared page).
+/// Admission checks reservations, not allocations — so a sequence admitted
+/// for `prompt + max_new_tokens` can always grow to that bound without a
+/// mid-decode "pool exhausted" failure, and preemption's swap-out releases
+/// a well-defined quantity.
+///
+/// With refcounted page sharing, silent accounting drift is far more
+/// dangerous than it was for private streams — underflow and over-reserve
+/// are therefore hard errors in release builds too, not `debug_assert!`s.
 #[derive(Debug)]
 pub struct PagePool {
     page_tokens: usize,
@@ -73,24 +98,47 @@ impl PagePool {
 
     /// Move pages from "promised" to "physically held". Only valid within
     /// an existing reservation — admission already accounted for them.
-    fn alloc_reserved(&mut self, pages: usize) {
+    fn alloc_reserved(&mut self, pages: usize) -> Result<()> {
+        ensure!(
+            self.allocated_pages + pages <= self.reserved_pages,
+            "page pool accounting: allocating {pages} beyond the reservation \
+             ({}/{} allocated/reserved)",
+            self.allocated_pages,
+            self.reserved_pages
+        );
         self.allocated_pages += pages;
-        debug_assert!(self.allocated_pages <= self.reserved_pages);
+        Ok(())
     }
 
-    /// Take over a swapped-in sequence's footprint: `allocated` pages it
-    /// physically holds again plus its fresh `reserved` promise. The
-    /// caller has already checked `can_reserve(reserved)`.
-    fn adopt(&mut self, allocated: usize, reserved: usize) {
-        debug_assert!(allocated <= reserved && self.can_reserve(reserved));
+    /// Take over a footprint from outside the pool (swap-in, or a page
+    /// moving into the shared store): `allocated` pages physically held
+    /// plus a fresh `reserved` promise.
+    fn adopt(&mut self, allocated: usize, reserved: usize) -> Result<()> {
+        ensure!(
+            allocated <= reserved,
+            "page pool accounting: adopting {allocated} allocated > {reserved} reserved"
+        );
+        ensure!(
+            self.can_reserve(reserved),
+            "page pool cannot adopt {reserved} pages ({}/{} reserved/capacity)",
+            self.reserved_pages,
+            self.capacity_pages
+        );
         self.reserved_pages += reserved;
         self.allocated_pages += allocated;
+        Ok(())
     }
 
-    fn release(&mut self, allocated: usize, reserved: usize) {
-        debug_assert!(self.allocated_pages >= allocated && self.reserved_pages >= reserved);
+    fn release(&mut self, allocated: usize, reserved: usize) -> Result<()> {
+        ensure!(
+            self.allocated_pages >= allocated && self.reserved_pages >= reserved,
+            "page pool release underflow: {allocated}/{reserved} from {}/{}",
+            self.allocated_pages,
+            self.reserved_pages
+        );
         self.allocated_pages -= allocated;
         self.reserved_pages -= reserved;
+        Ok(())
     }
 
     pub fn allocated(&self) -> usize {
@@ -106,8 +154,9 @@ impl PagePool {
     }
 }
 
-/// One (layer, head) compressed stream for one sequence side (K or V).
-#[derive(Clone, Debug, Default)]
+/// One (layer, head) compressed stream chunk for one sequence side (K or
+/// V), covering at most `page_tokens` tokens of ONE page.
+#[derive(Clone, Debug, Default, PartialEq)]
 struct SideStore {
     angles: BitVec,
     norm_codes: BitVec,
@@ -124,25 +173,148 @@ impl SideStore {
             + self.windows.len() * 8
             + self.raw_norms.len() * 4
     }
+
+    /// Fold every stored bit into `h` — part of a page's content address.
+    fn fold_hash(&self, mut h: u64) -> u64 {
+        for &w in self.angles.words() {
+            h = mix(h ^ w);
+        }
+        h = mix(h ^ self.angles.len_bits() as u64);
+        for &w in self.norm_codes.words() {
+            h = mix(h ^ w);
+        }
+        h = mix(h ^ self.norm_codes.len_bits() as u64);
+        for &(a, b) in &self.windows {
+            h = mix(h ^ (a.to_bits() as u64) ^ ((b.to_bits() as u64) << 32));
+        }
+        for &r in &self.raw_norms {
+            h = mix(h ^ r.to_bits() as u64);
+        }
+        h
+    }
 }
 
-struct SeqCache {
-    len: usize,
-    pages: usize,
-    /// worst-case pages promised at admission (`pages` never exceeds it
-    /// while resident; zero while swapped out)
-    reserved: usize,
-    /// [layer][head] -> (K store, V store)
-    stores: Vec<Vec<(SideStore, SideStore)>>,
+/// All (layer, head) K/V chunks for one page of `page_tokens` tokens.
+/// The unit of sharing: once full, a block is immutable — append paths
+/// only ever touch a sequence's open tail block.
+#[derive(Clone, Debug, PartialEq)]
+struct PageBlock {
+    /// [layer][head] -> (K chunk, V chunk)
+    chunks: Vec<Vec<(SideStore, SideStore)>>,
 }
 
-impl SeqCache {
+impl PageBlock {
+    fn new(n_layers: usize, n_heads: usize) -> Self {
+        PageBlock {
+            chunks: (0..n_layers)
+                .map(|_| {
+                    (0..n_heads)
+                        .map(|_| (SideStore::default(), SideStore::default()))
+                        .collect()
+                })
+                .collect(),
+        }
+    }
+
     fn bytes(&self) -> usize {
-        self.stores
+        self.chunks
             .iter()
             .flatten()
             .map(|(k, v)| k.bytes() + v.bytes())
             .sum()
+    }
+
+    /// Content address of this block, chained through its predecessor's
+    /// page id AND the token window the block covers. The chain + window
+    /// binding means a page id identifies the bits, the tokens they encode,
+    /// and the whole-prefix position they decode at — two different
+    /// prefixes never dedup into one id (the dedup equality check compares
+    /// the stored window too, so even a hash collision cannot merge them),
+    /// so a page appears at exactly one radix-tree position and tree
+    /// eviction can never free a page another node still points at.
+    fn content_hash(&self, parent: PageId, window: &[i32]) -> u64 {
+        let mut h = mix(parent ^ 0x9A6E_B10C);
+        for &t in window {
+            h = mix(h ^ (t as u64));
+        }
+        for row in &self.chunks {
+            for (k, v) in row {
+                h = k.fold_hash(h);
+                h = v.fold_hash(h);
+            }
+        }
+        h
+    }
+}
+
+/// One immutable, refcounted page in the shared store. `refs` counts live
+/// AND swapped sequences referencing the page — the prefix cache may only
+/// evict at `refs == 0`, so a page under a running (or preempted)
+/// generation can never be freed out from under it.
+#[derive(Debug)]
+struct SharedPage {
+    block: PageBlock,
+    refs: usize,
+    hash: u64,
+    /// the exact token window this page's KV encodes, and the page id it
+    /// chains from — both compared (with the block bits) before dedup, so
+    /// a hash collision can never alias two different prefixes onto one
+    /// page id
+    key: Vec<i32>,
+    parent: PageId,
+}
+
+struct SeqCache {
+    len: usize,
+    /// PRIVATE pages (the owned blocks). The pool charge is released while
+    /// swapped out, but the count is kept — swap-in re-adopts exactly this
+    /// many allocated pages.
+    pages: usize,
+    /// worst-case private pages promised at admission (`pages` never
+    /// exceeds it while resident; zero while swapped out)
+    reserved: usize,
+    /// adopted shared prefix pages, in token order (immutable, refcounted
+    /// in the store — this sequence holds one ref on each)
+    shared: Vec<PageId>,
+    /// privately written pages; the last one is the open tail
+    owned: Vec<PageBlock>,
+}
+
+impl SeqCache {
+    fn owned_bytes(&self) -> usize {
+        self.owned.iter().map(PageBlock::bytes).sum()
+    }
+
+    /// Make sure the open tail page exists for a write at position
+    /// `self.len`. Sealed pages are never revisited: the write position is
+    /// always inside the LAST owned block after this call.
+    fn ensure_tail(&mut self, page_tokens: usize, n_layers: usize, n_heads: usize) {
+        let shared_tokens = self.shared.len() * page_tokens;
+        debug_assert!(self.len >= shared_tokens);
+        let need = (self.len - shared_tokens) / page_tokens + 1;
+        while self.owned.len() < need {
+            self.owned.push(PageBlock::new(n_layers, n_heads));
+        }
+    }
+
+    /// The (K, V) chunk of `page` (global page index: shared prefix pages
+    /// first, then owned) for one (layer, head).
+    fn chunk<'a>(
+        &'a self,
+        shared_store: &'a HashMap<PageId, SharedPage>,
+        page: usize,
+        layer: usize,
+        head: usize,
+    ) -> &'a (SideStore, SideStore) {
+        if page < self.shared.len() {
+            &shared_store
+                .get(&self.shared[page])
+                .expect("adopted shared page missing from the store")
+                .block
+                .chunks[layer][head]
+        } else {
+            &self.owned[page - self.shared.len()].chunks[layer][head]
+        }
     }
 }
 
@@ -156,8 +328,15 @@ pub struct PagedKvCache {
     seqs: HashMap<u64, SeqCache>,
     /// Preempted sequences: compressed streams moved out of the page pool
     /// verbatim (a few hundred bytes/token — no dequantization). Swap-in
-    /// moves them back bit-identically.
+    /// moves them back bit-identically. Their shared-page refs stay held,
+    /// pinning those pages against prefix-cache eviction.
     swapped: HashMap<u64, SeqCache>,
+    /// The content-addressed shared page store. Each entry is charged one
+    /// allocated + one reserved pool page for as long as it lives.
+    shared_store: HashMap<PageId, SharedPage>,
+    /// chain content hash -> page id, for dedup at seal time
+    by_hash: HashMap<u64, PageId>,
+    next_page_id: PageId,
 }
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -172,6 +351,11 @@ pub struct MemoryStats {
     pub swapped_sequences: usize,
     pub swapped_tokens: usize,
     pub swapped_bytes: usize,
+    /// immutable pages in the content-addressed shared store
+    pub shared_pages: usize,
+    /// total sequence references onto shared pages (live + swapped)
+    pub shared_refs: usize,
+    pub shared_bytes: usize,
 }
 
 impl MemoryStats {
@@ -180,6 +364,45 @@ impl MemoryStats {
             return 0.0;
         }
         self.fp16_reference_bytes as f64 / self.compressed_bytes as f64
+    }
+
+    /// Pool pages charged to resident sequences' private streams.
+    pub fn pages_private(&self) -> usize {
+        self.pages_allocated.saturating_sub(self.shared_pages)
+    }
+
+    /// Reservation promised to resident sequences (the rest of
+    /// `pages_reserved` is the shared store's one-per-page charge).
+    pub fn reserved_private(&self) -> usize {
+        self.pages_reserved.saturating_sub(self.shared_pages)
+    }
+
+    /// One operator-facing line: live footprint, the shared/private page
+    /// and reservation split (the dedup savings at a glance), swap depth.
+    pub fn report(&self) -> String {
+        format!(
+            "kv: {} seqs, {} tok, {} B compressed ({:.2}x vs fp16)\n\
+             pages  {}/{} allocated (shared {} + private {}) | reserved {} \
+             (shared {} + private {})\n\
+             shared {} pages, {} refs, {} B | swapped {} seqs ({} tok, {} B)",
+            self.sequences,
+            self.tokens,
+            self.compressed_bytes,
+            self.compression_ratio(),
+            self.pages_allocated,
+            self.pages_capacity,
+            self.shared_pages,
+            self.pages_private(),
+            self.pages_reserved,
+            self.shared_pages,
+            self.reserved_private(),
+            self.shared_pages,
+            self.shared_refs,
+            self.shared_bytes,
+            self.swapped_sequences,
+            self.swapped_tokens,
+            self.swapped_bytes,
+        )
     }
 }
 
@@ -208,6 +431,9 @@ impl PagedKvCache {
             pool: PagePool::new(capacity_pages, page_tokens),
             seqs: HashMap::new(),
             swapped: HashMap::new(),
+            shared_store: HashMap::new(),
+            by_hash: HashMap::new(),
+            next_page_id: 1,
         }
     }
 
@@ -222,9 +448,10 @@ impl PagedKvCache {
     }
 
     /// Admission: can the pool *promise* `pages` more pages on top of what
-    /// resident sequences already hold? Callers admitting several requests
-    /// in one pass accumulate their page counts into a single check — each
-    /// request alone fitting does NOT mean they fit together.
+    /// resident sequences and the shared store already hold? Callers
+    /// admitting several requests in one pass accumulate their page counts
+    /// into a single check — each request alone fitting does NOT mean they
+    /// fit together.
     pub fn can_admit_pages(&self, pages: usize) -> bool {
         self.pool.can_reserve(pages)
     }
@@ -234,76 +461,255 @@ impl PagedKvCache {
         self.can_admit_pages(self.pages_for(expected_tokens))
     }
 
+    /// Pages that must be freed (e.g. by prefix-cache eviction) before
+    /// `pages` more can be reserved. Zero when they already fit.
+    pub fn admit_deficit(&self, pages: usize) -> usize {
+        (self.pool.reserved() + pages).saturating_sub(self.pool.capacity())
+    }
+
     /// Could a sequence of `expected_tokens` fit an *empty* pool? A request
     /// failing this can never be admitted — the engine finishes it with
     /// `CacheFull` instead of letting it starve at the head of the queue.
+    /// (Deliberately ignores prefix sharing, so the verdict is identical
+    /// with the prefix cache on or off.)
     pub fn fits_capacity(&self, expected_tokens: usize) -> bool {
         self.pages_for(expected_tokens) <= self.pool.capacity_pages
     }
 
     /// Start a sequence, reserving worst-case pages for `expected_tokens`.
     pub fn new_seq(&mut self, id: u64, expected_tokens: usize) -> Result<()> {
+        self.new_seq_with_prefix(id, expected_tokens, &[])
+    }
+
+    /// Start a sequence that adopts `prefix` shared pages as its first
+    /// `prefix.len() * page_tokens` tokens (bumping each page's refcount)
+    /// and reserves worst-case pages only for the UNSHARED remainder of
+    /// `expected_tokens`. The adopted pages are immutable; the sequence
+    /// appends its own tokens after them.
+    pub fn new_seq_with_prefix(
+        &mut self,
+        id: u64,
+        expected_tokens: usize,
+        prefix: &[PageId],
+    ) -> Result<()> {
         ensure!(!self.seqs.contains_key(&id), "sequence {id} exists");
         ensure!(!self.swapped.contains_key(&id), "sequence {id} is swapped out");
-        let reserve = self.pages_for(expected_tokens);
+        let prefix_tokens = prefix.len() * self.pool.page_tokens;
+        ensure!(
+            prefix_tokens <= expected_tokens,
+            "prefix ({prefix_tokens} tokens) longer than the sequence bound ({expected_tokens})"
+        );
+        for pid in prefix {
+            ensure!(
+                self.shared_store.contains_key(pid),
+                "unknown shared page {pid}"
+            );
+        }
+        let reserve = self.pages_for(expected_tokens) - prefix.len();
         ensure!(
             self.pool.try_reserve(reserve),
             "page pool cannot reserve {reserve} pages for sequence {id}"
         );
-        let stores = (0..self.n_layers)
-            .map(|_| {
-                (0..self.n_kv_heads)
-                    .map(|_| (SideStore::default(), SideStore::default()))
-                    .collect()
-            })
-            .collect();
+        for pid in prefix {
+            self.shared_store
+                .get_mut(pid)
+                .expect("checked above")
+                .refs += 1;
+        }
         self.seqs.insert(
             id,
             SeqCache {
-                len: 0,
+                len: prefix_tokens,
                 pages: 0,
                 reserved: reserve,
-                stores,
+                shared: prefix.to_vec(),
+                owned: Vec::new(),
             },
         );
         Ok(())
     }
 
-    pub fn free_seq(&mut self, id: u64) {
+    /// Free a sequence (resident or swapped) without sealing anything into
+    /// the shared store: private pages and the reservation return to the
+    /// pool, adopted shared pages lose this sequence's reference.
+    pub fn free_seq(&mut self, id: u64) -> Result<()> {
         if let Some(s) = self.seqs.remove(&id) {
-            self.pool.release(s.pages, s.reserved);
+            self.pool.release(s.pages, s.reserved)?;
+            for &pid in &s.shared {
+                self.unref_shared(pid)?;
+            }
+        } else if let Some(s) = self.swapped.remove(&id) {
+            // swapped sequences hold no pool pages, only shared refs
+            for &pid in &s.shared {
+                self.unref_shared(pid)?;
+            }
         }
-        self.swapped.remove(&id); // swapped sequences hold no pool pages
+        Ok(())
+    }
+
+    /// Finish a resident sequence, sealing its full owned pages covering
+    /// the first `tokens.len()` positions into the content-addressed
+    /// shared store (`tokens` is the token stream those positions encode —
+    /// bit-identical pages for the same token window dedup onto the
+    /// existing copy and return their pool charge immediately). Returns
+    /// the sealed full-page chain — adopted prefix pages first, then the
+    /// newly sealed ones — for the caller to index in the prefix tree.
+    /// Pages beyond `tokens.len()`, the partial tail, and the remaining
+    /// reservation are released.
+    ///
+    /// The engine passes the (truncated) prompt: prefill-emitted pages
+    /// only. Decode-emitted KV is a different (deterministic) function of
+    /// the token prefix than prefill's in the sim backend, so sharing a
+    /// generated position with a future PROMPT covering the same tokens
+    /// would break the prefix-cache-on/off bit-identity guarantee.
+    pub fn finish_seq_share(&mut self, id: u64, tokens: &[i32]) -> Result<Vec<PageId>> {
+        let page_tokens = self.pool.page_tokens;
+        // validate BEFORE removing: an error here must leave the sequence
+        // (pool charge, reservation, shared refs) fully intact, not leak it
+        {
+            let s = match self.seqs.get(&id) {
+                Some(s) => s,
+                None => bail!("unknown sequence {id}"),
+            };
+            let seal_pages = s.len.min(tokens.len()) / page_tokens;
+            ensure!(
+                s.shared.len() <= seal_pages,
+                "cannot seal fewer pages ({seal_pages}) than sequence {id} adopted ({})",
+                s.shared.len()
+            );
+        }
+        let mut s = self.seqs.remove(&id).expect("checked above");
+        let seal_pages = s.len.min(tokens.len()) / page_tokens;
+        self.pool.release(s.pages, s.reserved)?;
+        let mut chain: Vec<PageId> = Vec::with_capacity(seal_pages);
+        let adopted = std::mem::take(&mut s.shared);
+        for &pid in &adopted {
+            // drop this sequence's reference; the page stays cached
+            self.unref_shared(pid)?;
+            chain.push(pid);
+        }
+        let full = seal_pages - adopted.len();
+        let mut parent = chain.last().copied().unwrap_or(ROOT_PARENT);
+        for (j, block) in s.owned.drain(..).take(full).enumerate() {
+            let start = (adopted.len() + j) * page_tokens;
+            let window = &tokens[start..start + page_tokens];
+            let h = block.content_hash(parent, window);
+            // dedup only on true equality of parent chain, window, AND
+            // bits — a hash collision falls through to a private insert
+            // (losing dedup, never correctness or tree-position
+            // uniqueness: one page id maps to exactly one prefix)
+            let existing = self.by_hash.get(&h).copied().filter(|pid| {
+                let p = &self.shared_store[pid];
+                p.parent == parent && p.key == window && p.block == block
+            });
+            let pid = match existing {
+                Some(pid) => pid,
+                None => {
+                    // within the footprint released above, so always fits
+                    self.pool.adopt(1, 1)?;
+                    let pid = self.next_page_id;
+                    self.next_page_id += 1;
+                    self.by_hash.insert(h, pid);
+                    self.shared_store.insert(
+                        pid,
+                        SharedPage {
+                            block,
+                            refs: 0,
+                            hash: h,
+                            key: window.to_vec(),
+                            parent,
+                        },
+                    );
+                    pid
+                }
+            };
+            parent = pid;
+            chain.push(pid);
+        }
+        Ok(chain)
+    }
+
+    /// Immutable pages currently resident in the shared store.
+    pub fn shared_page_count(&self) -> usize {
+        self.shared_store.len()
+    }
+
+    /// Refcount of a shared page (None if unknown) — the prefix cache's
+    /// eviction guard.
+    pub fn shared_page_refs(&self, pid: PageId) -> Option<usize> {
+        self.shared_store.get(&pid).map(|p| p.refs)
+    }
+
+    /// Free an UNREFERENCED shared page, returning its pool charge. Errors
+    /// if any live or swapped sequence still references it — eviction can
+    /// never pull a page out from under a generation.
+    pub fn free_shared_page(&mut self, pid: PageId) -> Result<()> {
+        let p = self
+            .shared_store
+            .get(&pid)
+            .ok_or_else(|| anyhow::anyhow!("unknown shared page {pid}"))?;
+        ensure!(
+            p.refs == 0,
+            "shared page {pid} still referenced by {} sequence(s)",
+            p.refs
+        );
+        let p = self.shared_store.remove(&pid).expect("checked above");
+        if self.by_hash.get(&p.hash) == Some(&pid) {
+            self.by_hash.remove(&p.hash);
+        }
+        self.pool.release(1, 1)
+    }
+
+    fn unref_shared(&mut self, pid: PageId) -> Result<()> {
+        let p = self
+            .shared_store
+            .get_mut(&pid)
+            .ok_or_else(|| anyhow::anyhow!("unknown shared page {pid}"))?;
+        ensure!(p.refs > 0, "shared page {pid} refcount underflow");
+        p.refs -= 1;
+        Ok(())
     }
 
     /// Preempt: move the sequence's compressed streams out of the pool into
-    /// the swap store, releasing its pages AND its reservation. The bytes
-    /// are moved verbatim — no dequantization, no re-encoding.
+    /// the swap store, releasing its private pages AND its reservation. The
+    /// bytes are moved verbatim — no dequantization, no re-encoding — and
+    /// its shared-page references stay held (the pages must survive).
     pub fn swap_out(&mut self, id: u64) -> Result<()> {
         let mut s = match self.seqs.remove(&id) {
             Some(s) => s,
             None => bail!("unknown sequence {id}"),
         };
-        self.pool.release(s.pages, s.reserved);
+        self.pool.release(s.pages, s.reserved)?;
         s.reserved = 0;
         self.swapped.insert(id, s);
         Ok(())
     }
 
+    /// The private reservation a swapped sequence needs to re-admit at
+    /// `expected_tokens` (None if `id` is not swapped out) — lets callers
+    /// compute a re-admission deficit without mutating anything.
+    pub fn swap_in_reserve(&self, id: u64, expected_tokens: usize) -> Option<usize> {
+        self.swapped.get(&id).map(|s| {
+            self.pages_for(expected_tokens)
+                .saturating_sub(s.shared.len())
+                .max(s.pages)
+        })
+    }
+
     /// Re-admit a swapped sequence, reserving for `expected_tokens` total
-    /// (current length + remaining generation). Returns false — leaving the
-    /// sequence swapped — when the pool cannot promise that much yet.
+    /// (current length + remaining generation, including the shared prefix
+    /// it still references). Returns false — leaving the sequence swapped —
+    /// when the pool cannot promise that much yet.
     pub fn swap_in(&mut self, id: u64, expected_tokens: usize) -> Result<bool> {
-        let s = match self.swapped.get(&id) {
-            Some(s) => s,
+        let reserve = match self.swap_in_reserve(id, expected_tokens) {
+            Some(r) => r,
             None => bail!("sequence {id} is not swapped out"),
         };
-        let reserve = self.pages_for(expected_tokens).max(s.pages);
         if !self.pool.can_reserve(reserve) {
             return Ok(false);
         }
         let mut s = self.swapped.remove(&id).unwrap();
-        self.pool.adopt(s.pages, reserve);
+        self.pool.adopt(s.pages, reserve)?;
         s.reserved = reserve;
         self.seqs.insert(id, s);
         Ok(true)
@@ -337,7 +743,8 @@ impl PagedKvCache {
 
     /// Append one token's compressed KV for (seq, layer, head).
     /// `kr/ki/vr/vi` are the d/2-length raw norms and angle indices the
-    /// prefill/decode HLOs emit (indices as f32 codes).
+    /// prefill/decode HLOs emit (indices as f32 codes). Writes land in the
+    /// sequence's open tail page only.
     #[allow(clippy::too_many_arguments)]
     pub fn append_token_lh(
         &mut self,
@@ -354,11 +761,14 @@ impl PagedKvCache {
         ensure!(vr.len() == half && vi.len() == half);
         let bins = self.cfg.layers[layer];
         let (k_norm, v_norm) = (self.cfg.k_norm, self.cfg.v_norm);
+        let (page_tokens, l_n, h_n) = (self.pool.page_tokens, self.n_layers, self.n_kv_heads);
         let seq = match self.seqs.get_mut(&id) {
             Some(s) => s,
             None => bail!("unknown sequence {id}"),
         };
-        let (ks, vs) = &mut seq.stores[layer][head];
+        seq.ensure_tail(page_tokens, l_n, h_n);
+        let block = seq.owned.last_mut().expect("tail ensured");
+        let (ks, vs) = &mut block.chunks[layer][head];
         Self::append_side(ks, kr, ki, bins.n_k, k_norm);
         Self::append_side(vs, vr, vi, bins.n_v, v_norm);
         Ok(())
@@ -370,7 +780,8 @@ impl PagedKvCache {
     /// (layer `l`, head `h`) starts at `offset + l*l_stride + h*h_stride`.
     /// Layers fan out across rayon when the per-token work is large enough;
     /// output is identical to calling `append_token_lh` per (layer, head)
-    /// in order, since each (layer, head) owns a disjoint store.
+    /// in order, since each (layer, head) owns a disjoint chunk of the
+    /// tail page.
     #[allow(clippy::too_many_arguments)]
     pub fn append_token_strided(
         &mut self,
@@ -398,13 +809,16 @@ impl PagedKvCache {
         );
         let layers = &self.cfg.layers;
         let (k_norm, v_norm) = (self.cfg.k_norm, self.cfg.v_norm);
+        let page_tokens = self.pool.page_tokens;
         let seq = match self.seqs.get_mut(&id) {
             Some(s) => s,
             None => bail!("unknown sequence {id}"),
         };
-        let append_layer = |l: usize, stores_l: &mut Vec<(SideStore, SideStore)>| {
+        seq.ensure_tail(page_tokens, l_n, h_n);
+        let block = seq.owned.last_mut().expect("tail ensured");
+        let append_layer = |l: usize, chunks_l: &mut Vec<(SideStore, SideStore)>| {
             let bins = layers[l];
-            for (h, (ks, vs)) in stores_l.iter_mut().enumerate() {
+            for (h, (ks, vs)) in chunks_l.iter_mut().enumerate() {
                 let base = offset + l * l_stride + h * h_stride;
                 let end = base + half;
                 Self::append_side(ks, &kr[base..end], &ki[base..end], bins.n_k, k_norm);
@@ -412,12 +826,13 @@ impl PagedKvCache {
             }
         };
         if l_n * h_n * half >= PAR_APPEND_ELEM_THRESHOLD {
-            seq.stores
+            block
+                .chunks
                 .par_iter_mut()
                 .enumerate()
                 .for_each(|(l, s)| append_layer(l, s));
         } else {
-            for (l, s) in seq.stores.iter_mut().enumerate() {
+            for (l, s) in block.chunks.iter_mut().enumerate() {
                 append_layer(l, s);
             }
         }
@@ -445,7 +860,7 @@ impl PagedKvCache {
                 }
                 seq.reserved += 1;
             }
-            self.pool.alloc_reserved(1);
+            self.pool.alloc_reserved(1)?;
             seq.pages += 1;
         }
         seq.len += 1;
@@ -454,6 +869,13 @@ impl PagedKvCache {
 
     pub fn seq_len(&self, id: u64) -> usize {
         self.seqs.get(&id).map_or(0, |s| s.len)
+    }
+
+    /// Tokens of `id` served from adopted shared pages (0 for unknown).
+    pub fn seq_shared_tokens(&self, id: u64) -> usize {
+        self.seqs
+            .get(&id)
+            .map_or(0, |s| s.shared.len() * self.pool.page_tokens)
     }
 
     /// Dequantize + unpack one sequence into batch slot `b` of the dense
@@ -480,7 +902,8 @@ impl PagedKvCache {
     /// sequences, large `len - from_t`) fan layers out across rayon: each
     /// layer writes a disjoint `batch*H*Tmax*d/2` chunk of the dense
     /// tensors, so the split is safe and the output identical to the
-    /// serial loop.
+    /// serial loop. Reads walk the page chunks — shared prefix pages and
+    /// owned pages decode through the same kernel.
     #[allow(clippy::too_many_arguments)]
     pub fn fill_dense_range(
         &self,
@@ -519,6 +942,7 @@ impl PagedKvCache {
             len: seq.len,
         };
         let (k_norm, v_norm) = (self.cfg.k_norm, self.cfg.v_norm);
+        let page_tokens = self.pool.page_tokens;
         let span = seq.len.saturating_sub(from_t);
         let work = span * self.n_layers * h_n * half;
         // span > 1: the per-decode-step one-token top-up must stay on the
@@ -532,7 +956,20 @@ impl PagedKvCache {
                 .enumerate()
                 .for_each(|(l, (((kr, ki), vr), vi))| {
                     let bins = self.cfg.layers[l];
-                    fill_layer(job, &seq.stores[l], bins, k_norm, v_norm, kr, ki, vr, vi);
+                    fill_layer(
+                        &self.shared_store,
+                        seq,
+                        page_tokens,
+                        l,
+                        job,
+                        bins,
+                        k_norm,
+                        v_norm,
+                        kr,
+                        ki,
+                        vr,
+                        vi,
+                    );
                 });
         } else {
             for (l, (((kr, ki), vr), vi)) in kr
@@ -543,7 +980,20 @@ impl PagedKvCache {
                 .take(self.n_layers)
                 .enumerate()
             {
-                fill_layer(job, &seq.stores[l], self.cfg.layers[l], k_norm, v_norm, kr, ki, vr, vi);
+                fill_layer(
+                    &self.shared_store,
+                    seq,
+                    page_tokens,
+                    l,
+                    job,
+                    self.cfg.layers[l],
+                    k_norm,
+                    v_norm,
+                    kr,
+                    ki,
+                    vr,
+                    vi,
+                );
             }
         }
         Ok(seq.len)
@@ -559,7 +1009,8 @@ impl PagedKvCache {
     /// f32, token-major rows). The page-granular building block behind
     /// [`Self::visit_seq_tiles`], exposed for backends that schedule their
     /// own tile walk. Values are bit-identical to what [`Self::fill_dense`]
-    /// would put in the corresponding dense rows.
+    /// would put in the corresponding dense rows. The range may cross page
+    /// boundaries (and the shared/owned seam).
     #[allow(clippy::too_many_arguments)]
     pub fn decode_tile_into(
         &self,
@@ -594,18 +1045,34 @@ impl PagedKvCache {
             "tile buffers smaller than tokens*d/2"
         );
         let bins = self.cfg.layers[layer];
-        let (ks, vs) = &seq.stores[layer][head];
-        decode_side_range(ks, bins.n_k, self.cfg.k_norm, t0, tokens, half, kr, ki);
-        decode_side_range(vs, bins.n_v, self.cfg.v_norm, t0, tokens, half, vr, vi);
+        decode_lh_range(
+            &self.shared_store,
+            seq,
+            self.pool.page_tokens,
+            layer,
+            head,
+            bins,
+            self.cfg.k_norm,
+            self.cfg.v_norm,
+            t0,
+            tokens,
+            half,
+            &mut kr[..elems],
+            &mut ki[..elems],
+            &mut vr[..elems],
+            &mut vi[..elems],
+        );
         Ok(())
     }
 
     /// The fused read path: visit `id`'s cache for one layer as dequantized
     /// page tiles — heads ascending, then token ranges ascending, covering
     /// exactly tokens `0..upto` (clamped to the sequence length). Each tile
-    /// is at most `page_tokens` rows decoded into `scratch`, which grows
-    /// once to a single page and never again: no per-token allocation, and
-    /// the dense `(L,B,H,Tmax,d/2)` tensors never materialize.
+    /// is exactly one page chunk (at most `page_tokens` rows) decoded into
+    /// `scratch`, which grows once to a single page and never again: no
+    /// per-token allocation, and the dense `(L,B,H,Tmax,d/2)` tensors never
+    /// materialize. Shared prefix pages and owned pages stream through the
+    /// same kernel, so adoption is invisible to the backend.
     pub fn visit_seq_tiles(
         &self,
         id: u64,
@@ -625,14 +1092,16 @@ impl PagedKvCache {
         scratch.ensure(tile_tokens * half);
         let bins = self.cfg.layers[layer];
         let (k_norm, v_norm) = (self.cfg.k_norm, self.cfg.v_norm);
-        for (head, (ks, vs)) in seq.stores[layer].iter().enumerate() {
+        for head in 0..self.n_kv_heads {
             let mut t0 = 0usize;
             while t0 < upto {
                 let tokens = tile_tokens.min(upto - t0);
                 let elems = tokens * half;
+                // t0 is always page-aligned, so one tile == one page chunk
+                let (ks, vs) = seq.chunk(&self.shared_store, t0 / tile_tokens, layer, head);
                 let s = &mut *scratch;
-                decode_side_range(ks, bins.n_k, k_norm, t0, tokens, half, &mut s.kr, &mut s.ki);
-                decode_side_range(vs, bins.n_v, v_norm, t0, tokens, half, &mut s.vr, &mut s.vi);
+                decode_side_range(ks, bins.n_k, k_norm, 0, tokens, half, &mut s.kr, &mut s.ki);
+                decode_side_range(vs, bins.n_v, v_norm, 0, tokens, half, &mut s.vr, &mut s.vi);
                 f(&KvTileView {
                     layer,
                     head,
@@ -661,15 +1130,24 @@ impl PagedKvCache {
         };
         for s in self.seqs.values() {
             st.tokens += s.len;
-            st.compressed_bytes += s.bytes();
-            // fp16 reference: K and V, n_layers*n_heads*len*d_head*2 bytes each
+            st.compressed_bytes += s.owned_bytes();
+            // fp16 reference: K and V, n_layers*n_heads*len*d_head*2 bytes
+            // each — the FULL length, shared prefix included, so dedup
+            // shows up as a better compression ratio
             st.fp16_reference_bytes +=
                 2 * self.n_layers * self.n_kv_heads * s.len * self.d_head * 2;
         }
         for s in self.swapped.values() {
             st.swapped_tokens += s.len;
-            st.swapped_bytes += s.bytes();
+            st.swapped_bytes += s.owned_bytes();
         }
+        for p in self.shared_store.values() {
+            st.shared_pages += 1;
+            st.shared_refs += p.refs;
+            st.shared_bytes += p.block.bytes();
+        }
+        // shared pages are resident memory, charged exactly once
+        st.compressed_bytes += st.shared_bytes;
         st
     }
 }
@@ -744,16 +1222,18 @@ struct FillJob {
     len: usize,
 }
 
-/// Reinflate one layer's stores into that layer's chunk of the dense
+/// Reinflate one layer's chunks into that layer's slice of the dense
 /// tensors. `kr/ki/vr/vi` are the `batch*H*Tmax*d/2` slices for this layer,
 /// so the base index drops the leading layer term of the (L,B,H,Tmax,d/2)
 /// layout. Consecutive tokens of one (head, side) are contiguous in the
-/// dense layout, so the whole `from_t..len` span is one
-/// [`decode_side_range`] call per side.
+/// dense layout; the page walk happens inside [`decode_lh_range`].
 #[allow(clippy::too_many_arguments)]
 fn fill_layer(
+    shared_store: &HashMap<PageId, SharedPage>,
+    seq: &SeqCache,
+    page_tokens: usize,
+    layer: usize,
     job: FillJob,
-    stores: &[(SideStore, SideStore)],
     bins: LayerBins,
     k_norm: NormMode,
     v_norm: NormMode,
@@ -767,23 +1247,76 @@ fn fill_layer(
         return;
     }
     let tokens = len - from_t;
-    for (h, (ks, vs)) in stores.iter().enumerate() {
+    for h in 0..h_n {
         let base = ((b * h_n + h) * tmax + from_t) * half;
         let end = base + tokens * half;
         let (kr, ki) = (&mut kr[base..end], &mut ki[base..end]);
         let (vr, vi) = (&mut vr[base..end], &mut vi[base..end]);
-        decode_side_range(ks, bins.n_k, k_norm, from_t, tokens, half, kr, ki);
-        decode_side_range(vs, bins.n_v, v_norm, from_t, tokens, half, vr, vi);
+        decode_lh_range(
+            shared_store,
+            seq,
+            page_tokens,
+            layer,
+            h,
+            bins,
+            k_norm,
+            v_norm,
+            from_t,
+            tokens,
+            half,
+            kr,
+            ki,
+            vr,
+            vi,
+        );
     }
 }
 
-/// Dequantize tokens `t0..t0+tokens` of one side store into contiguous
-/// token-major (norms, codes-as-f32) rows. This is THE dequant kernel for
-/// both read paths — the dense reinflation ([`fill_layer`]) and the fused
-/// tile iterator ([`PagedKvCache::visit_seq_tiles`]) call it, so their
-/// outputs cannot drift: fused-vs-reinflate bit-identity holds by
-/// construction. Streams the bit-packed codes through [`BitCursor`]s
-/// instead of random-access `get`s.
+/// Dequantize tokens `t0..t0+tokens` of one (layer, head) into contiguous
+/// token-major rows, walking the sequence's page chunks (shared prefix
+/// pages first, then owned pages). Each chunk's sub-range goes through
+/// [`decode_side_range`], so chunked output is bit-identical to what the
+/// old monolithic stream produced.
+#[allow(clippy::too_many_arguments)]
+fn decode_lh_range(
+    shared_store: &HashMap<PageId, SharedPage>,
+    seq: &SeqCache,
+    page_tokens: usize,
+    layer: usize,
+    head: usize,
+    bins: LayerBins,
+    k_norm: NormMode,
+    v_norm: NormMode,
+    t0: usize,
+    tokens: usize,
+    half: usize,
+    kr: &mut [f32],
+    ki: &mut [f32],
+    vr: &mut [f32],
+    vi: &mut [f32],
+) {
+    let mut t = t0;
+    while t < t0 + tokens {
+        let page = t / page_tokens;
+        let local = t % page_tokens;
+        let run = (page_tokens - local).min(t0 + tokens - t);
+        let (ks, vs) = seq.chunk(shared_store, page, layer, head);
+        let o = (t - t0) * half;
+        let e = o + run * half;
+        decode_side_range(ks, bins.n_k, k_norm, local, run, half, &mut kr[o..e], &mut ki[o..e]);
+        decode_side_range(vs, bins.n_v, v_norm, local, run, half, &mut vr[o..e], &mut vi[o..e]);
+        t += run;
+    }
+}
+
+/// Dequantize tokens `t0..t0+tokens` of one side CHUNK (`t0` is
+/// chunk-local) into contiguous token-major (norms, codes-as-f32) rows.
+/// This is THE dequant kernel for both read paths — the dense reinflation
+/// ([`fill_layer`]) and the fused tile iterator
+/// ([`PagedKvCache::visit_seq_tiles`]) call it, so their outputs cannot
+/// drift: fused-vs-reinflate bit-identity holds by construction. Streams
+/// the bit-packed codes through [`BitCursor`]s instead of random-access
+/// `get`s.
 #[allow(clippy::too_many_arguments)]
 fn decode_side_range(
     store: &SideStore,
@@ -927,7 +1460,7 @@ mod tests {
         }
         // 9 tokens at 4 tokens/page -> 3 pages
         assert_eq!(c.memory_stats().pages_allocated, 3);
-        c.free_seq(1);
+        c.free_seq(1).unwrap();
         assert_eq!(c.memory_stats().pages_allocated, 0);
     }
 
@@ -1107,7 +1640,7 @@ mod tests {
         c.swap_out(1).unwrap();
         c.new_seq(2, 8).unwrap();
         assert!(!c.swap_in(1, 8).unwrap(), "no room while seq 2 holds the pool");
-        c.free_seq(2);
+        c.free_seq(2).unwrap();
         assert!(c.swap_in(1, 8).unwrap(), "room after seq 2 freed");
         assert_eq!(c.seq_len(1), 8);
         // unknown / double operations error
@@ -1125,7 +1658,7 @@ mod tests {
         assert_eq!(c.memory_stats().pages_allocated, 0);
         assert!(!c.can_admit(4), "reservation counts against admission");
         assert!(c.new_seq(2, 4).is_err());
-        c.free_seq(1);
+        c.free_seq(1).unwrap();
         assert!(c.can_admit(16));
     }
 
@@ -1170,7 +1703,7 @@ mod tests {
                 assert!(covered.iter().all(|&x| x), "upto={upto} l={l}: gap in tile coverage");
             }
         }
-        // random-access tile decode agrees too
+        // random-access tile decode agrees too (range crosses pages)
         let mut kr = vec![0.0f32; 3 * half];
         let mut ki = vec![0.0f32; 3 * half];
         let mut vr = vec![0.0f32; 3 * half];
@@ -1223,5 +1756,137 @@ mod tests {
                 assert_eq!(&vi[base..base + half], &wvi[..], "t={t} l={l}");
             }
         }
+    }
+
+    #[test]
+    fn pool_accounting_checks_error_in_release_builds() {
+        // satellite: underflow/over-reserve used to be debug_assert! only —
+        // with refcounted sharing they are hard errors everywhere
+        let mut p = PagePool::new(4, 4);
+        assert!(p.try_reserve(2));
+        p.alloc_reserved(1).unwrap();
+        assert!(p.release(2, 1).is_err(), "allocated underflow must error");
+        assert!(p.release(1, 3).is_err(), "reserved underflow must error");
+        p.release(1, 2).unwrap();
+        assert_eq!((p.allocated(), p.reserved()), (0, 0));
+        // allocating beyond the reservation errors
+        let mut p = PagePool::new(4, 4);
+        assert!(p.try_reserve(1));
+        assert!(p.alloc_reserved(2).is_err());
+        // adopting beyond capacity / with allocated > reserved errors
+        let mut p = PagePool::new(2, 4);
+        assert!(p.adopt(1, 3).is_err());
+        assert!(p.adopt(2, 1).is_err());
+        p.adopt(1, 2).unwrap();
+    }
+
+    /// Deterministic per-(token,layer) entries derived from a seed so two
+    /// sequences with the same logical prefix produce bit-identical pages.
+    fn append_stream(c: &mut PagedKvCache, id: u64, from_t: usize, to_t: usize, tag: u64) {
+        let half = c.d_head / 2;
+        for t in from_t..to_t {
+            for l in 0..c.n_layers {
+                let (kr, ki) = fake_entry(tag + (t * 31 + l) as u64 + 1, half, 128);
+                let (vr, vi) = fake_entry(tag + (t * 31 + l) as u64 + 501, half, 64);
+                c.append_token_lh(id, l, 0, &kr, &ki, &vr, &vi).unwrap();
+            }
+            c.commit_token(id).unwrap();
+        }
+    }
+
+    #[test]
+    fn finish_share_adopt_roundtrip_bit_identical_with_dedup() {
+        let mut c = mk_cache((NormMode::LINEAR8, NormMode::LOG4));
+        let half = 4;
+        // the logical token stream the compressed pages encode
+        let toks: Vec<i32> = (100..110).collect();
+        // seq 1: 10 tokens = 2 full pages of 4 + a partial tail
+        c.new_seq(1, 10).unwrap();
+        append_stream(&mut c, 1, 0, 10, 7000);
+        let n = 2 * 16 * half;
+        let mut a = (vec![0.0f32; n], vec![0.0f32; n], vec![0.0f32; n], vec![0.0f32; n]);
+        c.fill_dense(1, 0, 1, &mut a.0, &mut a.1, &mut a.2, &mut a.3).unwrap();
+        let chain = c.finish_seq_share(1, &toks).unwrap();
+        assert_eq!(chain.len(), 2, "two full pages sealed, tail dropped");
+        let st = c.memory_stats();
+        assert_eq!(st.shared_pages, 2);
+        assert_eq!(st.shared_refs, 0);
+        assert_eq!(st.pages_allocated, 2, "cached pages stay charged");
+        assert_eq!(st.pages_reserved, 2);
+
+        // seq 2 adopts the chain and appends the same tail content
+        c.new_seq_with_prefix(2, 10, &chain).unwrap();
+        assert_eq!(c.seq_len(2), 8);
+        assert_eq!(c.seq_shared_tokens(2), 8);
+        assert_eq!(c.shared_page_refs(chain[0]), Some(1));
+        append_stream(&mut c, 2, 8, 10, 7000);
+        let mut b = (vec![0.0f32; n], vec![0.0f32; n], vec![0.0f32; n], vec![0.0f32; n]);
+        c.fill_dense(2, 0, 1, &mut b.0, &mut b.1, &mut b.2, &mut b.3).unwrap();
+        assert_eq!(a, b, "adopted prefix must reinflate bit-identically");
+        // fused tiles across the shared/owned seam agree too
+        let mut scratch = TileScratch::new();
+        c.visit_seq_tiles(2, 1, 10, &mut scratch, &mut |tile| {
+            let dbase = (16 + tile.t0) * half; // layer 1, head 0
+            let span = tile.tokens * half;
+            assert_eq!(&tile.kr[..span], &a.0[dbase..dbase + span]);
+            assert_eq!(&tile.vi[..span], &a.3[dbase..dbase + span]);
+        })
+        .unwrap();
+
+        // referenced pages cannot be freed
+        assert!(c.free_shared_page(chain[0]).is_err());
+
+        // seq 3 writes the identical stream privately; sealing dedups onto
+        // the existing pages and returns the duplicate pool charge
+        c.new_seq(3, 10).unwrap();
+        append_stream(&mut c, 3, 0, 10, 7000);
+        let chain3 = c.finish_seq_share(3, &toks).unwrap();
+        assert_eq!(chain3, chain, "identical content must dedup to the same ids");
+        // same bits under DIFFERENT tokens must NOT dedup (tree-position
+        // uniqueness: a page id binds to exactly one token window)
+        let other: Vec<i32> = (200..210).collect();
+        c.new_seq(4, 10).unwrap();
+        append_stream(&mut c, 4, 0, 10, 7000);
+        let chain4 = c.finish_seq_share(4, &other).unwrap();
+        assert_ne!(chain4, chain, "different windows must get their own pages");
+        assert_eq!(c.memory_stats().shared_pages, 4, "no cross-window dedup");
+        for pid in &chain4 {
+            c.free_shared_page(*pid).unwrap();
+        }
+        let st = c.memory_stats();
+        assert_eq!(st.shared_pages, 2, "no duplicate blocks stored");
+
+        // drop seq 2, then eviction can free the unreferenced pages
+        c.free_seq(2).unwrap();
+        for pid in &chain {
+            assert_eq!(c.shared_page_refs(*pid), Some(0));
+            c.free_shared_page(*pid).unwrap();
+        }
+        let st = c.memory_stats();
+        assert_eq!((st.pages_allocated, st.pages_reserved, st.shared_pages), (0, 0, 0));
+    }
+
+    #[test]
+    fn swapped_sequence_pins_shared_pages() {
+        let mut c = mk_cache((NormMode::FP32, NormMode::FP32));
+        c.new_seq(1, 8).unwrap();
+        append_stream(&mut c, 1, 0, 8, 42);
+        let toks: Vec<i32> = (50..58).collect();
+        let chain = c.finish_seq_share(1, &toks).unwrap();
+        assert_eq!(chain.len(), 2);
+        c.new_seq_with_prefix(2, 12, &chain).unwrap();
+        append_stream(&mut c, 2, 8, 9, 42);
+        c.swap_out(2).unwrap();
+        // swapped: private pages returned, shared refs still held
+        let st = c.memory_stats();
+        assert_eq!(st.pages_allocated, 2, "only the shared pages stay charged");
+        assert_eq!(st.shared_refs, 2, "one ref per adopted page survives the swap");
+        assert!(c.free_shared_page(chain[0]).is_err(), "pinned by the swapped seq");
+        assert!(c.swap_in(2, 12).unwrap());
+        let mut out = (vec![0.0f32; 256], vec![0.0f32; 256], vec![0.0f32; 256], vec![0.0f32; 256]);
+        let len = c.fill_dense(2, 0, 1, &mut out.0, &mut out.1, &mut out.2, &mut out.3).unwrap();
+        assert_eq!(len, 9);
+        c.free_seq(2).unwrap();
+        assert_eq!(c.memory_stats().shared_refs, 0);
     }
 }

@@ -62,6 +62,18 @@ pub struct EngineMetrics {
     pub swap_ins: u64,
     /// requests that could never fit the pool, finished with `CacheFull`
     pub rejected_cache_full: u64,
+    /// admitted requests that adopted >= 1 shared prefix page
+    pub prefix_hits: u64,
+    /// admitted requests with no cached prefix (prefix caching on only)
+    pub prefix_misses: u64,
+    /// prompt tokens served from shared pages instead of being prefilled
+    pub prefix_tokens_reused: u64,
+    /// shared pages adopted by admitted sequences (refcount bumps)
+    pub prefix_pages_adopted: u64,
+    /// full pages newly sealed into the shared store at sequence finish
+    pub prefix_pages_inserted: u64,
+    /// unreferenced cached pages reclaimed under pool pressure
+    pub prefix_evictions: u64,
     /// time-to-first-token
     pub ttft: Histogram,
     /// per decode step (whole batch)
@@ -81,11 +93,22 @@ impl EngineMetrics {
         self.tokens_generated as f64 / self.decode_slot_steps as f64
     }
 
+    /// Fraction of admitted sequences that reused a cached prefix.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefix_hits + self.prefix_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.prefix_hits as f64 / total as f64
+    }
+
     pub fn report(&self) -> String {
         format!(
             "requests: {} submitted, {} finished | tokens: {}\n\
              prefill: {} batches ({} seqs) | decode: {} steps (util {:.2})\n\
              preempt: {} out / {} in | rejected cache_full: {}\n\
+             prefix: {} hits / {} misses ({:.0}%) | {} tok reused | pages {} \
+             adopted / {} sealed / {} evicted\n\
              ttft   p50 {:?} p95 {:?} mean {:?}\n\
              step   p50 {:?} p95 {:?} mean {:?}\n\
              e2e    p50 {:?} p95 {:?} mean {:?}\n\
@@ -100,6 +123,13 @@ impl EngineMetrics {
             self.preemptions,
             self.swap_ins,
             self.rejected_cache_full,
+            self.prefix_hits,
+            self.prefix_misses,
+            self.prefix_hit_rate() * 100.0,
+            self.prefix_tokens_reused,
+            self.prefix_pages_adopted,
+            self.prefix_pages_inserted,
+            self.prefix_evictions,
             self.ttft.quantile(0.5),
             self.ttft.quantile(0.95),
             self.ttft.mean(),

@@ -3,9 +3,12 @@
 //! TurboAngle-compressed.
 //!
 //! * [`kv_manager`] — paged compressed cache (bit-packed angles + quantized
-//!   norms), reservation-aware block allocator, swap pool for preempted
+//!   norms) chunked into immutable, content-addressed, refcounted page
+//!   blocks; reservation-aware block allocator, swap pool for preempted
 //!   sequences, memory accounting, and the fused read path's page-tile
 //!   iterator (`visit_seq_tiles` / `decode_tile_into` + `TileScratch`)
+//! * [`prefix_cache`] — token-level radix tree mapping prompt prefixes to
+//!   runs of shared compressed pages, with refcount-aware LRU eviction
 //! * [`batcher`] / [`scheduler`] — dynamic batching and prefill/decode
 //!   interleave, with terminal `CacheFull` rejection of impossible requests
 //! * [`router`] — replica routing policies (round-robin, least-loaded,
@@ -21,6 +24,7 @@ pub mod batcher;
 pub mod engine;
 pub mod kv_manager;
 pub mod metrics;
+pub mod prefix_cache;
 pub mod router;
 pub mod scheduler;
 pub mod server;
@@ -28,7 +32,8 @@ pub mod session;
 
 pub use batcher::{Admission, BatchPolicy, DynamicBatcher, TakenBatch};
 pub use engine::{Engine, EngineConfig, EngineCore, ReadPath};
-pub use kv_manager::{BatchTileReader, PagedKvCache, TileScratch};
+pub use kv_manager::{BatchTileReader, MemoryStats, PageId, PagedKvCache, TileScratch};
+pub use prefix_cache::PrefixCache;
 pub use metrics::EngineMetrics;
 pub use router::{hash_session_key, RoutePolicy, Router};
 pub use scheduler::SchedulerPolicy;

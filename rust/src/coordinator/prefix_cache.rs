@@ -1,0 +1,317 @@
+//! Prefix cache: a token-level radix tree mapping prompt-token prefixes to
+//! runs of full compressed pages in the kv_manager's shared store.
+//!
+//! Granularity is one page (`page_tokens` tokens): every tree node covers
+//! exactly one full page and holds the [`PageId`] of the immutable,
+//! content-addressed block carrying that window's compressed KV. A path
+//! from the root spells out a token prefix page by page, so the longest
+//! cached prefix of a prompt is a straight walk ([`PrefixCache::match_prefix`]).
+//!
+//! The tree itself holds NO refcounts — the kv_manager's shared store
+//! counts live/swapped sequence references. Eviction
+//! ([`PrefixCache::evict_lru`]) removes least-recently-used *leaf* nodes
+//! whose pages have refcount 0, so:
+//!   * a page referenced by any live or swapped sequence is never evicted,
+//!   * interior nodes are never orphaned (leaves go first; evicting a leaf
+//!     may expose its parent as the next candidate),
+//!   * matching keeps working for every prefix still in the tree.
+//!
+//! Recency is bumped along the matched path on every lookup, so hot system
+//! prompts stay resident while one-off conversation tails age out.
+
+use super::kv_manager::PageId;
+use std::collections::HashMap;
+
+struct Node {
+    /// the page carrying this window's compressed KV (refcounted in the
+    /// kv_manager's shared store, not here)
+    page: PageId,
+    /// the exact `page_tokens`-token window this node covers — kept so the
+    /// node can unlink itself from its parent's child map on eviction
+    key: Vec<i32>,
+    parent: Option<usize>,
+    children: HashMap<Vec<i32>, usize>,
+    /// logical clock of the last match/insert touching this node
+    last_used: u64,
+}
+
+/// See the module docs. All operations are O(depth) except eviction's
+/// LRU scan, which is O(nodes) per evicted page — fine at page counts the
+/// pool can hold.
+pub struct PrefixCache {
+    page_tokens: usize,
+    /// slab arena; `None` slots are freed nodes awaiting reuse
+    nodes: Vec<Option<Node>>,
+    free: Vec<usize>,
+    roots: HashMap<Vec<i32>, usize>,
+    clock: u64,
+    cached_tokens: usize,
+}
+
+impl PrefixCache {
+    pub fn new(page_tokens: usize) -> Self {
+        assert!(page_tokens > 0, "page_tokens must be positive");
+        PrefixCache {
+            page_tokens,
+            nodes: Vec::new(),
+            free: Vec::new(),
+            roots: HashMap::new(),
+            clock: 0,
+            cached_tokens: 0,
+        }
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    /// Live nodes == cached pages.
+    pub fn pages(&self) -> usize {
+        self.nodes.len() - self.free.len()
+    }
+
+    /// Tokens covered by the cached pages (always `pages() * page_tokens` —
+    /// the invariant the proptests pin).
+    pub fn cached_tokens(&self) -> usize {
+        self.cached_tokens
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pages() == 0
+    }
+
+    fn node(&self, i: usize) -> &Node {
+        self.nodes[i].as_ref().expect("live node")
+    }
+
+    fn node_mut(&mut self, i: usize) -> &mut Node {
+        self.nodes[i].as_mut().expect("live node")
+    }
+
+    fn alloc(&mut self, n: Node) -> usize {
+        match self.free.pop() {
+            Some(i) => {
+                self.nodes[i] = Some(n);
+                i
+            }
+            None => {
+                self.nodes.push(Some(n));
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    /// The longest cached prefix of `tokens`, in whole pages: the page ids
+    /// whose concatenated windows equal `tokens[..k*page_tokens]` for the
+    /// largest matchable `k`. Bumps recency along the matched path.
+    pub fn match_prefix(&mut self, tokens: &[i32]) -> Vec<PageId> {
+        self.clock += 1;
+        let clock = self.clock;
+        let pt = self.page_tokens;
+        let mut out = Vec::new();
+        let mut cur: Option<usize> = None;
+        let mut off = 0usize;
+        while off + pt <= tokens.len() {
+            let window = &tokens[off..off + pt];
+            let next = match cur {
+                None => self.roots.get(window).copied(),
+                Some(i) => self.node(i).children.get(window).copied(),
+            };
+            match next {
+                Some(j) => {
+                    let n = self.node_mut(j);
+                    n.last_used = clock;
+                    out.push(n.page);
+                    cur = Some(j);
+                    off += pt;
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Index a finished sequence's full-page chain: `pages[i]` carries
+    /// tokens `[i*page_tokens, (i+1)*page_tokens)` of `tokens`. Windows
+    /// already present keep their existing node (the kv_manager's content
+    /// addressing makes the ids agree); new windows extend the tree.
+    ///
+    /// Returns the chain ids that could NOT be linked because the existing
+    /// node at their position holds a DIFFERENT page — possible only via
+    /// the kv store's hash-collision dedup fallback. Such pages are
+    /// indexed nowhere, so eviction would never find them: the caller must
+    /// free the unreferenced ones or they leak their pool charge.
+    pub fn insert(&mut self, tokens: &[i32], pages: &[PageId]) -> Vec<PageId> {
+        self.clock += 1;
+        let clock = self.clock;
+        let pt = self.page_tokens;
+        let mut orphans = Vec::new();
+        let mut cur: Option<usize> = None;
+        for (i, &pid) in pages.iter().enumerate() {
+            let off = i * pt;
+            if off + pt > tokens.len() {
+                break;
+            }
+            let window = tokens[off..off + pt].to_vec();
+            let existing = match cur {
+                None => self.roots.get(&window).copied(),
+                Some(p) => self.node(p).children.get(&window).copied(),
+            };
+            let j = match existing {
+                Some(j) => {
+                    let n = self.node_mut(j);
+                    n.last_used = clock;
+                    if n.page != pid {
+                        orphans.push(pid);
+                    }
+                    j
+                }
+                None => {
+                    let j = self.alloc(Node {
+                        page: pid,
+                        key: window.clone(),
+                        parent: cur,
+                        children: HashMap::new(),
+                        last_used: clock,
+                    });
+                    match cur {
+                        None => self.roots.insert(window, j),
+                        Some(p) => self.node_mut(p).children.insert(window, j),
+                    };
+                    self.cached_tokens += pt;
+                    j
+                }
+            };
+            cur = Some(j);
+        }
+        orphans
+    }
+
+    /// Evict up to `want` least-recently-used LEAF pages whose refcount
+    /// (per `refs`, normally the kv_manager's `shared_page_refs`) is zero.
+    /// Returns the evicted page ids — the caller frees them in the shared
+    /// store. Pages referenced by live or swapped sequences are never
+    /// returned; interior nodes are only reachable after their whole
+    /// subtree has drained.
+    ///
+    /// One arena scan collects every currently-eligible leaf (oldest
+    /// first); a cascade — a parent exposed by evicting its last child —
+    /// costs at most one more scan per drained tree level, so the whole
+    /// call is O(nodes · levels-drained), not O(nodes · want).
+    pub fn evict_lru(&mut self, want: usize, refs: &dyn Fn(PageId) -> usize) -> Vec<PageId> {
+        let mut evicted = Vec::new();
+        while evicted.len() < want {
+            let mut candidates: Vec<(u64, usize)> = self
+                .nodes
+                .iter()
+                .enumerate()
+                .filter_map(|(i, slot)| {
+                    slot.as_ref().and_then(|n| {
+                        (n.children.is_empty() && refs(n.page) == 0)
+                            .then_some((n.last_used, i))
+                    })
+                })
+                .collect();
+            if candidates.is_empty() {
+                break;
+            }
+            candidates.sort_unstable();
+            for (_, i) in candidates.into_iter().take(want - evicted.len()) {
+                let n = self.nodes[i].take().expect("candidate is live");
+                match n.parent {
+                    None => {
+                        self.roots.remove(&n.key);
+                    }
+                    Some(p) => {
+                        self.node_mut(p).children.remove(&n.key);
+                    }
+                }
+                self.free.push(i);
+                self.cached_tokens -= self.page_tokens;
+                evicted.push(n.page);
+            }
+        }
+        evicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn no_refs(_: PageId) -> usize {
+        0
+    }
+
+    #[test]
+    fn match_walks_longest_prefix_at_page_granularity() {
+        let mut t = PrefixCache::new(2);
+        t.insert(&[1, 2, 3, 4, 5, 6], &[10, 11, 12]);
+        assert_eq!(t.pages(), 3);
+        assert_eq!(t.cached_tokens(), 6);
+        assert_eq!(t.match_prefix(&[1, 2, 3, 4, 5, 6]), vec![10, 11, 12]);
+        // partial-page tails never match
+        assert_eq!(t.match_prefix(&[1, 2, 3, 4, 5]), vec![10, 11]);
+        assert_eq!(t.match_prefix(&[1, 2, 3, 9, 5, 6]), vec![10]);
+        assert_eq!(t.match_prefix(&[9, 2, 3, 4]), Vec::<PageId>::new());
+        assert_eq!(t.match_prefix(&[1]), Vec::<PageId>::new());
+    }
+
+    #[test]
+    fn insert_is_idempotent_and_branches() {
+        let mut t = PrefixCache::new(2);
+        assert!(t.insert(&[1, 2, 3, 4], &[10, 11]).is_empty());
+        assert_eq!(t.pages(), 2);
+        assert!(t.insert(&[1, 2, 3, 4], &[10, 11]).is_empty());
+        assert_eq!(t.pages(), 2, "re-insert creates nothing");
+        // branch at the second page
+        assert!(t.insert(&[1, 2, 7, 8], &[10, 21]).is_empty());
+        assert_eq!(t.pages(), 3);
+        assert_eq!(t.match_prefix(&[1, 2, 7, 8]), vec![10, 21]);
+        assert_eq!(t.match_prefix(&[1, 2, 3, 4]), vec![10, 11]);
+        // ragged tail tokens are ignored (only full pages insert)
+        let before = t.pages();
+        t.insert(&[5, 6, 7], &[30, 31]);
+        assert_eq!(t.pages(), before + 1, "second page had no full window");
+        // a different id at an existing position is reported as an orphan
+        // (the caller frees it); the resident node keeps its page
+        assert_eq!(t.insert(&[1, 2, 3, 4], &[10, 99]), vec![99]);
+        assert_eq!(t.match_prefix(&[1, 2, 3, 4]), vec![10, 11], "existing node kept");
+    }
+
+    #[test]
+    fn eviction_takes_lru_leaves_first_and_respects_refs() {
+        let mut t = PrefixCache::new(1);
+        t.insert(&[1, 2, 3], &[10, 11, 12]);
+        t.insert(&[4], &[40]);
+        // touch the deep chain so the lone [4] root is LRU
+        t.match_prefix(&[1, 2, 3]);
+        let got = t.evict_lru(1, &no_refs);
+        assert_eq!(got, vec![40], "LRU leaf goes first");
+        // leaves only: evicting the chain must go 12, then 11, then 10
+        assert_eq!(t.evict_lru(10, &no_refs), vec![12, 11, 10]);
+        assert!(t.is_empty());
+        assert_eq!(t.cached_tokens(), 0);
+        // referenced pages are skipped entirely
+        t.insert(&[1, 2], &[10, 11]);
+        let pinned = |p: PageId| usize::from(p == 11);
+        let none = t.evict_lru(10, &pinned);
+        assert_eq!(none, Vec::<PageId>::new(), "leaf pinned, parent not a leaf");
+        assert_eq!(t.pages(), 2);
+        // after the pin clears, both go
+        assert_eq!(t.evict_lru(10, &no_refs), vec![11, 10]);
+    }
+
+    #[test]
+    fn matching_after_partial_eviction_still_works() {
+        let mut t = PrefixCache::new(2);
+        t.insert(&[1, 2, 3, 4, 5, 6], &[10, 11, 12]);
+        assert_eq!(t.evict_lru(1, &no_refs), vec![12]);
+        assert_eq!(t.match_prefix(&[1, 2, 3, 4, 5, 6]), vec![10, 11]);
+        // arena slot reuse keeps counts consistent
+        t.insert(&[1, 2, 3, 4, 9, 9], &[10, 11, 33]);
+        assert_eq!(t.pages(), 3);
+        assert_eq!(t.cached_tokens(), 6);
+        assert_eq!(t.match_prefix(&[1, 2, 3, 4, 9, 9]), vec![10, 11, 33]);
+    }
+}

@@ -42,15 +42,18 @@ SUBCOMMANDS
   uniformity [--d D] [--rows N]                     angle-uniformity evidence (§2)
   bits       [--layers L] [--d D]                   Eq.1/Eq.3 rate calculator
   serve      [--model M] [--requests N] [--gen-max N] [--no-quant]
-             [--read-path auto|fused|reinflate]
+             [--read-path auto|fused|reinflate] [--prefix-cache on|off]
   seed-sweep [--model M] [--seeds N]                dPPL spread over random D (paper limitation)
   allocate   [--model M] [--budget B] [--group G]   greedy per-layer bit allocation (extension)
   listen     [--model M] [--addr A] [--max-requests N] [--replicas N]
              [--route-policy rr|least-loaded|affinity] [--sim]
-             [--read-path auto|fused|reinflate]
+             [--read-path auto|fused|reinflate] [--prefix-cache on|off]
              multi-replica TCP JSON-lines server (--sim: deterministic
              simulated backend, no artifacts needed; read-path auto takes
-             the fused compressed-page decode when the backend supports it)
+             the fused compressed-page decode when the backend supports it;
+             prefix-cache on shares compressed pages across common prompt
+             prefixes — combine with session-affinity routing so follow-up
+             turns land where their prefix is cached)
   selfcheck                                         golden + HLO cross-validation
   eval       [--model M] [--nk N] [--nv N] [--n-early E] [--nk-hi N] [--nv-hi N] [--norms fp32|norm8|k8v4log]
 ";
@@ -70,6 +73,14 @@ fn parse_read_path(s: &str) -> Result<ReadPath> {
         "fused" => ReadPath::Fused,
         "reinflate" | "dense" => ReadPath::Reinflate,
         other => bail!("unknown read path '{other}' (auto|fused|reinflate)"),
+    })
+}
+
+fn parse_prefix_cache(s: &str) -> Result<bool> {
+    Ok(match s {
+        "on" => true,
+        "off" => false,
+        other => bail!("unknown prefix-cache mode '{other}' (on|off)"),
     })
 }
 
@@ -165,6 +176,7 @@ fn main() -> Result<()> {
             args.get_usize("gen-max", 8)?,
             args.get_bool("no-quant"),
             parse_read_path(&args.get_str("read-path", "auto"))?,
+            parse_prefix_cache(&args.get_str("prefix-cache", "on"))?,
         )?,
         "seed-sweep" => {
             let model = args.get_str("model", "smollm2-sim");
@@ -217,6 +229,7 @@ fn main() -> Result<()> {
             let replicas = args.get_usize("replicas", 1)?;
             let policy = parse_route_policy(&args.get_str("route-policy", "affinity"))?;
             let read_path = parse_read_path(&args.get_str("read-path", "auto"))?;
+            let prefix_cache = parse_prefix_cache(&args.get_str("prefix-cache", "on"))?;
             if read_path == ReadPath::Fused && !args.get_bool("sim") {
                 // fail with a flag error, not an assert mid-construction:
                 // the PJRT executor consumes dense HLO inputs only
@@ -229,6 +242,7 @@ fn main() -> Result<()> {
                 capacity_pages: 4096,
                 page_tokens: 16,
                 read_path,
+                prefix_cache,
             };
             let mut engines: Vec<Box<dyn EngineCore>> = Vec::with_capacity(replicas);
             if args.get_bool("sim") {
@@ -375,6 +389,7 @@ fn bits_calculator(layers: usize, d: usize) {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn serve(
     artifacts: &str,
     model: &str,
@@ -382,6 +397,7 @@ fn serve(
     gen_max: usize,
     no_quant: bool,
     read_path: ReadPath,
+    prefix_cache: bool,
 ) -> Result<()> {
     if read_path == ReadPath::Fused {
         bail!("--read-path fused requires a fused-capable backend (the PJRT executor has none; use auto or reinflate)");
@@ -405,6 +421,7 @@ fn serve(
             capacity_pages: 4096,
             page_tokens: 16,
             read_path,
+            prefix_cache,
         },
     );
     let spec = WorkloadSpec {
@@ -426,10 +443,7 @@ fn serve(
         engine.metrics.tokens_generated as f64 / wall.as_secs_f64(),
         engine.metrics.requests_finished as f64 / wall.as_secs_f64()
     );
-    println!(
-        "kv memory at end: {} live seqs, pages {}/{}",
-        mem.sequences, mem.pages_allocated, mem.pages_capacity
-    );
+    println!("{}", mem.report());
     for s in engine.take_finished().iter().take(3) {
         let text: String = s
             .generated

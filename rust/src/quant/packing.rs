@@ -79,6 +79,12 @@ impl BitVec {
         self.words.len() * 8
     }
 
+    /// The raw little-endian word stream (content addressing of sealed
+    /// cache pages hashes these directly instead of re-unpacking codes).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
     pub fn clear(&mut self) {
         self.words.clear();
         self.len_bits = 0;

@@ -71,6 +71,25 @@ pub trait ModelBackend: Send {
         cfg: &QuantConfig,
     ) -> Result<PrefillOut>;
 
+    /// Prefill that skips KV emission for the first `prefix_lens[lane]`
+    /// positions of each lane — their compressed KV is already resident
+    /// (adopted shared prefix pages), so only the suffix needs computing.
+    /// Output layout matches [`Self::run_prefill`]; slab contents at
+    /// skipped positions are unspecified (the engine never appends them),
+    /// and the logits must still reflect the FULL prompt. The default
+    /// ignores the hint and runs a full prefill — correct everywhere, no
+    /// savings; backends override to make prefix-cache hits actually skip
+    /// work.
+    fn run_prefill_suffix(
+        &self,
+        tokens: &[i32],
+        lengths: &[i32],
+        _prefix_lens: &[usize],
+        cfg: &QuantConfig,
+    ) -> Result<PrefillOut> {
+        self.run_prefill(tokens, lengths, cfg)
+    }
+
     /// One decode step over the dense reinflated cache; cache slices are
     /// (L, B, H, Tmax, d/2) row-major f32.
     #[allow(clippy::too_many_arguments)]

@@ -241,6 +241,71 @@ impl SimExecutor {
         }
     }
 
+    /// Shared prefill body. `prefix_lens` (per lane) marks positions whose
+    /// KV is already resident in adopted shared pages: their emission is
+    /// skipped, but the rolling prompt hash still folds them, so suffix
+    /// entries and logits match a full prefill bit for bit.
+    fn prefill_impl(
+        &self,
+        tokens: &[i32],
+        lengths: &[i32],
+        prefix_lens: Option<&[usize]>,
+        cfg: &QuantConfig,
+    ) -> Result<PrefillOut> {
+        let (b_n, tp) = (self.serve.batch, self.serve.prefill_len);
+        let (l_n, h_n, half) = (
+            self.profile.n_layers,
+            self.profile.n_kv_heads,
+            self.profile.d_head / 2,
+        );
+        ensure!(tokens.len() == b_n * tp && lengths.len() == b_n);
+        if let Some(p) = prefix_lens {
+            ensure!(p.len() == b_n, "prefix_lens length != batch");
+        }
+        ensure!(cfg.layers.len() == l_n, "config/profile layer mismatch");
+        let vocab = self.profile.vocab;
+        let n = l_n * b_n * h_n * tp * half;
+        let mut out = PrefillOut {
+            logits: vec![0.0; b_n * vocab],
+            kr: vec![0.0; n],
+            ki: vec![0.0; n],
+            vr: vec![0.0; n],
+            vi: vec![0.0; n],
+        };
+        for lane in 0..b_n {
+            let plen = (lengths[lane] as usize).min(tp);
+            let skip = prefix_lens.map_or(0, |p| p[lane]);
+            let prompt = &tokens[lane * tp..lane * tp + plen];
+            // per-position states: fold of the prompt prefix up to t
+            let mut h = mix(self.seed ^ 0x5EED);
+            for (t, &tok) in prompt.iter().enumerate() {
+                h = mix(h ^ tok as u64);
+                if t < skip {
+                    continue; // KV already cached (shared prefix pages)
+                }
+                for l in 0..l_n {
+                    let bins = cfg.layers[l];
+                    for hd in 0..h_n {
+                        let base = (((l * b_n + lane) * h_n + hd) * tp + t) * half;
+                        for i in 0..half {
+                            let tag = ((l as u64) << 40) | ((hd as u64) << 32) | (i as u64);
+                            let e = mix(h ^ tag);
+                            let (r, k) = Self::entry(e, bins.n_k);
+                            out.kr[base + i] = r;
+                            out.ki[base + i] = k;
+                            let (r, k) = Self::entry(mix(e ^ 0x56), bins.n_v);
+                            out.vr[base + i] = r;
+                            out.vi[base + i] = k;
+                        }
+                    }
+                }
+            }
+            let state = self.prompt_state(prompt);
+            Self::set_logits(&mut out.logits, lane, vocab, Self::next_token(state), state);
+        }
+        Ok(out)
+    }
+
     /// Write one lane's outputs for decode `state`: the logits row plus
     /// this step's compressed KV entries — shared by both read paths.
     fn emit_lane(&self, out: &mut DecodeOut, lane: usize, state: u64, cfg: &QuantConfig) {
@@ -282,51 +347,23 @@ impl ModelBackend for SimExecutor {
         lengths: &[i32],
         cfg: &QuantConfig,
     ) -> Result<PrefillOut> {
-        let (b_n, tp) = (self.serve.batch, self.serve.prefill_len);
-        let (l_n, h_n, half) = (
-            self.profile.n_layers,
-            self.profile.n_kv_heads,
-            self.profile.d_head / 2,
-        );
-        ensure!(tokens.len() == b_n * tp && lengths.len() == b_n);
-        ensure!(cfg.layers.len() == l_n, "config/profile layer mismatch");
-        let vocab = self.profile.vocab;
-        let n = l_n * b_n * h_n * tp * half;
-        let mut out = PrefillOut {
-            logits: vec![0.0; b_n * vocab],
-            kr: vec![0.0; n],
-            ki: vec![0.0; n],
-            vr: vec![0.0; n],
-            vi: vec![0.0; n],
-        };
-        for lane in 0..b_n {
-            let plen = (lengths[lane] as usize).min(tp);
-            let prompt = &tokens[lane * tp..lane * tp + plen];
-            // per-position states: fold of the prompt prefix up to t
-            let mut h = mix(self.seed ^ 0x5EED);
-            for (t, &tok) in prompt.iter().enumerate() {
-                h = mix(h ^ tok as u64);
-                for l in 0..l_n {
-                    let bins = cfg.layers[l];
-                    for hd in 0..h_n {
-                        let base = (((l * b_n + lane) * h_n + hd) * tp + t) * half;
-                        for i in 0..half {
-                            let tag = ((l as u64) << 40) | ((hd as u64) << 32) | (i as u64);
-                            let e = mix(h ^ tag);
-                            let (r, k) = Self::entry(e, bins.n_k);
-                            out.kr[base + i] = r;
-                            out.ki[base + i] = k;
-                            let (r, k) = Self::entry(mix(e ^ 0x56), bins.n_v);
-                            out.vr[base + i] = r;
-                            out.vi[base + i] = k;
-                        }
-                    }
-                }
-            }
-            let state = self.prompt_state(prompt);
-            Self::set_logits(&mut out.logits, lane, vocab, Self::next_token(state), state);
-        }
-        Ok(out)
+        self.prefill_impl(tokens, lengths, None, cfg)
+    }
+
+    /// Suffix prefill: positions below the lane's prefix length only fold
+    /// the prompt hash (O(1) per token) — the per-(layer, head, element)
+    /// KV emission, which dominates prefill cost, runs for the suffix
+    /// alone. Emitted suffix entries and logits are bit-identical to a
+    /// full [`Self::run_prefill`] because each position's state depends
+    /// only on the prompt prefix up to it.
+    fn run_prefill_suffix(
+        &self,
+        tokens: &[i32],
+        lengths: &[i32],
+        prefix_lens: &[usize],
+        cfg: &QuantConfig,
+    ) -> Result<PrefillOut> {
+        self.prefill_impl(tokens, lengths, Some(prefix_lens), cfg)
     }
 
     fn run_decode(
@@ -445,6 +482,49 @@ mod tests {
         }
         for &r in &a.kr {
             assert!(r >= 0.0, "norms must be non-negative");
+        }
+    }
+
+    #[test]
+    fn suffix_prefill_matches_full_prefill_on_the_suffix() {
+        let sim = SimExecutor::new(9);
+        let (b, tp) = (sim.serve().batch, sim.serve().prefill_len);
+        let (l_n, h_n, half) = (
+            sim.profile().n_layers,
+            sim.profile().n_kv_heads,
+            sim.profile().d_head / 2,
+        );
+        let mut tokens = vec![0i32; b * tp];
+        let mut lengths = vec![1i32; b];
+        for lane in 0..b {
+            for t in 0..8 {
+                tokens[lane * tp + t] = (lane * 31 + t * 7) as i32 + 1;
+            }
+            lengths[lane] = 8;
+        }
+        let full = sim.run_prefill(&tokens, &lengths, &cfg()).unwrap();
+        // per-lane skip depths, including 0 (no prefix) and plen (all cached)
+        let skips = vec![0usize, 3, 8, 5];
+        let suf = sim
+            .run_prefill_suffix(&tokens, &lengths, &skips[..b], &cfg())
+            .unwrap();
+        assert_eq!(full.logits, suf.logits, "logits reflect the full prompt");
+        for lane in 0..b {
+            for t in skips[lane].min(8)..8 {
+                for l in 0..l_n {
+                    for hd in 0..h_n {
+                        let base = (((l * b + lane) * h_n + hd) * tp + t) * half;
+                        assert_eq!(
+                            &full.kr[base..base + half],
+                            &suf.kr[base..base + half],
+                            "lane={lane} t={t}"
+                        );
+                        assert_eq!(&full.ki[base..base + half], &suf.ki[base..base + half]);
+                        assert_eq!(&full.vr[base..base + half], &suf.vr[base..base + half]);
+                        assert_eq!(&full.vi[base..base + half], &suf.vi[base..base + half]);
+                    }
+                }
+            }
         }
     }
 

@@ -36,6 +36,12 @@ impl Rng {
 }
 
 /// Prompt-length / generation-length mix.
+///
+/// With `n_prefixes > 0`, requests draw round-robin from a pool of
+/// `n_prefixes` shared system prompts of `prefix_len` tokens each, and
+/// `prompt_min..=prompt_max` bounds the PRIVATE tail appended after the
+/// shared prefix — the shape real deployments have (common system prompt +
+/// per-user remainder), and the workload the prefix cache is measured on.
 #[derive(Clone, Copy, Debug)]
 pub struct WorkloadSpec {
     pub prompt_min: usize,
@@ -47,6 +53,10 @@ pub struct WorkloadSpec {
     /// Number of distinct multi-turn sessions to spread requests over
     /// (0 = no session keys). Exercises session-affinity routing.
     pub sessions: usize,
+    /// Shared system prompts requests draw from (0 = every prompt private).
+    pub n_prefixes: usize,
+    /// Tokens per shared prefix (ignored when `n_prefixes == 0`).
+    pub prefix_len: usize,
 }
 
 impl Default for WorkloadSpec {
@@ -59,30 +69,45 @@ impl Default for WorkloadSpec {
             n_requests: 16,
             seed: 42,
             sessions: 0,
+            n_prefixes: 0,
+            prefix_len: 0,
         }
+    }
+}
+
+/// One corpus-alphabet token (lowercase + space).
+fn corpus_token(rng: &mut Rng) -> i32 {
+    let r = rng.range(0, 27);
+    if r == 26 {
+        32
+    } else {
+        97 + r as i32
     }
 }
 
 /// Byte-level prompts drawn from the corpus alphabet (lowercase + space).
 pub fn generate(spec: &WorkloadSpec) -> Vec<Request> {
     let mut rng = Rng::new(spec.seed);
-    // clamp inverted bounds (e.g. a CLI --gen-max below the default min)
+    // clamp inverted bounds (e.g. a CLI --prompt-max below the default
+    // min) on BOTH the generation and prompt ranges — `Rng::range`
+    // already guards hi <= lo, but only the clamp keeps the drawn values
+    // inside the [lo.min(hi), hi] interval the caller meant
     let gen_min = spec.gen_min.min(spec.gen_max);
     let prompt_min = spec.prompt_min.min(spec.prompt_max);
+    // the pool of shared system prompts requests draw from, round-robin
+    let prefixes: Vec<Vec<i32>> = (0..spec.n_prefixes)
+        .map(|_| (0..spec.prefix_len).map(|_| corpus_token(&mut rng)).collect())
+        .collect();
     (0..spec.n_requests)
         .map(|i| {
             let plen = rng.range(prompt_min, spec.prompt_max + 1);
             let glen = rng.range(gen_min, spec.gen_max + 1);
-            let prompt: Vec<i32> = (0..plen)
-                .map(|_| {
-                    let r = rng.range(0, 27);
-                    if r == 26 {
-                        32
-                    } else {
-                        97 + r as i32
-                    }
-                })
-                .collect();
+            let mut prompt: Vec<i32> = if prefixes.is_empty() {
+                Vec::with_capacity(plen)
+            } else {
+                prefixes[i % prefixes.len()].clone()
+            };
+            prompt.extend((0..plen).map(|_| corpus_token(&mut rng)));
             let req = Request::new(i as u64, prompt, glen);
             if spec.sessions > 0 {
                 req.with_session_key((i % spec.sessions) as u64)
@@ -122,6 +147,71 @@ mod tests {
     }
 
     #[test]
+    fn inverted_prompt_bounds_clamp() {
+        // regression: the prompt range gets the same clamp as gen — an
+        // inverted --prompt-min/--prompt-max from the CLI (easy to hit
+        // when tuning prefix_len) must behave as [max, max], never panic
+        // or draw outside the intended interval
+        let spec = WorkloadSpec {
+            prompt_min: 40,
+            prompt_max: 6,
+            n_requests: 30,
+            ..Default::default()
+        };
+        for r in generate(&spec) {
+            assert!(r.prompt.len() <= 6, "prompt len {}", r.prompt.len());
+        }
+        // and with a shared prefix, the clamp applies to the private tail
+        let spec = WorkloadSpec {
+            prompt_min: 40,
+            prompt_max: 6,
+            n_requests: 12,
+            n_prefixes: 2,
+            prefix_len: 5,
+            ..Default::default()
+        };
+        for r in generate(&spec) {
+            assert!(r.prompt.len() <= 5 + 6, "prompt len {}", r.prompt.len());
+            assert!(r.prompt.len() >= 5);
+        }
+    }
+
+    #[test]
+    fn shared_prefixes_are_drawn_round_robin() {
+        let spec = WorkloadSpec {
+            prompt_min: 2,
+            prompt_max: 6,
+            n_requests: 9,
+            n_prefixes: 3,
+            prefix_len: 8,
+            ..Default::default()
+        };
+        let reqs = generate(&spec);
+        // request i shares its first prefix_len tokens with request i+3
+        for i in 0..6 {
+            assert_eq!(
+                &reqs[i].prompt[..8],
+                &reqs[i + 3].prompt[..8],
+                "requests {i} and {} must share a prefix",
+                i + 3
+            );
+        }
+        // the three prefixes are pairwise distinct
+        assert_ne!(&reqs[0].prompt[..8], &reqs[1].prompt[..8]);
+        assert_ne!(&reqs[1].prompt[..8], &reqs[2].prompt[..8]);
+        // tails are private: lengths bounded by prefix_len + prompt_max
+        for r in &reqs {
+            assert!(r.prompt.len() >= 8 + 2 && r.prompt.len() <= 8 + 6);
+            assert!(r.prompt.iter().all(|&t| t == 32 || (97..123).contains(&t)));
+        }
+        // deterministic across calls
+        let again = generate(&spec);
+        for (a, b) in reqs.iter().zip(&again) {
+            assert_eq!(a.prompt, b.prompt);
+        }
+    }
+
+    #[test]
     fn respects_bounds() {
         let spec = WorkloadSpec {
             prompt_min: 4,
@@ -131,6 +221,7 @@ mod tests {
             n_requests: 50,
             seed: 7,
             sessions: 0,
+            ..Default::default()
         };
         for r in generate(&spec) {
             assert!(r.prompt.len() >= 4 && r.prompt.len() <= 8);

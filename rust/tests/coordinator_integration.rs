@@ -33,6 +33,16 @@ fn sim_engine_path(
     page_tokens: usize,
     read_path: ReadPath,
 ) -> Engine<SimExecutor> {
+    sim_engine_prefix(seed, capacity_pages, page_tokens, read_path, false)
+}
+
+fn sim_engine_prefix(
+    seed: u64,
+    capacity_pages: usize,
+    page_tokens: usize,
+    read_path: ReadPath,
+    prefix_cache: bool,
+) -> Engine<SimExecutor> {
     Engine::new(
         SimExecutor::new(seed),
         EngineConfig {
@@ -45,6 +55,7 @@ fn sim_engine_path(
             capacity_pages,
             page_tokens,
             read_path,
+            prefix_cache,
         },
     )
 }
@@ -61,6 +72,7 @@ fn sim_engine_serves_deterministically() {
             gen_max: 8,
             seed: 5,
             sessions: 0,
+            ..Default::default()
         }) {
             e.submit(req);
         }
@@ -186,6 +198,7 @@ fn fused_read_path_emits_bit_identical_tokens() {
             gen_max: 10,
             seed: 13,
             sessions: 0,
+            ..Default::default()
         }) {
             e.submit(req);
         }
@@ -214,6 +227,149 @@ fn fused_read_path_emits_bit_identical_tokens() {
         "fused and reinflate read paths must generate identical tokens"
     );
     assert_eq!(run(ReadPath::Auto), fused, "sim Auto must resolve to fused");
+}
+
+/// The prefix-cache acceptance criterion: for a whole shared-prefix
+/// workload, generated token streams with the cache ON equal the streams
+/// with it OFF, on BOTH read paths — adoption only skips recomputing KV
+/// bits deterministic prefill would reproduce, so the sim's cache-checksum
+/// decode would expose any divergence. The ON runs must actually hit.
+#[test]
+fn prefix_cache_on_emits_bit_identical_tokens_and_hits() {
+    let spec = WorkloadSpec {
+        n_requests: 16,
+        prompt_min: 2,
+        prompt_max: 6,
+        gen_min: 2,
+        gen_max: 6,
+        seed: 21,
+        n_prefixes: 2,
+        prefix_len: 12, // 3 full pages of 4 — matchable after one finish
+        ..Default::default()
+    };
+    let run = |path: ReadPath, prefix: bool| {
+        let mut e = sim_engine_prefix(7, 256, 4, path, prefix);
+        assert_eq!(e.prefix_cache_enabled(), prefix);
+        for req in workload::generate(&spec) {
+            e.submit(req);
+        }
+        e.run_to_completion().unwrap();
+        assert_eq!(e.metrics.requests_finished, 16);
+        let mem = e.memory_stats();
+        assert_eq!(mem.sequences, 0);
+        assert_eq!(mem.shared_refs, 0, "all refs dropped after drain");
+        if prefix {
+            assert!(e.metrics.prefix_hits >= 1, "warm requests must hit");
+            assert!(e.metrics.prefix_tokens_reused >= 12);
+            assert!(mem.shared_pages > 0, "finished prefixes stay cached");
+            // after drain, ONLY the cache holds pool pages
+            assert_eq!(mem.pages_allocated, mem.shared_pages);
+            assert_eq!(mem.pages_reserved, mem.shared_pages);
+            assert_eq!(mem.pages_private(), 0);
+        } else {
+            assert_eq!(e.metrics.prefix_hits + e.metrics.prefix_misses, 0);
+            assert_eq!(mem.pages_allocated, 0);
+            assert_eq!(mem.shared_pages, 0);
+        }
+        let mut out: Vec<(u64, Vec<i32>)> = e
+            .take_finished()
+            .into_iter()
+            .map(|s| (s.request.id, s.generated))
+            .collect();
+        out.sort();
+        out
+    };
+    let baseline = run(ReadPath::Reinflate, false);
+    for (path, prefix) in [
+        (ReadPath::Reinflate, true),
+        (ReadPath::Fused, false),
+        (ReadPath::Fused, true),
+    ] {
+        assert_eq!(
+            run(path, prefix),
+            baseline,
+            "prefix cache and read path must not change tokens ({path:?}, prefix={prefix})"
+        );
+    }
+}
+
+/// Bit-identity THROUGH preemption with sharing: B adopts A's cached
+/// prefix pages, gets swapped out while holding them (the refs pin the
+/// pages), and resumes to generate exactly what the cache-off run does —
+/// on both read paths.
+#[test]
+fn prefix_cache_preemption_matches_off_bit_identically() {
+    let prompt_ab: Vec<i32> = vec![10, 20, 30, 40, 50, 60, 70, 80];
+    let prompt_c: Vec<i32> = vec![9, 8, 7, 6, 5, 4, 3, 2];
+    let run = |path: ReadPath, prefix: bool| {
+        // pool of 6 pages × 4 tokens: with B resident (and, when caching,
+        // A's pages cached) C's 4-page footprint forces a preemption
+        let mut e = sim_engine_prefix(7, 6, 4, path, prefix);
+        e.submit(Request::new(1, prompt_ab.clone(), 8));
+        e.run_to_completion().unwrap();
+        // B repeats A's prompt: with caching on it adopts A's pages
+        e.submit(Request::new(2, prompt_ab.clone(), 8));
+        for _ in 0..100 {
+            if e.tick().unwrap() == turboangle::coordinator::scheduler::Action::Prefill {
+                break;
+            }
+        }
+        e.tick().unwrap(); // at least one decode so B is evictable
+        e.submit(Request::new(3, prompt_c.clone(), 8));
+        e.run_to_completion().unwrap();
+        assert!(e.metrics.preemptions >= 1, "B must have been swapped out");
+        assert!(e.metrics.swap_ins >= 1, "B must have been restored");
+        if prefix {
+            assert!(e.metrics.prefix_hits >= 1, "B must adopt A's pages");
+        }
+        let mut finished = e.take_finished();
+        finished.sort_by_key(|s| s.request.id);
+        assert_eq!(finished.len(), 3);
+        finished
+            .into_iter()
+            .map(|s| s.generated)
+            .collect::<Vec<_>>()
+    };
+    let baseline = run(ReadPath::Reinflate, false);
+    assert_eq!(
+        baseline[0], baseline[1],
+        "same prompt, same deterministic stream"
+    );
+    for (path, prefix) in [
+        (ReadPath::Reinflate, true),
+        (ReadPath::Fused, false),
+        (ReadPath::Fused, true),
+    ] {
+        assert_eq!(
+            run(path, prefix),
+            baseline,
+            "preempted shared-prefix run diverged ({path:?}, prefix={prefix})"
+        );
+    }
+}
+
+/// Pool pressure reclaims unreferenced cached pages (LRU) instead of
+/// refusing admission: a request needing the whole pool evicts the cache
+/// left by a finished sequence and still completes.
+#[test]
+fn prefix_eviction_reclaims_cached_pages_under_pressure() {
+    let mut e = sim_engine_prefix(7, 5, 4, ReadPath::Auto, true);
+    e.submit(Request::new(1, vec![11, 12, 13, 14, 15, 16, 17, 18], 4));
+    e.run_to_completion().unwrap();
+    let cached = e.memory_stats().shared_pages;
+    assert!(cached >= 2, "finished sequence must leave cached pages");
+    // 12-token prompt + 8 gen = 20 tokens = all 5 pages: only fits after
+    // the cache yields
+    let big: Vec<i32> = (30..42).collect();
+    e.submit(Request::new(2, big, 8));
+    e.run_to_completion().unwrap();
+    assert_eq!(e.metrics.requests_finished, 2);
+    assert!(
+        e.metrics.prefix_evictions >= cached as u64,
+        "cached pages must have been reclaimed ({} evictions)",
+        e.metrics.prefix_evictions
+    );
+    assert_eq!(e.metrics.preemptions, 0, "no live work was preempted");
 }
 
 #[test]
@@ -353,6 +509,7 @@ fn engine(quant: QuantConfig, capacity_pages: usize) -> Option<Engine> {
             capacity_pages,
             page_tokens: 16,
             read_path: ReadPath::Auto, // PJRT backend: resolves to reinflate
+            prefix_cache: false,
         },
     ))
 }
@@ -369,6 +526,7 @@ fn full_workload_drains_and_frees_memory() {
         gen_max: 8,
         seed: 11,
         sessions: 0,
+        ..Default::default()
     }) {
         e.submit(req);
     }
@@ -444,6 +602,7 @@ fn admission_control_holds_under_tiny_pool() {
         gen_max: 4,
         seed: 3,
         sessions: 0,
+        ..Default::default()
     }) {
         e.submit(req);
     }

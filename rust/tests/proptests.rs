@@ -2,7 +2,8 @@
 //! accounting, and coordinator policies — the invariants DESIGN.md §8 lists.
 
 use turboangle::coordinator::batcher::{Admission, BatchPolicy, DynamicBatcher};
-use turboangle::coordinator::kv_manager::{PagedKvCache, TileScratch};
+use turboangle::coordinator::kv_manager::{PageId, PagedKvCache, TileScratch};
+use turboangle::coordinator::prefix_cache::PrefixCache;
 use turboangle::coordinator::router::{RoutePolicy, Router};
 use turboangle::coordinator::session::Request;
 use turboangle::quant::packing::{bits_for, pack, unpack, BitCursor, BitVec};
@@ -553,6 +554,262 @@ fn prop_fused_tiles_match_fill_dense_and_decode_batch() {
                     &mut from_dense,
                 );
                 assert_eq!(from_tiles, from_dense, "x-space decode diverged l={l} h={h}");
+            }
+        }
+    });
+}
+
+/// Base-31 positional encoding of a token prefix: injective for our tiny
+/// alphabets, so it models the kv store's chain content addressing (same
+/// prefix ⇒ same page id, different prefix ⇒ different id) exactly.
+fn model_pid(prefix: &[i32]) -> u64 {
+    let mut h = 0x9E37u64;
+    for &t in prefix {
+        h = h.wrapping_mul(31).wrapping_add(t as u64 + 2);
+    }
+    h
+}
+
+#[test]
+fn prop_prefix_tree_invariants_under_insert_match_evict() {
+    // random insert / match / pin / evict interleavings against a flat
+    // model map; pins: longest-prefix match correctness, evicted pages
+    // always had refcount 0, and tree token count == pages * page_tokens
+    run_cases(120, |g| {
+        let pt = g.usize_in(1, 3);
+        let mut tree = PrefixCache::new(pt);
+        // model: live full-page prefix -> its page id (prefix-closed:
+        // inserts add ancestors, eviction removes leaves first)
+        let mut live: std::collections::HashMap<Vec<i32>, u64> = Default::default();
+        let mut known_pids: Vec<u64> = Vec::new();
+        let mut refs: std::collections::HashMap<u64, usize> = Default::default();
+        for _ in 0..g.usize_in(1, 60) {
+            let toks: Vec<i32> = (0..g.usize_in(0, 9)).map(|_| (g.u64() % 3) as i32).collect();
+            match g.usize_in(0, 3) {
+                0 => {
+                    let pages: Vec<u64> =
+                        (1..=toks.len() / pt).map(|k| model_pid(&toks[..k * pt])).collect();
+                    tree.insert(&toks, &pages);
+                    for (k, &pid) in pages.iter().enumerate() {
+                        if live.insert(toks[..(k + 1) * pt].to_vec(), pid).is_none() {
+                            known_pids.push(pid);
+                        }
+                    }
+                }
+                1 => {
+                    let got = tree.match_prefix(&toks);
+                    let mut want = Vec::new();
+                    for k in 1..=toks.len() / pt {
+                        match live.get(&toks[..k * pt]) {
+                            Some(&pid) => want.push(pid),
+                            None => break,
+                        }
+                    }
+                    assert_eq!(got, want, "longest-prefix match vs model for {toks:?}");
+                }
+                2 => {
+                    // flip a random known page between pinned and free
+                    if !known_pids.is_empty() {
+                        let pid = known_pids[g.usize_in(0, known_pids.len() - 1)];
+                        if refs.remove(&pid).is_none() {
+                            refs.insert(pid, g.usize_in(1, 3));
+                        }
+                    }
+                }
+                _ => {
+                    let want = g.usize_in(1, 4);
+                    let r = refs.clone();
+                    let evicted = tree.evict_lru(want, &|p| r.get(&p).copied().unwrap_or(0));
+                    assert!(evicted.len() <= want);
+                    for pid in &evicted {
+                        assert_eq!(
+                            r.get(pid).copied().unwrap_or(0),
+                            0,
+                            "evicted page {pid} had live references"
+                        );
+                        live.retain(|_, v| v != pid);
+                    }
+                }
+            }
+            assert_eq!(
+                tree.cached_tokens(),
+                tree.pages() * pt,
+                "tree token count drifted from its live pages"
+            );
+            assert_eq!(tree.pages(), live.len(), "tree pages vs model");
+        }
+    });
+}
+
+/// Deterministic compressed entry for (token-prefix, layer, element):
+/// same logical prefix ⇒ same bits, the property real prefill has and the
+/// one content-addressed page dedup relies on.
+fn model_entry(tokens: &[i32], t: usize, l: usize, i: usize, bins: u32) -> (f32, f32) {
+    let mut h = model_pid(&tokens[..=t]);
+    h = h
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add(((l * 64 + i) as u64) << 7);
+    let r = 0.05 + (h % 997) as f32 / 300.0;
+    let k = (h >> 32) % bins as u64;
+    (r, k as f32)
+}
+
+fn append_model_suffix(kv: &mut PagedKvCache, id: u64, tokens: &[i32], from: usize) {
+    let half = kv.d_head / 2;
+    for t in from..tokens.len() {
+        for l in 0..kv.n_layers {
+            let bins = kv.cfg.layers[l];
+            let mut kr = Vec::with_capacity(half);
+            let mut ki = Vec::with_capacity(half);
+            let mut vr = Vec::with_capacity(half);
+            let mut vi = Vec::with_capacity(half);
+            for i in 0..half {
+                let (r, k) = model_entry(tokens, t, l, i, bins.n_k);
+                kr.push(r);
+                ki.push(k);
+                let (r, k) = model_entry(tokens, t, l, i + half, bins.n_v);
+                vr.push(r);
+                vi.push(k);
+            }
+            kv.append_token_lh(id, l, 0, &kr, &ki, &vr, &vi).unwrap();
+        }
+        kv.commit_token(id).unwrap();
+    }
+}
+
+/// The safety acceptance criterion: across random admit (with prefix
+/// adoption) / finish-and-share / preempt / resume / evict interleavings,
+/// pool accounting holds (allocated ≤ reserved ≤ capacity), shared-page
+/// refcounts exactly track the live+swapped sequences that adopted them,
+/// eviction never frees a referenced page — and adopted prefixes reinflate
+/// the exact content the sequence would have written itself.
+#[test]
+fn prop_shared_pool_accounting_and_eviction_safety() {
+    run_cases(40, |g| {
+        let pt = g.usize_in(2, 4);
+        let l_n = g.usize_in(1, 2);
+        let (d, tmax) = (8usize, 32usize);
+        let half = d / 2;
+        let capacity = g.usize_in(6, 14);
+        let cfg = QuantConfig::paper_uniform(l_n).with_norms(NormMode::LINEAR8, NormMode::LOG4);
+        let mut kv = PagedKvCache::new(cfg, l_n, 1, d, tmax, capacity, pt);
+        let mut tree = PrefixCache::new(pt);
+        let mut next_id = 1u64;
+        // (id, token stream, adopted shared pages)
+        let mut live: Vec<(u64, Vec<i32>, Vec<PageId>)> = Vec::new();
+        let mut swapped: Vec<(u64, Vec<i32>, Vec<PageId>)> = Vec::new();
+        for _ in 0..g.usize_in(4, 30) {
+            match g.usize_in(0, 4) {
+                0 => {
+                    // admit: adopt the longest cached prefix, append the rest
+                    let tlen = g.usize_in(0, 10);
+                    let tokens: Vec<i32> =
+                        (0..tlen).map(|_| (g.u64() % 3) as i32).collect();
+                    let matched = tree.match_prefix(&tokens);
+                    let id = next_id;
+                    if kv.new_seq_with_prefix(id, tlen, &matched).is_ok() {
+                        next_id += 1;
+                        append_model_suffix(&mut kv, id, &tokens, matched.len() * pt);
+                        live.push((id, tokens, matched));
+                    }
+                }
+                1 => {
+                    // finish: seal full pages, index them in the tree
+                    if !live.is_empty() {
+                        let (id, tokens, _) =
+                            live.swap_remove(g.usize_in(0, live.len() - 1));
+                        let chain = kv.finish_seq_share(id, &tokens).unwrap();
+                        assert_eq!(chain.len(), tokens.len() / pt);
+                        tree.insert(&tokens, &chain);
+                    }
+                }
+                2 => {
+                    // preempt: private pages out, shared refs stay pinned
+                    if !live.is_empty() {
+                        let e = live.swap_remove(g.usize_in(0, live.len() - 1));
+                        kv.swap_out(e.0).unwrap();
+                        swapped.push(e);
+                    }
+                }
+                3 => {
+                    // resume (may legitimately fail under pool pressure)
+                    if !swapped.is_empty() {
+                        let i = g.usize_in(0, swapped.len() - 1);
+                        let (id, ref tokens, _) = swapped[i];
+                        let expected = tokens.len();
+                        if kv.swap_in(id, expected).unwrap() {
+                            let e = swapped.swap_remove(i);
+                            live.push(e);
+                        }
+                    }
+                }
+                _ => {
+                    // cache eviction under (simulated) pressure
+                    let evicted = tree.evict_lru(g.usize_in(1, 3), &|pid| {
+                        kv.shared_page_refs(pid).unwrap_or(0)
+                    });
+                    for pid in &evicted {
+                        assert_eq!(
+                            kv.shared_page_refs(*pid),
+                            Some(0),
+                            "evicted page {pid} still referenced"
+                        );
+                        kv.free_shared_page(*pid).unwrap();
+                    }
+                }
+            }
+            // pool accounting invariants, after EVERY operation
+            let st = kv.memory_stats();
+            assert!(
+                st.pages_allocated <= st.pages_reserved,
+                "allocated {} > reserved {}",
+                st.pages_allocated,
+                st.pages_reserved
+            );
+            assert!(
+                st.pages_reserved <= st.pages_capacity,
+                "reserved {} > capacity {}",
+                st.pages_reserved,
+                st.pages_capacity
+            );
+            // refcounts exactly track adoption by live + swapped sequences
+            let mut want_refs: std::collections::HashMap<PageId, usize> = Default::default();
+            for (_, _, adopted) in live.iter().chain(swapped.iter()) {
+                for &pid in adopted {
+                    *want_refs.entry(pid).or_insert(0) += 1;
+                }
+            }
+            for (&pid, &n) in &want_refs {
+                assert_eq!(kv.shared_page_refs(pid), Some(n), "refcount drift on {pid}");
+                assert!(
+                    kv.free_shared_page(pid).is_err(),
+                    "a referenced page must refuse to free"
+                );
+            }
+            assert_eq!(st.shared_refs, want_refs.values().sum::<usize>());
+        }
+        // read-back: a surviving sequence's cache — adopted shared pages
+        // AND its own suffix — reinflates the exact angle codes the
+        // content rule defines (codes are stored exactly; norms are lossy)
+        if let Some((id, tokens, _)) = live.first() {
+            let n = l_n * tmax * half;
+            let mut kr = vec![0.0f32; n];
+            let mut ki = vec![0.0f32; n];
+            let mut vr = vec![0.0f32; n];
+            let mut vi = vec![0.0f32; n];
+            let len = kv.fill_dense(*id, 0, 1, &mut kr, &mut ki, &mut vr, &mut vi).unwrap();
+            assert_eq!(len, tokens.len());
+            for t in 0..tokens.len() {
+                for l in 0..l_n {
+                    let bins = kv.cfg.layers[l];
+                    for i in 0..half {
+                        let base = (l * tmax + t) * half + i;
+                        let (_, k) = model_entry(tokens, t, l, i, bins.n_k);
+                        assert_eq!(ki[base], k, "K angle code drift at t={t} l={l} i={i}");
+                        let (_, k) = model_entry(tokens, t, l, i + half, bins.n_v);
+                        assert_eq!(vi[base], k, "V angle code drift at t={t} l={l} i={i}");
+                    }
+                }
             }
         }
     });
