@@ -4,7 +4,8 @@
 ARTIFACTS ?= artifacts
 
 .PHONY: all artifacts test bench smoke bench-serving smoke-serving \
-        bench-fused smoke-fused bench-prefix smoke-prefix fmt lint clean
+        bench-fused smoke-fused bench-prefix smoke-prefix \
+        bench-latency smoke-latency docs fmt lint clean
 
 all: test
 
@@ -56,6 +57,22 @@ bench-prefix:
 smoke-prefix:
 	cargo bench --bench prefix_caching -- --smoke
 
+# Chunked vs monolithic prefill on a mixed long-prompt + chat workload
+# (asserts chunked/monolithic token bit-identity and p99_itl_improvement
+# > 1), writes BENCH_serving_latency.json. Field docs: docs/BENCH_GLOSSARY.md.
+bench-latency:
+	cargo bench --bench serving_latency
+
+smoke-latency:
+	cargo bench --bench serving_latency -- --smoke
+
+# Documentation gate: rustdoc clean under -D warnings (missing_docs
+# included for quant/ and coordinator/) and every doc-example compiles
+# and runs. CI runs the same two commands in the `docs` job.
+docs:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+	cargo test --doc
+
 fmt:
 	cargo fmt --all
 
@@ -66,4 +83,5 @@ lint:
 clean:
 	cargo clean
 	rm -f BENCH_quant_hot_path.json BENCH_serving_throughput.json \
-	      BENCH_fused_attention.json BENCH_prefix_caching.json
+	      BENCH_fused_attention.json BENCH_prefix_caching.json \
+	      BENCH_serving_latency.json

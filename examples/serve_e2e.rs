@@ -11,7 +11,7 @@
 //! python is nowhere on the request path.
 
 use anyhow::Result;
-use turboangle::coordinator::{BatchPolicy, Engine, EngineConfig, ReadPath, SchedulerPolicy};
+use turboangle::coordinator::{Engine, EngineConfig};
 use turboangle::eval::{sweep, PplHarness};
 use turboangle::quant::{Mode, NormMode, QuantConfig};
 use turboangle::runtime::{Entry, Manifest, ModelExecutor, Runtime};
@@ -29,13 +29,8 @@ fn run_engine(
     let mut engine = Engine::new(
         exec,
         EngineConfig {
-            quant,
-            batch_policy: BatchPolicy::default(),
-            scheduler: SchedulerPolicy::default(),
             capacity_pages: 2048,
-            page_tokens: 16,
-            read_path: ReadPath::Auto,
-            prefix_cache: false,
+            ..EngineConfig::new(quant)
         },
     );
     let spec = WorkloadSpec {

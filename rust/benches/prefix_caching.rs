@@ -23,16 +23,16 @@
 //! `prefix_hit_speedup` (headline: cold / warm wall time),
 //! `cold_prompt_tok_per_s`, `warm_prompt_tok_per_s`, `warm_hit_rate`,
 //! `prefix_tokens_reused_per_pass`, `shared_pages`,
-//! `shared_page_bytes`, `reuse_savings_bytes` (compressed bytes NOT
-//! stored privately thanks to adoption, per warm pass),
-//! `n_prefixes`/`prefix_len`/`requests`.
+//! `shared_store_bytes` (TOTAL compressed bytes of the shared store —
+//! formerly misnamed `shared_page_bytes`, which read as a per-page size),
+//! `reuse_savings_bytes` (compressed bytes NOT stored privately thanks to
+//! adoption, per warm pass), `n_prefixes`/`prefix_len`/`requests`.
+//! Every field is documented in docs/BENCH_GLOSSARY.md.
 //!
 //!     cargo bench --bench prefix_caching [-- --smoke]
 
 use std::time::Duration;
-use turboangle::coordinator::{
-    BatchPolicy, Engine, EngineConfig, ReadPath, SchedulerPolicy,
-};
+use turboangle::coordinator::{BatchPolicy, Engine, EngineConfig};
 use turboangle::quant::QuantConfig;
 use turboangle::runtime::SimExecutor;
 use turboangle::util::bench::{bench, black_box, JsonReport};
@@ -55,16 +55,13 @@ fn mk_engine(g: &Geom, prefix_cache: bool) -> Engine<SimExecutor> {
     Engine::new(
         exec,
         EngineConfig {
-            quant: QuantConfig::paper_uniform(2).with_k8v4_log(),
             batch_policy: BatchPolicy {
                 min_batch: 1,
                 max_wait: Duration::ZERO,
             },
-            scheduler: SchedulerPolicy::default(),
-            capacity_pages: 4096,
             page_tokens: g.page_tokens,
-            read_path: ReadPath::Auto,
             prefix_cache,
+            ..EngineConfig::new(QuantConfig::paper_uniform(2).with_k8v4_log())
         },
     )
 }
@@ -217,7 +214,9 @@ fn main() {
     rep.summary("warm_hit_rate", hit_rate);
     rep.summary("prefix_tokens_reused_per_pass", reused_per_pass);
     rep.summary("shared_pages", mem.shared_pages);
-    rep.summary("shared_page_bytes", mem.shared_bytes);
+    // total bytes of the shared store (NOT per page — the old name
+    // `shared_page_bytes` suggested a per-page size; see BENCH_GLOSSARY.md)
+    rep.summary("shared_store_bytes", mem.shared_bytes);
     rep.summary("reuse_savings_bytes", reuse_savings_bytes);
     println!(
         "\nprefix_hit_speedup: {speedup:.2}x (cold {cold_tput:.0} -> warm {warm_tput:.0} prompt-tok/s)\n\

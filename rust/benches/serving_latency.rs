@@ -1,0 +1,274 @@
+//! Tail-latency comparison: chunked vs monolithic prefill on a mixed
+//! long-prompt + chat workload — the numbers behind
+//! `BENCH_serving_latency.json`.
+//!
+//! Workload shape (the regime chunked prefill exists for): a few chat
+//! sessions with staggered generation lengths decode steadily; once half
+//! of them have finished, near-window-sized "document" prompts
+//! (`max_new_tokens = 1`, pure prompt ingestion) start streaming in. With
+//! monolithic prefill every long admission stalls the still-running
+//! decoders for one whole-prompt prefill tick, which lands as a large
+//! inter-token-latency (ITL) sample on each of them; with chunked prefill
+//! the same ingestion is sliced into `chunk_tokens`-sized pieces
+//! interleaved with decode steps, so each decoder's stall is bounded by
+//! one chunk.
+//!
+//! Both modes run the SAME requests through a full engine
+//! (`run_to_completion`), and their token streams are asserted equal
+//! before timing — the chunked-on/off bit-identity guarantee is never
+//! traded for latency. ITL/TTFT come from the engine's own histograms
+//! (`EngineMetrics::{itl, ttft}`), accumulated over every timed pass.
+//!
+//! JSON summary fields (documented in docs/BENCH_GLOSSARY.md):
+//! `p99_itl_improvement` (headline: monolithic p99 ITL / chunked p99 ITL,
+//! asserted > 1), `p95_itl_improvement`, per-mode
+//! `{mono,chunked}_itl_{p50,p95,p99}_us`, `{mono,chunked}_ttft_p50_us`,
+//! `{mono,chunked}_ttft_p99_us`, `{mono,chunked}_tok_per_s`, plus the
+//! workload geometry (`long_prompt_tokens`, `chunk_tokens`,
+//! `tick_token_budget`, `n_chat`, `n_long`, `chat_gen_base`, `smoke`).
+//!
+//!     cargo bench --bench serving_latency [-- --smoke]
+
+use std::time::{Duration, Instant};
+use turboangle::coordinator::{BatchPolicy, Engine, EngineConfig, Request};
+use turboangle::quant::QuantConfig;
+use turboangle::runtime::SimExecutor;
+use turboangle::util::bench::{BenchResult, JsonReport};
+
+const OUT_JSON: &str = "BENCH_serving_latency.json";
+
+struct Geom {
+    prefill_len: usize,
+    d_head: usize,
+    batch: usize,
+    page_tokens: usize,
+    chunk_tokens: usize,
+    n_chat: usize,
+    /// shortest chat generation; session c generates `chat_gen_base + 8*c`
+    /// tokens so finishes stagger and decoders overlap the long arrivals
+    chat_gen_base: usize,
+    n_long: usize,
+    /// engine ticks between long-prompt arrivals (decode keeps running)
+    arrival_gap: usize,
+    timed_passes: usize,
+}
+
+fn mk_engine(g: &Geom, chunked: bool) -> Engine<SimExecutor> {
+    let exec =
+        SimExecutor::with_dims(1, 2, 2, g.d_head, g.batch, g.prefill_len, g.prefill_len + 128);
+    Engine::new(
+        exec,
+        EngineConfig {
+            batch_policy: BatchPolicy {
+                min_batch: 1,
+                max_wait: Duration::ZERO,
+            },
+            capacity_pages: 16384,
+            page_tokens: g.page_tokens,
+            chunked_prefill: chunked,
+            chunk_tokens: g.chunk_tokens,
+            // room for every decode lane plus one full chunk per tick
+            tick_token_budget: g.batch + g.chunk_tokens,
+            ..EngineConfig::new(QuantConfig::paper_uniform(2).with_k8v4_log())
+        },
+    )
+}
+
+fn chat_req(id: u64, c: usize, g: &Geom) -> Request {
+    let prompt: Vec<i32> = (0..6).map(|i| ((id * 7 + i) % 26) as i32 + 97).collect();
+    Request::new(id, prompt, g.chat_gen_base + 8 * c)
+}
+
+fn long_req(id: u64, g: &Geom) -> Request {
+    let prompt: Vec<i32> = (0..g.prefill_len as u64)
+        .map(|i| ((id * 13 + i) % 26) as i32 + 97)
+        .collect();
+    // pure ingestion: first token from prefill logits, then retire
+    Request::new(id, prompt, 1)
+}
+
+/// One full pass of the mixed workload: seat the chats, let them decode
+/// until half have finished (so slots free up but decoders remain), then
+/// stream the long prompts in while decode continues. Returns the sorted
+/// (id, tokens) streams for the bit-identity gate.
+fn run_pass(e: &mut Engine<SimExecutor>, g: &Geom, pass: u64) -> Vec<(u64, Vec<i32>)> {
+    let base = pass * 1_000_000;
+    let fin_base = e.metrics.requests_finished;
+    for c in 0..g.n_chat {
+        e.submit(chat_req(base + c as u64, c, g));
+    }
+    let mut guard = 0usize;
+    while e.metrics.requests_finished < fin_base + (g.n_chat / 2) as u64 {
+        e.tick().expect("tick");
+        guard += 1;
+        assert!(guard < 1_000_000, "chat sessions never finished");
+    }
+    for l in 0..g.n_long as u64 {
+        e.submit(long_req(base + 1000 + l, g));
+        for _ in 0..g.arrival_gap {
+            e.tick().expect("tick");
+        }
+    }
+    e.run_to_completion().expect("pass must drain");
+    let mut out: Vec<(u64, Vec<i32>)> = e
+        .take_finished()
+        .into_iter()
+        .map(|s| (s.request.id % 1_000_000, s.generated))
+        .collect();
+    out.sort();
+    out
+}
+
+/// Wrap per-pass wall times in a [`BenchResult`] for the JSON report,
+/// using the same quantile indexing as `util::bench::bench` so the
+/// published p50/p95 fields mean the same thing in every BENCH file.
+fn result_from(name: &str, walls: &[Duration]) -> BenchResult {
+    let mut sorted = walls.to_vec();
+    sorted.sort_unstable();
+    let n = sorted.len();
+    let sum: Duration = sorted.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean: sum / n as u32,
+        p50: sorted[n / 2],
+        p95: sorted[((n as f64 * 0.95) as usize).min(n - 1)],
+        min: sorted[0],
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let g = if smoke {
+        Geom {
+            prefill_len: 512,
+            d_head: 32,
+            batch: 4,
+            page_tokens: 16,
+            chunk_tokens: 32,
+            n_chat: 3,
+            chat_gen_base: 24,
+            n_long: 6,
+            arrival_gap: 4,
+            timed_passes: 1,
+        }
+    } else {
+        Geom {
+            prefill_len: 1024,
+            d_head: 64,
+            batch: 4,
+            page_tokens: 16,
+            chunk_tokens: 64,
+            n_chat: 4,
+            chat_gen_base: 40,
+            n_long: 10,
+            arrival_gap: 6,
+            timed_passes: 3,
+        }
+    };
+    // planned decode tokens per pass (EOS may end a stream early; the
+    // figure is the throughput denominator, identical across modes)
+    let tokens_per_pass: f64 = (0..g.n_chat).map(|c| (g.chat_gen_base + 8 * c) as f64).sum();
+    println!(
+        "== serving latency: {} chat sessions (gen {}..) + {} long prompts of {} tokens, \
+         chunks of {} ==",
+        g.n_chat,
+        g.chat_gen_base,
+        g.n_long,
+        g.prefill_len,
+        g.chunk_tokens
+    );
+
+    // correctness gate before any timing: chunked and monolithic must
+    // generate identical token streams for the whole workload
+    let mut mono = mk_engine(&g, false);
+    let mut chunked = mk_engine(&g, true);
+    let mono_tokens = run_pass(&mut mono, &g, 0);
+    let chunked_tokens = run_pass(&mut chunked, &g, 0);
+    assert_eq!(
+        mono_tokens, chunked_tokens,
+        "chunked prefill changed the token streams — bench aborted"
+    );
+    assert!(
+        chunked.metrics.prefill_chunks > 0,
+        "chunked engine ran no chunks — bench is measuring nothing"
+    );
+
+    // timed passes accumulate into each engine's ITL/TTFT histograms
+    let mut mono_walls = Vec::new();
+    let mut chunked_walls = Vec::new();
+    for pass in 0..g.timed_passes as u64 {
+        let t0 = Instant::now();
+        run_pass(&mut mono, &g, 1 + pass);
+        mono_walls.push(t0.elapsed());
+        let t0 = Instant::now();
+        run_pass(&mut chunked, &g, 1 + pass);
+        chunked_walls.push(t0.elapsed());
+    }
+    let r_mono = result_from("mixed workload, monolithic prefill", &mono_walls);
+    let r_chunked = result_from("mixed workload, chunked prefill", &chunked_walls);
+    println!("{}", r_mono.line(Some((tokens_per_pass, "decode-tok"))));
+    println!("{}", r_chunked.line(Some((tokens_per_pass, "decode-tok"))));
+
+    let us = |d: Duration| d.as_secs_f64() * 1e6;
+    let mono_m = &mono.metrics;
+    let chunk_m = &chunked.metrics;
+    let mono_p99 = us(mono_m.itl.quantile(0.99)).max(1.0);
+    let chunk_p99 = us(chunk_m.itl.quantile(0.99)).max(1.0);
+    let mono_p95 = us(mono_m.itl.quantile(0.95)).max(1.0);
+    let chunk_p95 = us(chunk_m.itl.quantile(0.95)).max(1.0);
+    let p99_improvement = mono_p99 / chunk_p99;
+
+    let mut rep = JsonReport::new();
+    rep.summary("smoke", if smoke { 1.0 } else { 0.0 });
+    rep.summary("long_prompt_tokens", g.prefill_len);
+    rep.summary("chunk_tokens", g.chunk_tokens);
+    rep.summary("tick_token_budget", g.batch + g.chunk_tokens);
+    rep.summary("n_chat", g.n_chat);
+    rep.summary("n_long", g.n_long);
+    rep.summary("chat_gen_base", g.chat_gen_base);
+    rep.push(
+        &r_mono,
+        tokens_per_pass,
+        "decode-tok",
+        &[("op", "serve_pass".into()), ("mode", "monolithic".into())],
+    );
+    rep.push(
+        &r_chunked,
+        tokens_per_pass,
+        "decode-tok",
+        &[("op", "serve_pass".into()), ("mode", "chunked".into())],
+    );
+    rep.summary("mono_itl_p50_us", us(mono_m.itl.quantile(0.5)));
+    rep.summary("mono_itl_p95_us", mono_p95);
+    rep.summary("mono_itl_p99_us", mono_p99);
+    rep.summary("chunked_itl_p50_us", us(chunk_m.itl.quantile(0.5)));
+    rep.summary("chunked_itl_p95_us", chunk_p95);
+    rep.summary("chunked_itl_p99_us", chunk_p99);
+    rep.summary("mono_ttft_p50_us", us(mono_m.ttft.quantile(0.5)));
+    rep.summary("mono_ttft_p99_us", us(mono_m.ttft.quantile(0.99)));
+    rep.summary("chunked_ttft_p50_us", us(chunk_m.ttft.quantile(0.5)));
+    rep.summary("chunked_ttft_p99_us", us(chunk_m.ttft.quantile(0.99)));
+    rep.summary("mono_tok_per_s", r_mono.throughput(tokens_per_pass));
+    rep.summary("chunked_tok_per_s", r_chunked.throughput(tokens_per_pass));
+    // headline: how much the decode tail flattens under chunking
+    rep.summary("p99_itl_improvement", p99_improvement);
+    rep.summary("p95_itl_improvement", mono_p95 / chunk_p95);
+
+    println!(
+        "\np99_itl_improvement: {p99_improvement:.2}x (monolithic p99 {mono_p99:.0}µs -> \
+         chunked p99 {chunk_p99:.0}µs; p95 {mono_p95:.0}µs -> {chunk_p95:.0}µs)\n\
+         ttft p50: monolithic {:.0}µs vs chunked {:.0}µs ({} itl samples / mode)",
+        us(mono_m.ttft.quantile(0.5)),
+        us(chunk_m.ttft.quantile(0.5)),
+        mono_m.itl.count().min(chunk_m.itl.count()),
+    );
+    // acceptance criterion: chunking must flatten the ITL tail on the
+    // mixed workload
+    assert!(
+        p99_improvement > 1.0,
+        "p99_itl_improvement {p99_improvement:.3} must exceed 1 on the mixed workload"
+    );
+    rep.write(OUT_JSON).expect("write bench json");
+    println!("wrote {OUT_JSON}");
+}

@@ -19,7 +19,7 @@ use std::net::{TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 use turboangle::coordinator::server::serve_on;
 use turboangle::coordinator::{
-    BatchPolicy, Engine, EngineConfig, EngineCore, ReadPath, RoutePolicy, SchedulerPolicy,
+    BatchPolicy, Engine, EngineConfig, EngineCore, RoutePolicy,
 };
 use turboangle::quant::{Mode, NormMode, QuantConfig};
 use turboangle::runtime::{Entry, Manifest, ModelExecutor, Runtime, SimExecutor};
@@ -32,16 +32,13 @@ fn sim_engines(replicas: usize) -> Vec<Box<dyn EngineCore>> {
             Box::new(Engine::new(
                 SimExecutor::new(7),
                 EngineConfig {
-                    quant: QuantConfig::paper_uniform(2).with_k8v4_log(),
                     batch_policy: BatchPolicy {
                         min_batch: 1,
                         max_wait: Duration::ZERO,
                     },
-                    scheduler: SchedulerPolicy::default(),
                     capacity_pages: 1024,
                     page_tokens: 8,
-                    read_path: ReadPath::Auto,
-                    prefix_cache: false,
+                    ..EngineConfig::new(QuantConfig::paper_uniform(2).with_k8v4_log())
                 },
             )) as Box<dyn EngineCore>
         })
@@ -119,13 +116,8 @@ fn artifact_section(smoke: bool) -> anyhow::Result<()> {
         let mut engine = Engine::new(
             exec,
             EngineConfig {
-                quant,
                 batch_policy: policy,
-                scheduler: SchedulerPolicy::default(),
-                capacity_pages: 4096,
-                page_tokens: 16,
-                read_path: ReadPath::Auto,
-                prefix_cache: false,
+                ..EngineConfig::new(quant)
             },
         );
         let spec = WorkloadSpec {

@@ -10,6 +10,7 @@ use super::session::Request;
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
+/// When to form a prefill batch from the waiting queue.
 #[derive(Clone, Debug)]
 pub struct BatchPolicy {
     /// run a prefill as soon as this many requests wait (≤ engine batch)
@@ -27,9 +28,12 @@ impl Default for BatchPolicy {
     }
 }
 
+/// Lifetime counters of one batcher's admission decisions.
 #[derive(Debug, Default)]
 pub struct BatcherStats {
+    /// requests submitted to the queue
     pub submitted: u64,
+    /// requests admitted into a prefill batch
     pub admitted: u64,
     /// head-of-line deferrals: the pool cannot admit the head *right now*
     pub rejected_cache: u64,
@@ -52,17 +56,23 @@ pub enum Admission {
 /// Result of one batch-formation pass.
 #[derive(Debug, Default)]
 pub struct TakenBatch {
+    /// requests popped for seating, FIFO order preserved
     pub admitted: Vec<Request>,
+    /// requests popped for terminal `CacheFull` finishing
     pub rejected: Vec<Request>,
 }
 
+/// The admission queue plus its batch-formation policy (see module docs).
 pub struct DynamicBatcher {
+    /// When prefills fire and which requests join them.
     pub policy: BatchPolicy,
     queue: VecDeque<Request>,
+    /// Lifetime admission counters.
     pub stats: BatcherStats,
 }
 
 impl DynamicBatcher {
+    /// An empty queue under `policy`.
     pub fn new(policy: BatchPolicy) -> Self {
         DynamicBatcher {
             policy,
@@ -71,11 +81,13 @@ impl DynamicBatcher {
         }
     }
 
+    /// Enqueue a request (FIFO).
     pub fn submit(&mut self, req: Request) {
         self.stats.submitted += 1;
         self.queue.push_back(req);
     }
 
+    /// Requests waiting in the queue.
     pub fn pending(&self) -> usize {
         self.queue.len()
     }

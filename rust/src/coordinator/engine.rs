@@ -1,6 +1,6 @@
 //! The serving engine: continuous batching over a compressed KV cache.
 //!
-//! One tick = one scheduler action:
+//! One tick = one scheduler action (monolithic mode):
 //!   * Prefill — batcher-formed prompt batch → prefill HLO → compressed
 //!     entries packed into the kv_manager, sessions seated in slots.
 //!   * Decode — active slots' caches reinflated (norm dequant + angle
@@ -12,6 +12,20 @@
 //!     verbatim into the kv_manager's swap pool and the session joins the
 //!     preemption queue. Re-admission restores the stream bit-identically,
 //!     so generation resumes exactly where it left off.
+//!
+//! With **chunked prefill** on ([`EngineConfig::chunked_prefill`], CLI
+//! `--chunked-prefill on`), monolithic prefill ticks are replaced by a
+//! per-tick token-budget planner: every tick packs the decode lanes first
+//! (each costs one budget token), then fills the remaining
+//! [`EngineConfig::tick_token_budget`] with prefill chunks of at most
+//! [`EngineConfig::chunk_tokens`] tokens, granted FIFO by request arrival.
+//! A long prompt therefore never stalls in-flight decoders for a whole
+//! prefill — the stall is bounded by one chunk — while every appended
+//! chunk is bit-identical to what one-shot prefill would have produced
+//! (the `run_prefill_chunk` backend contract), so token streams with
+//! chunking on and off are equal. Sessions carry a `prefill_cursor`;
+//! prefix-cache adoption starts the cursor past the adopted pages, and
+//! half-prefilled sessions can be preempted and resumed mid-prompt.
 //!
 //! The engine is generic over [`ModelBackend`], so the same tick loop runs
 //! against PJRT-compiled HLOs in production and the deterministic
@@ -31,7 +45,9 @@ use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
 
+/// Padding token id for unused prefill positions (matches the L2 protocol).
 pub const PAD: i32 = 258;
+/// End-of-sequence token id (matches the L2 protocol).
 pub const EOS: i32 = 257;
 
 /// The object-safe engine surface a serving replica exposes: submit work,
@@ -49,6 +65,7 @@ pub trait EngineCore: Send {
     /// Drain finished sessions accumulated since the last call.
     fn take_finished(&mut self) -> Vec<Session>;
 
+    /// Snapshot of the replica's cache memory accounting.
     fn memory_stats(&self) -> MemoryStats;
 
     /// Replica depth gauge: queued + active + preempted sessions. The TCP
@@ -58,6 +75,7 @@ pub trait EngineCore: Send {
     /// rather than in-flight request count.
     fn load(&self) -> usize;
 
+    /// Whether any queued, seated, or preempted work remains.
     fn has_work(&self) -> bool {
         self.load() > 0
     }
@@ -80,12 +98,20 @@ pub enum ReadPath {
     Reinflate,
 }
 
+/// Everything an [`Engine`] needs besides its backend. Build one with
+/// [`EngineConfig::new`] and override fields (functional-update syntax
+/// works: `EngineConfig { page_tokens: 8, ..EngineConfig::new(quant) }`).
 pub struct EngineConfig {
+    /// Quantizer configuration shared by the backend and the kv_manager.
     pub quant: QuantConfig,
+    /// When prefills fire and which requests join them.
     pub batch_policy: BatchPolicy,
+    /// Monolithic prefill/decode interleave policy (ignored with
+    /// [`Self::chunked_prefill`] on — the token budget replaces it).
     pub scheduler: SchedulerPolicy,
     /// kv pool capacity in pages of `page_tokens`
     pub capacity_pages: usize,
+    /// Tokens per kv page — the paging/sharing/tile granularity.
     pub page_tokens: usize,
     /// decode read path (fused tiles vs dense reinflation)
     pub read_path: ReadPath,
@@ -94,15 +120,66 @@ pub struct EngineConfig {
     /// Token streams are bit-identical either way — the cache only skips
     /// recomputing KV entries that deterministic prefill would reproduce.
     pub prefix_cache: bool,
+    /// Split prompt ingestion into fixed token-budget chunks so every tick
+    /// interleaves prefill chunks with decode steps (CLI
+    /// `--chunked-prefill on|off`). Token streams are bit-identical to
+    /// monolithic prefill; only tail latency changes.
+    pub chunked_prefill: bool,
+    /// Tokens per prefill chunk per session per tick (chunked mode; must
+    /// be >= 1; CLI `--chunk-tokens N`). Smaller chunks bound the decode
+    /// stall tighter at more per-chunk overhead.
+    pub chunk_tokens: usize,
+    /// Per-tick token budget (chunked mode; must be >= 1; CLI
+    /// `--tick-token-budget N`): each decode lane costs 1 token, the
+    /// remainder is granted to prefill chunks FIFO by arrival. Budgets
+    /// below `batch + chunk_tokens` throttle prefill while the engine is
+    /// decode-saturated (the work still completes as decoders finish).
+    pub tick_token_budget: usize,
 }
 
+impl EngineConfig {
+    /// Baseline config for `quant`: default batch/scheduler policies, a
+    /// 4096-page pool of 16-token pages, automatic read-path resolution,
+    /// prefix cache off, and chunked prefill off (chunk 16 / budget 64
+    /// once enabled).
+    pub fn new(quant: QuantConfig) -> Self {
+        EngineConfig {
+            quant,
+            batch_policy: BatchPolicy::default(),
+            scheduler: SchedulerPolicy::default(),
+            capacity_pages: 4096,
+            page_tokens: 16,
+            read_path: ReadPath::default(),
+            prefix_cache: false,
+            chunked_prefill: false,
+            chunk_tokens: 16,
+            tick_token_budget: 64,
+        }
+    }
+}
+
+/// The serving engine for one replica: slots, compressed cache, batcher,
+/// and the tick loop. See the module docs for the tick state machine.
 pub struct Engine<B: ModelBackend = ModelExecutor> {
+    /// The model backend (PJRT executor or the deterministic sim).
     pub exec: B,
+    /// The compressed paged KV cache (pool, swap store, shared pages).
     pub kv: PagedKvCache,
+    /// Admission queue + batch-formation policy.
     pub batcher: DynamicBatcher,
+    /// Monolithic prefill/decode interleave policy.
     pub scheduler: SchedulerPolicy,
+    /// Serving counters and latency histograms.
     pub metrics: EngineMetrics,
+    /// Quantizer configuration handed to every backend call.
     pub quant: QuantConfig,
+    /// chunked-prefill mode: replace monolithic prefill ticks with the
+    /// token-budget planner (see module docs)
+    chunked: bool,
+    /// tokens per prefill chunk per session per tick (chunked mode)
+    chunk_tokens: usize,
+    /// per-tick token budget: decode lanes first, then prefill chunks
+    tick_budget: usize,
     slots: Vec<Option<Session>>,
     /// Sessions evicted under memory pressure, FIFO. Their compressed
     /// caches live in the kv_manager swap pool until re-admission.
@@ -125,16 +202,32 @@ pub struct Engine<B: ModelBackend = ModelExecutor> {
     /// tokens already reinflated into the dense buffers, per slot — the
     /// incremental fill keeps per-step coordinator cost O(1) in seq length
     slot_filled: Vec<usize>,
-    /// whether the slot's session has survived >= 1 decode step since it
-    /// was (re)seated — the anti-thrash gate: only such sessions are
-    /// eviction candidates, so admission churn cannot starve token
-    /// progress (every preemption cycle advances its victim first)
+    /// whether the slot's session has made progress (>= 1 decode step, or
+    /// >= 1 appended prefill chunk in chunked mode) since it was
+    /// (re)seated — the anti-thrash gate: only such sessions are eviction
+    /// candidates, so admission churn cannot starve progress (every
+    /// preemption cycle advances its victim first). Chunk progress counts
+    /// so half-prefilled sessions stay preemptible under pressure.
     slot_decoded: Vec<bool>,
     finished: Vec<Session>,
 }
 
 impl<B: ModelBackend> Engine<B> {
+    /// Build an engine around `exec`. Panics on inconsistent configs
+    /// (`ReadPath::Fused` without backend support, a zero chunk size or
+    /// tick budget with chunked prefill on) — the CLI validates the same
+    /// conditions earlier with actionable errors.
     pub fn new(exec: B, cfg: EngineConfig) -> Self {
+        if cfg.chunked_prefill {
+            assert!(
+                cfg.chunk_tokens >= 1,
+                "chunked prefill requires chunk_tokens >= 1"
+            );
+            assert!(
+                cfg.tick_token_budget >= 1,
+                "chunked prefill requires tick_token_budget >= 1"
+            );
+        }
         let (l, b, h, tmax, half) = exec.cache_dims();
         let fused = match cfg.read_path {
             ReadPath::Reinflate => false,
@@ -166,6 +259,9 @@ impl<B: ModelBackend> Engine<B> {
             scheduler: cfg.scheduler,
             metrics: EngineMetrics::default(),
             quant: cfg.quant,
+            chunked: cfg.chunked_prefill,
+            chunk_tokens: cfg.chunk_tokens,
+            tick_budget: cfg.tick_token_budget,
             slots: (0..b).map(|_| None).collect(),
             preempted: VecDeque::new(),
             prefix: cfg.prefix_cache.then(|| PrefixCache::new(cfg.page_tokens)),
@@ -186,6 +282,21 @@ impl<B: ModelBackend> Engine<B> {
         self.fused
     }
 
+    /// Whether chunked prefill (the token-budget tick planner) is on.
+    pub fn is_chunked(&self) -> bool {
+        self.chunked
+    }
+
+    /// Seated sessions still mid-prefill (always 0 in monolithic mode) —
+    /// observability for tests and schedulers.
+    pub fn prefilling_sessions(&self) -> usize {
+        self.slots
+            .iter()
+            .flatten()
+            .filter(|s| !s.decode_ready())
+            .count()
+    }
+
     /// Whether the prompt-prefix cache is enabled.
     pub fn prefix_cache_enabled(&self) -> bool {
         self.prefix.is_some()
@@ -202,6 +313,8 @@ impl<B: ModelBackend> Engine<B> {
         (self.kr.len() + self.ki.len() + self.vr.len() + self.vi.len()) * 4
     }
 
+    /// Enqueue a request (may finish it immediately with `CacheFull` when
+    /// it can never fit the page pool).
     pub fn submit(&mut self, req: Request) {
         self.metrics.requests_submitted += 1;
         let tp = self.exec.serve().prefill_len;
@@ -257,6 +370,27 @@ impl<B: ModelBackend> Engine<B> {
         Ok(())
     }
 
+    /// The single admission-side registration for one seated sequence —
+    /// shared by monolithic and chunked seating so their kv creation and
+    /// prefix accounting can never drift: create the kv sequence adopting
+    /// `shared` prefix pages, record the hit/miss/reuse counters, and
+    /// return the adopted token count.
+    fn admit_seq(&mut self, id: u64, expected: usize, shared: &[PageId]) -> Result<usize> {
+        let shared_tokens = shared.len() * self.kv.page_tokens();
+        self.kv.new_seq_with_prefix(id, expected, shared)?;
+        if self.prefix.is_some() {
+            if shared.is_empty() {
+                self.metrics.prefix_misses += 1;
+            } else {
+                self.metrics.prefix_hits += 1;
+                self.metrics.prefix_tokens_reused += shared_tokens as u64;
+                self.metrics.prefix_pages_adopted += shared.len() as u64;
+            }
+        }
+        self.metrics.prefill_sequences += 1;
+        Ok(shared_tokens)
+    }
+
     /// The single retire path: every finished session — rejected, done at
     /// prefill, or done at decode — goes through here so the finish-side
     /// counters and histograms cannot drift apart. Callers free the kv
@@ -269,10 +403,12 @@ impl<B: ModelBackend> Engine<B> {
         self.finished.push(sess);
     }
 
+    /// Seated sessions (decoding or mid-prefill).
     pub fn active_sessions(&self) -> usize {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
 
+    /// Queued, seated, or preempted work remains.
     pub fn has_work(&self) -> bool {
         self.batcher.pending() > 0 || self.active_sessions() > 0 || !self.preempted.is_empty()
     }
@@ -282,6 +418,7 @@ impl<B: ModelBackend> Engine<B> {
         std::mem::take(&mut self.finished)
     }
 
+    /// Snapshot of the cache's memory accounting.
     pub fn memory_stats(&self) -> MemoryStats {
         self.kv.memory_stats()
     }
@@ -289,6 +426,9 @@ impl<B: ModelBackend> Engine<B> {
     /// One scheduler tick. Returns the action taken.
     pub fn tick(&mut self) -> Result<Action> {
         self.try_readmit()?;
+        if self.chunked {
+            return self.tick_chunked();
+        }
         let action = next_action(
             &self.scheduler,
             &self.batcher,
@@ -309,7 +449,8 @@ impl<B: ModelBackend> Engine<B> {
                 return Ok(took);
             }
             Action::Decode => self.run_decode()?,
-            Action::Preempt | Action::Idle => {}
+            // next_action never returns Preempt or Mixed; Idle is a no-op
+            Action::Preempt | Action::Mixed | Action::Idle => {}
         }
         Ok(action)
     }
@@ -318,6 +459,162 @@ impl<B: ModelBackend> Engine<B> {
     pub fn run_to_completion(&mut self) -> Result<()> {
         while self.has_work() {
             self.tick()?;
+        }
+        Ok(())
+    }
+
+    /// One chunked-mode tick: (1) seat pending requests into free slots —
+    /// same admission/eviction logic as monolithic mode, but seating does
+    /// no model work; (2) pack the decode lanes (1 budget token each) and
+    /// grant the remaining budget to mid-prefill sessions as chunks of at
+    /// most `chunk_tokens`, FIFO by request arrival — decode runs every
+    /// tick it has a lane, so a stream of long prompts can never starve an
+    /// in-flight decoder; (3) execute the decode step, then the granted
+    /// chunks in one backend call. A session whose chunk completes its
+    /// prompt samples its first token from that call's logits and becomes
+    /// a decode lane next tick.
+    ///
+    /// Action reporting: a chunked tick that both evicted AND did decode
+    /// or chunk work reports the work ([`Action::Mixed`] / `Prefill` /
+    /// `Decode`); [`Action::Preempt`] is returned only when eviction was
+    /// the tick's sole effect. `EngineMetrics::preemptions` is the
+    /// authoritative eviction count either way.
+    fn tick_chunked(&mut self) -> Result<Action> {
+        let mut admitted = false;
+        let mut evicted = false;
+        let free = self.slots.len() - self.active_sessions();
+        if free > 0 && self.batcher.should_prefill(free, Instant::now()) {
+            match self.run_prefill()? {
+                Action::Prefill => admitted = true,
+                Action::Preempt => evicted = true,
+                _ => {}
+            }
+        }
+        let decode_lanes = self
+            .slots
+            .iter()
+            .flatten()
+            .filter(|s| s.decode_ready())
+            .count();
+        // FIFO-fair chunk grants: oldest arrival first, at most one chunk
+        // per session per tick, within what the budget has left after the
+        // decode lanes. A fully-adopted prompt (prefix-cache hit covering
+        // everything) still needs one zero-token grant for its first-token
+        // logits; it is charged one budget token.
+        let mut pref: Vec<(Instant, u64, usize)> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| {
+                s.as_ref().and_then(|sess| {
+                    (!sess.decode_ready()).then_some((sess.request.arrival, sess.request.id, i))
+                })
+            })
+            .collect();
+        pref.sort();
+        let mut budget = self.tick_budget.saturating_sub(decode_lanes);
+        let mut grants: Vec<(usize, usize)> = Vec::new();
+        for &(_, _, slot) in &pref {
+            if budget == 0 {
+                break;
+            }
+            let sess = self.slots[slot].as_ref().expect("prefilling slot is seated");
+            let want = (sess.prompt_len - sess.prefill_cursor)
+                .min(self.chunk_tokens)
+                .min(budget);
+            budget -= want.max(1).min(budget);
+            grants.push((slot, want));
+        }
+        if decode_lanes > 0 {
+            self.run_decode()?;
+        }
+        let chunked_work = !grants.is_empty();
+        if chunked_work {
+            self.run_prefill_chunks(&grants)?;
+        }
+        Ok(match (admitted || chunked_work, decode_lanes > 0) {
+            (true, true) => Action::Mixed,
+            (true, false) => Action::Prefill,
+            (false, true) => Action::Decode,
+            (false, false) => {
+                if evicted {
+                    Action::Preempt
+                } else {
+                    Action::Idle
+                }
+            }
+        })
+    }
+
+    /// Execute one tick's granted prefill chunks in a single backend call
+    /// and append each chunk's compressed KV (positions `cursor ..
+    /// cursor + want` of each granted slot's prompt). Chunk lanes are
+    /// indexed by SLOT — unlike monolithic `seat_prefill`, which packs
+    /// admitted requests densely — so a batch mixing decode-ready and
+    /// mid-prefill sessions addresses the output slabs without remapping.
+    fn run_prefill_chunks(&mut self, grants: &[(usize, usize)]) -> Result<()> {
+        let tp = self.exec.serve().prefill_len;
+        let tmax = self.exec.serve().tmax;
+        let b_total = self.slots.len();
+        let mut tokens = vec![PAD; b_total * tp];
+        let mut lengths = vec![1i32; b_total]; // idle lanes: dummy len 1
+        let mut starts = vec![0usize; b_total];
+        let mut lens = vec![0usize; b_total];
+        for &(slot, want) in grants {
+            let sess = self.slots[slot].as_ref().expect("granted slot is seated");
+            let plen = sess.prompt_len;
+            tokens[slot * tp..slot * tp + plen].copy_from_slice(&sess.request.prompt[..plen]);
+            lengths[slot] = plen as i32;
+            starts[slot] = sess.prefill_cursor;
+            lens[slot] = want;
+        }
+        let out = self
+            .exec
+            .run_prefill_chunk(&tokens, &lengths, &starts, &lens, &self.quant)?;
+        self.metrics.prefill_chunks += grants.len() as u64;
+        let (h_n, half) = (
+            self.exec.profile().n_kv_heads,
+            self.exec.profile().d_head / 2,
+        );
+        let vocab = self.exec.profile().vocab;
+        for &(slot, want) in grants {
+            let (id, c0, plen) = {
+                let sess = self.slots[slot].as_ref().expect("granted slot is seated");
+                (sess.request.id, sess.prefill_cursor, sess.prompt_len)
+            };
+            for t in c0..c0 + want {
+                self.kv.append_token_strided(
+                    id,
+                    &out.kr,
+                    &out.ki,
+                    &out.vr,
+                    &out.vi,
+                    (slot * h_n * tp + t) * half,
+                    b_total * h_n * tp * half,
+                    tp * half,
+                )?;
+                self.kv.commit_token(id)?;
+            }
+            // chunk landed: progress — the session is now preemptible
+            // (resume continues from the cursor, bit-identically)
+            self.slot_decoded[slot] = true;
+            let sess = self.slots[slot].as_mut().expect("granted slot is seated");
+            sess.prefill_cursor += want;
+            if sess.prefill_cursor >= plen && sess.generated.is_empty() {
+                // the chunk that completes the prompt carries full-prompt
+                // logits (the run_prefill_chunk contract): sample the
+                // first token exactly as monolithic prefill would
+                let tok = argmax(&out.logits[slot * vocab..(slot + 1) * vocab]);
+                sess.push_token(tok, EOS, tmax);
+                self.metrics
+                    .ttft
+                    .record(Instant::now().duration_since(sess.request.arrival));
+                if sess.finished.is_some() {
+                    let sess = self.slots[slot].take().expect("granted slot is seated");
+                    self.finish_kv(&sess)?;
+                    self.retire(sess);
+                }
+            }
         }
         Ok(())
     }
@@ -539,17 +836,23 @@ impl<B: ModelBackend> Engine<B> {
         }
     }
 
-    /// Run the prefill HLO for an admitted batch and seat the sessions.
-    /// `matches` carries each request's longest cached prefix from the
-    /// admission pass (always empty with prefix caching off): matched
-    /// pages are adopted — refcounts bumped, zero bytes copied — and only
-    /// the suffix tokens are prefilled and appended.
+    /// Seat an admitted batch. Monolithic mode runs the prefill HLO and
+    /// seats sessions with their first token sampled; chunked mode only
+    /// creates the kv sequences and seats the sessions mid-prefill — the
+    /// tick planner feeds them their prompt in chunks. `matches` carries
+    /// each request's longest cached prefix from the admission pass
+    /// (always empty with prefix caching off): matched pages are adopted —
+    /// refcounts bumped, zero bytes copied — and only the suffix tokens
+    /// are prefilled and appended.
     fn seat_prefill(
         &mut self,
         reqs: Vec<Request>,
         free: &[usize],
         matches: &mut HashMap<u64, Vec<PageId>>,
     ) -> Result<()> {
+        if self.chunked {
+            return self.seat_chunked(reqs, free, matches);
+        }
         let tp = self.exec.serve().prefill_len;
         let tmax = self.exec.serve().tmax;
         let b_total = self.slots.len();
@@ -582,17 +885,7 @@ impl<B: ModelBackend> Engine<B> {
             let plen = req.prompt.len().min(tp);
             let expected = expected_tokens(req.prompt.len(), req.max_new_tokens, tp, tmax);
             let shared = matches.remove(&req.id).unwrap_or_default();
-            let shared_tokens = shared.len() * page_tokens;
-            self.kv.new_seq_with_prefix(req.id, expected, &shared)?;
-            if self.prefix.is_some() {
-                if shared.is_empty() {
-                    self.metrics.prefix_misses += 1;
-                } else {
-                    self.metrics.prefix_hits += 1;
-                    self.metrics.prefix_tokens_reused += shared_tokens as u64;
-                    self.metrics.prefix_pages_adopted += shared.len() as u64;
-                }
-            }
+            let shared_tokens = self.admit_seq(req.id, expected, &shared)?;
             // pack the SUFFIX tokens' compressed entries: positions below
             // `shared_tokens` are already resident in the adopted pages.
             // One strided append per token covers every (layer, head) at
@@ -611,7 +904,6 @@ impl<B: ModelBackend> Engine<B> {
                 )?;
                 self.kv.commit_token(req.id)?;
             }
-            self.metrics.prefill_sequences += 1;
             // first generated token from the prefill logits
             let logits = &out.logits[lane * vocab..(lane + 1) * vocab];
             let tok = argmax(logits);
@@ -635,6 +927,32 @@ impl<B: ModelBackend> Engine<B> {
         Ok(())
     }
 
+    /// Chunked-mode seating: create each request's kv sequence (adopting
+    /// its matched prefix pages, which advances the cursor past them) and
+    /// seat the session mid-prefill. No model work happens here — the
+    /// same tick's planner grants the first chunk.
+    fn seat_chunked(
+        &mut self,
+        reqs: Vec<Request>,
+        free: &[usize],
+        matches: &mut HashMap<u64, Vec<PageId>>,
+    ) -> Result<()> {
+        let tp = self.exec.serve().prefill_len;
+        let tmax = self.exec.serve().tmax;
+        for (lane, req) in reqs.into_iter().enumerate() {
+            let plen = req.prompt.len().min(tp);
+            let expected = expected_tokens(req.prompt.len(), req.max_new_tokens, tp, tmax);
+            let shared = matches.remove(&req.id).unwrap_or_default();
+            let shared_tokens = self.admit_seq(req.id, expected, &shared)?;
+            let sess = Session::new_prefilling(req, plen, shared_tokens.min(plen));
+            let slot = free[lane];
+            self.slot_filled[slot] = 0; // new sequence: full refill needed
+            self.slot_decoded[slot] = false; // evictable once it progresses
+            self.slots[slot] = Some(sess);
+        }
+        Ok(())
+    }
+
     fn run_decode(&mut self) -> Result<()> {
         let b_total = self.slots.len();
         let mut token = vec![0i32; b_total];
@@ -643,8 +961,11 @@ impl<B: ModelBackend> Engine<B> {
         let t_coord = Instant::now();
         for (b, slot) in self.slots.iter().enumerate() {
             if let Some(sess) = slot {
+                if !sess.decode_ready() {
+                    continue; // mid-prefill (chunked): not a decode lane
+                }
                 any = true;
-                token[b] = *sess.generated.last().expect("session has a token");
+                token[b] = *sess.generated.last().expect("decode-ready session has a token");
                 pos[b] = (sess.cache_len() - 1) as i32;
                 // fused path: no dense buffers to keep warm — the backend
                 // reads compressed pages directly during the decode call
@@ -669,10 +990,16 @@ impl<B: ModelBackend> Engine<B> {
         let coord_prep = t_coord.elapsed();
         let t0 = Instant::now();
         let out = if self.fused {
+            // mid-prefill sessions are not decode lanes: mask them out so
+            // the fused reader skips their (partial) caches entirely
             let lanes: Vec<Option<u64>> = self
                 .slots
                 .iter()
-                .map(|s| s.as_ref().map(|sess| sess.request.id))
+                .map(|s| {
+                    s.as_ref()
+                        .filter(|sess| sess.decode_ready())
+                        .map(|sess| sess.request.id)
+                })
                 .collect();
             let mut reader = BatchTileReader {
                 kv: &self.kv,
@@ -701,6 +1028,9 @@ impl<B: ModelBackend> Engine<B> {
             let Some(sess) = self.slots[b].as_mut() else {
                 continue;
             };
+            if !sess.decode_ready() {
+                continue; // mid-prefill lane: the step never touched it
+            }
             self.slot_decoded[b] = true;
             // append the *processed* token's compressed KV across all
             // (layer, head) pairs in one batched call
@@ -716,7 +1046,13 @@ impl<B: ModelBackend> Engine<B> {
             )?;
             self.kv.commit_token(sess.request.id)?;
             let tok = argmax(&out.logits[b * vocab..(b + 1) * vocab]);
+            let prev_token_at = sess.last_token_at;
             sess.push_token(tok, EOS, tmax);
+            if let Some(prev) = prev_token_at {
+                self.metrics
+                    .itl
+                    .record(Instant::now().duration_since(prev));
+            }
             self.metrics.tokens_generated += 1;
             if sess.finished.is_some() {
                 let sess = self.slots[b].take().unwrap();

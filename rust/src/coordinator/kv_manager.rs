@@ -74,6 +74,7 @@ pub struct PagePool {
 }
 
 impl PagePool {
+    /// An empty pool of `capacity_pages` pages of `page_tokens` tokens.
     pub fn new(capacity_pages: usize, page_tokens: usize) -> Self {
         PagePool {
             page_tokens,
@@ -141,14 +142,17 @@ impl PagePool {
         Ok(())
     }
 
+    /// Pages physically held by resident sequences and the shared store.
     pub fn allocated(&self) -> usize {
         self.allocated_pages
     }
 
+    /// Worst-case pages promised at admission (>= allocated).
     pub fn reserved(&self) -> usize {
         self.reserved_pages
     }
 
+    /// Total pool capacity in pages.
     pub fn capacity(&self) -> usize {
         self.capacity_pages
     }
@@ -318,11 +322,20 @@ impl SeqCache {
     }
 }
 
+/// The compressed paged KV cache for one engine replica: per-sequence
+/// page-granular bit-packed streams, the global page pool, the swap store
+/// for preempted sequences, and the content-addressed refcounted shared
+/// store behind prefix caching. See the module docs for the layout.
 pub struct PagedKvCache {
+    /// Quantizer configuration the streams are packed under.
     pub cfg: QuantConfig,
+    /// Model layer count (one chunk row per layer per page).
     pub n_layers: usize,
+    /// KV head count per layer.
     pub n_kv_heads: usize,
+    /// Head dimension (streams store d/2 polar pairs per token).
     pub d_head: usize,
+    /// Maximum tokens per sequence (the serving protocol bound).
     pub tmax: usize,
     pool: PagePool,
     seqs: HashMap<u64, SeqCache>,
@@ -339,26 +352,39 @@ pub struct PagedKvCache {
     next_page_id: PageId,
 }
 
+/// Point-in-time memory accounting of one [`PagedKvCache`].
 #[derive(Clone, Copy, Debug, Default)]
 pub struct MemoryStats {
+    /// resident (non-swapped) sequences
     pub sequences: usize,
+    /// tokens held by resident sequences (shared prefix included)
     pub tokens: usize,
+    /// heap bytes of resident compressed streams (shared pages counted once)
     pub compressed_bytes: usize,
+    /// what the same tokens would occupy as fp16 dense K+V tensors
     pub fp16_reference_bytes: usize,
+    /// pool pages physically held (private + shared)
     pub pages_allocated: usize,
+    /// pool pages promised at admission (>= allocated)
     pub pages_reserved: usize,
+    /// pool capacity in pages
     pub pages_capacity: usize,
+    /// preempted sequences parked in the swap store
     pub swapped_sequences: usize,
+    /// tokens held by swapped sequences
     pub swapped_tokens: usize,
+    /// heap bytes of swapped compressed streams (outside the pool)
     pub swapped_bytes: usize,
     /// immutable pages in the content-addressed shared store
     pub shared_pages: usize,
     /// total sequence references onto shared pages (live + swapped)
     pub shared_refs: usize,
+    /// heap bytes of the shared store's compressed pages
     pub shared_bytes: usize,
 }
 
 impl MemoryStats {
+    /// fp16 reference bytes / compressed bytes (0 when empty).
     pub fn compression_ratio(&self) -> f64 {
         if self.compressed_bytes == 0 {
             return 0.0;
@@ -407,6 +433,9 @@ impl MemoryStats {
 }
 
 impl PagedKvCache {
+    /// An empty cache for the given geometry over a fresh
+    /// `capacity_pages × page_tokens` pool. Panics on an invalid quant
+    /// config (see [`QuantConfig::validate`]).
     pub fn new(
         cfg: QuantConfig,
         n_layers: usize,
@@ -715,6 +744,7 @@ impl PagedKvCache {
         Ok(true)
     }
 
+    /// Whether `id` currently sits in the swap store.
     pub fn is_swapped(&self, id: u64) -> bool {
         self.swapped.contains_key(&id)
     }
@@ -867,6 +897,7 @@ impl PagedKvCache {
         Ok(())
     }
 
+    /// Committed token count of a resident sequence (0 for unknown).
     pub fn seq_len(&self, id: u64) -> usize {
         self.seqs.get(&id).map_or(0, |s| s.len)
     }
@@ -1119,6 +1150,7 @@ impl PagedKvCache {
         Ok(())
     }
 
+    /// Compute a [`MemoryStats`] snapshot (walks every resident stream).
     pub fn memory_stats(&self) -> MemoryStats {
         let mut st = MemoryStats {
             sequences: self.seqs.len(),
@@ -1166,6 +1198,7 @@ pub struct TileScratch {
 }
 
 impl TileScratch {
+    /// Empty scratch; grows to one page on first use.
     pub fn new() -> Self {
         Self::default()
     }
@@ -1191,8 +1224,11 @@ impl TileScratch {
 /// with one shared scratch. Empty lanes visit nothing, matching the dense
 /// path's zero-length scan of an inactive slot.
 pub struct BatchTileReader<'a> {
+    /// The cache whose pages the tiles decode from.
     pub kv: &'a PagedKvCache,
+    /// Per-lane sequence ids (None = idle lane, visits nothing).
     pub lanes: &'a [Option<u64>],
+    /// The one shared page-sized dequant scratch.
     pub scratch: &'a mut TileScratch,
 }
 

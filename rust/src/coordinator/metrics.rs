@@ -1,4 +1,10 @@
 //! Serving metrics: counters + log-bucketed latency histograms.
+//!
+//! The tail-latency accounting lives here: TTFT (time to first token), ITL
+//! (inter-token latency), end-to-end request latency and per-step decode
+//! latency are all [`Histogram`]s with p50/p95/p99 quantiles, surfaced
+//! through [`EngineMetrics::report`] (human), [`EngineMetrics::to_json`]
+//! (the wire `stats` response), and `BENCH_serving_latency.json`.
 
 use std::time::Duration;
 
@@ -11,6 +17,7 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// Record one sample (clamped to >= 1µs).
     pub fn record(&mut self, d: Duration) {
         let us = d.as_micros().max(1) as u64;
         let idx = (63 - us.leading_zeros() as usize).min(24);
@@ -19,10 +26,12 @@ impl Histogram {
         self.sum_us += us;
     }
 
+    /// Number of recorded samples.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Arithmetic mean of the recorded samples (zero when empty).
     pub fn mean(&self) -> Duration {
         if self.count == 0 {
             return Duration::ZERO;
@@ -45,16 +54,41 @@ impl Histogram {
         }
         Duration::from_micros(1 << 25)
     }
+
+    /// `{"count": …, "mean_us": …, "p50_us": …, "p95_us": …, "p99_us": …}` —
+    /// one histogram of the wire `stats` response (units: microseconds).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"count\": {}, \"mean_us\": {}, \"p50_us\": {}, \"p95_us\": {}, \"p99_us\": {}}}",
+            self.count,
+            self.mean().as_micros(),
+            self.quantile(0.5).as_micros(),
+            self.quantile(0.95).as_micros(),
+            self.quantile(0.99).as_micros(),
+        )
+    }
 }
 
+/// Per-engine serving counters and latency histograms. Snapshot-cloned for
+/// `EngineCore::metrics`; the TCP front-end serves it as the `stats` wire
+/// response via [`EngineMetrics::to_json`].
 #[derive(Clone, Debug, Default)]
 pub struct EngineMetrics {
+    /// requests handed to `Engine::submit` (including immediate rejects)
     pub requests_submitted: u64,
+    /// sessions retired (finished, rejected, or cache-capped)
     pub requests_finished: u64,
+    /// decode tokens produced (prefill first-tokens excluded)
     pub tokens_generated: u64,
+    /// monolithic prefill batches executed
     pub prefill_batches: u64,
+    /// sessions seated through a prefill (monolithic or chunked)
     pub prefill_sequences: u64,
+    /// chunked-prefill slices appended (one per session per granted chunk)
+    pub prefill_chunks: u64,
+    /// decode steps executed (one backend call each)
     pub decode_steps: u64,
+    /// decode steps × slot capacity (the denominator of utilization)
     pub decode_slot_steps: u64,
     /// sessions swapped out under memory pressure (compressed-cache evictions)
     pub preemptions: u64,
@@ -74,11 +108,16 @@ pub struct EngineMetrics {
     pub prefix_pages_inserted: u64,
     /// unreferenced cached pages reclaimed under pool pressure
     pub prefix_evictions: u64,
-    /// time-to-first-token
+    /// time-to-first-token (arrival → first token)
     pub ttft: Histogram,
+    /// inter-token latency: the gap between a session's consecutive tokens
+    /// — the tail this PR's chunked prefill exists to flatten (a
+    /// monolithic long-prompt prefill stalls every decoder for a whole
+    /// tick; chunking bounds the stall at one chunk)
+    pub itl: Histogram,
     /// per decode step (whole batch)
     pub decode_step_latency: Histogram,
-    /// request end-to-end
+    /// request end-to-end (arrival → retirement)
     pub e2e: Histogram,
     /// engine-side overhead per decode step (pack/unpack/gather)
     pub coordinator_overhead: Histogram,
@@ -102,22 +141,58 @@ impl EngineMetrics {
         self.prefix_hits as f64 / total as f64
     }
 
+    /// The wire `stats` response body: every counter plus the ttft / itl /
+    /// e2e / decode-step histograms with p50/p95/p99 in microseconds (see
+    /// `docs/BENCH_GLOSSARY.md` for the schema; a request line
+    /// `{"id": N, "stats": true}` returns it).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"requests_submitted\": {}, \"requests_finished\": {}, \
+             \"tokens_generated\": {}, \"prefill_batches\": {}, \
+             \"prefill_sequences\": {}, \"prefill_chunks\": {}, \
+             \"decode_steps\": {}, \"preemptions\": {}, \"swap_ins\": {}, \
+             \"rejected_cache_full\": {}, \"prefix_hits\": {}, \
+             \"prefix_misses\": {}, \"prefix_tokens_reused\": {}, \
+             \"ttft\": {}, \"itl\": {}, \"e2e\": {}, \"decode_step\": {}}}",
+            self.requests_submitted,
+            self.requests_finished,
+            self.tokens_generated,
+            self.prefill_batches,
+            self.prefill_sequences,
+            self.prefill_chunks,
+            self.decode_steps,
+            self.preemptions,
+            self.swap_ins,
+            self.rejected_cache_full,
+            self.prefix_hits,
+            self.prefix_misses,
+            self.prefix_tokens_reused,
+            self.ttft.to_json(),
+            self.itl.to_json(),
+            self.e2e.to_json(),
+            self.decode_step_latency.to_json(),
+        )
+    }
+
+    /// Multi-line human-readable snapshot (CLI `serve`/`listen` epilogue).
     pub fn report(&self) -> String {
         format!(
             "requests: {} submitted, {} finished | tokens: {}\n\
-             prefill: {} batches ({} seqs) | decode: {} steps (util {:.2})\n\
+             prefill: {} batches ({} seqs, {} chunks) | decode: {} steps (util {:.2})\n\
              preempt: {} out / {} in | rejected cache_full: {}\n\
              prefix: {} hits / {} misses ({:.0}%) | {} tok reused | pages {} \
              adopted / {} sealed / {} evicted\n\
-             ttft   p50 {:?} p95 {:?} mean {:?}\n\
-             step   p50 {:?} p95 {:?} mean {:?}\n\
-             e2e    p50 {:?} p95 {:?} mean {:?}\n\
+             ttft   p50 {:?} p95 {:?} p99 {:?} mean {:?}\n\
+             itl    p50 {:?} p95 {:?} p99 {:?} mean {:?}\n\
+             step   p50 {:?} p95 {:?} p99 {:?} mean {:?}\n\
+             e2e    p50 {:?} p95 {:?} p99 {:?} mean {:?}\n\
              coord  p50 {:?} p95 {:?} mean {:?}",
             self.requests_submitted,
             self.requests_finished,
             self.tokens_generated,
             self.prefill_batches,
             self.prefill_sequences,
+            self.prefill_chunks,
             self.decode_steps,
             self.decode_utilization(),
             self.preemptions,
@@ -132,12 +207,19 @@ impl EngineMetrics {
             self.prefix_evictions,
             self.ttft.quantile(0.5),
             self.ttft.quantile(0.95),
+            self.ttft.quantile(0.99),
             self.ttft.mean(),
+            self.itl.quantile(0.5),
+            self.itl.quantile(0.95),
+            self.itl.quantile(0.99),
+            self.itl.mean(),
             self.decode_step_latency.quantile(0.5),
             self.decode_step_latency.quantile(0.95),
+            self.decode_step_latency.quantile(0.99),
             self.decode_step_latency.mean(),
             self.e2e.quantile(0.5),
             self.e2e.quantile(0.95),
+            self.e2e.quantile(0.99),
             self.e2e.mean(),
             self.coordinator_overhead.quantile(0.5),
             self.coordinator_overhead.quantile(0.95),
@@ -157,7 +239,8 @@ mod tests {
             h.record(Duration::from_micros(i * 10));
         }
         assert!(h.quantile(0.5) <= h.quantile(0.95));
-        assert!(h.quantile(0.95) <= h.quantile(1.0));
+        assert!(h.quantile(0.95) <= h.quantile(0.99));
+        assert!(h.quantile(0.99) <= h.quantile(1.0));
         assert_eq!(h.count(), 1000);
     }
 
@@ -174,5 +257,23 @@ mod tests {
         let h = Histogram::default();
         assert_eq!(h.quantile(0.5), Duration::ZERO);
         assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn stats_json_round_trips() {
+        use crate::util::json::Json;
+        let mut m = EngineMetrics {
+            requests_finished: 3,
+            ..Default::default()
+        };
+        m.ttft.record(Duration::from_micros(250));
+        m.itl.record(Duration::from_micros(40));
+        m.itl.record(Duration::from_micros(90));
+        let j = Json::parse(&m.to_json()).expect("stats must be valid JSON");
+        assert_eq!(j.get("requests_finished").unwrap().as_usize().unwrap(), 3);
+        let itl = j.get("itl").unwrap();
+        assert_eq!(itl.get("count").unwrap().as_usize().unwrap(), 2);
+        assert!(itl.get("p99_us").unwrap().as_f64().unwrap() >= 64.0);
+        assert!(j.get("ttft").unwrap().get("p50_us").unwrap().as_f64().unwrap() >= 250.0);
     }
 }

@@ -49,6 +49,8 @@ pub struct PrefixCache {
 }
 
 impl PrefixCache {
+    /// An empty tree at `page_tokens` tokens per node (must match the
+    /// kv_manager's page size).
     pub fn new(page_tokens: usize) -> Self {
         assert!(page_tokens > 0, "page_tokens must be positive");
         PrefixCache {
@@ -61,6 +63,7 @@ impl PrefixCache {
         }
     }
 
+    /// Tokens per tree node (the kv page size).
     pub fn page_tokens(&self) -> usize {
         self.page_tokens
     }
@@ -76,6 +79,7 @@ impl PrefixCache {
         self.cached_tokens
     }
 
+    /// Whether the tree caches nothing.
     pub fn is_empty(&self) -> bool {
         self.pages() == 0
     }
@@ -104,6 +108,15 @@ impl PrefixCache {
     /// The longest cached prefix of `tokens`, in whole pages: the page ids
     /// whose concatenated windows equal `tokens[..k*page_tokens]` for the
     /// largest matchable `k`. Bumps recency along the matched path.
+    ///
+    /// ```
+    /// use turboangle::coordinator::PrefixCache;
+    /// let mut tree = PrefixCache::new(2); // 2 tokens per page
+    /// tree.insert(&[1, 2, 3, 4], &[10, 11]);
+    /// assert_eq!(tree.match_prefix(&[1, 2, 3, 4, 5, 6]), vec![10, 11]);
+    /// assert_eq!(tree.match_prefix(&[1, 2, 9, 9]), vec![10]);
+    /// assert!(tree.match_prefix(&[7, 7]).is_empty());
+    /// ```
     pub fn match_prefix(&mut self, tokens: &[i32]) -> Vec<PageId> {
         self.clock += 1;
         let clock = self.clock;

@@ -8,16 +8,21 @@
 use crate::util::hash::splitmix64;
 use std::collections::BTreeMap;
 
+/// How the dispatcher picks a replica for each request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RoutePolicy {
+    /// cycle through replicas in order
     RoundRobin,
+    /// fewest in-flight requests wins (index breaks ties)
     LeastLoaded,
     /// consistent-hash by session key, falling back to least-loaded
     SessionAffinity,
 }
 
+/// Replica picker + in-flight load tracker (one per server dispatcher).
 #[derive(Debug)]
 pub struct Router {
+    /// The active routing policy.
     pub policy: RoutePolicy,
     loads: Vec<usize>,
     rr_next: usize,
@@ -37,6 +42,7 @@ pub fn hash_session_key(key: &str) -> u64 {
 }
 
 impl Router {
+    /// A router over `replicas` replicas (16 ring points each).
     pub fn new(replicas: usize, policy: RoutePolicy) -> Self {
         let mut ring = BTreeMap::new();
         for r in 0..replicas {
@@ -52,6 +58,7 @@ impl Router {
         }
     }
 
+    /// Number of replicas routed across.
     pub fn replicas(&self) -> usize {
         self.loads.len()
     }
@@ -98,6 +105,7 @@ impl Router {
             .unwrap_or_else(|| self.ring.values().next().unwrap())
     }
 
+    /// Current in-flight request count per replica.
     pub fn loads(&self) -> &[usize] {
         &self.loads
     }

@@ -8,18 +8,31 @@
 use super::batcher::DynamicBatcher;
 use std::time::Instant;
 
+/// What one engine tick did.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Action {
+    /// Prompt work ran: a batch was prefilled and seated (monolithic), or
+    /// sessions were seated / prefill chunks appended (chunked mode) with
+    /// no decode lanes active.
     Prefill,
+    /// A decode step advanced the active sessions.
     Decode,
     /// A prefill tick that evicted active sessions (compressed-cache
     /// swap-out) to make room instead of seating new work. `next_action`
     /// never chooses this directly — the engine reports it when a
     /// `Prefill` tick turned into eviction under memory pressure.
     Preempt,
+    /// A chunked-prefill tick that interleaved BOTH decode lanes and
+    /// prefill chunks under the token budget. Only the engine's chunked
+    /// planner produces this; `next_action` never does.
+    Mixed,
+    /// Nothing to do (or the batcher is waiting out its batching window).
     Idle,
 }
 
+/// Knobs for the monolithic prefill/decode interleave decision. The
+/// chunked-prefill planner (`EngineConfig::chunked_prefill`) replaces this
+/// whole tradeoff with a per-tick token budget and ignores these knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct SchedulerPolicy {
     /// prefer decode unless at least this fraction of slots are free
@@ -34,6 +47,9 @@ impl Default for SchedulerPolicy {
     }
 }
 
+/// Decide the next monolithic tick action from observable state:
+/// decode-priority with a prefill admission gate at
+/// [`SchedulerPolicy::prefill_free_frac`] free slots.
 pub fn next_action(
     policy: &SchedulerPolicy,
     batcher: &DynamicBatcher,

@@ -6,6 +6,17 @@
 //!   ← {"id": 1, "text": "...", "tokens": [ ... ], "prompt_tokens": 13,
 //!      "replica": 0, "finish": "length"}
 //!
+//! A line `{"id": N, "stats": true}` is a metrics query instead of a
+//! generation request: the router picks one replica (least-loaded) and the
+//! response carries that replica's [`EngineMetrics::to_json`] snapshot —
+//! counters plus ttft/itl/e2e/decode-step histograms with p50/p95/p99 in
+//! microseconds (schema in `docs/BENCH_GLOSSARY.md`):
+//!
+//!   ← {"id": N, "replica": 0, "stats": {"requests_finished": …,
+//!      "itl": {"count": …, "p99_us": …}, …}}
+//!
+//! Stats responses do not count toward `max_requests`.
+//!
 //! Topology:
 //!
 //!   conns ──(reader threads)──► ingest ──► dispatcher ──► per-replica
@@ -47,16 +58,30 @@ const IDLE_WAIT: Duration = Duration::from_millis(25);
 /// A parsed wire request.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WireRequest {
+    /// Client-chosen id, echoed verbatim on the response line.
     pub id: u64,
+    /// Prompt text (byte-level tokens; empty for stats queries).
     pub prompt: String,
+    /// Generation budget (wire default 16; 0 for stats queries).
     pub max_new_tokens: usize,
     /// Optional routing affinity key (`"session_key"`: string or number).
     pub session_key: Option<u64>,
+    /// `{"stats": true}`: a metrics query, not a generation request.
+    pub stats: bool,
 }
 
 /// Parse one request line.
 pub fn parse_request(line: &str) -> Result<WireRequest> {
     let j = Json::parse(line)?;
+    if matches!(j.opt("stats"), Some(Json::Bool(true))) {
+        return Ok(WireRequest {
+            id: j.get("id")?.as_u64()?,
+            prompt: String::new(),
+            max_new_tokens: 0,
+            session_key: None,
+            stats: true,
+        });
+    }
     let session_key = match j.opt("session_key") {
         None => None,
         Some(v) => Some(match v.as_u64() {
@@ -73,6 +98,7 @@ pub fn parse_request(line: &str) -> Result<WireRequest> {
             .transpose()?
             .unwrap_or(16),
         session_key,
+        stats: false,
     })
 }
 
@@ -122,6 +148,15 @@ pub fn format_response(
     )
 }
 
+/// Format one stats response line (no trailing newline): the queried
+/// replica's metrics snapshot as JSON.
+pub fn format_stats_response(id: u64, replica: usize, m: &EngineMetrics) -> String {
+    format!(
+        "{{\"id\": {id}, \"replica\": {replica}, \"stats\": {}}}",
+        m.to_json()
+    )
+}
+
 /// One line headed for a connection's writer thread. `counts` marks real
 /// responses (not error lines): the WRITER increments the served counter
 /// after pushing the bytes to the socket, so a bounded serve cannot
@@ -135,15 +170,25 @@ struct ConnLine {
 type Ingest = (WireRequest, mpsc::Sender<ConnLine>);
 
 /// What the dispatcher hands a replica worker.
-struct ReplicaJob {
-    req: Request,
-    wire_id: u64,
-    conn: mpsc::Sender<ConnLine>,
+enum ReplicaJob {
+    /// A generation request headed for the engine.
+    Gen {
+        req: Request,
+        wire_id: u64,
+        conn: mpsc::Sender<ConnLine>,
+    },
+    /// A metrics query: the worker answers immediately from its engine's
+    /// snapshot, without touching the tick loop.
+    Stats {
+        wire_id: u64,
+        conn: mpsc::Sender<ConnLine>,
+    },
 }
 
 /// Aggregate result of one `serve` run.
 #[derive(Debug)]
 pub struct ServeSummary {
+    /// Generation responses delivered (stats responses excluded).
     pub served: usize,
     /// Final metrics snapshot per replica, index-aligned with the engines.
     pub replicas: Vec<EngineMetrics>,
@@ -237,13 +282,26 @@ pub fn serve_on(
         }
         match ingest_rx.recv_timeout(IDLE_WAIT) {
             Ok((wire, conn)) => {
+                if wire.stats {
+                    // metrics query: route like a (keyless) request so
+                    // repeated queries sample the replicas
+                    let replica = router.lock().unwrap().route(None);
+                    let job = ReplicaJob::Stats {
+                        wire_id: wire.id,
+                        conn,
+                    };
+                    if replica_txs[replica].send(job).is_err() {
+                        break; // worker died; surface its error below
+                    }
+                    continue;
+                }
                 let prompt: Vec<i32> = wire.prompt.bytes().map(|b| b as i32).collect();
                 let id = next_id;
                 next_id += 1;
                 let mut req = Request::new(id, prompt, wire.max_new_tokens);
                 req.session_key = wire.session_key;
                 let replica = router.lock().unwrap().route(wire.session_key);
-                let job = ReplicaJob {
+                let job = ReplicaJob::Gen {
                     req,
                     wire_id: wire.id,
                     conn,
@@ -284,16 +342,35 @@ fn replica_worker(
     router: Arc<Mutex<Router>>,
     served: Arc<AtomicUsize>,
 ) -> Result<EngineMetrics> {
-    let mut pending: HashMap<u64, (u64, mpsc::Sender<String>)> = HashMap::new();
+    let mut pending: HashMap<u64, (u64, mpsc::Sender<ConnLine>)> = HashMap::new();
+    // ingest one routed job: generation requests enter the engine; stats
+    // queries answer immediately from the metrics snapshot
+    fn take_job(
+        job: ReplicaJob,
+        idx: usize,
+        engine: &mut dyn EngineCore,
+        pending: &mut HashMap<u64, (u64, mpsc::Sender<ConnLine>)>,
+        router: &Mutex<Router>,
+    ) {
+        match job {
+            ReplicaJob::Gen { req, wire_id, conn } => {
+                pending.insert(req.id, (wire_id, conn));
+                engine.submit(req);
+            }
+            ReplicaJob::Stats { wire_id, conn } => {
+                let line = format_stats_response(wire_id, idx, &engine.metrics());
+                // stats lines never count toward a bounded serve
+                let _ = conn.send(ConnLine { line, counts: false });
+                router.lock().unwrap().complete(idx);
+            }
+        }
+    }
     let mut open = true;
     while open || engine.has_work() {
         // drain whatever the dispatcher routed here
         loop {
             match rx.try_recv() {
-                Ok(job) => {
-                    pending.insert(job.req.id, (job.wire_id, job.conn));
-                    engine.submit(job.req);
-                }
+                Ok(job) => take_job(job, idx, engine.as_mut(), &mut pending, &router),
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
                     open = false;
@@ -310,10 +387,7 @@ fn replica_worker(
         } else if open {
             // idle replica: block instead of spinning
             match rx.recv_timeout(IDLE_WAIT) {
-                Ok(job) => {
-                    pending.insert(job.req.id, (job.wire_id, job.conn));
-                    engine.submit(job.req);
-                }
+                Ok(job) => take_job(job, idx, engine.as_mut(), &mut pending, &router),
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
             }
@@ -404,7 +478,8 @@ mod tests {
                 id: 3,
                 prompt: "hi".into(),
                 max_new_tokens: 5,
-                session_key: None
+                session_key: None,
+                stats: false,
             }
         );
         // default max_new_tokens
@@ -412,6 +487,31 @@ mod tests {
         assert_eq!(r.max_new_tokens, 16);
         assert!(parse_request("not json").is_err());
         assert!(parse_request(r#"{"prompt": "x"}"#).is_err());
+    }
+
+    #[test]
+    fn parses_stats_queries() {
+        let r = parse_request(r#"{"id": 9, "stats": true}"#).unwrap();
+        assert!(r.stats);
+        assert_eq!(r.id, 9);
+        // stats: false (or any non-true value) is an ordinary request
+        assert!(parse_request(r#"{"id": 1, "stats": false}"#).is_err(), "needs a prompt");
+        let r = parse_request(r#"{"id": 1, "prompt": "x", "stats": false}"#).unwrap();
+        assert!(!r.stats);
+        // a stats query still needs an id to echo
+        assert!(parse_request(r#"{"stats": true}"#).is_err());
+    }
+
+    #[test]
+    fn formats_stats_responses() {
+        let mut m = EngineMetrics::default();
+        m.itl.record(std::time::Duration::from_micros(80));
+        let line = format_stats_response(5, 1, &m);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("id").unwrap().as_u64().unwrap(), 5);
+        assert_eq!(j.get("replica").unwrap().as_usize().unwrap(), 1);
+        let stats = j.get("stats").unwrap();
+        assert_eq!(stats.get("itl").unwrap().get("count").unwrap().as_usize().unwrap(), 1);
     }
 
     #[test]

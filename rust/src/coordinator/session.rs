@@ -5,9 +5,16 @@ use std::time::Instant;
 /// An inference request as submitted to the engine.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Engine-side request id (unique per engine; the TCP front-end maps
+    /// wire ids onto these).
     pub id: u64,
+    /// Prompt token ids (byte-level in the sim/TCP paths).
     pub prompt: Vec<i32>,
+    /// Generation budget: the session finishes with
+    /// [`FinishReason::Length`] once this many tokens were produced.
     pub max_new_tokens: usize,
+    /// Submission timestamp — the zero point of the TTFT and end-to-end
+    /// latency histograms.
     pub arrival: Instant,
     /// Router affinity key (multi-turn conversations set it so follow-ups
     /// land on the replica that may still hold their prefix).
@@ -15,6 +22,7 @@ pub struct Request {
 }
 
 impl Request {
+    /// A request arriving now with no session affinity.
     pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
         Request {
             id,
@@ -25,16 +33,22 @@ impl Request {
         }
     }
 
+    /// Attach a router affinity key (builder-style).
     pub fn with_session_key(mut self, key: u64) -> Self {
         self.session_key = Some(key);
         self
     }
 }
 
+/// Why a session stopped generating.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FinishReason {
+    /// Hit its `max_new_tokens` budget.
     Length,
+    /// Produced the end-of-sequence token.
     Eos,
+    /// The cache cannot hold it: either rejected at admission (it could
+    /// never fit the page pool) or it reached the model's `tmax` bound.
     CacheFull,
 }
 
@@ -42,24 +56,49 @@ pub enum FinishReason {
 /// while its compressed cache sits in the swap pool).
 #[derive(Debug)]
 pub struct Session {
+    /// The request this session serves.
     pub request: Request,
+    /// Prompt length after truncation to the model's prefill window.
     pub prompt_len: usize,
+    /// Greedily decoded tokens so far.
     pub generated: Vec<i32>,
+    /// When the first token was produced (TTFT endpoint).
     pub first_token_at: Option<Instant>,
+    /// When the most recent token was produced — consecutive values are
+    /// one inter-token-latency (ITL) sample apart.
+    pub last_token_at: Option<Instant>,
+    /// Set once the session stops generating.
     pub finished: Option<FinishReason>,
     /// How many times this session was swapped out under memory pressure.
     pub preemptions: u32,
+    /// Prompt tokens whose compressed KV is committed to the cache.
+    /// Monolithic prefill commits the whole prompt at seat time; chunked
+    /// prefill advances this cursor chunk by chunk (and prefix-cache
+    /// adoption starts it past the adopted pages). Survives preemption, so
+    /// a half-prefilled session resumes exactly where it left off.
+    pub prefill_cursor: usize,
 }
 
 impl Session {
+    /// A session whose prompt is fully prefilled (the monolithic path —
+    /// the engine seats it with its first token already sampled).
     pub fn new(request: Request, prompt_len: usize) -> Self {
+        Self::new_prefilling(request, prompt_len, prompt_len)
+    }
+
+    /// A session seated with only `prefill_cursor` prompt tokens committed
+    /// (adopted prefix pages); the chunked-prefill planner feeds it the
+    /// rest of the prompt across subsequent ticks.
+    pub fn new_prefilling(request: Request, prompt_len: usize, prefill_cursor: usize) -> Self {
         Session {
             request,
             prompt_len,
             generated: Vec::new(),
             first_token_at: None,
+            last_token_at: None,
             finished: None,
             preemptions: 0,
+            prefill_cursor,
         }
     }
 
@@ -68,10 +107,28 @@ impl Session {
         self.prompt_len + self.generated.len()
     }
 
+    /// Whether the whole prompt's KV is committed to the cache.
+    pub fn prefill_done(&self) -> bool {
+        self.prefill_cursor >= self.prompt_len
+    }
+
+    /// Whether this session is a decode lane: prefill complete AND the
+    /// first token sampled (every generated token implies a committed
+    /// prompt, so this is the single readiness predicate both the chunked
+    /// planner and `run_decode` use).
+    pub fn decode_ready(&self) -> bool {
+        !self.generated.is_empty()
+    }
+
+    /// Record one generated token and update the finish state: `eos` ends
+    /// the stream, `max_new_tokens` bounds it, and reaching the model's
+    /// `tmax` cache bound finishes it with [`FinishReason::CacheFull`].
     pub fn push_token(&mut self, tok: i32, eos: i32, tmax: usize) {
+        let now = Instant::now();
         if self.first_token_at.is_none() {
-            self.first_token_at = Some(Instant::now());
+            self.first_token_at = Some(now);
         }
+        self.last_token_at = Some(now);
         self.generated.push(tok);
         if tok == eos {
             self.finished = Some(FinishReason::Eos);
@@ -90,9 +147,12 @@ mod tests {
     #[test]
     fn finishes_on_length() {
         let mut s = Session::new(Request::new(1, vec![1, 2], 3), 2);
+        assert!(s.prefill_done());
+        assert!(!s.decode_ready());
         for t in 0..3 {
             s.push_token(t, 257, 100);
         }
+        assert!(s.decode_ready());
         assert_eq!(s.finished, Some(FinishReason::Length));
         assert_eq!(s.cache_len(), 5);
     }
@@ -110,5 +170,18 @@ mod tests {
         s.push_token(5, 257, 5);
         s.push_token(6, 257, 5);
         assert_eq!(s.finished, Some(FinishReason::CacheFull));
+    }
+
+    #[test]
+    fn prefilling_session_tracks_cursor() {
+        let mut s = Session::new_prefilling(Request::new(1, vec![1; 8], 4), 8, 2);
+        assert!(!s.prefill_done());
+        assert!(!s.decode_ready());
+        s.prefill_cursor = 8;
+        assert!(s.prefill_done());
+        assert!(!s.decode_ready(), "ready only once the first token lands");
+        s.push_token(7, 257, 100);
+        assert!(s.decode_ready());
+        assert!(s.last_token_at.is_some());
     }
 }

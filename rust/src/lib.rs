@@ -30,11 +30,26 @@
 //! The full pipeline (artifacts required — `make artifacts`):
 //! see `examples/quickstart.rs`, `examples/serve_e2e.rs`, and the
 //! `turboangle` CLI (`table1..table6`, `serve`, `search`, `uniformity`).
+//!
+//! System-level documentation lives in `docs/ARCHITECTURE.md` (module map,
+//! sequence lifecycle, bit-identity invariants) and
+//! `docs/BENCH_GLOSSARY.md` (every `BENCH_*.json` field).
+
+// Public items in the paper-facing quantizer (`quant/`) and the serving
+// coordinator (`coordinator/`) must be documented — the CI `docs` job runs
+// rustdoc with `-D warnings`, so a regression fails the build. The
+// support layers below carry targeted allows until their sweep lands.
+#![warn(missing_docs)]
 
 pub mod coordinator;
+#[allow(missing_docs)]
 pub mod eval;
 pub mod quant;
+#[allow(missing_docs)]
 pub mod report;
+#[allow(missing_docs)]
 pub mod runtime;
+#[allow(missing_docs)]
 pub mod util;
+#[allow(missing_docs)]
 pub mod workload;

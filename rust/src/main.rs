@@ -6,9 +6,7 @@
 //! quantizer against python golden vectors AND the AOT kernel artifacts.
 
 use anyhow::{bail, Result};
-use turboangle::coordinator::{
-    BatchPolicy, Engine, EngineConfig, EngineCore, ReadPath, RoutePolicy, SchedulerPolicy,
-};
+use turboangle::coordinator::{Engine, EngineConfig, EngineCore, ReadPath, RoutePolicy};
 use turboangle::eval::{search, sensitivity, sweep, PplHarness};
 use turboangle::quant::{angle, fwht, norm, Mode, NormMode, QuantConfig};
 use turboangle::report;
@@ -31,6 +29,9 @@ turboangle — TurboAngle KV-cache compression system
 
 USAGE: turboangle [--artifacts DIR] <subcommand> [flags]
 
+GLOBAL FLAGS
+  --artifacts DIR       AOT artifact directory (default: artifacts)
+
 SUBCOMMANDS
   table1     [--models a,b] [--fine] [--centered]   angular vs scalar (Table 1)
   table2     [--models ...]                         per-layer early-boost (Tables 2+3)
@@ -41,21 +42,57 @@ SUBCOMMANDS
   search     [--model M] [--budget N]               §3.2 few-eval config search
   uniformity [--d D] [--rows N]                     angle-uniformity evidence (§2)
   bits       [--layers L] [--d D]                   Eq.1/Eq.3 rate calculator
-  serve      [--model M] [--requests N] [--gen-max N] [--no-quant]
-             [--read-path auto|fused|reinflate] [--prefix-cache on|off]
+  serve      single-engine serve over a synthetic workload (needs artifacts)
+  listen     multi-replica TCP JSON-lines server (docs/ARCHITECTURE.md)
   seed-sweep [--model M] [--seeds N]                dPPL spread over random D (paper limitation)
   allocate   [--model M] [--budget B] [--group G]   greedy per-layer bit allocation (extension)
-  listen     [--model M] [--addr A] [--max-requests N] [--replicas N]
-             [--route-policy rr|least-loaded|affinity] [--sim]
-             [--read-path auto|fused|reinflate] [--prefix-cache on|off]
-             multi-replica TCP JSON-lines server (--sim: deterministic
-             simulated backend, no artifacts needed; read-path auto takes
-             the fused compressed-page decode when the backend supports it;
-             prefix-cache on shares compressed pages across common prompt
-             prefixes — combine with session-affinity routing so follow-up
-             turns land where their prefix is cached)
   selfcheck                                         golden + HLO cross-validation
   eval       [--model M] [--nk N] [--nv N] [--n-early E] [--nk-hi N] [--nv-hi N] [--norms fp32|norm8|k8v4log]
+
+SERVE FLAGS (turboangle serve ...)
+  --model M               profile to serve (default: smollm2-sim)
+  --requests N            synthetic requests to run (default: 12)
+  --gen-max N             max generated tokens per request (default: 8)
+  --no-quant              serve the fp32 reference instead of the quantized cache
+  --read-path P           auto|fused|reinflate (default: auto). fused needs a
+                          fused-capable backend — rejected on the PJRT executor
+  --prefix-cache M        on|off (default: on) — share compressed pages across
+                          common prompt prefixes; token streams are identical
+  --chunked-prefill M     on|off (default: off) — split prompt ingestion into
+                          chunks so decode interleaves with long prefills;
+                          token streams are identical, only tail latency
+                          changes. Needs a chunk-aware backend — rejected on
+                          the PJRT executor (it would re-run the full prefill
+                          per chunk)
+  --chunk-tokens N        tokens per prefill chunk per tick (default: 16, >= 1)
+  --tick-token-budget N   per-tick token budget: decode lanes cost 1 each, the
+                          rest goes to prefill chunks (default: 64, >= 1)
+
+LISTEN FLAGS (turboangle listen ...)
+  --addr A                bind address (default: 127.0.0.1:7777)
+  --max-requests N        serve N generation responses then exit; 0 = forever
+                          (default: 0; stats responses do not count)
+  --replicas N            engine replica worker threads (default: 1, >= 1)
+  --route-policy P        rr|least-loaded|affinity (default: affinity; affinity
+                          keys on the wire \"session_key\", string or number)
+  --sim                   deterministic simulated backend — no artifacts needed
+  --model M               profile when not --sim (default: smollm2-sim)
+  --read-path P           auto|fused|reinflate (default: auto); fused requires
+                          --sim (the PJRT backend has no fused decode path)
+  --prefix-cache M        on|off (default: on)
+  --chunked-prefill M     on|off (default: off); requires a chunk-aware
+                          backend (--sim) — rejected on the PJRT executor
+  --chunk-tokens N        tokens per prefill chunk per tick (default: 16, >= 1)
+  --tick-token-budget N   per-tick token budget (default: 64, >= 1)
+
+  wire protocol: one JSON object per line —
+    {\"id\": 1, \"prompt\": \"...\", \"max_new_tokens\": 8, \"session_key\": \"u1\"}
+    {\"id\": 2, \"stats\": true}   -> one replica's latency/counter snapshot
+
+BENCH ENTRY POINTS (cargo bench --bench <name> [-- --smoke])
+  quant_hot_path | serving_throughput | fused_attention | prefix_caching |
+  serving_latency — each writes BENCH_<name>.json; every field is documented
+  in docs/BENCH_GLOSSARY.md
 ";
 
 fn parse_route_policy(s: &str) -> Result<RoutePolicy> {
@@ -76,12 +113,50 @@ fn parse_read_path(s: &str) -> Result<ReadPath> {
     })
 }
 
-fn parse_prefix_cache(s: &str) -> Result<bool> {
+fn parse_on_off(flag: &str, s: &str) -> Result<bool> {
     Ok(match s {
         "on" => true,
         "off" => false,
-        other => bail!("unknown prefix-cache mode '{other}' (on|off)"),
+        other => bail!("--{flag} takes on|off (got '{other}')"),
     })
+}
+
+/// Reject `--chunked-prefill on` on a backend without native chunk
+/// support. Chunked mode is CORRECT on any backend (the trait default
+/// falls back to a full prefill per chunk) but on such a backend it makes
+/// latency strictly WORSE than monolithic mode, so the CLI refuses
+/// instead of silently degrading.
+fn ensure_chunked_support(exec: &ModelExecutor, chunked: bool) -> Result<()> {
+    if chunked && !turboangle::runtime::ModelBackend::supports_chunked_prefill(exec) {
+        bail!(
+            "--chunked-prefill on requires a backend with native chunked prefill \
+             (the PJRT executor recomputes the full prefill per chunk, making \
+             latency worse, not better); use the --sim backend or --chunked-prefill off"
+        );
+    }
+    Ok(())
+}
+
+/// Parse + validate the chunked-prefill flag family. `--chunk-tokens 0`
+/// and `--tick-token-budget 0` are rejected here with actionable errors
+/// instead of panicking inside engine construction.
+fn parse_chunk_flags(args: &Args) -> Result<(bool, usize, usize)> {
+    let chunked = parse_on_off("chunked-prefill", &args.get_str("chunked-prefill", "off"))?;
+    let chunk_tokens = args.get_usize("chunk-tokens", 16)?;
+    let tick_budget = args.get_usize("tick-token-budget", 64)?;
+    if chunk_tokens == 0 {
+        bail!(
+            "--chunk-tokens must be >= 1 (got 0): it is the number of prompt \
+             tokens one session prefills per engine tick"
+        );
+    }
+    if tick_budget == 0 {
+        bail!(
+            "--tick-token-budget must be >= 1 (got 0): it caps decode lanes + \
+             prefill chunk tokens per engine tick"
+        );
+    }
+    Ok((chunked, chunk_tokens, tick_budget))
 }
 
 fn harness(artifacts: &str, model: &str) -> Result<PplHarness> {
@@ -169,15 +244,31 @@ fn main() -> Result<()> {
         }
         "uniformity" => uniformity(args.get_usize("d", 64)?, args.get_usize("rows", 8192)?),
         "bits" => bits_calculator(args.get_usize("layers", 32)?, args.get_usize("d", 128)?),
-        "serve" => serve(
-            &artifacts,
-            &args.get_str("model", "smollm2-sim"),
-            args.get_usize("requests", 12)?,
-            args.get_usize("gen-max", 8)?,
-            args.get_bool("no-quant"),
-            parse_read_path(&args.get_str("read-path", "auto"))?,
-            parse_prefix_cache(&args.get_str("prefix-cache", "on"))?,
-        )?,
+        "serve" => {
+            args.check_known(&[
+                "artifacts",
+                "model",
+                "requests",
+                "gen-max",
+                "no-quant",
+                "read-path",
+                "prefix-cache",
+                "chunked-prefill",
+                "chunk-tokens",
+                "tick-token-budget",
+            ])?;
+            let (chunked, chunk_tokens, tick_budget) = parse_chunk_flags(&args)?;
+            serve(
+                &artifacts,
+                &args.get_str("model", "smollm2-sim"),
+                args.get_usize("requests", 12)?,
+                args.get_usize("gen-max", 8)?,
+                args.get_bool("no-quant"),
+                parse_read_path(&args.get_str("read-path", "auto"))?,
+                parse_on_off("prefix-cache", &args.get_str("prefix-cache", "on"))?,
+                (chunked, chunk_tokens, tick_budget),
+            )?
+        }
         "seed-sweep" => {
             let model = args.get_str("model", "smollm2-sim");
             let seeds = args.get_usize("seeds", 5)?;
@@ -223,26 +314,44 @@ fn main() -> Result<()> {
             );
         }
         "listen" => {
+            args.check_known(&[
+                "artifacts",
+                "model",
+                "addr",
+                "max-requests",
+                "replicas",
+                "route-policy",
+                "sim",
+                "read-path",
+                "prefix-cache",
+                "chunked-prefill",
+                "chunk-tokens",
+                "tick-token-budget",
+            ])?;
             let model = args.get_str("model", "smollm2-sim");
             let addr = args.get_str("addr", "127.0.0.1:7777");
             let max_requests = args.get_usize("max-requests", 0)?;
             let replicas = args.get_usize("replicas", 1)?;
+            if replicas == 0 {
+                bail!("--replicas must be >= 1 (got 0): each replica is one engine worker thread");
+            }
             let policy = parse_route_policy(&args.get_str("route-policy", "affinity"))?;
             let read_path = parse_read_path(&args.get_str("read-path", "auto"))?;
-            let prefix_cache = parse_prefix_cache(&args.get_str("prefix-cache", "on"))?;
+            let prefix_cache = parse_on_off("prefix-cache", &args.get_str("prefix-cache", "on"))?;
+            let (chunked, chunk_tokens, tick_budget) = parse_chunk_flags(&args)?;
             if read_path == ReadPath::Fused && !args.get_bool("sim") {
                 // fail with a flag error, not an assert mid-construction:
                 // the PJRT executor consumes dense HLO inputs only
                 bail!("--read-path fused requires --sim (the PJRT backend has no fused decode path; use auto or reinflate)");
             }
-            let engine_cfg = |l: usize| EngineConfig {
-                quant: QuantConfig::paper_uniform(l).with_k8v4_log(),
-                batch_policy: BatchPolicy::default(),
-                scheduler: SchedulerPolicy::default(),
-                capacity_pages: 4096,
-                page_tokens: 16,
-                read_path,
-                prefix_cache,
+            let engine_cfg = |l: usize| {
+                let mut cfg = EngineConfig::new(QuantConfig::paper_uniform(l).with_k8v4_log());
+                cfg.read_path = read_path;
+                cfg.prefix_cache = prefix_cache;
+                cfg.chunked_prefill = chunked;
+                cfg.chunk_tokens = chunk_tokens;
+                cfg.tick_token_budget = tick_budget;
+                cfg
             };
             let mut engines: Vec<Box<dyn EngineCore>> = Vec::with_capacity(replicas);
             if args.get_bool("sim") {
@@ -257,6 +366,7 @@ fn main() -> Result<()> {
                 let rt = Runtime::cpu()?;
                 for _ in 0..replicas {
                     let exec = ModelExecutor::load(&rt, &manifest, &model, Entry::Serve)?;
+                    ensure_chunked_support(&exec, chunked)?;
                     let l = exec.profile.n_layers;
                     engines.push(Box::new(Engine::new(exec, engine_cfg(l))));
                 }
@@ -398,6 +508,7 @@ fn serve(
     no_quant: bool,
     read_path: ReadPath,
     prefix_cache: bool,
+    (chunked, chunk_tokens, tick_budget): (bool, usize, usize),
 ) -> Result<()> {
     if read_path == ReadPath::Fused {
         bail!("--read-path fused requires a fused-capable backend (the PJRT executor has none; use auto or reinflate)");
@@ -406,24 +517,20 @@ fn serve(
     let rt = Runtime::cpu()?;
     eprintln!("compiling prefill+decode for {model} ...");
     let exec = ModelExecutor::load(&rt, &manifest, model, Entry::Serve)?;
+    ensure_chunked_support(&exec, chunked)?;
     let l = exec.profile.n_layers;
     let mut quant = QuantConfig::paper_uniform(l).with_k8v4_log();
     if no_quant {
         quant.mode = Mode::None;
         quant = quant.with_norms(NormMode::FP32, NormMode::FP32);
     }
-    let mut engine = Engine::new(
-        exec,
-        EngineConfig {
-            quant,
-            batch_policy: BatchPolicy::default(),
-            scheduler: SchedulerPolicy::default(),
-            capacity_pages: 4096,
-            page_tokens: 16,
-            read_path,
-            prefix_cache,
-        },
-    );
+    let mut cfg = EngineConfig::new(quant);
+    cfg.read_path = read_path;
+    cfg.prefix_cache = prefix_cache;
+    cfg.chunked_prefill = chunked;
+    cfg.chunk_tokens = chunk_tokens;
+    cfg.tick_token_budget = tick_budget;
+    let mut engine = Engine::new(exec, cfg);
     let spec = WorkloadSpec {
         n_requests: requests,
         gen_max,

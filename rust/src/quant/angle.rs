@@ -7,6 +7,7 @@
 
 use super::fwht::{rotate, unrotate};
 
+/// 2π — the full angle circle the codebook divides into `n` bins.
 pub const TWO_PI: f32 = core::f32::consts::TAU;
 
 /// Largest supported codebook: bin indices travel as `u16` (`Encoded::k`,
@@ -20,7 +21,9 @@ pub const MAX_BINS: u32 = 1 << 16;
 /// d/2 angle bin indices (bin count `n` stored by the owner).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Encoded {
+    /// d/2 pair norms (raw f32; norm quantization is the owner's job)
     pub r: Vec<f32>,
+    /// d/2 angle bin indices in `0..n`
     pub k: Vec<u16>,
 }
 
@@ -110,6 +113,8 @@ pub struct TrigLut {
 }
 
 impl TrigLut {
+    /// Precompute the `n`-bin table (left-edge or bin-center angles).
+    /// Panics outside the `2..=65536` u16 codebook range.
     pub fn new(n: u32, centered: bool) -> Self {
         assert!(
             (2..=MAX_BINS).contains(&n),

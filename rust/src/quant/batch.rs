@@ -33,6 +33,24 @@ fn batch_dims(x_len: usize, d: usize, r_len: usize, k_len: usize) -> (usize, usi
 }
 
 /// Encode a `[rows × d]` slab; picks serial or parallel by row count.
+///
+/// Roundtrip with [`decode_batch`] — the reconstruction error is bounded
+/// by the bin width (paper Alg. 1):
+///
+/// ```
+/// use turboangle::quant::{decode_batch, encode_batch};
+/// use turboangle::quant::fwht::test_sign_diag;
+/// let (rows, d, n) = (4usize, 16usize, 256u32);
+/// let sign = test_sign_diag(d, 1);
+/// let x: Vec<f32> = (0..rows * d).map(|i| (i as f32 * 0.37).sin()).collect();
+/// let (mut r, mut k) = (vec![0.0f32; rows * d / 2], vec![0u16; rows * d / 2]);
+/// encode_batch(&x, &sign, n, &mut r, &mut k);
+/// let mut xh = vec![0.0f32; rows * d];
+/// decode_batch(&r, &k, &sign, n, false, &mut xh);
+/// let mse: f32 =
+///     x.iter().zip(&xh).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / (rows * d) as f32;
+/// assert!(mse < 1e-3, "mse {mse}");
+/// ```
 pub fn encode_batch(x: &[f32], sign: &[f32], n: u32, r_out: &mut [f32], k_out: &mut [u16]) {
     let d = sign.len();
     let (rows, _) = batch_dims(x.len(), d, r_out.len(), k_out.len());

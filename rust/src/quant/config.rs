@@ -14,8 +14,11 @@ use anyhow::{ensure, Result};
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[repr(i32)]
 pub enum Mode {
+    /// fp reference: no quantization anywhere.
     None = 0,
+    /// TurboAngle uniform angle quantization, left-edge decode (Alg. 1).
     Angle = 1,
+    /// TurboAngle with bin-center decode (the §4.4 ablation).
     AngleCentered = 2,
     /// TurboQuant sym-g4 baseline; per-layer arrays carry BITS not bins.
     TqSymG4 = 3,
@@ -28,21 +31,29 @@ pub enum Mode {
 /// Per-layer codebook sizes.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct LayerBins {
+    /// K-side angle bins (scalar baselines: bit width instead)
     pub n_k: u32,
+    /// V-side angle bins (scalar baselines: bit width instead)
     pub n_v: u32,
 }
 
 /// Full quantizer configuration for one model.
 #[derive(Clone, Debug, PartialEq)]
 pub struct QuantConfig {
+    /// Which quantizer runs (angle modes vs scalar baselines vs off).
     pub mode: Mode,
+    /// Per-layer (n_K, n_V) codebook sizes, index = layer.
     pub layers: Vec<LayerBins>,
+    /// Norm quantization for the K side (§3.3).
     pub k_norm: NormMode,
+    /// Norm quantization for the V side (§3.3).
     pub v_norm: NormMode,
 }
 
-/// The paper's uniform baseline: K128 V64, 3.25 angle bits (§4.1).
+/// The paper's uniform K-side codebook: 128 bins (§4.1; with
+/// [`UNIFORM_NV`] this is the 3.25-angle-bit baseline).
 pub const UNIFORM_NK: u32 = 128;
+/// The paper's uniform V-side codebook: 64 bins (§4.1).
 pub const UNIFORM_NV: u32 = 64;
 
 /// Codebook sizes ride `u16` bin indices end-to-end (`Encoded::k`, the
@@ -68,7 +79,18 @@ impl QuantConfig {
         }
     }
 
-    /// The K128V64 paper baseline.
+    /// The K128V64 paper baseline: 3.25 angle bits per element (Eq. 1)
+    /// at every layer, fp32 norms.
+    ///
+    /// ```
+    /// use turboangle::quant::QuantConfig;
+    /// let cfg = QuantConfig::paper_uniform(32);
+    /// assert_eq!(cfg.layers.len(), 32);
+    /// assert!((cfg.angle_bits_per_element() - 3.25).abs() < 1e-12);
+    /// // §3.3 worked example: uniform + K8V4-log at d=128 is 6.75 b/elem
+    /// let deploy = cfg.with_k8v4_log();
+    /// assert!((deploy.total_bits_per_element(128) - 6.75).abs() < 1e-9);
+    /// ```
     pub fn paper_uniform(n_layers: usize) -> Self {
         Self::uniform(n_layers, UNIFORM_NK, UNIFORM_NV)
     }
@@ -138,6 +160,7 @@ impl QuantConfig {
         Ok(())
     }
 
+    /// Set both sides' norm quantization modes (builder-style).
     pub fn with_norms(mut self, k: NormMode, v: NormMode) -> Self {
         self.k_norm = k;
         self.v_norm = v;

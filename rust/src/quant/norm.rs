@@ -9,14 +9,19 @@
 pub struct NormMode {
     /// 0 = fp32 passthrough.
     pub bits: u8,
+    /// quantize in log space (better for right-skewed norm distributions)
     pub log_space: bool,
 }
 
 impl NormMode {
+    /// fp32 passthrough: norms stored uncompressed.
     pub const FP32: NormMode = NormMode { bits: 0, log_space: false };
+    /// 8-bit linear min-max codes (the paper's K-side choice).
     pub const LINEAR8: NormMode = NormMode { bits: 8, log_space: false };
+    /// 4-bit log-space codes (the paper's V-side choice).
     pub const LOG4: NormMode = NormMode { bits: 4, log_space: true };
 
+    /// The top code value, `2^bits - 1`.
     pub fn levels(&self) -> f32 {
         ((1u32 << self.bits) - 1) as f32
     }
@@ -25,8 +30,11 @@ impl NormMode {
 /// Quantized norms for one vector: codes + the min/max window.
 #[derive(Clone, Debug)]
 pub struct QuantizedNorms {
+    /// one `bits`-wide code per pair norm
     pub codes: Vec<u16>,
+    /// window minimum (log-space value in log mode)
     pub vmin: f32,
+    /// window maximum (log-space value in log mode)
     pub vmax: f32,
 }
 
@@ -100,6 +108,7 @@ pub fn dequantize_into(q: &QuantizedNorms, mode: NormMode, out: &mut [f32]) {
     }
 }
 
+/// Allocating convenience wrapper around [`dequantize_into`].
 pub fn dequantize(q: &QuantizedNorms, mode: NormMode) -> Vec<f32> {
     let mut out = vec![0.0; q.codes.len()];
     dequantize_into(q, mode, &mut out);

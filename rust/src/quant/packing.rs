@@ -25,6 +25,7 @@ pub struct BitVec {
 }
 
 impl BitVec {
+    /// An empty stream preallocated for `codes` codes of `width` bits.
     pub fn with_capacity(codes: usize, width: u32) -> Self {
         BitVec {
             words: Vec::with_capacity((codes * width as usize).div_ceil(64)),
@@ -53,6 +54,7 @@ impl BitVec {
         self.len_bits += width as usize;
     }
 
+    /// Random-access read of code `idx` in a `width`-bit stream.
     #[inline]
     pub fn get(&self, idx: usize, width: u32) -> u32 {
         let bit = idx * width as usize;
@@ -66,10 +68,12 @@ impl BitVec {
         (v & mask) as u32
     }
 
+    /// Stored code count at `width` bits each.
     pub fn len_codes(&self, width: u32) -> usize {
         self.len_bits / width as usize
     }
 
+    /// Stored length in bits.
     pub fn len_bits(&self) -> usize {
         self.len_bits
     }
@@ -85,6 +89,7 @@ impl BitVec {
         &self.words
     }
 
+    /// Reset to an empty stream, keeping the word allocation.
     pub fn clear(&mut self) {
         self.words.clear();
         self.len_bits = 0;

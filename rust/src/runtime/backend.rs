@@ -90,6 +90,41 @@ pub trait ModelBackend: Send {
         self.run_prefill(tokens, lengths, cfg)
     }
 
+    /// Whether [`Self::run_prefill_chunk`] computes only the requested
+    /// positions. The default implementation below is correct everywhere
+    /// but recomputes a full prefill per chunk, so the engine's chunked
+    /// mode (`--chunked-prefill on`) works on any backend — it just only
+    /// *saves* prefill compute on backends that return true here.
+    fn supports_chunked_prefill(&self) -> bool {
+        false
+    }
+
+    /// Prefill one CHUNK of each lane's prompt: emit compressed KV only
+    /// for positions `starts[lane] .. starts[lane] + chunk_lens[lane]` (a
+    /// lane with `chunk_lens[lane] == 0` emits nothing). Two contracts the
+    /// engine's chunked-vs-monolithic bit-identity tests pin:
+    ///
+    /// * emitted entries must be bit-identical to the same positions of a
+    ///   one-shot [`Self::run_prefill`] over the full prompt, and
+    /// * `logits` must reflect the FULL `lengths[lane]`-token prompt — the
+    ///   engine samples the first generated token from the chunk that
+    ///   completes the prompt.
+    ///
+    /// Output layout matches [`Self::run_prefill`]; slab contents outside
+    /// the chunk ranges are unspecified (the engine never appends them).
+    /// The default runs a full prefill, which satisfies both contracts, so
+    /// every backend supports chunked serving out of the box.
+    fn run_prefill_chunk(
+        &self,
+        tokens: &[i32],
+        lengths: &[i32],
+        _starts: &[usize],
+        _chunk_lens: &[usize],
+        cfg: &QuantConfig,
+    ) -> Result<PrefillOut> {
+        self.run_prefill(tokens, lengths, cfg)
+    }
+
     /// One decode step over the dense reinflated cache; cache slices are
     /// (L, B, H, Tmax, d/2) row-major f32.
     #[allow(clippy::too_many_arguments)]

@@ -241,17 +241,23 @@ impl SimExecutor {
         }
     }
 
-    /// Shared prefill body. `prefix_lens` (per lane) marks positions whose
-    /// KV is already resident in adopted shared pages: their emission is
-    /// skipped, but the rolling prompt hash still folds them, so suffix
-    /// entries and logits match a full prefill bit for bit.
-    fn prefill_impl(
+    /// Shared prefill body. `emit(lane, plen)` returns the half-open
+    /// position range whose KV this call must emit — `(0, plen)` for a
+    /// full prefill, `(skip, plen)` for a suffix prefill over adopted
+    /// shared pages, `(start, start + chunk)` for one chunked-prefill
+    /// slice. Positions outside the range only fold the rolling prompt
+    /// hash (O(1) per token), so emitted entries and logits match a full
+    /// prefill bit for bit no matter how the prompt is sliced.
+    fn prefill_impl<F>(
         &self,
         tokens: &[i32],
         lengths: &[i32],
-        prefix_lens: Option<&[usize]>,
+        emit: F,
         cfg: &QuantConfig,
-    ) -> Result<PrefillOut> {
+    ) -> Result<PrefillOut>
+    where
+        F: Fn(usize, usize) -> (usize, usize),
+    {
         let (b_n, tp) = (self.serve.batch, self.serve.prefill_len);
         let (l_n, h_n, half) = (
             self.profile.n_layers,
@@ -259,9 +265,6 @@ impl SimExecutor {
             self.profile.d_head / 2,
         );
         ensure!(tokens.len() == b_n * tp && lengths.len() == b_n);
-        if let Some(p) = prefix_lens {
-            ensure!(p.len() == b_n, "prefix_lens length != batch");
-        }
         ensure!(cfg.layers.len() == l_n, "config/profile layer mismatch");
         let vocab = self.profile.vocab;
         let n = l_n * b_n * h_n * tp * half;
@@ -274,14 +277,14 @@ impl SimExecutor {
         };
         for lane in 0..b_n {
             let plen = (lengths[lane] as usize).min(tp);
-            let skip = prefix_lens.map_or(0, |p| p[lane]);
+            let (from, to) = emit(lane, plen);
             let prompt = &tokens[lane * tp..lane * tp + plen];
             // per-position states: fold of the prompt prefix up to t
             let mut h = mix(self.seed ^ 0x5EED);
             for (t, &tok) in prompt.iter().enumerate() {
                 h = mix(h ^ tok as u64);
-                if t < skip {
-                    continue; // KV already cached (shared prefix pages)
+                if t < from || t >= to {
+                    continue; // outside this call's emission range
                 }
                 for l in 0..l_n {
                     let bins = cfg.layers[l];
@@ -347,7 +350,7 @@ impl ModelBackend for SimExecutor {
         lengths: &[i32],
         cfg: &QuantConfig,
     ) -> Result<PrefillOut> {
-        self.prefill_impl(tokens, lengths, None, cfg)
+        self.prefill_impl(tokens, lengths, |_, plen| (0, plen), cfg)
     }
 
     /// Suffix prefill: positions below the lane's prefix length only fold
@@ -363,7 +366,57 @@ impl ModelBackend for SimExecutor {
         prefix_lens: &[usize],
         cfg: &QuantConfig,
     ) -> Result<PrefillOut> {
-        self.prefill_impl(tokens, lengths, Some(prefix_lens), cfg)
+        ensure!(prefix_lens.len() == self.serve.batch, "prefix_lens length != batch");
+        self.prefill_impl(
+            tokens,
+            lengths,
+            |lane, plen| (prefix_lens[lane].min(plen), plen),
+            cfg,
+        )
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
+    /// Chunked prefill: emission runs for `starts[lane] .. starts[lane] +
+    /// chunk_lens[lane]` alone, so the per-tick cost is proportional to
+    /// the chunk, not the whole prompt — the saving the engine's chunked
+    /// scheduler banks on. The rolling prompt hash still folds every
+    /// position, so chunk entries and the full-prompt logits are
+    /// bit-identical to one-shot prefill regardless of how the prompt is
+    /// sliced (the chunked-on/off integration tests pin this).
+    fn run_prefill_chunk(
+        &self,
+        tokens: &[i32],
+        lengths: &[i32],
+        starts: &[usize],
+        chunk_lens: &[usize],
+        cfg: &QuantConfig,
+    ) -> Result<PrefillOut> {
+        let b_n = self.serve.batch;
+        ensure!(
+            starts.len() == b_n && chunk_lens.len() == b_n,
+            "starts/chunk_lens length != batch"
+        );
+        for lane in 0..b_n {
+            let plen = (lengths[lane] as usize).min(self.serve.prefill_len);
+            ensure!(
+                chunk_lens[lane] == 0 || starts[lane] + chunk_lens[lane] <= plen,
+                "lane {lane}: chunk {}..{} beyond prompt length {plen}",
+                starts[lane],
+                starts[lane] + chunk_lens[lane]
+            );
+        }
+        self.prefill_impl(
+            tokens,
+            lengths,
+            |lane, plen| {
+                let from = starts[lane].min(plen);
+                (from, (from + chunk_lens[lane]).min(plen))
+            },
+            cfg,
+        )
     }
 
     fn run_decode(
@@ -525,6 +578,65 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_matches_full_prefill_slice_by_slice() {
+        let sim = SimExecutor::new(15);
+        let (b, tp) = (sim.serve().batch, sim.serve().prefill_len);
+        let (l_n, h_n, half) = (
+            sim.profile().n_layers,
+            sim.profile().n_kv_heads,
+            sim.profile().d_head / 2,
+        );
+        let mut tokens = vec![0i32; b * tp];
+        let mut lengths = vec![1i32; b];
+        let plen = 11usize;
+        for lane in 0..b {
+            for t in 0..plen {
+                tokens[lane * tp + t] = (lane * 17 + t * 3) as i32 + 1;
+            }
+            lengths[lane] = plen as i32;
+        }
+        let full = sim.run_prefill(&tokens, &lengths, &cfg()).unwrap();
+        // walk every lane through ragged chunk sizes; the final chunk's
+        // logits must equal the full-prefill logits
+        for chunk in [1usize, 3, 4, 11] {
+            let mut starts = vec![0usize; b];
+            let mut done = vec![false; b];
+            let mut last = None;
+            while !done.iter().all(|&d| d) {
+                let lens: Vec<usize> = starts.iter().map(|&s| chunk.min(plen - s)).collect();
+                let out = sim
+                    .run_prefill_chunk(&tokens, &lengths, &starts, &lens, &cfg())
+                    .unwrap();
+                for lane in 0..b {
+                    for t in starts[lane]..starts[lane] + lens[lane] {
+                        for l in 0..l_n {
+                            for hd in 0..h_n {
+                                let base = (((l * b + lane) * h_n + hd) * tp + t) * half;
+                                assert_eq!(
+                                    &full.kr[base..base + half],
+                                    &out.kr[base..base + half],
+                                    "chunk={chunk} lane={lane} t={t}"
+                                );
+                                assert_eq!(&full.ki[base..base + half], &out.ki[base..base + half]);
+                                assert_eq!(&full.vr[base..base + half], &out.vr[base..base + half]);
+                                assert_eq!(&full.vi[base..base + half], &out.vi[base..base + half]);
+                            }
+                        }
+                    }
+                    starts[lane] += lens[lane];
+                    done[lane] = starts[lane] >= plen;
+                }
+                last = Some(out);
+            }
+            assert_eq!(
+                full.logits,
+                last.unwrap().logits,
+                "final chunk logits must reflect the full prompt (chunk={chunk})"
+            );
         }
     }
 

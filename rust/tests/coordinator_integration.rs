@@ -12,7 +12,6 @@ use std::time::Duration;
 use turboangle::coordinator::server::serve_on;
 use turboangle::coordinator::{
     BatchPolicy, Engine, EngineConfig, EngineCore, FinishReason, ReadPath, Request, RoutePolicy,
-    SchedulerPolicy,
 };
 use turboangle::quant::{Mode, NormMode, QuantConfig};
 use turboangle::runtime::{Entry, Manifest, ModelExecutor, Runtime, SimExecutor};
@@ -46,16 +45,45 @@ fn sim_engine_prefix(
     Engine::new(
         SimExecutor::new(seed),
         EngineConfig {
-            quant: QuantConfig::paper_uniform(2).with_k8v4_log(),
             batch_policy: BatchPolicy {
                 min_batch: 1,
                 max_wait: Duration::ZERO,
             },
-            scheduler: SchedulerPolicy::default(),
             capacity_pages,
             page_tokens,
             read_path,
             prefix_cache,
+            ..EngineConfig::new(QuantConfig::paper_uniform(2).with_k8v4_log())
+        },
+    )
+}
+
+/// Chunked-prefill engine: same geometry as [`sim_engine_prefix`] but with
+/// the token-budget tick planner on at (`chunk_tokens`, `tick_budget`).
+fn sim_engine_chunked(
+    seed: u64,
+    capacity_pages: usize,
+    page_tokens: usize,
+    read_path: ReadPath,
+    prefix_cache: bool,
+    chunk_tokens: usize,
+    tick_budget: usize,
+) -> Engine<SimExecutor> {
+    Engine::new(
+        SimExecutor::new(seed),
+        EngineConfig {
+            batch_policy: BatchPolicy {
+                min_batch: 1,
+                max_wait: Duration::ZERO,
+            },
+            capacity_pages,
+            page_tokens,
+            read_path,
+            prefix_cache,
+            chunked_prefill: true,
+            chunk_tokens,
+            tick_token_budget: tick_budget,
+            ..EngineConfig::new(QuantConfig::paper_uniform(2).with_k8v4_log())
         },
     )
 }
@@ -372,6 +400,174 @@ fn prefix_eviction_reclaims_cached_pages_under_pressure() {
     assert_eq!(e.metrics.preemptions, 0, "no live work was preempted");
 }
 
+/// The chunked-prefill acceptance criterion: for a whole mixed workload
+/// (short chats + prompts longer than several chunks, with shared prefixes
+/// so adoption advances the cursor), the generated token streams with
+/// chunking ON equal the streams with it OFF — on BOTH read paths, at
+/// several chunk sizes including ones that don't divide the prompt length.
+/// The sim folds a checksum of every cache element into each token, so a
+/// single mis-appended chunk position would change the streams.
+#[test]
+fn chunked_prefill_emits_bit_identical_tokens() {
+    let spec = WorkloadSpec {
+        n_requests: 10,
+        prompt_min: 3,
+        prompt_max: 28,
+        gen_min: 2,
+        gen_max: 8,
+        seed: 17,
+        n_prefixes: 2,
+        prefix_len: 12, // 3 full pages of 4 — adopted once a donor finishes
+        ..Default::default()
+    };
+    let run = |path: ReadPath, prefix: bool, chunk: Option<(usize, usize)>| {
+        let mut e = match chunk {
+            Some((chunk_tokens, budget)) => {
+                sim_engine_chunked(7, 256, 4, path, prefix, chunk_tokens, budget)
+            }
+            None => sim_engine_prefix(7, 256, 4, path, prefix),
+        };
+        assert_eq!(e.is_chunked(), chunk.is_some());
+        for req in workload::generate(&spec) {
+            e.submit(req);
+        }
+        e.run_to_completion().unwrap();
+        assert_eq!(e.metrics.requests_finished, 10);
+        if chunk.is_some() {
+            assert!(e.metrics.prefill_chunks > 0, "chunked mode must run chunks");
+            assert_eq!(e.metrics.prefill_batches, 0, "no monolithic prefills");
+        }
+        if prefix {
+            assert!(e.metrics.prefix_hits >= 1, "warm requests must adopt");
+        }
+        let mem = e.memory_stats();
+        assert_eq!(mem.sequences, 0, "all sequences drained");
+        assert_eq!(e.prefilling_sessions(), 0);
+        let mut out: Vec<(u64, Vec<i32>)> = e
+            .take_finished()
+            .into_iter()
+            .map(|s| (s.request.id, s.generated))
+            .collect();
+        out.sort();
+        out
+    };
+    let baseline = run(ReadPath::Reinflate, false, None);
+    for (path, prefix, chunk) in [
+        (ReadPath::Reinflate, false, Some((5, 9))),
+        (ReadPath::Reinflate, true, Some((5, 9))),
+        (ReadPath::Fused, false, Some((5, 9))),
+        (ReadPath::Fused, true, Some((5, 9))),
+        (ReadPath::Fused, false, Some((1, 3))),
+        (ReadPath::Fused, true, Some((16, 64))),
+        (ReadPath::Fused, true, None),
+    ] {
+        assert_eq!(
+            run(path, prefix, chunk),
+            baseline,
+            "chunked prefill changed tokens ({path:?}, prefix={prefix}, chunk={chunk:?})"
+        );
+    }
+}
+
+/// Half-prefilled preemption: a session mid-chunked-prefill is evicted to
+/// the swap pool (its partial compressed pages move verbatim, the cursor
+/// survives in the session), later resumes, finishes its remaining chunks,
+/// and generates EXACTLY the tokens of an uninterrupted run.
+#[test]
+fn half_prefilled_session_preempted_and_resumed_bit_identically() {
+    let long: Vec<i32> = (1..=24).collect();
+    let other: Vec<i32> = vec![9, 8, 7, 6, 5, 4, 3, 2];
+    let solo = |prompt: &[i32]| {
+        let mut e = sim_engine_chunked(7, 64, 4, ReadPath::Auto, false, 4, 8);
+        e.submit(Request::new(1, prompt.to_vec(), 4));
+        e.run_to_completion().unwrap();
+        assert_eq!(e.metrics.preemptions, 0);
+        e.take_finished().pop().unwrap().generated
+    };
+    let baseline_long = solo(&long);
+    let baseline_other = {
+        let mut e = sim_engine_chunked(7, 64, 4, ReadPath::Auto, false, 4, 8);
+        e.submit(Request::new(2, other.clone(), 8));
+        e.run_to_completion().unwrap();
+        e.take_finished().pop().unwrap().generated
+    };
+
+    // pool of 8 pages × 4 tokens: long needs 7 pages (24 prompt + 4 gen),
+    // other needs 4 (8 + 8) — they can never be resident together
+    let mut e = sim_engine_chunked(7, 8, 4, ReadPath::Auto, false, 4, 8);
+    e.submit(Request::new(1, long.clone(), 4));
+    // two ticks: 8 of 24 prompt tokens committed, no token produced yet
+    e.tick().unwrap();
+    e.tick().unwrap();
+    assert!(e.metrics.prefill_chunks >= 2, "chunks must have run");
+    assert_eq!(e.metrics.ttft.count(), 0, "long is still mid-prefill");
+    assert_eq!(e.prefilling_sessions(), 1);
+    // the competitor forces the half-prefilled session through the swap pool
+    e.submit(Request::new(2, other.clone(), 8));
+    e.run_to_completion().unwrap();
+    assert!(e.metrics.preemptions >= 1, "long must have been swapped out");
+    assert!(e.metrics.swap_ins >= 1, "long must have been restored");
+    let mut finished = e.take_finished();
+    finished.sort_by_key(|s| s.request.id);
+    assert_eq!(finished.len(), 2);
+    assert!(finished[0].preemptions >= 1, "session records its preemption");
+    assert_eq!(
+        finished[0].generated, baseline_long,
+        "half-prefilled then resumed session must match the uninterrupted run"
+    );
+    assert_eq!(finished[1].generated, baseline_other, "the preemptor is unaffected");
+    let mem = e.memory_stats();
+    assert_eq!(mem.pages_allocated, 0);
+    assert_eq!(mem.swapped_sequences, 0);
+}
+
+/// Scheduler fairness regression: with chunking on, an in-flight decoder
+/// keeps producing a token EVERY tick while a stream of near-window-sized
+/// prompts arrives and prefills — decode lanes are packed into the budget
+/// first, so long-prompt ingestion can never starve generation (this is
+/// the bounded-ITL property `BENCH_serving_latency.json` quantifies).
+#[test]
+fn long_prompt_stream_cannot_starve_inflight_decoder() {
+    let mut e = sim_engine_chunked(7, 256, 8, ReadPath::Auto, false, 4, 8);
+    e.submit(Request::new(1, vec![5, 6, 7, 8], 20));
+    for _ in 0..50 {
+        if e.metrics.ttft.count() >= 1 {
+            break;
+        }
+        e.tick().unwrap();
+    }
+    assert_eq!(e.metrics.ttft.count(), 1, "the chat session must be decoding");
+    // a stream of long prompts (28 tokens ≈ the 32-token prefill window,
+    // 7 chunks each at chunk_tokens=4) arrives all at once
+    for i in 0..3i32 {
+        e.submit(Request::new(10 + i as u64, vec![30 + i; 28], 2));
+    }
+    // until the first session finishes, every tick must advance generation
+    let mut last = e.metrics.tokens_generated;
+    let mut stalls = 0;
+    for _ in 0..500 {
+        if e.metrics.requests_finished > 0 || !e.has_work() {
+            break;
+        }
+        e.tick().unwrap();
+        let now = e.metrics.tokens_generated;
+        if now == last {
+            stalls += 1;
+        } else {
+            stalls = 0;
+        }
+        assert!(
+            stalls <= 1,
+            "decoder starved: no token for {stalls} consecutive ticks while long prompts prefill"
+        );
+        last = now;
+    }
+    e.run_to_completion().unwrap();
+    assert_eq!(e.metrics.requests_finished, 4);
+    assert!(e.metrics.prefill_chunks > 0, "long prompts must have chunked");
+    assert!(e.metrics.itl.count() > 0, "ITL histogram must have samples");
+}
+
 #[test]
 fn impossible_request_finishes_cache_full_and_queue_moves_on() {
     // pool: 2 pages * 4 tokens = 8 cache tokens max
@@ -480,6 +676,53 @@ fn two_replica_tcp_server_answers_concurrent_requests_with_affinity() {
     }
 }
 
+/// A chunked-prefill replica behind the real TCP front-end answers
+/// generation requests AND the `{"stats": true}` metrics query — the wire
+/// stats carry the itl/ttft histograms with p99 fields.
+#[test]
+fn tcp_server_serves_chunked_engine_and_stats_queries() {
+    let engines: Vec<Box<dyn EngineCore>> =
+        vec![Box::new(sim_engine_chunked(7, 256, 8, ReadPath::Auto, false, 8, 16))];
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        serve_on(listener, engines, RoutePolicy::RoundRobin, 2).unwrap()
+    });
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    for line in [
+        r#"{"id": 1, "prompt": "hello chunked world", "max_new_tokens": 6}"#,
+        r#"{"id": 2, "prompt": "second request padding", "max_new_tokens": 6}"#,
+        r#"{"id": 3, "stats": true}"#,
+    ] {
+        stream.write_all(line.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+    }
+    stream.flush().unwrap();
+    let reader = BufReader::new(stream);
+    let mut gen_ids = Vec::new();
+    let mut saw_stats = false;
+    for line in reader.lines().take(3) {
+        let line = line.unwrap();
+        let j = Json::parse(&line).unwrap_or_else(|e| panic!("bad response {line}: {e}"));
+        match j.opt("stats") {
+            Some(stats) => {
+                saw_stats = true;
+                assert_eq!(j.get("id").unwrap().as_u64().unwrap(), 3);
+                // histogram fields present with microsecond quantiles
+                assert!(stats.get("itl").unwrap().get("p99_us").unwrap().as_f64().is_ok());
+                assert!(stats.get("ttft").unwrap().get("p50_us").unwrap().as_f64().is_ok());
+            }
+            None => gen_ids.push(j.get("id").unwrap().as_u64().unwrap()),
+        }
+    }
+    let summary = server.join().unwrap();
+    assert!(saw_stats, "the stats query must be answered");
+    gen_ids.sort();
+    assert_eq!(gen_ids, vec![1, 2]);
+    assert_eq!(summary.served, 2, "stats responses do not count as served");
+}
+
 /// Build the engine against real artifacts + a real PJRT runtime. Returns
 /// None (and the calling test SKIPS, passing vacuously) when either is
 /// unavailable — artifacts need `make artifacts` (JAX), execution needs a
@@ -503,13 +746,9 @@ fn engine(quant: QuantConfig, capacity_pages: usize) -> Option<Engine> {
     Some(Engine::new(
         exec,
         EngineConfig {
-            quant,
-            batch_policy: BatchPolicy::default(),
-            scheduler: SchedulerPolicy::default(),
             capacity_pages,
-            page_tokens: 16,
             read_path: ReadPath::Auto, // PJRT backend: resolves to reinflate
-            prefix_cache: false,
+            ..EngineConfig::new(quant)
         },
     ))
 }
