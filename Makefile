@@ -5,7 +5,8 @@ ARTIFACTS ?= artifacts
 
 .PHONY: all artifacts test bench smoke bench-serving smoke-serving \
         bench-fused smoke-fused bench-prefix smoke-prefix \
-        bench-latency smoke-latency docs fmt lint clean
+        bench-latency smoke-latency bench-quality smoke-quality \
+        docs fmt lint clean
 
 all: test
 
@@ -66,6 +67,16 @@ bench-latency:
 smoke-latency:
 	cargo bench --bench serving_latency -- --smoke
 
+# The paper's quality loop, artifact-free: layer-group sensitivity sweep on
+# the sim harness -> boost the most-sensitive half -> serve that schedule,
+# asserting the achieved MemoryStats bits/element matches Eq.3 within 1%.
+# Writes BENCH_quality_sweep.json. Field docs: docs/BENCH_GLOSSARY.md.
+bench-quality:
+	cargo bench --bench quality_sweep
+
+smoke-quality:
+	cargo bench --bench quality_sweep -- --smoke
+
 # Documentation gate: rustdoc clean under -D warnings (missing_docs
 # included for quant/ and coordinator/) and every doc-example compiles
 # and runs. CI runs the same two commands in the `docs` job.
@@ -84,4 +95,4 @@ clean:
 	cargo clean
 	rm -f BENCH_quant_hot_path.json BENCH_serving_throughput.json \
 	      BENCH_fused_attention.json BENCH_prefix_caching.json \
-	      BENCH_serving_latency.json
+	      BENCH_serving_latency.json BENCH_quality_sweep.json

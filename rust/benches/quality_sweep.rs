@@ -1,0 +1,259 @@
+//! Quality sweep: the paper's full sensitivity loop, artifact-free — the
+//! tentpole behind `BENCH_quality_sweep.json`.
+//!
+//! Three phases, all on the deterministic sim backend (no PJRT artifacts
+//! anywhere):
+//!
+//! 1. **Sweep** — run the §4.4 layer-group sensitivity sweep on an 8-layer
+//!    sim harness (groups of 2 → 4 groups) and time one full sweep.
+//! 2. **Pick** — boost the most-sensitive half of the groups (lowest
+//!    single-boost ΔPPL). Boosting 4 of 8 layers to (256,128) puts Eq. 1
+//!    angle bits at 3.25 + 0.5·0.5 = 3.5 — inside the abstract's
+//!    3.28–3.67 b/elem range, which the bench asserts.
+//! 3. **Serve** — run the chosen schedule through a full `Engine` pass and
+//!    compare the ACHIEVED bits-per-element from `MemoryStats` (exact
+//!    packed bits over stored elements, sampled at peak cache occupancy)
+//!    against `QuantConfig::bits_per_element()`: they must agree within 1%
+//!    (exactly, for power-of-two codebooks).
+//!
+//! Quant flags are the shared [`QuantSpec`] set (`--nk`, `--boost-layers`,
+//! `--norms`, …): the served schedule defaults to the sweep's pick but any
+//! flag overrides it, so `--boost-layers 0,1` serves exactly what
+//! `turboangle serve --sim --boost-layers 0,1` would.
+//!
+//! JSON summary fields are documented in docs/BENCH_GLOSSARY.md.
+//!
+//!     cargo bench --bench quality_sweep [-- --smoke]
+
+use std::time::Duration;
+use turboangle::coordinator::{Engine, EngineConfig, MemoryStats};
+use turboangle::eval::{sensitivity, PplHarness};
+use turboangle::quant::{QuantConfig, QuantSpec};
+use turboangle::runtime::SimExecutor;
+use turboangle::util::bench::{bench, black_box, JsonReport};
+use turboangle::util::cli::Args;
+use turboangle::workload::{self, WorkloadSpec};
+
+const OUT_JSON: &str = "BENCH_quality_sweep.json";
+const SIM_LAYERS: usize = 8;
+const GROUP_SIZE: usize = 2;
+const D_HEAD: usize = 8;
+
+/// The one sim "model" every phase shares (seed 1, 8 layers — deep enough
+/// that boost schedules differ layer to layer).
+fn sim_exec() -> SimExecutor {
+    SimExecutor::with_dims(1, SIM_LAYERS, 2, D_HEAD, 4, 32, 64)
+}
+
+fn wspec(n_requests: usize) -> WorkloadSpec {
+    WorkloadSpec {
+        n_requests,
+        prompt_min: 8,
+        prompt_max: 24,
+        gen_min: 4,
+        gen_max: 8,
+        seed: 11,
+        ..Default::default()
+    }
+}
+
+/// Submit + drain one workload pass, tracking the peak-occupancy memory
+/// snapshot (stats at completion are empty — sequences free on finish).
+fn serve_pass(
+    engine: &mut Engine<SimExecutor>,
+    n_requests: usize,
+    pass: u64,
+    peak: &mut MemoryStats,
+) -> usize {
+    for mut req in workload::generate(&wspec(n_requests)) {
+        req.id += pass * 1_000_000;
+        engine.submit(req);
+    }
+    while engine.has_work() {
+        engine.tick().expect("engine tick");
+        let st = engine.memory_stats();
+        if st.stored_elements > peak.stored_elements {
+            *peak = st;
+        }
+    }
+    engine.take_finished().len()
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).expect("bench flags");
+    let smoke = args.get_bool("smoke");
+    let mut spec = QuantSpec::from_args(&args, "k8v4log").expect("quant flags");
+    let budget = if smoke {
+        Duration::from_millis(60)
+    } else {
+        Duration::from_millis(600)
+    };
+    let n_requests = if smoke { 8 } else { 24 };
+    println!(
+        "== quality sweep: {SIM_LAYERS}-layer sim, groups of {GROUP_SIZE}, \
+         {n_requests} requests/pass =="
+    );
+
+    // -- phase 1: the sensitivity sweep (artifact-free) ------------------
+    let h = PplHarness::sim(sim_exec()).expect("sim harness");
+    let report = sensitivity::layer_group_sweep(&h, GROUP_SIZE).expect("sweep");
+    let sweep_evals = *h.evals_run.borrow();
+    for row in &report.singles {
+        println!(
+            "  {}: layers {}..={}  dPPL {:+.4}",
+            row.group, row.layers.0, row.layers.1, row.delta_ppl
+        );
+    }
+    let r_sweep = bench("layer-group sensitivity sweep (sim)", budget, || {
+        let h = PplHarness::sim(sim_exec()).expect("sim harness");
+        let rep = sensitivity::layer_group_sweep(&h, GROUP_SIZE).expect("sweep");
+        black_box(rep.singles.len());
+    });
+    println!("{}", r_sweep.line(Some((sweep_evals as f64, "eval"))));
+
+    // -- phase 2: pick the boosted set (most-sensitive half) -------------
+    let mut ranked: Vec<_> = report.singles.iter().collect();
+    ranked.sort_by(|a, b| a.delta_ppl.total_cmp(&b.delta_ppl));
+    let picked = &ranked[..report.singles.len() / 2];
+    let mut layers: Vec<usize> = picked
+        .iter()
+        .flat_map(|r| r.layers.0..=r.layers.1)
+        .collect();
+    layers.sort_unstable();
+    let best_groups: Vec<&str> = picked.iter().map(|r| r.group.as_str()).collect();
+    let boosted_delta = h
+        .delta_ppl(&QuantConfig::selective_boost(SIM_LAYERS, &layers, 256, 128))
+        .expect("boosted eval");
+    println!(
+        "picked {} -> boost layers {layers:?}  dPPL {boosted_delta:+.4} \
+         (uniform {:+.4})",
+        best_groups.join("+"),
+        report.uniform_delta
+    );
+    assert!(
+        boosted_delta < report.uniform_delta,
+        "sweep-picked boost must beat uniform: {boosted_delta} vs {}",
+        report.uniform_delta
+    );
+
+    // the served schedule: sweep pick unless the user passed a boost flag
+    let used_default_schedule = spec.boost_layers.is_none() && spec.n_early == 0;
+    if used_default_schedule {
+        spec.boost_layers = Some(layers.clone());
+    }
+    let cfg = spec.build(SIM_LAYERS).expect("boost schedule");
+    let uniform_cfg = {
+        let mut s = spec.clone();
+        s.boost_layers = None;
+        s.n_early = 0;
+        s.build(SIM_LAYERS).expect("uniform schedule")
+    };
+    let eq1 = cfg.angle_bits_per_element();
+    let eq3 = cfg.bits_per_element(D_HEAD);
+    println!("serving {} ({eq1:.3} angle, {eq3:.3} total b/elem)", cfg.tag());
+    if used_default_schedule {
+        // the abstract's operating range for boosted angle schedules
+        assert!(
+            (3.28..=3.67).contains(&eq1),
+            "default schedule angle bits {eq1} outside the paper's 3.28-3.67"
+        );
+    }
+
+    // -- phase 3: serve the schedule, verify the achieved rate -----------
+    let mut boosted_engine = Engine::new(sim_exec(), EngineConfig::new(cfg.clone()));
+    let mut uniform_engine = Engine::new(sim_exec(), EngineConfig::new(uniform_cfg));
+    let mut peak = MemoryStats::default();
+    let mut pass = 0u64;
+    let r_boost = bench("serve pass (sweep-boosted schedule)", budget, || {
+        let done = serve_pass(&mut boosted_engine, n_requests, pass, &mut peak);
+        pass += 1;
+        black_box(done);
+    });
+    println!("{}", r_boost.line(Some((n_requests as f64, "req"))));
+    let mut upeak = MemoryStats::default();
+    let mut upass = 0u64;
+    let r_uniform = bench("serve pass (uniform base schedule)", budget, || {
+        let done = serve_pass(&mut uniform_engine, n_requests, upass, &mut upeak);
+        upass += 1;
+        black_box(done);
+    });
+    println!("{}", r_uniform.line(Some((n_requests as f64, "req"))));
+
+    assert!(peak.stored_elements > 0, "serve pass stored nothing");
+    let achieved = peak.total_bits_per_element();
+    let rel_err = (achieved - eq3).abs() / eq3;
+    println!(
+        "achieved rate: {achieved:.4} b/elem ({:.4} angle + {:.4} norm) vs \
+         Eq.3 {eq3:.4} — rel err {:.2e}",
+        peak.angle_bits_per_element(),
+        peak.norm_bits_per_element(),
+        rel_err
+    );
+    let pow2 = cfg
+        .layers
+        .iter()
+        .all(|b| b.n_k.is_power_of_two() && b.n_v.is_power_of_two());
+    if pow2 {
+        // acceptance criterion: stored bits match the paper accounting
+        assert!(
+            rel_err <= 0.01,
+            "achieved {achieved} vs Eq.3 {eq3}: rel err {rel_err} > 1%"
+        );
+    } else {
+        println!("(non-power-of-two codebooks: packed width exceeds log2(n); 1% gate skipped)");
+    }
+
+    // -- report ----------------------------------------------------------
+    let mut rep = JsonReport::new();
+    rep.summary("smoke", if smoke { 1.0 } else { 0.0 });
+    rep.summary("sim_layers", SIM_LAYERS);
+    rep.summary("group_size", GROUP_SIZE);
+    rep.summary("d_head", D_HEAD);
+    rep.summary("requests_per_pass", n_requests);
+    rep.summary("sweep_evals", sweep_evals);
+    rep.summary("uniform_delta_ppl", report.uniform_delta);
+    rep.summary("boosted_delta_ppl", boosted_delta);
+    rep.summary("best_groups", best_groups.join("+").as_str());
+    rep.summary(
+        "boosted_layers",
+        layers
+            .iter()
+            .map(|l| l.to_string())
+            .collect::<Vec<_>>()
+            .join(",")
+            .as_str(),
+    );
+    rep.summary("served_tag", cfg.tag().as_str());
+    rep.summary("eq1_angle_bits", eq1);
+    rep.summary("eq3_total_bits", eq3);
+    rep.summary("achieved_angle_bits", peak.angle_bits_per_element());
+    rep.summary("achieved_norm_bits", peak.norm_bits_per_element());
+    rep.summary("achieved_total_bits", achieved);
+    rep.summary("rate_rel_err", rel_err);
+    rep.summary("compression_ratio", peak.compression_ratio());
+    let boost_tput = r_boost.throughput(n_requests as f64);
+    let uniform_tput = r_uniform.throughput(n_requests as f64);
+    rep.summary("serve_req_per_s_boosted", boost_tput);
+    rep.summary("serve_req_per_s_uniform", uniform_tput);
+    rep.summary("boost_serve_overhead", uniform_tput / boost_tput);
+    rep.push(
+        &r_sweep,
+        sweep_evals as f64,
+        "eval",
+        &[("op", "sensitivity_sweep".into()), ("mode", "sim".into())],
+    );
+    rep.push(
+        &r_boost,
+        n_requests as f64,
+        "req",
+        &[("op", "serve_pass".into()), ("mode", "boosted".into())],
+    );
+    rep.push(
+        &r_uniform,
+        n_requests as f64,
+        "req",
+        &[("op", "serve_pass".into()), ("mode", "uniform".into())],
+    );
+    rep.write(OUT_JSON).expect("write bench json");
+    println!("wrote {OUT_JSON}");
+}

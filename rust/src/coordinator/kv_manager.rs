@@ -178,6 +178,29 @@ impl SideStore {
             + self.raw_norms.len() * 4
     }
 
+    /// Exact packed angle payload in bits.
+    fn angle_bits(&self) -> u64 {
+        self.angles.len_bits() as u64
+    }
+
+    /// Exact norm payload in bits: packed codes plus one fp32 (min, max)
+    /// window per token vector in quantized modes, or raw fp32 norms in
+    /// passthrough mode.
+    fn norm_bits(&self) -> u64 {
+        self.norm_codes.len_bits() as u64
+            + self.windows.len() as u64 * 64
+            + self.raw_norms.len() as u64 * 32
+    }
+
+    /// Token vectors stored in this chunk (`half` = d/2 pair norms each).
+    fn token_vectors(&self, half: usize) -> u64 {
+        if self.raw_norms.is_empty() {
+            self.windows.len() as u64
+        } else {
+            (self.raw_norms.len() / half) as u64
+        }
+    }
+
     /// Fold every stored bit into `h` — part of a page's content address.
     fn fold_hash(&self, mut h: u64) -> u64 {
         for &w in self.angles.words() {
@@ -228,16 +251,37 @@ impl PageBlock {
             .sum()
     }
 
+    /// Exact payload accounting over every (layer, head, side) chunk:
+    /// (angle bits, norm bits, token vectors stored). Each token vector
+    /// encodes `d_head` original fp16 elements, so achieved
+    /// bits-per-element falls straight out of these sums.
+    fn bit_stats(&self, half: usize) -> (u64, u64, u64) {
+        let (mut a, mut n, mut t) = (0u64, 0u64, 0u64);
+        for row in &self.chunks {
+            for (k, v) in row {
+                a += k.angle_bits() + v.angle_bits();
+                n += k.norm_bits() + v.norm_bits();
+                t += k.token_vectors(half) + v.token_vectors(half);
+            }
+        }
+        (a, n, t)
+    }
+
     /// Content address of this block, chained through its predecessor's
-    /// page id AND the token window the block covers. The chain + window
-    /// binding means a page id identifies the bits, the tokens they encode,
-    /// and the whole-prefix position they decode at — two different
-    /// prefixes never dedup into one id (the dedup equality check compares
-    /// the stored window too, so even a hash collision cannot merge them),
-    /// so a page appears at exactly one radix-tree position and tree
-    /// eviction can never free a page another node still points at.
-    fn content_hash(&self, parent: PageId, window: &[i32]) -> u64 {
-        let mut h = mix(parent ^ 0x9A6E_B10C);
+    /// page id, the token window the block covers, AND the quant config's
+    /// [`QuantConfig::content_fingerprint`]. The chain + window binding
+    /// means a page id identifies the bits, the tokens they encode, and
+    /// the whole-prefix position they decode at — two different prefixes
+    /// never dedup into one id (the dedup equality check compares the
+    /// stored window too, so even a hash collision cannot merge them), so
+    /// a page appears at exactly one radix-tree position and tree eviction
+    /// can never free a page another node still points at. The config
+    /// fingerprint keeps mixed-precision pages apart: two configs can pack
+    /// identical tokens into byte-identical streams (same physical widths,
+    /// e.g. 48- and 64-bin codebooks both pack 6-bit codes), yet they
+    /// decode differently — so pages must never dedup across configs.
+    fn content_hash(&self, parent: PageId, window: &[i32], cfg_fp: u64) -> u64 {
+        let mut h = mix(parent ^ 0x9A6E_B10C ^ cfg_fp);
         for &t in window {
             h = mix(h ^ (t as u64));
         }
@@ -350,6 +394,9 @@ pub struct PagedKvCache {
     /// chain content hash -> page id, for dedup at seal time
     by_hash: HashMap<u64, PageId>,
     next_page_id: PageId,
+    /// memoized [`QuantConfig::content_fingerprint`] of `cfg`, folded into
+    /// every sealed page's content hash
+    cfg_fp: u64,
 }
 
 /// Point-in-time memory accounting of one [`PagedKvCache`].
@@ -381,15 +428,55 @@ pub struct MemoryStats {
     pub shared_refs: usize,
     /// heap bytes of the shared store's compressed pages
     pub shared_bytes: usize,
+    /// what the swapped sequences' tokens would occupy as fp16 dense K+V
+    pub fp16_swapped_reference_bytes: usize,
+    /// exact packed angle-code bits across resident, shared, and swapped
+    /// streams (each stream counted once)
+    pub angle_bits: u64,
+    /// exact norm payload bits (codes + minmax windows, or raw fp32)
+    /// across the same streams
+    pub norm_bits: u64,
+    /// original fp16 elements those streams encode (token vectors × d)
+    pub stored_elements: u64,
 }
 
 impl MemoryStats {
-    /// fp16 reference bytes / compressed bytes (0 when empty).
+    /// fp16 reference bytes / compressed bytes, swap-pool-resident bytes
+    /// included on both sides (0 when empty). Preempted sequences' streams
+    /// still occupy host memory, so excluding them (the old behavior) made
+    /// the ratio improve spuriously the moment a sequence was swapped out.
     pub fn compression_ratio(&self) -> f64 {
-        if self.compressed_bytes == 0 {
+        let compressed = self.compressed_bytes + self.swapped_bytes;
+        if compressed == 0 {
             return 0.0;
         }
-        self.fp16_reference_bytes as f64 / self.compressed_bytes as f64
+        (self.fp16_reference_bytes + self.fp16_swapped_reference_bytes) as f64 / compressed as f64
+    }
+
+    /// Achieved angle bits per original fp16 element (Eq. 1's physical
+    /// counterpart; 0 when nothing is stored).
+    pub fn angle_bits_per_element(&self) -> f64 {
+        if self.stored_elements == 0 {
+            return 0.0;
+        }
+        self.angle_bits as f64 / self.stored_elements as f64
+    }
+
+    /// Achieved norm payload bits per original fp16 element (Eq. 3's
+    /// `b_norm/2 + 64/d` term as actually stored).
+    pub fn norm_bits_per_element(&self) -> f64 {
+        if self.stored_elements == 0 {
+            return 0.0;
+        }
+        self.norm_bits as f64 / self.stored_elements as f64
+    }
+
+    /// Achieved total bits per original fp16 element — must match
+    /// `QuantConfig::bits_per_element(d_head)` within 1% (the quality_sweep
+    /// bench asserts this; exact for power-of-two codebooks, where the
+    /// packed width equals log2(n)).
+    pub fn total_bits_per_element(&self) -> f64 {
+        self.angle_bits_per_element() + self.norm_bits_per_element()
     }
 
     /// Pool pages charged to resident sequences' private streams.
@@ -404,10 +491,12 @@ impl MemoryStats {
     }
 
     /// One operator-facing line: live footprint, the shared/private page
-    /// and reservation split (the dedup savings at a glance), swap depth.
+    /// and reservation split (the dedup savings at a glance), swap depth,
+    /// and the achieved bit rate against the paper's Eq. 3 accounting.
     pub fn report(&self) -> String {
         format!(
             "kv: {} seqs, {} tok, {} B compressed ({:.2}x vs fp16)\n\
+             rate   {:.3} b/elem ({:.3} angle + {:.3} norm) over {} elements\n\
              pages  {}/{} allocated (shared {} + private {}) | reserved {} \
              (shared {} + private {})\n\
              shared {} pages, {} refs, {} B | swapped {} seqs ({} tok, {} B)",
@@ -415,6 +504,10 @@ impl MemoryStats {
             self.tokens,
             self.compressed_bytes,
             self.compression_ratio(),
+            self.total_bits_per_element(),
+            self.angle_bits_per_element(),
+            self.norm_bits_per_element(),
+            self.stored_elements,
             self.pages_allocated,
             self.pages_capacity,
             self.shared_pages,
@@ -451,6 +544,7 @@ impl PagedKvCache {
         // doesn't) — enforced here, in release builds too, because every
         // serving path builds its cache through this constructor
         cfg.validate().expect("invalid quant config");
+        let cfg_fp = cfg.content_fingerprint();
         PagedKvCache {
             cfg,
             n_layers,
@@ -463,6 +557,7 @@ impl PagedKvCache {
             shared_store: HashMap::new(),
             by_hash: HashMap::new(),
             next_page_id: 1,
+            cfg_fp,
         }
     }
 
@@ -622,7 +717,7 @@ impl PagedKvCache {
         for (j, block) in s.owned.drain(..).take(full).enumerate() {
             let start = (adopted.len() + j) * page_tokens;
             let window = &tokens[start..start + page_tokens];
-            let h = block.content_hash(parent, window);
+            let h = block.content_hash(parent, window, self.cfg_fp);
             // dedup only on true equality of parent chain, window, AND
             // bits — a hash collision falls through to a private insert
             // (losing dedup, never correctness or tree-position
@@ -667,6 +762,14 @@ impl PagedKvCache {
     /// eviction guard.
     pub fn shared_page_refs(&self, pid: PageId) -> Option<usize> {
         self.shared_store.get(&pid).map(|p| p.refs)
+    }
+
+    /// Content-chain hash of a shared page (None if unknown). The hash
+    /// binds parent chain, token window, packed bits, AND the quant
+    /// config's fingerprint — tests use this to pin that identical token
+    /// streams under different per-layer configs never collide.
+    pub fn shared_page_hash(&self, pid: PageId) -> Option<u64> {
+        self.shared_store.get(&pid).map(|p| p.hash)
     }
 
     /// Free an UNREFERENCED shared page, returning its pool charge. Errors
@@ -1160,6 +1263,13 @@ impl PagedKvCache {
             swapped_sequences: self.swapped.len(),
             ..Default::default()
         };
+        let half = self.d_head / 2;
+        let add_bits = |st: &mut MemoryStats, block: &PageBlock| {
+            let (a, n, t) = block.bit_stats(half);
+            st.angle_bits += a;
+            st.norm_bits += n;
+            st.stored_elements += t * self.d_head as u64;
+        };
         for s in self.seqs.values() {
             st.tokens += s.len;
             st.compressed_bytes += s.owned_bytes();
@@ -1168,15 +1278,24 @@ impl PagedKvCache {
             // shows up as a better compression ratio
             st.fp16_reference_bytes +=
                 2 * self.n_layers * self.n_kv_heads * s.len * self.d_head * 2;
+            for block in &s.owned {
+                add_bits(&mut st, block);
+            }
         }
         for s in self.swapped.values() {
             st.swapped_tokens += s.len;
             st.swapped_bytes += s.owned_bytes();
+            st.fp16_swapped_reference_bytes +=
+                2 * self.n_layers * self.n_kv_heads * s.len * self.d_head * 2;
+            for block in &s.owned {
+                add_bits(&mut st, block);
+            }
         }
         for p in self.shared_store.values() {
             st.shared_pages += 1;
             st.shared_refs += p.refs;
             st.shared_bytes += p.block.bytes();
+            add_bits(&mut st, &p.block);
         }
         // shared pages are resident memory, charged exactly once
         st.compressed_bytes += st.shared_bytes;
@@ -1924,5 +2043,67 @@ mod tests {
         assert_eq!(len, 9);
         c.free_seq(2).unwrap();
         assert_eq!(c.memory_stats().shared_refs, 0);
+    }
+
+    #[test]
+    fn achieved_rate_matches_eq3_for_pow2_configs() {
+        // power-of-two codebooks pack exactly log2(n) bits per code, so the
+        // physically-stored rate must equal Eq. 3's closed form to the bit —
+        // uniform and boosted, fp32 and quantized norms alike
+        let d = 8usize;
+        for cfg in [
+            QuantConfig::paper_uniform(2),
+            QuantConfig::paper_uniform(2).with_k8v4_log(),
+            QuantConfig::early_boost(2, 1, 256, 128).with_k8v4_log(),
+        ] {
+            let want = cfg.bits_per_element(d);
+            let want_angle = cfg.angle_bits_per_element();
+            let mut c = PagedKvCache::new(cfg, 2, 1, d, 16, 64, 4);
+            c.new_seq(1, 10).unwrap();
+            append_stream(&mut c, 1, 0, 10, 31);
+            let st = c.memory_stats();
+            assert_eq!(st.stored_elements, 2 * 2 * 10 * d as u64);
+            assert!(
+                (st.angle_bits_per_element() - want_angle).abs() < 1e-9,
+                "angle rate {} != Eq.1 {}",
+                st.angle_bits_per_element(),
+                want_angle
+            );
+            assert!(
+                (st.total_bits_per_element() - want).abs() < 1e-9,
+                "achieved rate {} != Eq.3 {}",
+                st.total_bits_per_element(),
+                want
+            );
+        }
+        // empty cache reports a zero rate, not NaN
+        let c = mk_cache((NormMode::FP32, NormMode::FP32));
+        assert_eq!(c.memory_stats().total_bits_per_element(), 0.0);
+    }
+
+    #[test]
+    fn compression_ratio_is_swap_invariant() {
+        // streams move to the swap pool verbatim, so preempting a sequence
+        // must not move the reported ratio — the old accounting dropped
+        // swapped bytes AND their fp16 reference, improving it spuriously
+        let mut c = mk_cache((NormMode::LINEAR8, NormMode::LOG4));
+        c.new_seq(1, 8).unwrap();
+        append_stream(&mut c, 1, 0, 8, 5);
+        c.new_seq(2, 8).unwrap();
+        append_stream(&mut c, 2, 0, 8, 900);
+        let before = c.memory_stats();
+        c.swap_out(2).unwrap();
+        let after = c.memory_stats();
+        assert!(after.swapped_bytes > 0 && after.fp16_swapped_reference_bytes > 0);
+        assert!(
+            (before.compression_ratio() - after.compression_ratio()).abs() < 1e-12,
+            "swap must not change the ratio: {} vs {}",
+            before.compression_ratio(),
+            after.compression_ratio()
+        );
+        // the achieved bit rate keeps counting swapped streams too
+        assert_eq!(before.stored_elements, after.stored_elements);
+        assert_eq!(before.angle_bits, after.angle_bits);
+        assert_eq!(before.norm_bits, after.norm_bits);
     }
 }

@@ -5,18 +5,27 @@
 //! eval_fwd artifact; PPL = exp(Σ nll / Σ tokens) and ΔPPL is relative to
 //! the unquantized (mode=None) run of the SAME weights — mirroring the
 //! paper's "relative to fp16 inference" convention.
+//!
+//! The harness programs against [`ModelBackend`], not a concrete executor:
+//! [`PplHarness::new`] wires the PJRT-backed `ModelExecutor` to its
+//! manifest-shipped chunk file, while [`PplHarness::sim`] synthesizes a
+//! deterministic held-out stream for `SimExecutor` — so the full paper
+//! loop (layer-group sweep → boosted schedule → serve) runs artifact-free
+//! in CI.
 
 use crate::quant::QuantConfig;
-use crate::runtime::{tensorfile, Manifest, ModelExecutor};
+use crate::runtime::{tensorfile, Manifest, ModelBackend, ModelExecutor, SimExecutor};
+use crate::util::hash::splitmix64 as mix;
 use anyhow::{ensure, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
 
 pub struct PplHarness {
-    pub exec: ModelExecutor,
+    exec: Box<dyn ModelBackend>,
     chunks: Vec<i32>,
     n_chunks: usize,
     chunk_len: usize,
+    batch: usize,
     cache: RefCell<HashMap<String, f64>>,
     baseline: RefCell<Option<f64>>,
     /// Executions performed (for EXPERIMENTS.md bookkeeping).
@@ -24,18 +33,53 @@ pub struct PplHarness {
 }
 
 impl PplHarness {
+    /// Harness over the PJRT executor, reading the manifest's held-out
+    /// `eval_chunks.tang`.
     pub fn new(manifest: &Manifest, exec: ModelExecutor) -> Result<Self> {
         let t = tensorfile::read(manifest.path("eval_chunks.tang"))?;
         let chunks_t = &t["chunks"];
-        let n_chunks = chunks_t.shape[0];
-        let chunk_len = chunks_t.shape[1];
-        ensure!(n_chunks == manifest.eval.chunks);
-        ensure!(chunk_len == manifest.eval.chunk_len);
+        ensure!(chunks_t.shape[0] == manifest.eval.chunks);
+        ensure!(chunks_t.shape[1] == manifest.eval.chunk_len);
+        Self::from_backend(Box::new(exec), chunks_t.as_i32()?)
+    }
+
+    /// Artifact-free harness over the deterministic sim: the held-out
+    /// stream is synthesized from the backend's eval protocol, so the
+    /// sensitivity loop needs no PJRT artifacts anywhere.
+    pub fn sim(exec: SimExecutor) -> Result<Self> {
+        let proto = ModelBackend::eval_protocol(&exec).clone();
+        let top = ModelBackend::profile(&exec).vocab.min(250) as u64;
+        let mut chunks = Vec::with_capacity(proto.chunks * proto.chunk_len);
+        let mut h = 0xC0FF_EEu64;
+        for _ in 0..proto.chunks * proto.chunk_len {
+            h = mix(h ^ 0x9E37);
+            chunks.push(1 + (h % top) as i32);
+        }
+        Self::from_backend(Box::new(exec), chunks)
+    }
+
+    /// Harness over any eval-capable backend and its held-out chunk
+    /// stream (`eval_protocol().chunks × chunk_len` tokens, row-major).
+    pub fn from_backend(exec: Box<dyn ModelBackend>, chunks: Vec<i32>) -> Result<Self> {
+        let proto = exec.eval_protocol();
+        let (n_chunks, chunk_len, batch) = (proto.chunks, proto.chunk_len, proto.batch);
+        ensure!(
+            chunks.len() == n_chunks * chunk_len,
+            "chunk stream is {} tokens, protocol wants {}x{}",
+            chunks.len(),
+            n_chunks,
+            chunk_len
+        );
+        ensure!(
+            batch >= 1 && n_chunks % batch == 0,
+            "eval chunk count {n_chunks} must be a positive multiple of the eval batch {batch}"
+        );
         Ok(PplHarness {
             exec,
-            chunks: chunks_t.as_i32()?,
+            chunks,
             n_chunks,
             chunk_len,
+            batch,
             cache: RefCell::new(HashMap::new()),
             baseline: RefCell::new(None),
             evals_run: RefCell::new(0),
@@ -48,17 +92,16 @@ impl PplHarness {
         if let Some(&v) = self.cache.borrow().get(&key) {
             return Ok(v);
         }
-        let batch = self.exec.eval_proto.batch;
         let mut nll_sum = 0.0f64;
         let mut cnt_sum = 0.0f64;
         let mut i = 0;
         while i < self.n_chunks {
             let rows = &self.chunks
-                [i * self.chunk_len..(i + batch) * self.chunk_len];
+                [i * self.chunk_len..(i + self.batch) * self.chunk_len];
             let (nll, cnt) = self.exec.eval_nll(rows, cfg)?;
             nll_sum += nll.iter().map(|&v| v as f64).sum::<f64>();
             cnt_sum += cnt.iter().map(|&v| v as f64).sum::<f64>();
-            i += batch;
+            i += self.batch;
         }
         let ppl = (nll_sum / cnt_sum).exp();
         *self.evals_run.borrow_mut() += 1;
@@ -71,7 +114,7 @@ impl PplHarness {
         if let Some(v) = *self.baseline.borrow() {
             return Ok(v);
         }
-        let v = self.ppl(&QuantConfig::none(self.exec.profile.n_layers))?;
+        let v = self.ppl(&QuantConfig::none(self.n_layers()))?;
         *self.baseline.borrow_mut() = Some(v);
         Ok(v)
     }
@@ -79,6 +122,11 @@ impl PplHarness {
     /// ΔPPL = PPL(cfg) − PPL(reference).
     pub fn delta_ppl(&self, cfg: &QuantConfig) -> Result<f64> {
         Ok(self.ppl(cfg)? - self.baseline_ppl()?)
+    }
+
+    /// The rotation diagonal currently in effect on the backend.
+    pub fn sign(&self) -> Vec<f32> {
+        self.exec.sign().to_vec()
     }
 
     /// Swap the rotation diagonal and invalidate every memoized PPL
@@ -91,10 +139,43 @@ impl PplHarness {
     }
 
     pub fn n_layers(&self) -> usize {
-        self.exec.profile.n_layers
+        self.exec.profile().n_layers
     }
 
     pub fn d_head(&self) -> usize {
-        self.exec.profile.d_head
+        self.exec.profile().d_head
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_harness_runs_the_paper_loop_without_artifacts() {
+        let h = PplHarness::sim(SimExecutor::with_dims(1, 8, 2, 8, 4, 32, 64)).unwrap();
+        let base = h.baseline_ppl().unwrap();
+        assert!(base.is_finite() && base > 1.0);
+        let uniform = h.delta_ppl(&QuantConfig::paper_uniform(8)).unwrap();
+        let boosted = h.delta_ppl(&QuantConfig::early_boost(8, 4, 256, 128)).unwrap();
+        assert!(uniform > 0.0, "{uniform}");
+        assert!(boosted < uniform, "boost must help: {boosted} vs {uniform}");
+        // memoization: re-asking runs no extra evals
+        let runs = *h.evals_run.borrow();
+        let _ = h.delta_ppl(&QuantConfig::paper_uniform(8)).unwrap();
+        assert_eq!(*h.evals_run.borrow(), runs);
+    }
+
+    #[test]
+    fn sign_swap_invalidates_memo() {
+        let mut h = PplHarness::sim(SimExecutor::new(3)).unwrap();
+        let cfg = QuantConfig::paper_uniform(2);
+        let a = h.delta_ppl(&cfg).unwrap();
+        let mut sign = h.sign();
+        assert_eq!(sign.len(), h.d_head());
+        sign[0] = -1.0;
+        h.set_sign(&sign).unwrap();
+        let b = h.delta_ppl(&cfg).unwrap();
+        assert_ne!(a, b, "memo must not survive a diagonal swap");
     }
 }

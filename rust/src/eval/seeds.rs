@@ -42,7 +42,7 @@ pub struct SeedSweep {
 /// build-time numpy diagonal shipped in the weights).
 pub fn seed_sweep(h: &mut PplHarness, cfg: &QuantConfig, n_seeds: usize) -> Result<SeedSweep> {
     let d = h.d_head();
-    let original = h.exec.sign.clone();
+    let original = h.sign();
     let mut deltas = Vec::new();
     for seed in 0..n_seeds as u64 {
         let sign = if seed == 0 {
@@ -66,13 +66,9 @@ pub fn seed_sweep(h: &mut PplHarness, cfg: &QuantConfig, n_seeds: usize) -> Resu
     })
 }
 
-/// Convenience: build a harness and sweep a standard config set.
-pub fn run(
-    manifest: &Manifest,
-    exec: ModelExecutor,
-    n_seeds: usize,
-) -> Result<Vec<(String, SeedSweep)>> {
-    let mut h = PplHarness::new(manifest, exec)?;
+/// Sweep the standard config set over a prebuilt harness — any
+/// eval-capable backend works, so the sim harness runs this artifact-free.
+pub fn run_with(h: &mut PplHarness, n_seeds: usize) -> Result<Vec<(String, SeedSweep)>> {
     let l = h.n_layers();
     let mut out = Vec::new();
     for cfg in [
@@ -80,8 +76,18 @@ pub fn run(
         QuantConfig::early_boost(l, 4, 256, 128),
         QuantConfig::paper_uniform(l).with_k8v4_log(),
     ] {
-        let sweep = seed_sweep(&mut h, &cfg, n_seeds)?;
+        let sweep = seed_sweep(h, &cfg, n_seeds)?;
         out.push((cfg.tag(), sweep));
     }
     Ok(out)
+}
+
+/// Convenience: build the PJRT harness and sweep the standard config set.
+pub fn run(
+    manifest: &Manifest,
+    exec: ModelExecutor,
+    n_seeds: usize,
+) -> Result<Vec<(String, SeedSweep)>> {
+    let mut h = PplHarness::new(manifest, exec)?;
+    run_with(&mut h, n_seeds)
 }

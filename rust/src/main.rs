@@ -8,9 +8,11 @@
 use anyhow::{bail, Result};
 use turboangle::coordinator::{Engine, EngineConfig, EngineCore, ReadPath, RoutePolicy};
 use turboangle::eval::{search, sensitivity, sweep, PplHarness};
-use turboangle::quant::{angle, fwht, norm, Mode, NormMode, QuantConfig};
+use turboangle::quant::{angle, fwht, norm, spec, NormMode, QuantConfig, QuantSpec};
 use turboangle::report;
-use turboangle::runtime::{tensorfile, Entry, Manifest, ModelExecutor, Runtime};
+use turboangle::runtime::{
+    tensorfile, Entry, Manifest, ModelBackend, ModelExecutor, Runtime, SimExecutor,
+};
 use turboangle::util::cli::Args;
 use turboangle::workload::{self, WorkloadSpec};
 
@@ -35,27 +37,41 @@ GLOBAL FLAGS
 SUBCOMMANDS
   table1     [--models a,b] [--fine] [--centered]   angular vs scalar (Table 1)
   table2     [--models ...]                         per-layer early-boost (Tables 2+3)
-  table4     [--model M] [--group-size N]           layer-group sensitivity (Table 4)
+  table4     [--model M] [--group-size N] [--sim]   layer-group sensitivity (Table 4)
   table5     [--models ...]                         norm quantization (Table 5)
   table6     [--model M]                            vs calibration baselines (Table 6)
   kv-sens    [--model M] [--n-early N]              K vs V sensitivity (§4.5)
   search     [--model M] [--budget N]               §3.2 few-eval config search
   uniformity [--d D] [--rows N]                     angle-uniformity evidence (§2)
   bits       [--layers L] [--d D]                   Eq.1/Eq.3 rate calculator
-  serve      single-engine serve over a synthetic workload (needs artifacts)
+  serve      single-engine serve over a synthetic workload ([--sim] or artifacts)
   listen     multi-replica TCP JSON-lines server (docs/ARCHITECTURE.md)
-  seed-sweep [--model M] [--seeds N]                dPPL spread over random D (paper limitation)
+  seed-sweep [--model M] [--seeds N] [--sim]        dPPL spread over random D (paper limitation)
   allocate   [--model M] [--budget B] [--group G]   greedy per-layer bit allocation (extension)
   selfcheck                                         golden + HLO cross-validation
-  eval       [--model M] [--nk N] [--nv N] [--n-early E] [--nk-hi N] [--nv-hi N] [--norms fp32|norm8|k8v4log]
+  eval       [--model M | --sim] + QUANT FLAGS      one PPL measurement for one config
+
+QUANT FLAGS (shared by serve, listen, eval — one parser, one validation story)
+  --nk N / --nv N         base K / V codebook sizes (default: 128 / 64)
+  --n-early E             boost the first E layers (paper §4.2 early-boost)
+  --boost-layers SET      boost an explicit layer set: 0,1,5 or 0-7,16-23
+                          (exclusive with --n-early)
+  --nk-hi N / --nv-hi N   boosted-layer codebooks (default: 256 / 128)
+  --norms P               norm preset: fp32 | norm8 | k8v4log
+                          (default: k8v4log when serving, fp32 for eval)
+  --k-norm M / --v-norm M per-side norm modes: fp32|linear4|linear8|log4|log8
+                          (exclusive with --norms)
+  --no-quant              fp reference: Mode::None + fp32 norms
 
 SERVE FLAGS (turboangle serve ...)
   --model M               profile to serve (default: smollm2-sim)
+  --sim                   deterministic simulated backend — no artifacts needed
+  --sim-layers L          sim model depth (default: 8; room for boost schedules)
   --requests N            synthetic requests to run (default: 12)
   --gen-max N             max generated tokens per request (default: 8)
-  --no-quant              serve the fp32 reference instead of the quantized cache
   --read-path P           auto|fused|reinflate (default: auto). fused needs a
-                          fused-capable backend — rejected on the PJRT executor
+                          fused-capable backend (--sim) — rejected on the PJRT
+                          executor
   --prefix-cache M        on|off (default: on) — share compressed pages across
                           common prompt prefixes; token streams are identical
   --chunked-prefill M     on|off (default: off) — split prompt ingestion into
@@ -76,6 +92,7 @@ LISTEN FLAGS (turboangle listen ...)
   --route-policy P        rr|least-loaded|affinity (default: affinity; affinity
                           keys on the wire \"session_key\", string or number)
   --sim                   deterministic simulated backend — no artifacts needed
+  --sim-layers L          sim model depth (default: 2, the protocol-smoke geometry)
   --model M               profile when not --sim (default: smollm2-sim)
   --read-path P           auto|fused|reinflate (default: auto); fused requires
                           --sim (the PJRT backend has no fused decode path)
@@ -91,8 +108,8 @@ LISTEN FLAGS (turboangle listen ...)
 
 BENCH ENTRY POINTS (cargo bench --bench <name> [-- --smoke])
   quant_hot_path | serving_throughput | fused_attention | prefix_caching |
-  serving_latency — each writes BENCH_<name>.json; every field is documented
-  in docs/BENCH_GLOSSARY.md
+  serving_latency | quality_sweep — each writes BENCH_<name>.json; every
+  field is documented in docs/BENCH_GLOSSARY.md
 ";
 
 fn parse_route_policy(s: &str) -> Result<RoutePolicy> {
@@ -166,6 +183,23 @@ fn harness(artifacts: &str, model: &str) -> Result<PplHarness> {
     PplHarness::new(&manifest, exec)
 }
 
+/// The artifact-free deterministic backend at a chosen depth (`--sim`
+/// everywhere uses seed 1 so serve/eval/benches agree on the "model").
+fn sim_exec(layers: usize) -> SimExecutor {
+    SimExecutor::with_dims(1, layers, 2, 8, 4, 32, 64)
+}
+
+/// PPL harness for an eval-style subcommand: the PJRT executor for
+/// `--model`, or the synthetic sim stream under `--sim [--sim-layers L]` —
+/// no artifacts touched on that path.
+fn eval_harness(args: &Args, artifacts: &str, model: &str) -> Result<PplHarness> {
+    if args.get_bool("sim") {
+        PplHarness::sim(sim_exec(args.get_usize("sim-layers", 8)?))
+    } else {
+        harness(artifacts, model)
+    }
+}
+
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     let artifacts = args.get_str("artifacts", "artifacts");
@@ -193,7 +227,7 @@ fn main() -> Result<()> {
             println!("{}", report::table3(&results));
         }
         "table4" => {
-            let h = harness(&artifacts, &args.get_str("model", "phi15-sim"))?;
+            let h = eval_harness(&args, &artifacts, &args.get_str("model", "phi15-sim"))?;
             let rep = sensitivity::layer_group_sweep(&h, args.get_usize("group-size", 4)?)?;
             println!("{}", report::table4(&rep));
         }
@@ -245,38 +279,64 @@ fn main() -> Result<()> {
         "uniformity" => uniformity(args.get_usize("d", 64)?, args.get_usize("rows", 8192)?),
         "bits" => bits_calculator(args.get_usize("layers", 32)?, args.get_usize("d", 128)?),
         "serve" => {
-            args.check_known(&[
+            let mut known = vec![
                 "artifacts",
                 "model",
+                "sim",
+                "sim-layers",
                 "requests",
                 "gen-max",
-                "no-quant",
                 "read-path",
                 "prefix-cache",
                 "chunked-prefill",
                 "chunk-tokens",
                 "tick-token-budget",
-            ])?;
+            ];
+            known.extend_from_slice(spec::FLAGS);
+            args.check_known(&known)?;
+            let quant_spec = QuantSpec::from_args(&args, "k8v4log")?;
             let (chunked, chunk_tokens, tick_budget) = parse_chunk_flags(&args)?;
-            serve(
-                &artifacts,
-                &args.get_str("model", "smollm2-sim"),
-                args.get_usize("requests", 12)?,
-                args.get_usize("gen-max", 8)?,
-                args.get_bool("no-quant"),
-                parse_read_path(&args.get_str("read-path", "auto"))?,
-                parse_on_off("prefix-cache", &args.get_str("prefix-cache", "on"))?,
-                (chunked, chunk_tokens, tick_budget),
-            )?
+            let read_path = parse_read_path(&args.get_str("read-path", "auto"))?;
+            let prefix_cache = parse_on_off("prefix-cache", &args.get_str("prefix-cache", "on"))?;
+            let requests = args.get_usize("requests", 12)?;
+            let gen_max = args.get_usize("gen-max", 8)?;
+            let mk_cfg = |quant: QuantConfig| {
+                let mut cfg = EngineConfig::new(quant);
+                cfg.read_path = read_path;
+                cfg.prefix_cache = prefix_cache;
+                cfg.chunked_prefill = chunked;
+                cfg.chunk_tokens = chunk_tokens;
+                cfg.tick_token_budget = tick_budget;
+                cfg
+            };
+            if args.get_bool("sim") {
+                let sim = sim_exec(args.get_usize("sim-layers", 8)?);
+                let l = ModelBackend::profile(&sim).n_layers;
+                run_serve("sim", sim, mk_cfg(quant_spec.build(l)?), requests, gen_max)?;
+            } else {
+                if read_path == ReadPath::Fused {
+                    bail!(
+                        "--read-path fused requires a fused-capable backend (the PJRT \
+                         executor has none; use --sim, auto, or reinflate)"
+                    );
+                }
+                let model = args.get_str("model", "smollm2-sim");
+                let manifest = Manifest::load(&artifacts)?;
+                let rt = Runtime::cpu()?;
+                eprintln!("compiling prefill+decode for {model} ...");
+                let exec = ModelExecutor::load(&rt, &manifest, &model, Entry::Serve)?;
+                ensure_chunked_support(&exec, chunked)?;
+                let quant = quant_spec.build(exec.profile.n_layers)?;
+                run_serve(&model, exec, mk_cfg(quant), requests, gen_max)?;
+            }
         }
         "seed-sweep" => {
             let model = args.get_str("model", "smollm2-sim");
             let seeds = args.get_usize("seeds", 5)?;
-            let manifest = Manifest::load(&artifacts)?;
-            let rt = Runtime::cpu()?;
-            let exec = ModelExecutor::load(&rt, &manifest, &model, Entry::Eval)?;
-            println!("D-seed sensitivity on {model} ({seeds} diagonals; seed 0 = build-time D):");
-            for (tag, sweep) in turboangle::eval::seeds::run(&manifest, exec, seeds)? {
+            let mut h = eval_harness(&args, &artifacts, &model)?;
+            let label = if args.get_bool("sim") { "sim" } else { model.as_str() };
+            println!("D-seed sensitivity on {label} ({seeds} diagonals; seed 0 = build-time D):");
+            for (tag, sweep) in turboangle::eval::seeds::run_with(&mut h, seeds)? {
                 println!(
                     "  {tag:28} dPPL mean {:+.4} ± {:.4}  [{:+.4}, {:+.4}]  {:?}",
                     sweep.mean,
@@ -314,7 +374,7 @@ fn main() -> Result<()> {
             );
         }
         "listen" => {
-            args.check_known(&[
+            let mut known = vec![
                 "artifacts",
                 "model",
                 "addr",
@@ -322,12 +382,16 @@ fn main() -> Result<()> {
                 "replicas",
                 "route-policy",
                 "sim",
+                "sim-layers",
                 "read-path",
                 "prefix-cache",
                 "chunked-prefill",
                 "chunk-tokens",
                 "tick-token-budget",
-            ])?;
+            ];
+            known.extend_from_slice(spec::FLAGS);
+            args.check_known(&known)?;
+            let quant_spec = QuantSpec::from_args(&args, "k8v4log")?;
             let model = args.get_str("model", "smollm2-sim");
             let addr = args.get_str("addr", "127.0.0.1:7777");
             let max_requests = args.get_usize("max-requests", 0)?;
@@ -344,22 +408,22 @@ fn main() -> Result<()> {
                 // the PJRT executor consumes dense HLO inputs only
                 bail!("--read-path fused requires --sim (the PJRT backend has no fused decode path; use auto or reinflate)");
             }
-            let engine_cfg = |l: usize| {
-                let mut cfg = EngineConfig::new(QuantConfig::paper_uniform(l).with_k8v4_log());
+            let engine_cfg = |l: usize| -> Result<EngineConfig> {
+                let mut cfg = EngineConfig::new(quant_spec.build(l)?);
                 cfg.read_path = read_path;
                 cfg.prefix_cache = prefix_cache;
                 cfg.chunked_prefill = chunked;
                 cfg.chunk_tokens = chunk_tokens;
                 cfg.tick_token_budget = tick_budget;
-                cfg
+                Ok(cfg)
             };
             let mut engines: Vec<Box<dyn EngineCore>> = Vec::with_capacity(replicas);
             if args.get_bool("sim") {
                 // identical seeds: the replicas serve the same "model"
                 for _ in 0..replicas {
-                    let sim = turboangle::runtime::SimExecutor::new(1);
-                    let l = turboangle::runtime::ModelBackend::profile(&sim).n_layers;
-                    engines.push(Box::new(Engine::new(sim, engine_cfg(l))));
+                    let sim = sim_exec(args.get_usize("sim-layers", 2)?);
+                    let l = ModelBackend::profile(&sim).n_layers;
+                    engines.push(Box::new(Engine::new(sim, engine_cfg(l)?)));
                 }
             } else {
                 let manifest = Manifest::load(&artifacts)?;
@@ -368,7 +432,7 @@ fn main() -> Result<()> {
                     let exec = ModelExecutor::load(&rt, &manifest, &model, Entry::Serve)?;
                     ensure_chunked_support(&exec, chunked)?;
                     let l = exec.profile.n_layers;
-                    engines.push(Box::new(Engine::new(exec, engine_cfg(l))));
+                    engines.push(Box::new(Engine::new(exec, engine_cfg(l)?)));
                 }
             }
             let summary =
@@ -380,29 +444,18 @@ fn main() -> Result<()> {
         }
         "selfcheck" => selfcheck(&artifacts)?,
         "eval" => {
+            let mut known = vec!["artifacts", "model", "sim", "sim-layers"];
+            known.extend_from_slice(spec::FLAGS);
+            args.check_known(&known)?;
+            let quant_spec = QuantSpec::from_args(&args, "fp32")?;
             let model = args.get_str("model", "smollm2-sim");
-            let h = harness(&artifacts, &model)?;
-            let l = h.n_layers();
-            let n_early = args.get_usize("n-early", 0)?;
-            let mut cfg = if n_early > 0 {
-                QuantConfig::early_boost(
-                    l,
-                    n_early,
-                    args.get_u32("nk-hi", 256)?,
-                    args.get_u32("nv-hi", 128)?,
-                )
-            } else {
-                QuantConfig::uniform(l, args.get_u32("nk", 128)?, args.get_u32("nv", 64)?)
-            };
-            cfg = match args.get_str("norms", "fp32").as_str() {
-                "norm8" => cfg.with_norm8(),
-                "k8v4log" => cfg.with_k8v4_log(),
-                _ => cfg,
-            };
+            let h = eval_harness(&args, &artifacts, &model)?;
+            let cfg = quant_spec.build(h.n_layers())?;
+            let label = if args.get_bool("sim") { "sim" } else { model.as_str() };
             let base = h.baseline_ppl()?;
             let ppl = h.ppl(&cfg)?;
             println!(
-                "{model}: PPL {ppl:.4} (ref {base:.4}) dPPL {:+.4} | {} | {:.2} angle bits, {:.2} total bits",
+                "{label}: PPL {ppl:.4} (ref {base:.4}) dPPL {:+.4} | {} | {:.2} angle bits, {:.2} total bits",
                 ppl - base,
                 cfg.tag(),
                 cfg.angle_bits_per_element(),
@@ -499,37 +552,16 @@ fn bits_calculator(layers: usize, d: usize) {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn serve(
-    artifacts: &str,
+/// One synthetic-workload serve run over any backend — the `serve`
+/// subcommand routes both the PJRT executor and `--sim` here, so a boost
+/// schedule proven in the sim sweep serves identically on either.
+fn run_serve<B: ModelBackend>(
     model: &str,
+    exec: B,
+    cfg: EngineConfig,
     requests: usize,
     gen_max: usize,
-    no_quant: bool,
-    read_path: ReadPath,
-    prefix_cache: bool,
-    (chunked, chunk_tokens, tick_budget): (bool, usize, usize),
 ) -> Result<()> {
-    if read_path == ReadPath::Fused {
-        bail!("--read-path fused requires a fused-capable backend (the PJRT executor has none; use auto or reinflate)");
-    }
-    let manifest = Manifest::load(artifacts)?;
-    let rt = Runtime::cpu()?;
-    eprintln!("compiling prefill+decode for {model} ...");
-    let exec = ModelExecutor::load(&rt, &manifest, model, Entry::Serve)?;
-    ensure_chunked_support(&exec, chunked)?;
-    let l = exec.profile.n_layers;
-    let mut quant = QuantConfig::paper_uniform(l).with_k8v4_log();
-    if no_quant {
-        quant.mode = Mode::None;
-        quant = quant.with_norms(NormMode::FP32, NormMode::FP32);
-    }
-    let mut cfg = EngineConfig::new(quant);
-    cfg.read_path = read_path;
-    cfg.prefix_cache = prefix_cache;
-    cfg.chunked_prefill = chunked;
-    cfg.chunk_tokens = chunk_tokens;
-    cfg.tick_token_budget = tick_budget;
     let mut engine = Engine::new(exec, cfg);
     let spec = WorkloadSpec {
         n_requests: requests,

@@ -8,6 +8,7 @@
 
 use super::angle::MAX_BINS;
 use super::norm::NormMode;
+use crate::util::hash::splitmix64 as mix;
 use anyhow::{ensure, Result};
 
 /// Quantizer mode — must match `manifest.json: modes` (L2 lax.switch order).
@@ -56,27 +57,133 @@ pub const UNIFORM_NK: u32 = 128;
 /// The paper's uniform V-side codebook: 64 bins (§4.1).
 pub const UNIFORM_NV: u32 = 64;
 
-/// Codebook sizes ride `u16` bin indices end-to-end (`Encoded::k`, the
-/// packed cache streams, `TrigLut`): `n > 2^16` would truncate silently and
-/// decode garbage, so angle-mode constructors reject it up front.
-fn assert_bins(n: u32, side: &str) {
-    assert!(
-        (2..=MAX_BINS).contains(&n),
-        "{side} bin count {n} outside 2..=65536 (u16 codebook limit)"
-    );
+/// The single checked construction path behind every [`QuantConfig`]
+/// constructor: a base codebook for all layers, an optional boosted layer
+/// set with its own codebook, the quantizer mode and the norm modes.
+///
+/// [`build`](Self::build) applies the bin-cap (u16 codebook limit) and
+/// layer-count checks uniformly and returns actionable errors instead of
+/// panicking, which makes it the right entry point for untrusted input
+/// (CLI flags, wire requests). The named constructors
+/// ([`QuantConfig::uniform`], [`QuantConfig::early_boost`], …) are thin
+/// forwarding wrappers that keep their historical panicking behavior.
+#[derive(Clone, Debug)]
+pub struct QuantConfigBuilder {
+    n_layers: usize,
+    mode: Mode,
+    base: LayerBins,
+    boosted: Vec<usize>,
+    hi: LayerBins,
+    k_norm: NormMode,
+    v_norm: NormMode,
+}
+
+impl QuantConfigBuilder {
+    /// Set the quantizer mode (default [`Mode::Angle`]).
+    pub fn mode(mut self, mode: Mode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Base (n_k, n_v) codebook applied to every non-boosted layer
+    /// (default the paper's K128V64). Scalar-baseline modes carry bit
+    /// widths here instead of bin counts.
+    pub fn base_bins(mut self, n_k: u32, n_v: u32) -> Self {
+        self.base = LayerBins { n_k, n_v };
+        self
+    }
+
+    /// Contiguous early-boost (§3.2): boost layers `0..n_early`, clamped
+    /// to the layer count like [`QuantConfig::early_boost`] always did.
+    pub fn boost_first(mut self, n_early: usize) -> Self {
+        self.boosted = (0..n_early.min(self.n_layers)).collect();
+        self
+    }
+
+    /// Boost an arbitrary layer set. Unlike
+    /// [`QuantConfig::selective_boost`], out-of-range indices are an
+    /// error at [`build`](Self::build) time, not silently dropped.
+    pub fn boost_layers(mut self, layers: &[usize]) -> Self {
+        self.boosted = layers.to_vec();
+        self
+    }
+
+    /// Codebook for the boosted layers (default the paper's 256/128).
+    pub fn boost_bins(mut self, nk_hi: u32, nv_hi: u32) -> Self {
+        self.hi = LayerBins { n_k: nk_hi, n_v: nv_hi };
+        self
+    }
+
+    /// Norm quantization modes for the K and V sides (default fp32).
+    pub fn norms(mut self, k: NormMode, v: NormMode) -> Self {
+        self.k_norm = k;
+        self.v_norm = v;
+        self
+    }
+
+    /// Materialize the config, enforcing every invariant in one place:
+    /// boosted layer indices must exist, and in angle modes every codebook
+    /// (base and boost) must stay inside the u16-representable range —
+    /// `n > 2^16` would truncate through the packed `u16` bin indices and
+    /// decode garbage.
+    pub fn build(self) -> Result<QuantConfig> {
+        for &l in &self.boosted {
+            ensure!(
+                l < self.n_layers,
+                "boost layer {l} out of range for a {}-layer model \
+                 (valid layer indices: 0..{})",
+                self.n_layers,
+                self.n_layers
+            );
+        }
+        if matches!(self.mode, Mode::None | Mode::Angle | Mode::AngleCentered) {
+            for (n, side) in [(self.hi.n_k, "K boost"), (self.hi.n_v, "V boost")] {
+                ensure!(
+                    (2..=MAX_BINS).contains(&n),
+                    "{side} bin count {n} outside 2..=65536 (u16 codebook limit)"
+                );
+            }
+        }
+        let mut layers = vec![self.base; self.n_layers];
+        for &l in &self.boosted {
+            layers[l] = self.hi;
+        }
+        let cfg = QuantConfig {
+            mode: self.mode,
+            layers,
+            k_norm: self.k_norm,
+            v_norm: self.v_norm,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
 }
 
 impl QuantConfig {
-    /// Uniform baseline at (n_k, n_v) for all layers, fp32 norms.
-    pub fn uniform(n_layers: usize, n_k: u32, n_v: u32) -> Self {
-        assert_bins(n_k, "K");
-        assert_bins(n_v, "V");
-        QuantConfig {
+    /// Start a checked builder for an `n_layers`-deep model (paper
+    /// defaults: angle mode, K128V64 base, 256/128 boost bins, fp32
+    /// norms, no boosted layers).
+    pub fn builder(n_layers: usize) -> QuantConfigBuilder {
+        QuantConfigBuilder {
+            n_layers,
             mode: Mode::Angle,
-            layers: vec![LayerBins { n_k, n_v }; n_layers],
+            base: LayerBins {
+                n_k: UNIFORM_NK,
+                n_v: UNIFORM_NV,
+            },
+            boosted: Vec::new(),
+            hi: LayerBins { n_k: 256, n_v: 128 },
             k_norm: NormMode::FP32,
             v_norm: NormMode::FP32,
         }
+    }
+
+    /// Uniform baseline at (n_k, n_v) for all layers, fp32 norms.
+    pub fn uniform(n_layers: usize, n_k: u32, n_v: u32) -> Self {
+        Self::builder(n_layers)
+            .base_bins(n_k, n_v)
+            .build()
+            .unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// The K128V64 paper baseline: 3.25 angle bits per element (Eq. 1)
@@ -98,48 +205,45 @@ impl QuantConfig {
     /// Contiguous early-boost: layers `0..n_early` at (nk_hi, nv_hi), the
     /// rest at the uniform baseline (§3.2).
     pub fn early_boost(n_layers: usize, n_early: usize, nk_hi: u32, nv_hi: u32) -> Self {
-        assert_bins(nk_hi, "K boost");
-        assert_bins(nv_hi, "V boost");
-        let mut cfg = Self::paper_uniform(n_layers);
-        for l in 0..n_early.min(n_layers) {
-            cfg.layers[l] = LayerBins { n_k: nk_hi, n_v: nv_hi };
-        }
-        cfg
+        Self::builder(n_layers)
+            .boost_first(n_early)
+            .boost_bins(nk_hi, nv_hi)
+            .build()
+            .unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// Selective boost of an arbitrary layer set (phi-1.5's 0–7 ∪ 16–23).
+    /// Out-of-range indices are ignored (historical behavior); use
+    /// [`QuantConfig::builder`] directly to make them an error.
     pub fn selective_boost(
         n_layers: usize,
         boosted: &[usize],
         nk_hi: u32,
         nv_hi: u32,
     ) -> Self {
-        assert_bins(nk_hi, "K boost");
-        assert_bins(nv_hi, "V boost");
-        let mut cfg = Self::paper_uniform(n_layers);
-        for &l in boosted {
-            if l < n_layers {
-                cfg.layers[l] = LayerBins { n_k: nk_hi, n_v: nv_hi };
-            }
-        }
-        cfg
+        let in_range: Vec<usize> = boosted.iter().copied().filter(|&l| l < n_layers).collect();
+        Self::builder(n_layers)
+            .boost_layers(&in_range)
+            .boost_bins(nk_hi, nv_hi)
+            .build()
+            .unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// Disable quantization (the fp16-reference run).
     pub fn none(n_layers: usize) -> Self {
-        let mut cfg = Self::paper_uniform(n_layers);
-        cfg.mode = Mode::None;
-        cfg
+        Self::builder(n_layers)
+            .mode(Mode::None)
+            .build()
+            .unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// Scalar-baseline configs: per-layer arrays carry bits.
     pub fn scalar_baseline(n_layers: usize, mode: Mode, bits: u32) -> Self {
-        QuantConfig {
-            mode,
-            layers: vec![LayerBins { n_k: bits, n_v: bits }; n_layers],
-            k_norm: NormMode::FP32,
-            v_norm: NormMode::FP32,
-        }
+        Self::builder(n_layers)
+            .mode(mode)
+            .base_bins(bits, bits)
+            .build()
+            .unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// Non-panicking variant of the constructor bound, for configs built
@@ -215,9 +319,35 @@ impl QuantConfig {
             / l
     }
 
+    /// Eq. 3 under its serving-facing name: the rate the engine's
+    /// `MemoryStats::total_bits_per_element()` must reproduce within 1%
+    /// (asserted by the quality_sweep bench).
+    pub fn bits_per_element(&self, d: usize) -> f64 {
+        self.total_bits_per_element(d)
+    }
+
     /// Angle-bits-only variant of Eq. 3 (Tables 1/2 count only angle bits).
     pub fn angle_bits_only(&self) -> f64 {
         self.angle_bits_per_element()
+    }
+
+    /// Order-sensitive 64-bit digest of everything that changes the packed
+    /// page byte stream: mode, per-layer codebook sizes, and both norm
+    /// modes. The shared prefix store folds this into every page content
+    /// hash so mixed-precision pages holding identical tokens never dedup
+    /// across configs (two configs can pack the same codes at the same
+    /// widths — e.g. 48 vs 64 bins — so byte-stream equality alone is not
+    /// enough).
+    pub fn content_fingerprint(&self) -> u64 {
+        let mut h = mix(0x7A5C_0F1E ^ self.mode as i32 as u64);
+        for b in &self.layers {
+            h = mix(h ^ b.n_k as u64 ^ ((b.n_v as u64) << 32));
+        }
+        mix(h
+            ^ self.k_norm.bits as u64
+            ^ ((self.k_norm.log_space as u64) << 8)
+            ^ ((self.v_norm.bits as u64) << 16)
+            ^ ((self.v_norm.log_space as u64) << 24))
     }
 
     /// Physical compressed bytes per token per layer (what kv_manager
@@ -444,6 +574,71 @@ mod tests {
         assert!(err.contains("layer 1"), "{err}");
         // scalar baselines carry BITS in the arrays — not bin-bounded
         assert!(QuantConfig::scalar_baseline(2, Mode::Kivi, 2).validate().is_ok());
+    }
+
+    #[test]
+    fn builder_rejects_out_of_range_boost_layer() {
+        let err = QuantConfig::builder(4)
+            .boost_layers(&[0, 7])
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("boost layer 7"), "{err}");
+        assert!(err.contains("4-layer"), "{err}");
+        // the wrapper keeps the historical silently-ignore behavior
+        let cfg = QuantConfig::selective_boost(4, &[0, 7], 256, 128);
+        assert_eq!(cfg.tag(), "B[0](K256,V128)");
+    }
+
+    #[test]
+    fn builder_matches_wrapper_constructors() {
+        assert_eq!(
+            QuantConfig::builder(8)
+                .boost_first(4)
+                .boost_bins(256, 128)
+                .build()
+                .unwrap(),
+            QuantConfig::early_boost(8, 4, 256, 128)
+        );
+        assert_eq!(
+            QuantConfig::builder(8)
+                .mode(Mode::None)
+                .build()
+                .unwrap(),
+            QuantConfig::none(8)
+        );
+    }
+
+    #[test]
+    fn builder_caps_bins_uniformly() {
+        // base and boost codebooks hit the same u16 cap through build()
+        let base = QuantConfig::builder(2).base_bins(1 << 17, 64).build();
+        assert!(base.unwrap_err().to_string().contains("u16 codebook limit"));
+        let hi = QuantConfig::builder(2)
+            .boost_first(1)
+            .boost_bins(256, (1 << 16) + 1)
+            .build();
+        assert!(hi.unwrap_err().to_string().contains("u16 codebook limit"));
+    }
+
+    #[test]
+    fn fingerprint_separates_configs() {
+        let a = QuantConfig::paper_uniform(4);
+        // same packed widths are NOT the same fingerprint: 48 and 64 bins
+        // both pack at 6 bits
+        let b = QuantConfig::uniform(4, 128, 48);
+        assert_ne!(a.content_fingerprint(), b.content_fingerprint());
+        // norm-mode-only differences separate too
+        assert_ne!(
+            a.content_fingerprint(),
+            a.clone().with_k8v4_log().content_fingerprint()
+        );
+        // per-layer placement matters, not just the multiset
+        let c = QuantConfig::selective_boost(4, &[0], 256, 128);
+        let d = QuantConfig::selective_boost(4, &[3], 256, 128);
+        assert_ne!(c.content_fingerprint(), d.content_fingerprint());
+        // and it is a pure function of the config
+        assert_eq!(a.content_fingerprint(), QuantConfig::paper_uniform(4).content_fingerprint());
     }
 
     #[test]

@@ -12,8 +12,10 @@ pub mod config;
 pub mod fwht;
 pub mod norm;
 pub mod packing;
+pub mod spec;
 
 pub use angle::{decode, decode_into, encode, encode_into, Encoded};
 pub use batch::{decode_batch, encode_batch};
-pub use config::{LayerBins, Mode, QuantConfig};
+pub use config::{LayerBins, Mode, QuantConfig, QuantConfigBuilder};
 pub use norm::NormMode;
+pub use spec::QuantSpec;

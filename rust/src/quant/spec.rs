@@ -1,0 +1,277 @@
+//! Shared CLI surface for quantizer configuration.
+//!
+//! Every entry point that accepts quant flags from a user — `serve`,
+//! `listen`, `eval`, the sensitivity subcommands, and the benches — parses
+//! them through one [`QuantSpec`], so the flag set, the defaults, and the
+//! validation story never diverge between subcommands. Unknown values are
+//! rejected with actionable messages (historically `--norms bogus` fell
+//! through silently to fp32 norms), and the built [`QuantConfig`] passes
+//! `QuantConfig::validate()` before it reaches the engine.
+
+use super::config::{Mode, QuantConfig, UNIFORM_NK, UNIFORM_NV};
+use super::norm::NormMode;
+use crate::util::cli::Args;
+use anyhow::{bail, Result};
+
+/// The flags [`QuantSpec::from_args`] understands; splice into each
+/// subcommand's `check_known` list.
+pub const FLAGS: &[&str] = &[
+    "nk",
+    "nv",
+    "n-early",
+    "boost-layers",
+    "nk-hi",
+    "nv-hi",
+    "norms",
+    "k-norm",
+    "v-norm",
+    "no-quant",
+];
+
+/// A parsed-but-not-yet-built quant schedule: everything the user said on
+/// the command line, independent of the model depth. [`build`](Self::build)
+/// binds it to a layer count and runs the full validation chain.
+#[derive(Clone, Debug)]
+pub struct QuantSpec {
+    /// Base K-side codebook size.
+    pub nk: u32,
+    /// Base V-side codebook size.
+    pub nv: u32,
+    /// Boost the first `n_early` layers (0 = none; exclusive with
+    /// `boost_layers`).
+    pub n_early: usize,
+    /// Explicit boosted layer set (`--boost-layers 0,1,5` or `0-7,16-23`).
+    pub boost_layers: Option<Vec<usize>>,
+    /// Boosted-layer K codebook.
+    pub nk_hi: u32,
+    /// Boosted-layer V codebook.
+    pub nv_hi: u32,
+    /// K-side norm mode.
+    pub k_norm: NormMode,
+    /// V-side norm mode.
+    pub v_norm: NormMode,
+    /// Serve the fp reference instead (forces `Mode::None` + fp32 norms).
+    pub no_quant: bool,
+}
+
+/// Parse one per-side norm mode: `fp32 | linear4 | linear8 | log4 | log8`.
+pub fn parse_norm_mode(flag: &str, s: &str) -> Result<NormMode> {
+    Ok(match s {
+        "fp32" => NormMode::FP32,
+        "linear4" => NormMode {
+            bits: 4,
+            log_space: false,
+        },
+        "linear8" => NormMode::LINEAR8,
+        "log4" => NormMode::LOG4,
+        "log8" => NormMode {
+            bits: 8,
+            log_space: true,
+        },
+        other => bail!(
+            "--{flag}: unknown norm mode '{other}' \
+             (accepted: fp32 | linear4 | linear8 | log4 | log8)"
+        ),
+    })
+}
+
+/// Parse a `--norms` preset into (k_norm, v_norm).
+fn parse_norms_preset(s: &str) -> Result<(NormMode, NormMode)> {
+    Ok(match s {
+        "fp32" => (NormMode::FP32, NormMode::FP32),
+        "norm8" => (NormMode::LINEAR8, NormMode::LINEAR8),
+        "k8v4log" => (NormMode::LINEAR8, NormMode::LOG4),
+        other => bail!(
+            "--norms: unknown preset '{other}' (accepted: fp32 | norm8 | k8v4log; \
+             for per-side control use --k-norm/--v-norm with \
+             fp32|linear4|linear8|log4|log8)"
+        ),
+    })
+}
+
+/// Parse a layer-set expression: comma-separated indices and inclusive
+/// ranges, e.g. `0,1,5` or `0-7,16-23`. Returns a sorted, deduplicated set.
+pub fn parse_layer_set(flag: &str, s: &str) -> Result<Vec<usize>> {
+    let mut out: Vec<usize> = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            bail!("--{flag}: empty entry in layer set '{s}' (example: 0,1,5 or 0-7,16-23)");
+        }
+        let parse_idx = |t: &str| -> Result<usize> {
+            t.parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "--{flag}: '{t}' is not a layer index \
+                     (example: 0,1,5 or 0-7,16-23)"
+                )
+            })
+        };
+        match part.split_once('-') {
+            Some((a, b)) => {
+                let (lo, hi) = (parse_idx(a)?, parse_idx(b)?);
+                if lo > hi {
+                    bail!("--{flag}: descending range '{part}' (write it as {hi}-{lo})");
+                }
+                out.extend(lo..=hi);
+            }
+            None => out.push(parse_idx(part)?),
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    Ok(out)
+}
+
+impl QuantSpec {
+    /// Parse the shared quant flags out of `args`. `default_norms` is the
+    /// subcommand's `--norms` preset default (`"k8v4log"` for serving,
+    /// `"fp32"` for the eval tables, matching the paper's reporting).
+    pub fn from_args(args: &Args, default_norms: &str) -> Result<QuantSpec> {
+        let preset = args.get_str("norms", default_norms);
+        let (mut k_norm, mut v_norm) = parse_norms_preset(&preset)?;
+        if args.flag("norms").is_some()
+            && (args.flag("k-norm").is_some() || args.flag("v-norm").is_some())
+        {
+            bail!(
+                "--norms is a preset for both sides; combining it with \
+                 --k-norm/--v-norm is ambiguous — pass either the preset or \
+                 the per-side modes"
+            );
+        }
+        if let Some(v) = args.flag("k-norm") {
+            k_norm = parse_norm_mode("k-norm", v)?;
+        }
+        if let Some(v) = args.flag("v-norm") {
+            v_norm = parse_norm_mode("v-norm", v)?;
+        }
+        let boost_layers = match args.flag("boost-layers") {
+            Some(v) => Some(parse_layer_set("boost-layers", v)?),
+            None => None,
+        };
+        let n_early = args.get_usize("n-early", 0)?;
+        if boost_layers.is_some() && n_early > 0 {
+            bail!(
+                "--boost-layers and --n-early both select the boosted layer \
+                 set; pass one or the other"
+            );
+        }
+        Ok(QuantSpec {
+            nk: args.get_u32("nk", UNIFORM_NK)?,
+            nv: args.get_u32("nv", UNIFORM_NV)?,
+            n_early,
+            boost_layers,
+            nk_hi: args.get_u32("nk-hi", 256)?,
+            nv_hi: args.get_u32("nv-hi", 128)?,
+            k_norm,
+            v_norm,
+            no_quant: args.get_bool("no-quant"),
+        })
+    }
+
+    /// Bind the spec to a model depth and build the validated config.
+    /// Every invariant — bin caps, boost indices inside `0..n_layers` —
+    /// errors here with an actionable message; this is the one untrusted
+    /// entry point into [`QuantConfig`].
+    pub fn build(&self, n_layers: usize) -> Result<QuantConfig> {
+        if self.no_quant {
+            let cfg = QuantConfig::builder(n_layers).mode(Mode::None).build()?;
+            return Ok(cfg.with_norms(NormMode::FP32, NormMode::FP32));
+        }
+        let mut b = QuantConfig::builder(n_layers)
+            .base_bins(self.nk, self.nv)
+            .boost_bins(self.nk_hi, self.nv_hi)
+            .norms(self.k_norm, self.v_norm);
+        if let Some(set) = &self.boost_layers {
+            b = b.boost_layers(set);
+        } else if self.n_early > 0 {
+            b = b.boost_first(self.n_early);
+        }
+        b.build()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn defaults_build_paper_uniform() {
+        let spec = QuantSpec::from_args(&args("serve"), "k8v4log").unwrap();
+        let cfg = spec.build(8).unwrap();
+        assert_eq!(cfg, QuantConfig::paper_uniform(8).with_k8v4_log());
+    }
+
+    #[test]
+    fn boost_layers_flow_through() {
+        let a = args("serve --boost-layers 0-1,5 --nk-hi 512 --nv-hi 256");
+        let cfg = QuantSpec::from_args(&a, "fp32").unwrap().build(8).unwrap();
+        assert_eq!(cfg, QuantConfig::selective_boost(8, &[0, 1, 5], 512, 256));
+    }
+
+    #[test]
+    fn bogus_norms_error_not_silent_fp32() {
+        // the historical bug: `--norms bogus` silently served fp32 norms
+        let err = QuantSpec::from_args(&args("serve --norms bogus"), "fp32")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown preset 'bogus'"), "{err}");
+        assert!(err.contains("k8v4log"), "{err}");
+    }
+
+    #[test]
+    fn per_side_norms_and_conflicts() {
+        let a = args("serve --k-norm linear8 --v-norm log8");
+        let spec = QuantSpec::from_args(&a, "fp32").unwrap();
+        assert_eq!(spec.k_norm, NormMode::LINEAR8);
+        assert_eq!(
+            spec.v_norm,
+            NormMode {
+                bits: 8,
+                log_space: true
+            }
+        );
+        assert!(QuantSpec::from_args(&args("serve --norms norm8 --k-norm fp32"), "fp32").is_err());
+        assert!(QuantSpec::from_args(&args("serve --boost-layers 0 --n-early 2"), "fp32").is_err());
+        let err = QuantSpec::from_args(&args("serve --k-norm huge"), "fp32")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--k-norm"), "{err}");
+    }
+
+    #[test]
+    fn layer_set_syntax() {
+        assert_eq!(parse_layer_set("x", "0,1,5").unwrap(), vec![0, 1, 5]);
+        assert_eq!(
+            parse_layer_set("x", "0-3,16-18").unwrap(),
+            vec![0, 1, 2, 3, 16, 17, 18]
+        );
+        assert_eq!(parse_layer_set("x", "5,5,2").unwrap(), vec![2, 5]);
+        assert!(parse_layer_set("x", "3-1").unwrap_err().to_string().contains("1-3"));
+        assert!(parse_layer_set("x", "a").is_err());
+        assert!(parse_layer_set("x", "1,,2").is_err());
+    }
+
+    #[test]
+    fn boost_out_of_range_is_actionable() {
+        let a = args("serve --boost-layers 0,9");
+        let err = QuantSpec::from_args(&a, "fp32")
+            .unwrap()
+            .build(4)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("boost layer 9"), "{err}");
+    }
+
+    #[test]
+    fn no_quant_forces_fp_reference() {
+        let a = args("serve --no-quant --norms k8v4log");
+        let cfg = QuantSpec::from_args(&a, "k8v4log").unwrap().build(4).unwrap();
+        assert_eq!(cfg.mode, Mode::None);
+        assert_eq!(cfg.k_norm, NormMode::FP32);
+        assert_eq!(cfg.v_norm, NormMode::FP32);
+    }
+}

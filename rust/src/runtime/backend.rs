@@ -8,7 +8,7 @@
 //! is backend-agnostic.
 
 use super::executor::{DecodeOut, ModelExecutor, PrefillOut};
-use super::manifest::{Profile, ServeProtocol};
+use super::manifest::{EvalProtocol, Profile, ServeProtocol};
 use crate::quant::QuantConfig;
 use anyhow::{bail, Result};
 
@@ -159,6 +159,29 @@ pub trait ModelBackend: Send {
     ) -> Result<DecodeOut> {
         bail!("this backend has no fused decode path (supports_fused_decode() is false)")
     }
+
+    // --- teacher-forced eval surface (the ppl/sensitivity harness) -------
+
+    /// The teacher-forced eval protocol geometry: held-out chunk count,
+    /// chunk length, and the eval batch size.
+    fn eval_protocol(&self) -> &EvalProtocol;
+
+    /// Teacher-forced NLL over one `eval.batch × eval.chunk_len` block of
+    /// held-out tokens under `cfg`: per-row (nll_sum, predicted_count).
+    /// Backends without an eval entry point keep the default error — the
+    /// harness surfaces it at construction, not mid-sweep.
+    fn eval_nll(&self, _tokens: &[i32], _cfg: &QuantConfig) -> Result<(Vec<f32>, Vec<f32>)> {
+        bail!("this backend has no teacher-forced eval entry point")
+    }
+
+    /// The ±1 rotation diagonal D currently in effect (length `d_head`).
+    fn sign(&self) -> &[f32];
+
+    /// Swap the rotation diagonal (the §4.3 D-seed robustness sweeps).
+    /// Entries must be ±1 and the length must match `d_head`.
+    fn set_sign(&mut self, _sign: &[f32]) -> Result<()> {
+        bail!("this backend has a fixed rotation diagonal")
+    }
 }
 
 impl ModelBackend for ModelExecutor {
@@ -194,5 +217,21 @@ impl ModelBackend for ModelExecutor {
         vi: &[f32],
     ) -> Result<DecodeOut> {
         ModelExecutor::run_decode(self, token, pos, cfg, kr, ki, vr, vi)
+    }
+
+    fn eval_protocol(&self) -> &EvalProtocol {
+        &self.eval_proto
+    }
+
+    fn eval_nll(&self, tokens: &[i32], cfg: &QuantConfig) -> Result<(Vec<f32>, Vec<f32>)> {
+        ModelExecutor::eval_nll(self, tokens, cfg)
+    }
+
+    fn sign(&self) -> &[f32] {
+        &self.sign
+    }
+
+    fn set_sign(&mut self, sign: &[f32]) -> Result<()> {
+        ModelExecutor::set_sign(self, sign)
     }
 }

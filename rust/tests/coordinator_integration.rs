@@ -257,6 +257,58 @@ fn fused_read_path_emits_bit_identical_tokens() {
     assert_eq!(run(ReadPath::Auto), fused, "sim Auto must resolve to fused");
 }
 
+/// The mixed-precision read-path criterion: a per-layer `selective_boost`
+/// schedule (layers 0 and 2 of 4 at 256/128 bins, layers 1 and 3 at the
+/// uniform base) must emit bit-identical token streams on the fused and
+/// reinflate read paths — tile decode must honor each layer's own codebook
+/// width exactly as dense reinflation does. This is the serving-side twin
+/// of the `eval --boost-layers` sweep: what the sensitivity loop picks is
+/// exactly what the engine serves.
+#[test]
+fn selective_boost_schedule_bit_identical_across_read_paths() {
+    let cfg = QuantConfig::selective_boost(4, &[0, 2], 256, 128).with_k8v4_log();
+    let run = |path: ReadPath| {
+        let mut e = Engine::new(
+            SimExecutor::with_dims(7, 4, 2, 8, 4, 32, 64),
+            EngineConfig {
+                batch_policy: BatchPolicy {
+                    min_batch: 1,
+                    max_wait: Duration::ZERO,
+                },
+                capacity_pages: 64,
+                page_tokens: 8,
+                read_path: path,
+                ..EngineConfig::new(cfg.clone())
+            },
+        );
+        for req in workload::generate(&WorkloadSpec {
+            n_requests: 8,
+            prompt_min: 3,
+            prompt_max: 24,
+            gen_min: 2,
+            gen_max: 10,
+            seed: 19,
+            ..Default::default()
+        }) {
+            e.submit(req);
+        }
+        e.run_to_completion().unwrap();
+        assert_eq!(e.metrics.requests_finished, 8);
+        let mut out: Vec<(u64, Vec<i32>)> = e
+            .take_finished()
+            .into_iter()
+            .map(|s| (s.request.id, s.generated))
+            .collect();
+        out.sort();
+        out
+    };
+    assert_eq!(
+        run(ReadPath::Fused),
+        run(ReadPath::Reinflate),
+        "selective_boost schedule must decode identically on both read paths"
+    );
+}
+
 /// The prefix-cache acceptance criterion: for a whole shared-prefix
 /// workload, generated token streams with the cache ON equal the streams
 /// with it OFF, on BOTH read paths — adoption only skips recomputing KV

@@ -815,6 +815,50 @@ fn prop_shared_pool_accounting_and_eviction_safety() {
     });
 }
 
+/// The config is part of the shared-page hash chain: identical token
+/// streams under configs that differ ONLY in per-layer codebook sizes
+/// (48 vs 64 — the same 6-bit packed width, so the byte stream alone
+/// can collide) or ONLY in norm modes must chain to pairwise-distinct
+/// shared-page hashes. Mixed-precision pages never dedup across
+/// schedules; the same config twice must dedup (determinism).
+#[test]
+fn prop_shared_hash_diverges_on_bins_and_norms_only() {
+    run_cases(30, |g| {
+        let pt = g.usize_in(2, 4);
+        let l_n = g.usize_in(1, 3);
+        let (d, tmax) = (8usize, 32usize);
+        let n_pages = g.usize_in(1, 3);
+        let tokens: Vec<i32> = (0..n_pages * pt).map(|_| (g.u64() % 3) as i32).collect();
+        let chain_of = |cfg: QuantConfig| -> Vec<u64> {
+            let mut kv = PagedKvCache::new(cfg, l_n, 1, d, tmax, 16, pt);
+            kv.new_seq(1, tokens.len()).unwrap();
+            append_model_suffix(&mut kv, 1, &tokens, 0);
+            let chain = kv.finish_seq_share(1, &tokens).unwrap();
+            chain.iter().map(|&p| kv.shared_page_hash(p).unwrap()).collect()
+        };
+        let base = QuantConfig::uniform(l_n, 64, 64).with_k8v4_log();
+        let h0 = chain_of(base.clone());
+        assert_eq!(h0.len(), n_pages);
+        assert_eq!(h0, chain_of(base), "hash chain must be deterministic");
+        let variants = [
+            // bins only, identical packed width (bits_for(48) == bits_for(64))
+            QuantConfig::uniform(l_n, 48, 64).with_k8v4_log(),
+            // norm modes only — compressed angle codes are bit-identical
+            QuantConfig::uniform(l_n, 64, 64).with_norms(NormMode::FP32, NormMode::FP32),
+            // one boosted layer — per-layer mixed precision
+            QuantConfig::selective_boost(l_n, &[0], 256, 128).with_k8v4_log(),
+        ];
+        for v in variants {
+            let tag = v.tag();
+            let hv = chain_of(v);
+            assert_eq!(hv.len(), h0.len());
+            for (i, (a, b)) in h0.iter().zip(&hv).enumerate() {
+                assert_ne!(a, b, "page {i} hash collided across configs ({tag})");
+            }
+        }
+    });
+}
+
 #[test]
 fn prop_mode_values_match_manifest_contract() {
     // the lax.switch order in python/compile/model.py
