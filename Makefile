@@ -4,7 +4,7 @@
 ARTIFACTS ?= artifacts
 
 .PHONY: all artifacts test bench smoke bench-serving smoke-serving \
-        bench-fused smoke-fused bench-prefix smoke-prefix \
+        bench-fused smoke-fused profile-fused bench-prefix smoke-prefix \
         bench-latency smoke-latency bench-quality smoke-quality \
         docs fmt lint clean
 
@@ -48,6 +48,26 @@ bench-fused:
 
 smoke-fused:
 	cargo bench --bench fused_attention -- --smoke
+
+# Profile the fused read path: cargo-flamegraph if installed, else a raw
+# `perf record` of the bench binary (report with `perf report`). See README
+# "Profiling the fused read path" for reading the output.
+profile-fused:
+	@if cargo flamegraph --version >/dev/null 2>&1; then \
+		cargo flamegraph --bench fused_attention -o flamegraph-fused.svg; \
+		echo "wrote flamegraph-fused.svg"; \
+	elif command -v perf >/dev/null 2>&1; then \
+		cargo bench --bench fused_attention --no-run; \
+		BIN=$$(ls -t target/release/deps/fused_attention-* 2>/dev/null \
+		       | grep -v '\.d$$' | head -n1); \
+		perf record -g -o perf-fused.data "$$BIN"; \
+		echo "wrote perf-fused.data — inspect with: perf report -i perf-fused.data"; \
+	else \
+		echo "error: neither cargo-flamegraph nor perf is installed."; \
+		echo "  install one of:  cargo install flamegraph   (preferred)"; \
+		echo "                   apt-get install linux-perf  (fallback)"; \
+		exit 1; \
+	fi
 
 # Prefix cache: cold vs warm prefill on a shared-prefix workload (asserts
 # cold/warm token bit-identity and prefix_hit_speedup > 1), writes
@@ -95,4 +115,5 @@ clean:
 	cargo clean
 	rm -f BENCH_quant_hot_path.json BENCH_serving_throughput.json \
 	      BENCH_fused_attention.json BENCH_prefix_caching.json \
-	      BENCH_serving_latency.json BENCH_quality_sweep.json
+	      BENCH_serving_latency.json BENCH_quality_sweep.json \
+	      flamegraph-fused.svg perf-fused.data

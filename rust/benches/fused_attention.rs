@@ -17,21 +17,28 @@
 //!
 //! Both paths fold the identical checksum over the identical values (tile
 //! decode is bit-identical to `fill_dense` by construction — proptested),
-//! and the bench asserts the checksums agree before timing anything.
+//! and the bench asserts the checksums agree before timing anything — under
+//! BOTH dequant kernels (`quant::kernels::KernelKind`): the fused section
+//! is measured twice, once on the scalar per-code reference loop and once
+//! on the bulk-unpack simd pipeline, and every result row carries a
+//! `kernel` tag (`scalar` | `simd`).
 //!
-//! JSON summary fields (documented in README "Fused read path"):
-//! `reinflate_steady_elems_per_s`, `reinflate_postswap_elems_per_s`,
-//! `fused_elems_per_s`, `speedup_vs_steady`, `speedup_vs_postswap`,
-//! `fused_vs_reinflate_speedup` (headline: the postswap/churn regime the
-//! fused path exists to kill), `fused_scratch_peak_bytes`,
-//! `reinflate_dense_bytes`, `lanes`/`layers`/`heads`/`tokens`/`d_head`.
+//! JSON summary fields (documented in docs/BENCH_GLOSSARY.md and README
+//! "Fused read path"): `reinflate_steady_elems_per_s`,
+//! `reinflate_postswap_elems_per_s`, `fused_scalar_elems_per_s`,
+//! `fused_simd_elems_per_s`, `fused_elems_per_s` (= the simd row),
+//! `simd_vs_scalar_speedup` (kernel-layer headline), `speedup_vs_steady`,
+//! `speedup_vs_postswap`, `fused_vs_reinflate_speedup` (headline: the
+//! postswap/churn regime the fused path exists to kill),
+//! `fused_scratch_peak_bytes`, `reinflate_dense_bytes`,
+//! `lanes`/`layers`/`heads`/`tokens`/`d_head`.
 //!
 //!     cargo bench --bench fused_attention [-- --smoke]
 
 use rayon::prelude::*;
 use std::time::Duration;
 use turboangle::coordinator::{PagedKvCache, TileScratch};
-use turboangle::quant::{NormMode, QuantConfig};
+use turboangle::quant::{KernelKind, NormMode, QuantConfig};
 use turboangle::util::bench::{bench, black_box, BenchResult, JsonReport};
 use turboangle::util::prop::Gen;
 
@@ -183,69 +190,93 @@ fn main() {
     let len = g.tokens;
     let quads_per_step = (g.lanes * g.l_n * g.h_n * len * half) as f64;
 
-    // cross-validate once: tile decode must fold to the dense checksum
-    for lane in lanes.iter_mut() {
-        refill(&kv, lane, 0);
-        let dense = scan_dense(&g, len, &lane.kr, &lane.ki, &lane.vr, &lane.vi);
-        let fused = scan_fused(&g, &kv, lane, len);
-        assert_eq!(dense, fused, "fused tiles diverged from dense reinflation");
+    // cross-validate once per kernel: tile decode must fold to the dense
+    // checksum, and the scalar and simd kernels must fold to the same value
+    let mut golden: Vec<u64> = Vec::new();
+    for kind in [KernelKind::Scalar, KernelKind::Simd] {
+        kv.set_kernel(kind);
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            refill(&kv, lane, 0);
+            let dense = scan_dense(&g, len, &lane.kr, &lane.ki, &lane.vr, &lane.vi);
+            let fused = scan_fused(&g, &kv, lane, len);
+            assert_eq!(dense, fused, "fused tiles diverged from dense reinflation ({kind:?})");
+            match kind {
+                KernelKind::Scalar => golden.push(dense),
+                KernelKind::Simd => assert_eq!(dense, golden[i], "kernels diverged on lane {i}"),
+            }
+        }
     }
 
     let mut rep = JsonReport::new();
     rep.summary("smoke", if smoke { 1.0 } else { 0.0 });
     rep.summary("rayon_threads", rayon::current_num_threads());
-    let record = |r: &BenchResult, rep: &mut JsonReport, mode: &str, scenario: &str| -> f64 {
-        println!("{}", r.line(Some((quads_per_step, "elem"))));
-        rep.push(
-            r,
-            quads_per_step,
-            "elem",
-            &[
-                ("op", "decode_read".into()),
-                ("mode", mode.into()),
-                ("scenario", scenario.into()),
-                ("lanes", g.lanes.into()),
-                ("layers", g.l_n.into()),
-                ("heads", g.h_n.into()),
-                ("tokens", len.into()),
-                ("d_head", g.d.into()),
-            ],
-        );
-        r.throughput(quads_per_step)
-    };
+    let record =
+        |r: &BenchResult, rep: &mut JsonReport, mode: &str, scenario: &str, kernel: &str| -> f64 {
+            println!("{}", r.line(Some((quads_per_step, "elem"))));
+            rep.push(
+                r,
+                quads_per_step,
+                "elem",
+                &[
+                    ("op", "decode_read".into()),
+                    ("mode", mode.into()),
+                    ("scenario", scenario.into()),
+                    ("kernel", kernel.into()),
+                    ("lanes", g.lanes.into()),
+                    ("layers", g.l_n.into()),
+                    ("heads", g.h_n.into()),
+                    ("tokens", len.into()),
+                    ("d_head", g.d.into()),
+                ],
+            );
+            r.throughput(quads_per_step)
+        };
 
     // reinflate, steady state: incremental one-token top-up + dense scan
-    let kv_ref = &kv;
+    // (reinflate sections run the production default kernel — simd)
+    kv.set_kernel(KernelKind::Simd);
     let geo = &g;
     let r = bench("reinflate steady (top-up + dense scan)", budget, || {
         lanes.par_iter_mut().for_each(|lane| {
-            refill(kv_ref, lane, len - 1);
+            refill(&kv, lane, len - 1);
             lane.acc = scan_dense(geo, len, &lane.kr, &lane.ki, &lane.vr, &lane.vi);
         });
         black_box(lanes[0].acc);
     });
-    let steady = record(&r, &mut rep, "reinflate", "steady");
+    let steady = record(&r, &mut rep, "reinflate", "steady", "simd");
 
     // reinflate, post-swap-in: the dense tensors must be rebuilt from the
     // compressed stream before the scan — every preemption cycle pays this
     let r = bench("reinflate postswap (full refill + dense scan)", budget, || {
         lanes.par_iter_mut().for_each(|lane| {
-            refill(kv_ref, lane, 0);
+            refill(&kv, lane, 0);
             lane.acc = scan_dense(geo, len, &lane.kr, &lane.ki, &lane.vr, &lane.vi);
         });
         black_box(lanes[0].acc);
     });
-    let postswap = record(&r, &mut rep, "reinflate", "postswap");
+    let postswap = record(&r, &mut rep, "reinflate", "postswap", "simd");
 
     // fused: page tiles straight from the compressed store, every step —
-    // swap-ins are free (the stream moved verbatim, nothing to rebuild)
-    let r = bench("fused (page-tile decode + scan)", budget, || {
+    // swap-ins are free (the stream moved verbatim, nothing to rebuild).
+    // Measured under both kernels on the identical workload: scalar is the
+    // per-code BitCursor reference loop, simd the bulk word-window path.
+    kv.set_kernel(KernelKind::Scalar);
+    let r = bench("fused scalar (per-code tile decode + scan)", budget, || {
         lanes.par_iter_mut().for_each(|lane| {
-            lane.acc = scan_fused(geo, kv_ref, lane, len);
+            lane.acc = scan_fused(geo, &kv, lane, len);
         });
         black_box(lanes[0].acc);
     });
-    let fused = record(&r, &mut rep, "fused", "every-step");
+    let fused_scalar = record(&r, &mut rep, "fused", "every-step", "scalar");
+
+    kv.set_kernel(KernelKind::Simd);
+    let r = bench("fused simd (bulk-unpack tile decode + scan)", budget, || {
+        lanes.par_iter_mut().for_each(|lane| {
+            lane.acc = scan_fused(geo, &kv, lane, len);
+        });
+        black_box(lanes[0].acc);
+    });
+    let fused = record(&r, &mut rep, "fused", "every-step", "simd");
 
     let scratch_peak: usize = lanes.iter().map(|l| l.scratch.bytes()).max().unwrap_or(0);
     let dense_bytes: usize = lanes
@@ -259,22 +290,40 @@ fn main() {
     );
     rep.summary("reinflate_steady_elems_per_s", steady);
     rep.summary("reinflate_postswap_elems_per_s", postswap);
+    rep.summary("fused_scalar_elems_per_s", fused_scalar);
+    rep.summary("fused_simd_elems_per_s", fused);
+    // legacy field, kept for perf-trajectory continuity: the fused number
+    // is the production (simd) kernel
     rep.summary("fused_elems_per_s", fused);
     rep.summary("speedup_vs_steady", fused / steady);
     rep.summary("speedup_vs_postswap", fused / postswap);
     // headline: the churn regime (every step after a swap-in/seat) — the
     // dense path's refill debt is exactly what the fused path deletes
     rep.summary("fused_vs_reinflate_speedup", fused / postswap);
+    // kernel-layer headline: bulk unpack + slab dequant vs the per-code
+    // cursor reference, same fused workload, same bits out
+    rep.summary("simd_vs_scalar_speedup", fused / fused_scalar);
     rep.summary("fused_scratch_peak_bytes", scratch_peak);
     rep.summary("reinflate_dense_bytes", dense_bytes);
     println!(
         "\nfused vs reinflate: {:.2}x steady, {:.2}x postswap (headline)\n\
+         simd vs scalar kernel (fused): {:.2}x\n\
          scratch {} B (fused, bounded to one page) vs {} B dense tensors (reinflate)",
         fused / steady,
         fused / postswap,
+        fused / fused_scalar,
         scratch_peak,
         dense_bytes
     );
+    // the vectorized kernel must never lose to the reference loop on the
+    // full geometry (smoke runs are too short/noisy to gate on timing)
+    if !smoke {
+        assert!(
+            fused >= fused_scalar,
+            "simd kernel slower than scalar: {:.3}x",
+            fused / fused_scalar
+        );
+    }
     rep.write(OUT_JSON).expect("write bench json");
     println!("wrote {OUT_JSON}");
 }

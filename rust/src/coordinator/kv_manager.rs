@@ -24,8 +24,9 @@
 //! (L,B,H,Tmax,d/2) tensors the decode_step HLO consumes; the fused read
 //! path walks the same chunks page-tile by page-tile.
 
+use crate::quant::kernels::{self, KernelKind};
 use crate::quant::norm::{self, NormMode};
-use crate::quant::packing::{bits_for, BitCursor, BitVec};
+use crate::quant::packing::{bits_for, BitVec};
 use crate::quant::{LayerBins, QuantConfig};
 use crate::runtime::{KvTileReader, KvTileView};
 use crate::util::hash::splitmix64 as mix;
@@ -397,6 +398,10 @@ pub struct PagedKvCache {
     /// memoized [`QuantConfig::content_fingerprint`] of `cfg`, folded into
     /// every sealed page's content hash
     cfg_fp: u64,
+    /// which dequant kernel both read paths run
+    /// ([`KernelKind::auto`]-resolved at construction; settable for
+    /// in-process scalar-vs-simd comparisons)
+    kernel: KernelKind,
 }
 
 /// Point-in-time memory accounting of one [`PagedKvCache`].
@@ -558,7 +563,20 @@ impl PagedKvCache {
             by_hash: HashMap::new(),
             next_page_id: 1,
             cfg_fp,
+            kernel: KernelKind::auto(),
         }
+    }
+
+    /// The dequant [`KernelKind`] both read paths currently run.
+    pub fn kernel(&self) -> KernelKind {
+        self.kernel
+    }
+
+    /// Override the dequant kernel (tests and benches compare
+    /// [`KernelKind::Scalar`] and [`KernelKind::Simd`] in one process —
+    /// outputs are bit-identical, only throughput differs).
+    pub fn set_kernel(&mut self, kernel: KernelKind) {
+        self.kernel = kernel;
     }
 
     fn pages_for(&self, tokens: usize) -> usize {
@@ -1074,6 +1092,7 @@ impl PagedKvCache {
             half,
             from_t,
             len: seq.len,
+            kernel: self.kernel,
         };
         let (k_norm, v_norm) = (self.cfg.k_norm, self.cfg.v_norm);
         let page_tokens = self.pool.page_tokens;
@@ -1180,6 +1199,7 @@ impl PagedKvCache {
         );
         let bins = self.cfg.layers[layer];
         decode_lh_range(
+            self.kernel,
             &self.shared_store,
             seq,
             self.pool.page_tokens,
@@ -1233,9 +1253,9 @@ impl PagedKvCache {
                 let elems = tokens * half;
                 // t0 is always page-aligned, so one tile == one page chunk
                 let (ks, vs) = seq.chunk(&self.shared_store, t0 / tile_tokens, layer, head);
-                let s = &mut *scratch;
-                decode_side_range(ks, bins.n_k, k_norm, 0, tokens, half, &mut s.kr, &mut s.ki);
-                decode_side_range(vs, bins.n_v, v_norm, 0, tokens, half, &mut s.vr, &mut s.vi);
+                let (kn, s) = (self.kernel, &mut *scratch);
+                decode_side_range(kn, ks, bins.n_k, k_norm, 0, tokens, half, &mut s.kr, &mut s.ki);
+                decode_side_range(kn, vs, bins.n_v, v_norm, 0, tokens, half, &mut s.vr, &mut s.vi);
                 f(&KvTileView {
                     layer,
                     head,
@@ -1375,6 +1395,7 @@ struct FillJob {
     half: usize,
     from_t: usize,
     len: usize,
+    kernel: KernelKind,
 }
 
 /// Reinflate one layer's chunks into that layer's slice of the dense
@@ -1397,7 +1418,7 @@ fn fill_layer(
     vr: &mut [f32],
     vi: &mut [f32],
 ) {
-    let FillJob { b, h_n, tmax, half, from_t, len } = job;
+    let FillJob { b, h_n, tmax, half, from_t, len, kernel } = job;
     if from_t >= len {
         return;
     }
@@ -1408,6 +1429,7 @@ fn fill_layer(
         let (kr, ki) = (&mut kr[base..end], &mut ki[base..end]);
         let (vr, vi) = (&mut vr[base..end], &mut vi[base..end]);
         decode_lh_range(
+            kernel,
             shared_store,
             seq,
             page_tokens,
@@ -1434,6 +1456,7 @@ fn fill_layer(
 /// old monolithic stream produced.
 #[allow(clippy::too_many_arguments)]
 fn decode_lh_range(
+    kernel: KernelKind,
     shared_store: &HashMap<PageId, SharedPage>,
     seq: &SeqCache,
     page_tokens: usize,
@@ -1458,22 +1481,27 @@ fn decode_lh_range(
         let (ks, vs) = seq.chunk(shared_store, page, layer, head);
         let o = (t - t0) * half;
         let e = o + run * half;
-        decode_side_range(ks, bins.n_k, k_norm, local, run, half, &mut kr[o..e], &mut ki[o..e]);
-        decode_side_range(vs, bins.n_v, v_norm, local, run, half, &mut vr[o..e], &mut vi[o..e]);
+        let (kr, ki) = (&mut kr[o..e], &mut ki[o..e]);
+        let (vr, vi) = (&mut vr[o..e], &mut vi[o..e]);
+        decode_side_range(kernel, ks, bins.n_k, k_norm, local, run, half, kr, ki);
+        decode_side_range(kernel, vs, bins.n_v, v_norm, local, run, half, vr, vi);
         t += run;
     }
 }
 
 /// Dequantize tokens `t0..t0+tokens` of one side CHUNK (`t0` is
 /// chunk-local) into contiguous token-major (norms, codes-as-f32) rows.
-/// This is THE dequant kernel for both read paths — the dense reinflation
+/// This is THE dequant entry for both read paths — the dense reinflation
 /// ([`fill_layer`]) and the fused tile iterator
 /// ([`PagedKvCache::visit_seq_tiles`]) call it, so their outputs cannot
-/// drift: fused-vs-reinflate bit-identity holds by construction. Streams
-/// the bit-packed codes through [`BitCursor`]s instead of random-access
-/// `get`s.
+/// drift: fused-vs-reinflate bit-identity holds by construction. The
+/// actual unpack + dequant work lives in
+/// [`kernels::decode_side_range`], which dispatches on `kernel` between
+/// the sequential scalar path and the bulk-unpack vector path (the two
+/// are bit-identical; see docs/ARCHITECTURE.md "Kernel layer").
 #[allow(clippy::too_many_arguments)]
 fn decode_side_range(
+    kernel: KernelKind,
     store: &SideStore,
     bins: u32,
     mode: NormMode,
@@ -1483,37 +1511,20 @@ fn decode_side_range(
     out_r: &mut [f32],
     out_i: &mut [f32],
 ) {
-    let elems = tokens * half;
-    debug_assert!(out_r.len() >= elems && out_i.len() >= elems);
-    let width = bits_for(bins);
-    let mut ang = BitCursor::new(&store.angles, t0 * half, width);
-    for o in out_i[..elems].iter_mut() {
-        *o = ang.next(width) as f32;
-    }
-    if mode.bits == 0 {
-        out_r[..elems].copy_from_slice(&store.raw_norms[t0 * half..t0 * half + elems]);
-    } else {
-        let bits = mode.bits as u32;
-        let levels = mode.levels().max(1.0);
-        let mut codes = BitCursor::new(&store.norm_codes, t0 * half, bits);
-        for (t, row) in out_r[..elems].chunks_exact_mut(half).enumerate() {
-            let (vmin, vmax) = store.windows[t0 + t];
-            let scale = if vmax > vmin { vmax - vmin } else { 1.0 };
-            // `(c*scale)/levels` — the exact expression of
-            // `norm::dequantize_into` and the pre-tile reinflation; do NOT
-            // hoist `scale/levels` (it shifts the result by 1 ulp and
-            // breaks bit-parity with the norm module / oracle)
-            if mode.log_space {
-                for o in row.iter_mut() {
-                    *o = (vmin + codes.next(bits) as f32 * scale / levels).exp();
-                }
-            } else {
-                for o in row.iter_mut() {
-                    *o = vmin + codes.next(bits) as f32 * scale / levels;
-                }
-            }
-        }
-    }
+    kernels::decode_side_range(
+        kernel,
+        &store.angles,
+        bins,
+        &store.norm_codes,
+        &store.windows,
+        &store.raw_norms,
+        mode,
+        t0,
+        tokens,
+        half,
+        out_r,
+        out_i,
+    );
 }
 
 #[cfg(test)]

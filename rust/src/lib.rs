@@ -40,6 +40,10 @@
 // rustdoc with `-D warnings`, so a regression fails the build. The
 // support layers below carry targeted allows until their sweep lands.
 #![warn(missing_docs)]
+// Explicit portable-SIMD lanes in quant::kernels (nightly-only, opt-in).
+// Without the feature the same kernels compile as batched scalar loops
+// with identical output — see docs/ARCHITECTURE.md "Kernel layer".
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 
 pub mod coordinator;
 #[allow(missing_docs)]

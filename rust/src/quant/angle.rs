@@ -142,6 +142,19 @@ impl TrigLut {
     pub fn bins(&self) -> usize {
         self.cos.len()
     }
+
+    /// The raw per-bin cosine table (bin index -> cos θ). Exposed for the
+    /// batched gather in [`crate::quant::kernels`]; values match
+    /// [`Self::cos_sin`] exactly.
+    pub fn cos_table(&self) -> &[f32] {
+        &self.cos
+    }
+
+    /// The raw per-bin sine table (bin index -> sin θ), matching
+    /// [`Self::cos_sin`] exactly.
+    pub fn sin_table(&self) -> &[f32] {
+        &self.sin
+    }
 }
 
 /// LUT-accelerated decode (EXPERIMENTS.md §Perf): identical output to

@@ -1,0 +1,431 @@
+//! Vectorized dequant/attention microkernels for the fused read path.
+//!
+//! The serving hot loop — page-tile decode feeding streaming-softmax
+//! attention — used to be per-element scalar work: one [`BitCursor`]
+//! `next()` per packed code, one [`TrigLut::cos_sin`] pair per polar pair.
+//! This module replaces that with three batched stages sharing one
+//! dispatch:
+//!
+//! 1. **bulk bit-unpack** — whole 64-bit words are loaded once and
+//!    shattered into code lanes
+//!    ([`crate::quant::packing::unpack_f32_range_into`]), handling every
+//!    packed width a per-layer boost schedule produces (48- and 64-bin
+//!    layers both pack 6 bits, boosted 256-bin layers pack 8);
+//! 2. **batched trig reconstruction** — [`gather_trig`] pulls `TrigLut`
+//!    entries for a whole code lane into contiguous cos/sin slabs;
+//! 3. **cache-blocked scoring** — elementwise term kernels
+//!    ([`weighted_polar_terms`]) feed the streaming-softmax update with
+//!    per-row sequential reductions, so accumulation order (and therefore
+//!    every bit of the result) matches the scalar loop.
+//!
+//! **Dispatch.** [`KernelKind`] selects the path at runtime:
+//! [`KernelKind::Scalar`] is the original per-element loop, verbatim;
+//! [`KernelKind::Simd`] is the batched pipeline above. Both read paths
+//! (fused tile decode and dense reinflation) route through ONE
+//! [`decode_side_range`], so fused ≡ reinflate bit-identity holds by
+//! construction, and simd ≡ scalar is pinned by proptests and the
+//! end-to-end token-stream test.
+//!
+//! **Why bit-identical.** The batched path never reassociates a float
+//! reduction and never changes a per-element expression: bit-unpacking is
+//! integer-exact, code→f32 conversion is exact below 2^24, the norm affine
+//! map keeps the scalar's `vmin + c * scale / levels` shape (the division
+//! stays per element — hoisting `scale/levels` shifts results by 1 ulp),
+//! and row sums run sequentially in the original element order. Elementwise
+//! IEEE arithmetic is deterministic lane-for-lane, so vectorizing the *map*
+//! stages cannot change a bit.
+//!
+//! **The `simd` cargo feature** (nightly, off by default) swaps the inner
+//! elementwise loops for explicit `std::simd` lanes. Without it the same
+//! kernels compile as batched scalar loops that LLVM autovectorizes; output
+//! is identical either way, so the feature is purely a codegen lever.
+
+use super::angle::TrigLut;
+use super::norm::NormMode;
+use super::packing::{bits_for, unpack_f32_range_into, BitCursor, BitVec};
+
+/// Which implementation of the shared dequant/score kernels runs.
+///
+/// Carried as a field by `PagedKvCache` and `SimExecutor` (settable, so
+/// tests compare both in one process) and resolved once per construction
+/// via [`KernelKind::auto`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelKind {
+    /// The original per-element loops (BitCursor pops + per-pair LUT
+    /// calls). Kept forever as the bit-identity reference and the
+    /// validation path.
+    Scalar,
+    /// Bulk word-window unpack + batched trig gather + blocked scoring.
+    /// Bit-identical to [`KernelKind::Scalar`]; faster on every serving
+    /// geometry (the fused_attention bench reports the ratio).
+    #[default]
+    Simd,
+}
+
+impl KernelKind {
+    /// Runtime dispatch: `TURBOANGLE_KERNEL=scalar|simd` overrides, default
+    /// [`KernelKind::Simd`]. Unknown values fall back to the default so a
+    /// typo degrades to the fast path, never to a crash.
+    pub fn auto() -> Self {
+        match std::env::var("TURBOANGLE_KERNEL") {
+            Ok(v) if v.eq_ignore_ascii_case("scalar") => KernelKind::Scalar,
+            _ => KernelKind::Simd,
+        }
+    }
+}
+
+/// Dequantize tokens `t0..t0+tokens` of one side chunk (`t0` chunk-local)
+/// into token-major (norms, codes-as-f32) rows. THE dequant kernel: both
+/// read paths (dense reinflation and fused tile decode) call it with their
+/// chunk's raw parts, so their outputs cannot drift — and both
+/// [`KernelKind`]s produce bit-identical rows (proptested across norm
+/// modes and mixed-width boost schedules).
+///
+/// `angles`/`norm_codes` are the chunk's packed streams, `windows` its
+/// per-token (min, max) norm windows, `raw_norms` its fp32 norms (used
+/// when `mode.bits == 0`).
+#[allow(clippy::too_many_arguments)]
+pub fn decode_side_range(
+    kind: KernelKind,
+    angles: &BitVec,
+    bins: u32,
+    norm_codes: &BitVec,
+    windows: &[(f32, f32)],
+    raw_norms: &[f32],
+    mode: NormMode,
+    t0: usize,
+    tokens: usize,
+    half: usize,
+    out_r: &mut [f32],
+    out_i: &mut [f32],
+) {
+    let elems = tokens * half;
+    debug_assert!(out_r.len() >= elems && out_i.len() >= elems);
+    let width = bits_for(bins);
+    match kind {
+        KernelKind::Scalar => {
+            let mut ang = BitCursor::new(angles, t0 * half, width);
+            for o in out_i[..elems].iter_mut() {
+                *o = ang.next(width) as f32;
+            }
+        }
+        KernelKind::Simd => {
+            unpack_f32_range_into(angles, t0 * half, width, &mut out_i[..elems]);
+        }
+    }
+    if mode.bits == 0 {
+        out_r[..elems].copy_from_slice(&raw_norms[t0 * half..t0 * half + elems]);
+        return;
+    }
+    let bits = mode.bits as u32;
+    let levels = mode.levels().max(1.0);
+    match kind {
+        KernelKind::Scalar => {
+            let mut codes = BitCursor::new(norm_codes, t0 * half, bits);
+            for (t, row) in out_r[..elems].chunks_exact_mut(half).enumerate() {
+                let (vmin, vmax) = windows[t0 + t];
+                let scale = if vmax > vmin { vmax - vmin } else { 1.0 };
+                // `(c*scale)/levels` — the exact expression of
+                // `norm::dequantize_into`; do NOT hoist `scale/levels` (it
+                // shifts the result by 1 ulp and breaks bit-parity with the
+                // norm module / oracle)
+                if mode.log_space {
+                    for o in row.iter_mut() {
+                        *o = (vmin + codes.next(bits) as f32 * scale / levels).exp();
+                    }
+                } else {
+                    for o in row.iter_mut() {
+                        *o = vmin + codes.next(bits) as f32 * scale / levels;
+                    }
+                }
+            }
+        }
+        KernelKind::Simd => {
+            // no scratch: codes land in `out_r` as exact f32 integers, the
+            // per-row affine map then runs in place — the unhoistable
+            // division vectorizes across the row instead of serializing
+            // behind a bit-cursor pop
+            unpack_f32_range_into(norm_codes, t0 * half, bits, &mut out_r[..elems]);
+            for (t, row) in out_r[..elems].chunks_exact_mut(half).enumerate() {
+                let (vmin, vmax) = windows[t0 + t];
+                let scale = if vmax > vmin { vmax - vmin } else { 1.0 };
+                affine_in_place(row, vmin, scale, levels);
+                if mode.log_space {
+                    for o in row.iter_mut() {
+                        *o = o.exp();
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Gather `(cos θ, sin θ)` for a whole lane of codes-as-f32 into
+/// contiguous slabs. Per element this is exactly [`TrigLut::cos_sin`] on
+/// `code as u16` — same saturating cast, same last-bin clamp for corrupted
+/// codes — so the gathered slabs are bit-identical to per-pair lookups.
+pub fn gather_trig(lut: &TrigLut, codes: &[f32], cos_out: &mut [f32], sin_out: &mut [f32]) {
+    let n = codes.len();
+    debug_assert!(cos_out.len() >= n && sin_out.len() >= n);
+    let (cos, sin) = (lut.cos_table(), lut.sin_table());
+    let last = cos.len() - 1;
+    for ((c, co), so) in codes.iter().zip(&mut cos_out[..n]).zip(&mut sin_out[..n]) {
+        let k = (*c as u16 as usize).min(last);
+        *co = cos[k];
+        *so = sin[k];
+    }
+}
+
+/// `out[i] = r[i] * (c[i] + coef * s[i])` — the reconstructed-polar-pair
+/// term of the sim's attention score, batched over a lane. With `coef`
+/// negative this is bit-identical to the scalar `c - |coef| * s` form
+/// (IEEE: `a - b == a + (-b)` and `(-x)*y == -(x*y)` exactly).
+pub fn weighted_polar_terms(r: &[f32], c: &[f32], s: &[f32], coef: f32, out: &mut [f32]) {
+    let n = r.len();
+    debug_assert!(c.len() >= n && s.len() >= n && out.len() >= n);
+    #[cfg(feature = "simd")]
+    {
+        use std::simd::Simd;
+        const L: usize = 8;
+        let coefv = Simd::<f32, L>::splat(coef);
+        let chunks = n / L * L;
+        for i in (0..chunks).step_by(L) {
+            let rv = Simd::<f32, L>::from_slice(&r[i..i + L]);
+            let cv = Simd::<f32, L>::from_slice(&c[i..i + L]);
+            let sv = Simd::<f32, L>::from_slice(&s[i..i + L]);
+            out[i..i + L].copy_from_slice(&(rv * (cv + coefv * sv)).to_array());
+        }
+        for i in chunks..n {
+            out[i] = r[i] * (c[i] + coef * s[i]);
+        }
+    }
+    #[cfg(not(feature = "simd"))]
+    for (((o, &ri), &ci), &si) in out[..n].iter_mut().zip(r).zip(c).zip(s) {
+        *o = ri * (ci + coef * si);
+    }
+}
+
+/// In-place `v = vmin + v * scale / levels` over one token row — the norm
+/// dequant affine map with the division kept per element (see
+/// [`decode_side_range`] on why it must not be hoisted). The batched form
+/// lets the divisions issue as vector ops; per-lane IEEE arithmetic keeps
+/// every element bit-identical to the scalar expression.
+fn affine_in_place(row: &mut [f32], vmin: f32, scale: f32, levels: f32) {
+    #[cfg(feature = "simd")]
+    {
+        use std::simd::Simd;
+        const L: usize = 8;
+        let (vm, sc, lv) = (
+            Simd::<f32, L>::splat(vmin),
+            Simd::<f32, L>::splat(scale),
+            Simd::<f32, L>::splat(levels),
+        );
+        let n = row.len();
+        let chunks = n / L * L;
+        for i in (0..chunks).step_by(L) {
+            let v = Simd::<f32, L>::from_slice(&row[i..i + L]);
+            row[i..i + L].copy_from_slice(&(vm + v * sc / lv).to_array());
+        }
+        for o in row[chunks..].iter_mut() {
+            *o = vmin + *o * scale / levels;
+        }
+    }
+    #[cfg(not(feature = "simd"))]
+    for o in row.iter_mut() {
+        *o = vmin + *o * scale / levels;
+    }
+}
+
+/// Reused slabs for the batched scoring pipeline: gathered K/V trig lanes
+/// and the per-element score/value terms. Grows once to the largest tile
+/// seen and stays there — the same bounded-scratch contract as
+/// `TileScratch`.
+#[derive(Debug, Default)]
+pub struct TrigScratch {
+    /// gathered cos θ for the K-side codes of one tile
+    pub kc: Vec<f32>,
+    /// gathered sin θ for the K-side codes
+    pub ks: Vec<f32>,
+    /// gathered cos θ for the V-side codes
+    pub vc: Vec<f32>,
+    /// gathered sin θ for the V-side codes
+    pub vs: Vec<f32>,
+    /// per-element score terms `kr·(kcos - 0.25·ksin)`
+    pub st: Vec<f32>,
+    /// per-element value terms `vr·(vcos + 0.5·vsin)`
+    pub vt: Vec<f32>,
+}
+
+impl TrigScratch {
+    /// Empty scratch; grows to the tile size on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Make every slab hold at least `elems` floats.
+    pub fn ensure(&mut self, elems: usize) {
+        if self.kc.len() < elems {
+            self.kc.resize(elems, 0.0);
+            self.ks.resize(elems, 0.0);
+            self.vc.resize(elems, 0.0);
+            self.vs.resize(elems, 0.0);
+            self.st.resize(elems, 0.0);
+            self.vt.resize(elems, 0.0);
+        }
+    }
+
+    /// Bytes held across all six slabs (bench observability).
+    pub fn bytes(&self) -> usize {
+        (self.kc.len()
+            + self.ks.len()
+            + self.vc.len()
+            + self.vs.len()
+            + self.st.len()
+            + self.vt.len())
+            * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::packing::pack;
+    use crate::util::prop::{run_cases, Gen};
+
+    fn pack_f32_codes(codes: &[f32], width: u32) -> BitVec {
+        pack(&codes.iter().map(|&c| c as u16).collect::<Vec<_>>(), width)
+    }
+
+    /// Random side chunks across norm modes (fp32 / linear / log) and the
+    /// widths boost schedules produce: both kernels must emit identical
+    /// bits, including from a nonzero chunk-local t0.
+    #[test]
+    fn prop_simd_decode_matches_scalar_all_modes() {
+        run_cases(200, |g| {
+            let half = *g.choice(&[1usize, 2, 4, 16, 32]);
+            let tokens = g.usize_in(1, 24);
+            let bins = *g.choice(&[48u32, 56, 64, 128, 200, 256, 1024]);
+            let mode = *g.choice(&[
+                NormMode::FP32,
+                NormMode::LINEAR8,
+                NormMode::LOG4,
+                NormMode { bits: 5, log_space: false },
+            ]);
+            let width = bits_for(bins);
+            let total = tokens * half;
+            let acodes: Vec<f32> = (0..total).map(|_| (g.u64() % bins as u64) as f32).collect();
+            let angles = pack_f32_codes(&acodes, width);
+            let mut windows = Vec::new();
+            let mut raw_norms = Vec::new();
+            let mut norm_codes = BitVec::default();
+            if mode.bits == 0 {
+                raw_norms = g.f32_vec(total, 0.01, 8.0);
+            } else {
+                let ncodes: Vec<f32> = (0..total)
+                    .map(|_| (g.u64() % (1u64 << mode.bits)) as f32)
+                    .collect();
+                norm_codes = pack_f32_codes(&ncodes, mode.bits as u32);
+                for _ in 0..tokens {
+                    let a = g.f32_in(-2.0, 2.0);
+                    let b = a + g.f32_in(0.0, 3.0);
+                    windows.push((a, b));
+                }
+            }
+            let t0 = g.usize_in(0, tokens - 1);
+            let span = tokens - t0;
+            let n = span * half;
+            let (mut sr, mut si) = (vec![0.0f32; n], vec![0.0f32; n]);
+            let (mut vr, mut vi) = (vec![1.0f32; n], vec![1.0f32; n]);
+            decode_side_range(
+                KernelKind::Scalar,
+                &angles,
+                bins,
+                &norm_codes,
+                &windows,
+                &raw_norms,
+                mode,
+                t0,
+                span,
+                half,
+                &mut sr,
+                &mut si,
+            );
+            decode_side_range(
+                KernelKind::Simd,
+                &angles,
+                bins,
+                &norm_codes,
+                &windows,
+                &raw_norms,
+                mode,
+                t0,
+                span,
+                half,
+                &mut vr,
+                &mut vi,
+            );
+            assert_eq!(sr, vr, "norms diverged: bins={bins} mode={mode:?} t0={t0}");
+            assert_eq!(si, vi, "angles diverged: bins={bins} mode={mode:?} t0={t0}");
+        });
+    }
+
+    #[test]
+    fn gather_matches_per_pair_lookup_with_clamping() {
+        let lut = TrigLut::new(48, false);
+        // valid codes plus out-of-range ones (clamped to the last bin) and
+        // a huge f32 (saturating u16 cast)
+        let codes: Vec<f32> = vec![0.0, 1.0, 47.0, 48.0, 200.0, 70000.0, 13.0];
+        let mut c = vec![0.0; codes.len()];
+        let mut s = vec![0.0; codes.len()];
+        gather_trig(&lut, &codes, &mut c, &mut s);
+        for (i, &k) in codes.iter().enumerate() {
+            let (wc, ws) = lut.cos_sin(k as u16);
+            assert_eq!((c[i], s[i]), (wc, ws), "code {k}");
+        }
+    }
+
+    #[test]
+    fn weighted_terms_match_scalar_expression() {
+        let mut g = Gen::new(41);
+        let n = 67; // odd length exercises the vector tail
+        let r = g.f32_vec(n, 0.01, 5.0);
+        let c = g.f32_vec(n, -1.0, 1.0);
+        let s = g.f32_vec(n, -1.0, 1.0);
+        let mut out = vec![0.0f32; n];
+        weighted_polar_terms(&r, &c, &s, -0.25, &mut out);
+        for i in 0..n {
+            assert_eq!(out[i], r[i] * (c[i] - 0.25 * s[i]), "i={i}");
+        }
+        weighted_polar_terms(&r, &c, &s, 0.5, &mut out);
+        for i in 0..n {
+            assert_eq!(out[i], r[i] * (c[i] + 0.5 * s[i]), "i={i}");
+        }
+    }
+
+    #[test]
+    fn kernel_env_dispatch() {
+        // can't mutate the process env safely under the parallel test
+        // runner; pin the parsing contract instead
+        assert_eq!(KernelKind::default(), KernelKind::Simd);
+        let parse = |v: Option<&str>| match v {
+            Some(s) if s.eq_ignore_ascii_case("scalar") => KernelKind::Scalar,
+            _ => KernelKind::Simd,
+        };
+        assert_eq!(parse(Some("scalar")), KernelKind::Scalar);
+        assert_eq!(parse(Some("SCALAR")), KernelKind::Scalar);
+        assert_eq!(parse(Some("simd")), KernelKind::Simd);
+        assert_eq!(parse(Some("wat")), KernelKind::Simd);
+        assert_eq!(parse(None), KernelKind::Simd);
+    }
+
+    #[test]
+    fn trig_scratch_grows_once() {
+        let mut s = TrigScratch::new();
+        s.ensure(64);
+        let b = s.bytes();
+        s.ensure(32);
+        assert_eq!(s.bytes(), b, "smaller tiles must not shrink or grow scratch");
+        s.ensure(128);
+        assert_eq!(s.bytes(), 2 * b);
+    }
+}

@@ -10,11 +10,13 @@ pub mod baseline;
 pub mod batch;
 pub mod config;
 pub mod fwht;
+pub mod kernels;
 pub mod norm;
 pub mod packing;
 pub mod spec;
 
 pub use angle::{decode, decode_into, encode, encode_into, Encoded};
+pub use kernels::{KernelKind, TrigScratch};
 pub use batch::{decode_batch, encode_batch};
 pub use config::{LayerBins, Mode, QuantConfig, QuantConfigBuilder};
 pub use norm::NormMode;

@@ -153,17 +153,78 @@ pub fn pack(codes: &[u16], width: u32) -> BitVec {
     bv
 }
 
-/// Unpack `count` codes.
+/// Bulk-unpack the dispatch macro shared by the u16 and f32 sinks: loads a
+/// two-word 128-bit window once, then shatters every code it fully covers
+/// with independent shifts (no per-code branch, no rolling-buffer
+/// dependency chain — the form LLVM unrolls and schedules wide). A window
+/// always covers at least `(128 - 63) / 32 = 2` codes, so the outer loop
+/// advances every iteration.
+macro_rules! bulk_unpack {
+    ($bv:expr, $start:expr, $width:expr, $out:expr, $code:ident => $emit:expr) => {{
+        let (bv, width, out) = ($bv, $width, $out);
+        debug_assert!((1..=32).contains(&width));
+        debug_assert!(($start + out.len()) * width as usize <= bv.len_bits);
+        let words = &bv.words;
+        let mask = width_mask(width);
+        let mut bit = $start * width as usize;
+        let mut i = 0usize;
+        let n = out.len();
+        while i < n {
+            let word = bit / 64;
+            let off = (bit % 64) as u32;
+            let lo = words[word] as u128;
+            let hi = if word + 1 < words.len() {
+                words[word + 1] as u128
+            } else {
+                0
+            };
+            let win = (lo | (hi << 64)) >> off;
+            let avail = 128 - off;
+            let m = ((avail / width) as usize).min(n - i);
+            for (j, o) in out[i..i + m].iter_mut().enumerate() {
+                let $code = ((win >> (j as u32 * width)) as u64 & mask) as u16;
+                *o = $emit;
+            }
+            bit += m * width;
+            i += m;
+        }
+    }};
+}
+
+/// Bulk-unpack `out.len()` codes starting at code index `start` of a
+/// `width`-bit stream into a caller buffer — the vectorizable replacement
+/// for a [`BitCursor`] loop on tile-decode hot paths (bit-identical to
+/// sequential `next` reads; proptested across widths 1..=16 including
+/// word-straddling codes). [`BitCursor`] remains the right tool for
+/// sequential/validation reads that interleave with other work.
+pub fn unpack_codes_range_into(bv: &BitVec, start: usize, width: u32, out: &mut [u16]) {
+    bulk_unpack!(bv, start, width, out, code => code);
+}
+
+/// [`unpack_codes_range_into`] with an f32 sink: codes land as exact
+/// integers (f32 represents every integer below 2^24 exactly; packed
+/// codebooks cap at 16-bit codes), ready for dequant arithmetic without an
+/// intermediate u16 buffer.
+pub fn unpack_f32_range_into(bv: &BitVec, start: usize, width: u32, out: &mut [f32]) {
+    bulk_unpack!(bv, start, width, out, code => code as f32);
+}
+
+/// Unpack codes into a caller buffer — the scratch-reusing variant of
+/// [`unpack`] for hot paths that would otherwise allocate per call.
+pub fn unpack_into(bv: &BitVec, width: u32, out: &mut [u16]) {
+    unpack_codes_range_into(bv, 0, width, out);
+}
+
+/// Unpack `count` codes (allocating convenience over [`unpack_into`]).
 pub fn unpack(bv: &BitVec, count: usize, width: u32) -> Vec<u16> {
-    (0..count).map(|i| bv.get(i, width) as u16).collect()
+    let mut out = vec![0u16; count];
+    unpack_into(bv, width, &mut out);
+    out
 }
 
 /// Unpack straight into an f32 buffer (what the HLO decode input wants).
 pub fn unpack_f32_into(bv: &BitVec, width: u32, out: &mut [f32]) {
-    let mut cur = BitCursor::new(bv, 0, width);
-    for o in out.iter_mut() {
-        *o = cur.next(width) as f32;
-    }
+    unpack_f32_range_into(bv, 0, width, out);
 }
 
 #[cfg(test)]
@@ -267,5 +328,57 @@ mod tests {
         for (c, o) in codes.iter().zip(&out) {
             assert_eq!(*c as f32, *o);
         }
+    }
+
+    #[test]
+    fn bulk_unpack_matches_cursor_at_every_width_and_start() {
+        // the bulk word-window unpacker must yield exactly the bits a
+        // sequential BitCursor yields, at every width, from starts that
+        // land mid-word and on codes straddling a 64-bit boundary
+        for width in 1..=16u32 {
+            let max = ((1u64 << width) - 1) as u32;
+            let codes: Vec<u16> = (0..517u32)
+                .map(|i| (i.wrapping_mul(2654435761) & max) as u16)
+                .collect();
+            let bv = pack(&codes, width);
+            for start in [0usize, 1, 7, 63, 64, 65, 130, 511] {
+                let n = codes.len() - start;
+                let mut cur = BitCursor::new(&bv, start, width);
+                let want: Vec<u16> = (0..n).map(|_| cur.next(width) as u16).collect();
+                let mut got = vec![0u16; n];
+                unpack_codes_range_into(&bv, start, width, &mut got);
+                assert_eq!(got, want, "w={width} start={start}");
+                let mut got_f = vec![0.0f32; n];
+                unpack_f32_range_into(&bv, start, width, &mut got_f);
+                for (g, w) in got_f.iter().zip(&want) {
+                    assert_eq!(*g, *w as f32, "w={width} start={start}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bulk_unpack_partial_and_empty_ranges() {
+        let codes: Vec<u16> = (0..40).map(|i| (i * 13 % 128) as u16).collect();
+        let bv = pack(&codes, 7);
+        let mut out = [0u16; 0];
+        unpack_codes_range_into(&bv, 5, 7, &mut out); // empty range: no-op
+        let mut out = vec![0u16; 3];
+        unpack_codes_range_into(&bv, 9, 7, &mut out); // crosses word 0/1 seam
+        assert_eq!(out, &codes[9..12]);
+        // exact end-of-stream read (last code ends on the packed length)
+        let mut out = vec![0u16; 1];
+        unpack_codes_range_into(&bv, 39, 7, &mut out);
+        assert_eq!(out[0], codes[39]);
+    }
+
+    #[test]
+    fn unpack_into_reuses_scratch() {
+        let codes: Vec<u16> = (0..300).map(|i| (i % 512) as u16).collect();
+        let bv = pack(&codes, 9);
+        let mut scratch = vec![0u16; 300];
+        unpack_into(&bv, 9, &mut scratch);
+        assert_eq!(scratch, codes);
+        assert_eq!(unpack(&bv, 300, 9), codes);
     }
 }

@@ -28,10 +28,13 @@ use super::backend::{KvTileReader, KvTileView, ModelBackend};
 use super::executor::{DecodeOut, PrefillOut};
 use super::manifest::{EvalProtocol, Profile, ServeProtocol};
 use crate::quant::angle::TrigLut;
+use crate::quant::kernels::{self, KernelKind, TrigScratch};
 use crate::quant::{LayerBins, Mode, NormMode, QuantConfig};
 use crate::util::hash::splitmix64 as mix;
 use anyhow::{ensure, Result};
 use std::cell::{Ref, RefCell};
+use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Streaming per-lane attention state shared by the dense-reinflate and
 /// fused read paths — ONE implementation, so the two paths cannot drift.
@@ -70,8 +73,11 @@ impl LaneScore {
         }
     }
 
+    /// Fold one element's raw bits into the cache checksum. The chain is
+    /// inherently sequential (each step hashes the previous), so every
+    /// kernel runs it in the same element order.
     #[inline]
-    fn element(&mut self, lutk: &TrigLut, lutv: &TrigLut, kr: f32, ki: f32, vr: f32, vi: f32) {
+    fn fold_acc(&mut self, kr: f32, ki: f32, vr: f32, vi: f32) {
         self.acc = mix(
             self.acc
                 ^ (kr.to_bits() as u64)
@@ -79,11 +85,103 @@ impl LaneScore {
                 ^ ((vr.to_bits() as u64) << 32)
                 ^ ((vi.to_bits() as u64) << 8),
         );
+    }
+
+    #[inline]
+    fn element(&mut self, lutk: &TrigLut, lutv: &TrigLut, kr: f32, ki: f32, vr: f32, vi: f32) {
+        self.fold_acc(kr, ki, vr, vi);
         // reconstructed polar pair: the trig the real decode would apply
         let (kc, ks) = lutk.cos_sin(ki as u16);
         let (vc, vs) = lutv.cos_sin(vi as u16);
         self.s_row += kr * (kc - 0.25 * ks);
         self.v_row += vr * (vc + 0.5 * vs);
+    }
+
+    /// Score `tokens` whole rows of `half` pairs each — the cache-blocked
+    /// slab update both read paths call. `KernelKind::Scalar` is the
+    /// original one-element-at-a-time loop; `KernelKind::Simd` restages
+    /// the same math as batched passes over the slab (checksum sweep, LUT
+    /// gather into `scratch`, vectorized weighted-term map, then the
+    /// sequential per-row reduction). Per-element expressions and every
+    /// accumulation order are unchanged, so the two kernels are
+    /// bit-identical — `scalar_and_simd_kernels_decode_bit_identically`
+    /// and the engine integration tests pin it.
+    #[allow(clippy::too_many_arguments)]
+    fn slab(
+        &mut self,
+        kind: KernelKind,
+        lutk: &TrigLut,
+        lutv: &TrigLut,
+        kr: &[f32],
+        ki: &[f32],
+        vr: &[f32],
+        vi: &[f32],
+        tokens: usize,
+        half: usize,
+        scratch: &mut TrigScratch,
+    ) {
+        let elems = tokens * half;
+        debug_assert!(
+            kr.len() >= elems && ki.len() >= elems && vr.len() >= elems && vi.len() >= elems
+        );
+        match kind {
+            KernelKind::Scalar => {
+                let rows = kr[..elems]
+                    .chunks_exact(half)
+                    .zip(ki[..elems].chunks_exact(half))
+                    .zip(vr[..elems].chunks_exact(half))
+                    .zip(vi[..elems].chunks_exact(half));
+                for (((kr, ki), vr), vi) in rows {
+                    for (((&a, &b), &c), &d) in kr.iter().zip(ki).zip(vr).zip(vi) {
+                        self.element(lutk, lutv, a, b, c, d);
+                    }
+                    self.end_row();
+                }
+            }
+            KernelKind::Simd => {
+                // pass 1: checksum chain, sequential in element order
+                for (((&a, &b), &c), &d) in kr[..elems]
+                    .iter()
+                    .zip(&ki[..elems])
+                    .zip(&vr[..elems])
+                    .zip(&vi[..elems])
+                {
+                    self.fold_acc(a, b, c, d);
+                }
+                // pass 2: gather trig table entries for the whole slab
+                scratch.ensure(elems);
+                kernels::gather_trig(lutk, &ki[..elems], &mut scratch.kc, &mut scratch.ks);
+                kernels::gather_trig(lutv, &vi[..elems], &mut scratch.vc, &mut scratch.vs);
+                // pass 3: elementwise weighted polar terms (vectorizable;
+                // `kc + (-0.25)*ks` == `kc - 0.25*ks` exactly in IEEE-754)
+                kernels::weighted_polar_terms(
+                    &kr[..elems],
+                    &scratch.kc,
+                    &scratch.ks,
+                    -0.25,
+                    &mut scratch.st,
+                );
+                kernels::weighted_polar_terms(
+                    &vr[..elems],
+                    &scratch.vc,
+                    &scratch.vs,
+                    0.5,
+                    &mut scratch.vt,
+                );
+                // pass 4: per-row reduction in original element order, then
+                // the streaming-softmax row close — both stay sequential
+                for (st, vt) in scratch.st[..elems]
+                    .chunks_exact(half)
+                    .zip(scratch.vt[..elems].chunks_exact(half))
+                {
+                    for (&s, &v) in st.iter().zip(vt) {
+                        self.s_row += s;
+                        self.v_row += v;
+                    }
+                    self.end_row();
+                }
+            }
+        }
     }
 
     /// Close one token row: classic streaming-softmax update (rescale the
@@ -117,12 +215,31 @@ impl LaneScore {
 
 /// Per-layer (K, V) trig tables memoized on the executor — the config is
 /// fixed per engine, so the tables are built once, not once per token.
-/// `.max(2)` guards degenerate scalar-baseline configs whose arrays carry
-/// bit counts.
+/// Tables are interned in `pool` by bin count: a 32-layer model whose
+/// boost schedule uses three distinct codebook sizes builds exactly three
+/// tables, and layers with equal bins share one allocation. `builds`
+/// counts actual [`TrigLut::new`] calls so tests can pin that decode
+/// never rebuilds per tick. `.max(2)` guards degenerate scalar-baseline
+/// configs whose arrays carry bit counts.
 #[derive(Default)]
 struct LutCache {
     key: Vec<LayerBins>,
-    tabs: Vec<(TrigLut, TrigLut)>,
+    per_layer: Vec<(Arc<TrigLut>, Arc<TrigLut>)>,
+    pool: HashMap<u32, Arc<TrigLut>>,
+    builds: usize,
+}
+
+impl LutCache {
+    fn intern(pool: &mut HashMap<u32, Arc<TrigLut>>, builds: &mut usize, n: u32) -> Arc<TrigLut> {
+        let n = n.max(2);
+        if let Some(t) = pool.get(&n) {
+            return t.clone();
+        }
+        *builds += 1;
+        let t = Arc::new(TrigLut::new(n, false));
+        pool.insert(n, t.clone());
+        t
+    }
 }
 
 pub struct SimExecutor {
@@ -133,6 +250,10 @@ pub struct SimExecutor {
     /// ±1 rotation diagonal (swappable for D-seed sweeps)
     sign: Vec<f32>,
     luts: RefCell<LutCache>,
+    /// which scoring kernel decode runs (see [`LaneScore::slab`])
+    kernel: KernelKind,
+    /// slab-sized trig staging buffers, grown once and reused every tick
+    scratch: RefCell<TrigScratch>,
 }
 
 impl SimExecutor {
@@ -191,7 +312,21 @@ impl SimExecutor {
             seed,
             sign: vec![1.0; d_head],
             luts: RefCell::new(LutCache::default()),
+            kernel: KernelKind::auto(),
+            scratch: RefCell::new(TrigScratch::new()),
         }
+    }
+
+    /// Which scoring kernel decode currently dispatches to.
+    pub fn kernel(&self) -> KernelKind {
+        self.kernel
+    }
+
+    /// Override the scoring kernel — defaults to [`KernelKind::auto`];
+    /// tests and benches set this for in-process scalar-vs-simd
+    /// comparisons.
+    pub fn set_kernel(&mut self, kernel: KernelKind) {
+        self.kernel = kernel;
     }
 
     /// Closed-form per-predicted-token NLL penalty for `cfg` — the sim's
@@ -245,9 +380,14 @@ impl SimExecutor {
         {
             let mut g = self.luts.borrow_mut();
             if g.key != cfg.layers {
-                let lut = |n: u32| TrigLut::new(n.max(2), false);
                 g.key = cfg.layers.clone();
-                g.tabs = cfg.layers.iter().map(|b| (lut(b.n_k), lut(b.n_v))).collect();
+                let LutCache { key, per_layer, pool, builds } = &mut *g;
+                per_layer.clear();
+                for b in key.iter() {
+                    let k = LutCache::intern(pool, builds, b.n_k);
+                    let v = LutCache::intern(pool, builds, b.n_v);
+                    per_layer.push((k, v));
+                }
             }
         }
         self.luts.borrow()
@@ -551,6 +691,7 @@ impl ModelBackend for SimExecutor {
         ensure!(kr.len() == l_n * b_n * h_n * tmax * half, "cache shape");
         ensure!(cfg.layers.len() == l_n, "config/profile layer mismatch");
         let luts = self.luts(cfg);
+        let mut scratch = self.scratch.borrow_mut();
         let mut out = self.empty_decode_out();
         for lane in 0..b_n {
             // rows [0, pos) are the KV-resident prefix — exactly what the
@@ -559,18 +700,26 @@ impl ModelBackend for SimExecutor {
             // rows below the committed kv length, which equals `pos`)
             let len = (pos[lane].max(0) as usize).min(tmax);
             // the "attention": checksum + streaming softmax over every
-            // reinflated element of this lane's cache (see [`LaneScore`])
+            // reinflated element of this lane's cache (see [`LaneScore`]).
+            // Rows 0..len of one (layer, head) are contiguous in the dense
+            // layout, so each slab call covers the whole attended range.
             let mut sc = LaneScore::new();
-            for (l, (lutk, lutv)) in luts.tabs.iter().enumerate() {
+            for (l, (lutk, lutv)) in luts.per_layer.iter().enumerate() {
                 for hd in 0..h_n {
-                    for t in 0..len {
-                        let base = (((l * b_n + lane) * h_n + hd) * tmax + t) * half;
-                        for i in 0..half {
-                            let j = base + i;
-                            sc.element(lutk, lutv, kr[j], ki[j], vr[j], vi[j]);
-                        }
-                        sc.end_row();
-                    }
+                    let s = ((l * b_n + lane) * h_n + hd) * tmax * half;
+                    let e = s + len * half;
+                    sc.slab(
+                        self.kernel,
+                        lutk,
+                        lutv,
+                        &kr[s..e],
+                        &ki[s..e],
+                        &vr[s..e],
+                        &vi[s..e],
+                        len,
+                        half,
+                        &mut scratch,
+                    );
                 }
             }
             let state = sc.state(token[lane], pos[lane]);
@@ -600,21 +749,27 @@ impl ModelBackend for SimExecutor {
         ensure!(token.len() == b_n && pos.len() == b_n);
         ensure!(cfg.layers.len() == l_n, "config/profile layer mismatch");
         let luts = self.luts(cfg);
+        let mut scratch = self.scratch.borrow_mut();
+        let kernel = self.kernel;
         let mut out = self.empty_decode_out();
         for lane in 0..b_n {
             let len = (pos[lane].max(0) as usize).min(tmax);
             let mut sc = LaneScore::new();
-            for (l, (lutk, lutv)) in luts.tabs.iter().enumerate() {
+            for (l, (lutk, lutv)) in luts.per_layer.iter().enumerate() {
                 cache.visit(lane, l, len, &mut |tile: &KvTileView<'_>| {
                     debug_assert_eq!(tile.half, half, "tile geometry mismatch");
-                    for t in 0..tile.tokens {
-                        let base = t * tile.half;
-                        for i in 0..tile.half {
-                            let j = base + i;
-                            sc.element(lutk, lutv, tile.kr[j], tile.ki[j], tile.vr[j], tile.vi[j]);
-                        }
-                        sc.end_row();
-                    }
+                    sc.slab(
+                        kernel,
+                        lutk,
+                        lutv,
+                        tile.kr,
+                        tile.ki,
+                        tile.vr,
+                        tile.vi,
+                        tile.tokens,
+                        tile.half,
+                        &mut scratch,
+                    );
                 })?;
             }
             let state = sc.state(token[lane], pos[lane]);
@@ -844,6 +999,61 @@ mod tests {
             assert_eq!(dense.vr, fused.vr, "tile={tile}");
             assert_eq!(dense.vi, fused.vi, "tile={tile}");
         }
+    }
+
+    #[test]
+    fn decode_reuses_cached_luts_across_ticks() {
+        let sim = SimExecutor::new(7);
+        let (l, b, h, tmax, half) = sim.cache_dims();
+        let n = l * b * h * tmax * half;
+        let kr = vec![0.5; n];
+        let token = vec![1i32; b];
+        let pos = vec![3i32; b];
+        sim.run_decode(&token, &pos, &cfg(), &kr, &kr, &kr, &kr).unwrap();
+        let after_first = sim.luts.borrow().builds;
+        // paper_uniform: every layer is (128, 64) → exactly two tables
+        assert_eq!(after_first, 2, "one build per distinct bin count");
+        for _ in 0..5 {
+            sim.run_decode(&token, &pos, &cfg(), &kr, &kr, &kr, &kr).unwrap();
+        }
+        assert_eq!(
+            sim.luts.borrow().builds,
+            after_first,
+            "steady-state decode must not rebuild trig LUTs per tick"
+        );
+        let g = sim.luts.borrow();
+        assert!(
+            Arc::ptr_eq(&g.per_layer[0].0, &g.per_layer[1].0),
+            "layers with equal bin counts must share one table"
+        );
+        drop(g);
+        // a boosted schedule adds only the NEW bin counts to the pool
+        let boosted = QuantConfig::selective_boost(l, &[0], 256, 64).with_k8v4_log();
+        sim.run_decode(&token, &pos, &boosted, &kr, &kr, &kr, &kr).unwrap();
+        assert_eq!(sim.luts.borrow().builds, after_first + 1, "only 256 is new");
+    }
+
+    #[test]
+    fn scalar_and_simd_kernels_decode_bit_identically() {
+        let mut scalar = SimExecutor::new(11);
+        scalar.set_kernel(KernelKind::Scalar);
+        let mut simd = SimExecutor::new(11);
+        simd.set_kernel(KernelKind::Simd);
+        let (l, b, h, tmax, half) = scalar.cache_dims();
+        let n = l * b * h * tmax * half;
+        let kr: Vec<f32> = (0..n).map(|i| 0.1 + (i % 97) as f32 / 31.0).collect();
+        let ki: Vec<f32> = (0..n).map(|i| (i * 7 % 128) as f32).collect();
+        let vr: Vec<f32> = (0..n).map(|i| 0.2 + (i % 53) as f32 / 17.0).collect();
+        let vi: Vec<f32> = (0..n).map(|i| (i * 11 % 64) as f32).collect();
+        let token: Vec<i32> = (0..b as i32).map(|i| 40 + i).collect();
+        let pos: Vec<i32> = (0..b as i32).map(|i| (i * 9) % tmax as i32).collect();
+        let a = scalar.run_decode(&token, &pos, &cfg(), &kr, &ki, &vr, &vi).unwrap();
+        let s = simd.run_decode(&token, &pos, &cfg(), &kr, &ki, &vr, &vi).unwrap();
+        assert_eq!(a.logits, s.logits, "kernels must agree bit-for-bit");
+        assert_eq!(a.kr, s.kr);
+        assert_eq!(a.ki, s.ki);
+        assert_eq!(a.vr, s.vr);
+        assert_eq!(a.vi, s.vi);
     }
 
     #[test]

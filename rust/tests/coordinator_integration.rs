@@ -13,7 +13,7 @@ use turboangle::coordinator::server::serve_on;
 use turboangle::coordinator::{
     BatchPolicy, Engine, EngineConfig, EngineCore, FinishReason, ReadPath, Request, RoutePolicy,
 };
-use turboangle::quant::{Mode, NormMode, QuantConfig};
+use turboangle::quant::{KernelKind, Mode, NormMode, QuantConfig};
 use turboangle::runtime::{Entry, Manifest, ModelExecutor, Runtime, SimExecutor};
 use turboangle::util::json::Json;
 use turboangle::workload::{self, WorkloadSpec};
@@ -307,6 +307,67 @@ fn selective_boost_schedule_bit_identical_across_read_paths() {
         run(ReadPath::Reinflate),
         "selective_boost schedule must decode identically on both read paths"
     );
+}
+
+/// The kernel-dispatch acceptance criterion: the vectorized (`Simd`) and
+/// reference (`Scalar`) microkernels must emit bit-identical token streams
+/// end to end — dequant on both read paths AND the attention scoring slab —
+/// under a mixed-width boost schedule (6-bit and 8-bit layers in one
+/// model). The sim folds a checksum + streaming softmax of every decoded
+/// element into each token, so a single reassociated float anywhere in the
+/// batched pipeline would change the streams.
+#[test]
+fn simd_and_scalar_kernels_emit_bit_identical_tokens() {
+    let cfg = QuantConfig::selective_boost(4, &[0, 2], 256, 128).with_k8v4_log();
+    let run = |path: ReadPath, kernel: KernelKind| {
+        let mut e = Engine::new(
+            SimExecutor::with_dims(7, 4, 2, 8, 4, 32, 64),
+            EngineConfig {
+                batch_policy: BatchPolicy {
+                    min_batch: 1,
+                    max_wait: Duration::ZERO,
+                },
+                capacity_pages: 64,
+                page_tokens: 8,
+                read_path: path,
+                ..EngineConfig::new(cfg.clone())
+            },
+        );
+        e.kv.set_kernel(kernel);
+        e.exec.set_kernel(kernel);
+        for req in workload::generate(&WorkloadSpec {
+            n_requests: 8,
+            prompt_min: 3,
+            prompt_max: 24,
+            gen_min: 2,
+            gen_max: 10,
+            seed: 23,
+            ..Default::default()
+        }) {
+            e.submit(req);
+        }
+        e.run_to_completion().unwrap();
+        assert_eq!(e.metrics.requests_finished, 8);
+        let mut out: Vec<(u64, Vec<i32>)> = e
+            .take_finished()
+            .into_iter()
+            .map(|s| (s.request.id, s.generated))
+            .collect();
+        out.sort();
+        out
+    };
+    let want = run(ReadPath::Fused, KernelKind::Simd);
+    for (path, kernel) in [
+        (ReadPath::Fused, KernelKind::Scalar),
+        (ReadPath::Reinflate, KernelKind::Simd),
+        (ReadPath::Reinflate, KernelKind::Scalar),
+    ] {
+        assert_eq!(
+            run(path, kernel),
+            want,
+            "kernel {kernel:?} on {path:?} diverged from the simd fused stream"
+        );
+    }
 }
 
 /// The prefix-cache acceptance criterion: for a whole shared-prefix

@@ -6,8 +6,12 @@ use turboangle::coordinator::kv_manager::{PageId, PagedKvCache, TileScratch};
 use turboangle::coordinator::prefix_cache::PrefixCache;
 use turboangle::coordinator::router::{RoutePolicy, Router};
 use turboangle::coordinator::session::Request;
-use turboangle::quant::packing::{bits_for, pack, unpack, BitCursor, BitVec};
-use turboangle::quant::{angle, baseline, batch, fwht, norm, Mode, NormMode, QuantConfig};
+use turboangle::quant::packing::{
+    bits_for, pack, unpack, unpack_codes_range_into, unpack_f32_range_into, BitCursor, BitVec,
+};
+use turboangle::quant::{
+    angle, baseline, batch, fwht, norm, KernelKind, Mode, NormMode, QuantConfig,
+};
 use turboangle::util::prop::{run_cases, Gen};
 
 const DIMS: [usize; 5] = [4, 16, 32, 64, 128];
@@ -104,6 +108,35 @@ fn prop_bitvec_roundtrip_all_widths_with_cursor() {
             for (idx, &want) in codes.iter().enumerate().skip(start) {
                 assert_eq!(cur.next(width), want as u32, "w={width} idx={idx}");
             }
+        }
+    });
+}
+
+#[test]
+fn prop_bulk_unpack_matches_sequential_cursor() {
+    // the bulk word-window unpacker behind the Simd kernel must yield
+    // exactly what sequential BitCursor reads yield — every width 1..=16,
+    // random sub-ranges (mid-word starts, word-straddling codes, forced
+    // all-ones values), and both the u16 and f32 sinks
+    run_cases(250, |g| {
+        let width = g.u32_in(1, 16);
+        let len = g.usize_in(1, 600);
+        let max = ((1u64 << width) - 1) as u16;
+        let mut codes: Vec<u16> = (0..len).map(|_| (g.u64() & max as u64) as u16).collect();
+        codes[g.usize_in(0, len - 1)] = max;
+        codes[len - 1] = max;
+        let bv = pack(&codes, width);
+        let start = g.usize_in(0, len - 1);
+        let n = g.usize_in(0, len - start);
+        let mut cur = BitCursor::new(&bv, start, width);
+        let want: Vec<u16> = (0..n).map(|_| cur.next(width) as u16).collect();
+        let mut got = vec![0u16; n];
+        unpack_codes_range_into(&bv, start, width, &mut got);
+        assert_eq!(got, want, "w={width} start={start} n={n}");
+        let mut got_f = vec![0.0f32; n];
+        unpack_f32_range_into(&bv, start, width, &mut got_f);
+        for (f, w) in got_f.iter().zip(&want) {
+            assert_eq!(*f, *w as f32, "w={width} start={start} n={n}");
         }
     });
 }
@@ -812,6 +845,55 @@ fn prop_shared_pool_accounting_and_eviction_safety() {
                 }
             }
         }
+    });
+}
+
+/// Both dequant kernels must emit identical bits from the same compressed
+/// pages — across mixed-width boost schedules (6-bit 48/64-bin layers next
+/// to 8-bit 256-bin ones), norm modes (fp32 / linear / log), random page
+/// sizes, and BOTH read paths (dense reinflation and fused tiles).
+#[test]
+fn prop_scalar_and_simd_kernels_decode_pages_identically() {
+    run_cases(40, |g| {
+        let pt = g.usize_in(2, 5);
+        let l_n = g.usize_in(2, 3);
+        let d = *g.choice(&[8usize, 16]);
+        let half = d / 2;
+        let tmax = 32usize;
+        let tokens = g.usize_in(1, 12);
+        let boosted: Vec<usize> = (0..l_n).filter(|_| g.bool()).collect();
+        let cfg = match g.usize_in(0, 2) {
+            0 => QuantConfig::uniform(l_n, 48, 64).with_k8v4_log(),
+            1 => QuantConfig::selective_boost(l_n, &boosted, 256, 128).with_k8v4_log(),
+            _ => QuantConfig::selective_boost(l_n, &boosted, 256, 128)
+                .with_norms(NormMode::FP32, NormMode::LINEAR8),
+        };
+        let mut kv = PagedKvCache::new(cfg, l_n, 1, d, tmax, 64, pt);
+        kv.new_seq(1, tokens).unwrap();
+        let toks: Vec<i32> = (0..tokens).map(|_| (g.u64() % 3) as i32).collect();
+        append_model_suffix(&mut kv, 1, &toks, 0);
+        let n = l_n * tmax * half;
+        let read_all = |kv: &mut PagedKvCache, kind: KernelKind| {
+            kv.set_kernel(kind);
+            let mut dense = (vec![0f32; n], vec![0f32; n], vec![0f32; n], vec![0f32; n]);
+            kv.fill_dense(1, 0, 1, &mut dense.0, &mut dense.1, &mut dense.2, &mut dense.3)
+                .unwrap();
+            let mut tiles = Vec::new();
+            let mut scratch = TileScratch::new();
+            for l in 0..l_n {
+                kv.visit_seq_tiles(1, l, tokens, &mut scratch, &mut |t| {
+                    tiles.extend_from_slice(t.kr);
+                    tiles.extend_from_slice(t.ki);
+                    tiles.extend_from_slice(t.vr);
+                    tiles.extend_from_slice(t.vi);
+                })
+                .unwrap();
+            }
+            (dense, tiles)
+        };
+        let scalar = read_all(&mut kv, KernelKind::Scalar);
+        let simd = read_all(&mut kv, KernelKind::Simd);
+        assert_eq!(scalar, simd, "kernels diverged (pt={pt} l_n={l_n} d={d})");
     });
 }
 
