@@ -6,7 +6,7 @@ ARTIFACTS ?= artifacts
 .PHONY: all artifacts test bench smoke bench-serving smoke-serving \
         bench-fused smoke-fused profile-fused bench-prefix smoke-prefix \
         bench-latency smoke-latency bench-quality smoke-quality \
-        docs fmt lint clean
+        docs fmt lint analyze loom miri tsan clean
 
 all: test
 
@@ -110,6 +110,33 @@ fmt:
 lint:
 	cargo fmt --all -- --check
 	cargo clippy -- -D warnings
+
+# Repo-specific static analysis + exhaustive concurrency models: the four
+# xtask lints (hot-path allocs, serving panics, identity-path
+# nondeterminism, release-checked bounds) and the server/store protocol
+# models. Suppress individual findings with `// xtask-allow(<rule>): why`.
+# Invariant-by-tool matrix: docs/ANALYSIS.md. CI runs this in `analyze`.
+analyze:
+	cargo test -p xtask -q
+	cargo xtask analyze
+
+# Just the concurrency models; --trace prints the pinned counterexample
+# schedules of the buggy variants.
+loom:
+	cargo xtask loom --trace
+
+# Pointer-level UB check of the quant core under the Miri interpreter
+# (nightly + `rustup component add miri`). TURBOANGLE_PROP_CASES trims
+# the seeded property suites to fit the interpreter's speed.
+miri:
+	TURBOANGLE_PROP_CASES=8 cargo +nightly miri test --lib -- quant::
+
+# ThreadSanitizer over the threaded server integration suite (nightly +
+# `rustup component add rust-src --toolchain nightly`).
+tsan:
+	RUSTFLAGS="-Zsanitizer=thread" \
+	cargo +nightly test -Zbuild-std --target x86_64-unknown-linux-gnu \
+		--test coordinator_integration
 
 clean:
 	cargo clean

@@ -518,6 +518,7 @@ impl<B: ModelBackend> Engine<B> {
             if budget == 0 {
                 break;
             }
+            // xtask-allow(no-panic-in-serving): `pref` was built from slots holding mid-prefill sessions two lines up; an empty slot here is engine-state corruption, not bad input
             let sess = self.slots[slot].as_ref().expect("prefilling slot is seated");
             let want = (sess.prompt_len - sess.prefill_cursor)
                 .min(self.chunk_tokens)
@@ -561,6 +562,7 @@ impl<B: ModelBackend> Engine<B> {
         let mut starts = vec![0usize; b_total];
         let mut lens = vec![0usize; b_total];
         for &(slot, want) in grants {
+            // xtask-allow(no-panic-in-serving): grants only name slots the budget pass just saw seated; nothing between can vacate them
             let sess = self.slots[slot].as_ref().expect("granted slot is seated");
             let plen = sess.prompt_len;
             tokens[slot * tp..slot * tp + plen].copy_from_slice(&sess.request.prompt[..plen]);
@@ -579,6 +581,7 @@ impl<B: ModelBackend> Engine<B> {
         let vocab = self.exec.profile().vocab;
         for &(slot, want) in grants {
             let (id, c0, plen) = {
+                // xtask-allow(no-panic-in-serving): same grants invariant as above — the HLO ran, but the slot set is unchanged
                 let sess = self.slots[slot].as_ref().expect("granted slot is seated");
                 (sess.request.id, sess.prefill_cursor, sess.prompt_len)
             };
@@ -598,6 +601,7 @@ impl<B: ModelBackend> Engine<B> {
             // chunk landed: progress — the session is now preemptible
             // (resume continues from the cursor, bit-identically)
             self.slot_decoded[slot] = true;
+            // xtask-allow(no-panic-in-serving): same grants invariant; the append/commit loop above cannot clear a slot
             let sess = self.slots[slot].as_mut().expect("granted slot is seated");
             sess.prefill_cursor += want;
             if sess.prefill_cursor >= plen && sess.generated.is_empty() {
@@ -610,6 +614,7 @@ impl<B: ModelBackend> Engine<B> {
                     .ttft
                     .record(Instant::now().duration_since(sess.request.arrival));
                 if sess.finished.is_some() {
+                    // xtask-allow(no-panic-in-serving): the borrow that set `finished` was taken from this very slot
                     let sess = self.slots[slot].take().expect("granted slot is seated");
                     self.finish_kv(&sess)?;
                     self.retire(sess);
@@ -637,6 +642,7 @@ impl<B: ModelBackend> Engine<B> {
             let Some(slot) = self.slots.iter().position(|s| s.is_none()) else {
                 break;
             };
+            // xtask-allow(no-panic-in-serving): the `while !self.preempted.is_empty()` guard is two lines up and nothing pops in between
             let sess = self.preempted.front().expect("checked non-empty");
             let remaining = sess
                 .request
@@ -663,6 +669,7 @@ impl<B: ModelBackend> Engine<B> {
             if !admitted {
                 break; // FIFO: don't let younger preemptees jump the queue
             }
+            // xtask-allow(no-panic-in-serving): same loop guard — the queue is non-empty or we'd have exited above
             let sess = self.preempted.pop_front().expect("checked non-empty");
             self.metrics.swap_ins += 1;
             self.slot_filled[slot] = 0; // restored stream: full refill
@@ -722,6 +729,7 @@ impl<B: ModelBackend> Engine<B> {
     /// preemption queue. No dequantization happens; the page pool gets the
     /// session's pages AND its admission reservation back.
     fn evict_slot(&mut self, slot: usize) -> Result<()> {
+        // xtask-allow(no-panic-in-serving): every caller selects `slot` from the occupied set; evicting an empty slot is a scheduler bug that must fail loudly
         let mut sess = self.slots[slot].take().expect("evicting an empty slot");
         self.kv.swap_out(sess.request.id)?;
         sess.preemptions += 1;
@@ -804,6 +812,7 @@ impl<B: ModelBackend> Engine<B> {
             // eligible victims until its pages fit, THEN retry the batch
             // pass — a single deferral count per blocked tick
             let (head_id, head_pages) = {
+                // xtask-allow(no-panic-in-serving): guarded by the `pending > 0` branch this block sits in
                 let head = self.batcher.peek().expect("pending > 0");
                 let full = self.kv.pages_for_tokens(expected_tokens(
                     head.prompt.len(),
@@ -965,6 +974,7 @@ impl<B: ModelBackend> Engine<B> {
                     continue; // mid-prefill (chunked): not a decode lane
                 }
                 any = true;
+                // xtask-allow(no-panic-in-serving): `decode_ready()` requires a sampled token (prefill seeds one before any decode step)
                 token[b] = *sess.generated.last().expect("decode-ready session has a token");
                 pos[b] = (sess.cache_len() - 1) as i32;
                 // fused path: no dense buffers to keep warm — the backend
@@ -1055,7 +1065,8 @@ impl<B: ModelBackend> Engine<B> {
             }
             self.metrics.tokens_generated += 1;
             if sess.finished.is_some() {
-                let sess = self.slots[b].take().unwrap();
+                // xtask-allow(no-panic-in-serving): `sess` above is a borrow of this slot's contents, so the slot is occupied
+                let sess = self.slots[b].take().expect("finished session occupies its slot");
                 self.finish_kv(&sess)?;
                 self.retire(sess);
             }

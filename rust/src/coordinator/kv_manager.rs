@@ -1107,7 +1107,7 @@ impl PagedKvCache {
                 .zip(vi.par_chunks_mut(layer_elems))
                 .take(self.n_layers)
                 .enumerate()
-                .for_each(|(l, (((kr, ki), vr), vi))| {
+                .try_for_each(|(l, (((kr, ki), vr), vi))| {
                     let bins = self.cfg.layers[l];
                     fill_layer(
                         &self.shared_store,
@@ -1122,8 +1122,8 @@ impl PagedKvCache {
                         ki,
                         vr,
                         vi,
-                    );
-                });
+                    )
+                })?;
         } else {
             for (l, (((kr, ki), vr), vi)) in kr
                 .chunks_mut(layer_elems)
@@ -1146,7 +1146,7 @@ impl PagedKvCache {
                     ki,
                     vr,
                     vi,
-                );
+                )?;
             }
         }
         Ok(seq.len)
@@ -1215,7 +1215,7 @@ impl PagedKvCache {
             &mut ki[..elems],
             &mut vr[..elems],
             &mut vi[..elems],
-        );
+        )?;
         Ok(())
     }
 
@@ -1254,8 +1254,8 @@ impl PagedKvCache {
                 // t0 is always page-aligned, so one tile == one page chunk
                 let (ks, vs) = seq.chunk(&self.shared_store, t0 / tile_tokens, layer, head);
                 let (kn, s) = (self.kernel, &mut *scratch);
-                decode_side_range(kn, ks, bins.n_k, k_norm, 0, tokens, half, &mut s.kr, &mut s.ki);
-                decode_side_range(kn, vs, bins.n_v, v_norm, 0, tokens, half, &mut s.vr, &mut s.vi);
+                decode_side_range(kn, ks, bins.n_k, k_norm, 0, tokens, half, &mut s.kr, &mut s.ki)?;
+                decode_side_range(kn, vs, bins.n_v, v_norm, 0, tokens, half, &mut s.vr, &mut s.vi)?;
                 f(&KvTileView {
                     layer,
                     head,
@@ -1417,10 +1417,10 @@ fn fill_layer(
     ki: &mut [f32],
     vr: &mut [f32],
     vi: &mut [f32],
-) {
+) -> Result<()> {
     let FillJob { b, h_n, tmax, half, from_t, len, kernel } = job;
     if from_t >= len {
-        return;
+        return Ok(());
     }
     let tokens = len - from_t;
     for h in 0..h_n {
@@ -1445,8 +1445,9 @@ fn fill_layer(
             ki,
             vr,
             vi,
-        );
+        )?;
     }
+    Ok(())
 }
 
 /// Dequantize tokens `t0..t0+tokens` of one (layer, head) into contiguous
@@ -1472,7 +1473,7 @@ fn decode_lh_range(
     ki: &mut [f32],
     vr: &mut [f32],
     vi: &mut [f32],
-) {
+) -> Result<()> {
     let mut t = t0;
     while t < t0 + tokens {
         let page = t / page_tokens;
@@ -1483,10 +1484,11 @@ fn decode_lh_range(
         let e = o + run * half;
         let (kr, ki) = (&mut kr[o..e], &mut ki[o..e]);
         let (vr, vi) = (&mut vr[o..e], &mut vi[o..e]);
-        decode_side_range(kernel, ks, bins.n_k, k_norm, local, run, half, kr, ki);
-        decode_side_range(kernel, vs, bins.n_v, v_norm, local, run, half, vr, vi);
+        decode_side_range(kernel, ks, bins.n_k, k_norm, local, run, half, kr, ki)?;
+        decode_side_range(kernel, vs, bins.n_v, v_norm, local, run, half, vr, vi)?;
         t += run;
     }
+    Ok(())
 }
 
 /// Dequantize tokens `t0..t0+tokens` of one side CHUNK (`t0` is
@@ -1510,7 +1512,7 @@ fn decode_side_range(
     half: usize,
     out_r: &mut [f32],
     out_i: &mut [f32],
-) {
+) -> Result<()> {
     kernels::decode_side_range(
         kernel,
         &store.angles,
@@ -1524,7 +1526,7 @@ fn decode_side_range(
         half,
         out_r,
         out_i,
-    );
+    )
 }
 
 #[cfg(test)]
@@ -1609,6 +1611,37 @@ mod tests {
         for (a, b) in vr.iter().zip(&ovr[..half]) {
             assert!((b / a - 1.0).abs() < 0.25, "{a} {b}"); // 4-bit log coarse
         }
+    }
+
+    /// A committed token whose appends skipped a layer leaves that layer's
+    /// packed streams short. Both read paths must surface that as a clean
+    /// `Err` from the kernel entry's release-mode validation — never an
+    /// out-of-bounds word read (what `debug_assert!` alone degraded to in
+    /// release builds).
+    #[test]
+    fn truncated_layer_stream_errors_cleanly() {
+        let mut c = mk_cache((NormMode::FP32, NormMode::FP32));
+        c.new_seq(9, 16).unwrap();
+        let half = 4;
+        let (kr, ki) = fake_entry(2, half, 128);
+        // Layer 0 only — layer 1 never sees this token's codes.
+        c.append_token_lh(9, 0, 0, &kr, &ki, &kr, &ki).unwrap();
+        c.commit_token(9).unwrap();
+        let n = 2 * 16 * half;
+        let (mut okr, mut oki, mut ovr, mut ovi) =
+            (vec![0.0; n], vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+        let err = c
+            .fill_dense(9, 0, 1, &mut okr, &mut oki, &mut ovr, &mut ovi)
+            .unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+        // The fused tile path hits the same validation.
+        let mut scratch = TileScratch::default();
+        let err = c
+            .visit_seq_tiles(9, 1, 1, &mut scratch, &mut |_| {})
+            .unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+        // The healthy layer still decodes.
+        c.visit_seq_tiles(9, 0, 1, &mut scratch, &mut |_| {}).unwrap();
     }
 
     #[test]

@@ -55,6 +55,17 @@ use std::time::Duration;
 /// before re-checking shutdown conditions.
 const IDLE_WAIT: Duration = Duration::from_millis(25);
 
+/// Lock the shared router, recovering from poison instead of panicking.
+///
+/// The router holds only load counters and the hash ring — every field is
+/// valid at every instruction boundary, so the state behind a poisoned
+/// lock (some peer thread panicked while holding it) is still a usable
+/// routing heuristic. Propagating the poison would let one crashed thread
+/// take down the dispatcher and every replica worker with it.
+fn lock_router(router: &Mutex<Router>) -> std::sync::MutexGuard<'_, Router> {
+    router.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// A parsed wire request.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WireRequest {
@@ -285,7 +296,7 @@ pub fn serve_on(
                 if wire.stats {
                     // metrics query: route like a (keyless) request so
                     // repeated queries sample the replicas
-                    let replica = router.lock().unwrap().route(None);
+                    let replica = lock_router(&router).route(None);
                     let job = ReplicaJob::Stats {
                         wire_id: wire.id,
                         conn,
@@ -300,7 +311,7 @@ pub fn serve_on(
                 next_id += 1;
                 let mut req = Request::new(id, prompt, wire.max_new_tokens);
                 req.session_key = wire.session_key;
-                let replica = router.lock().unwrap().route(wire.session_key);
+                let replica = lock_router(&router).route(wire.session_key);
                 let job = ReplicaJob::Gen {
                     req,
                     wire_id: wire.id,
@@ -361,7 +372,7 @@ fn replica_worker(
                 let line = format_stats_response(wire_id, idx, &engine.metrics());
                 // stats lines never count toward a bounded serve
                 let _ = conn.send(ConnLine { line, counts: false });
-                router.lock().unwrap().complete(idx);
+                lock_router(router).complete(idx);
             }
         }
     }
@@ -407,7 +418,7 @@ fn replica_worker(
                 if conn.send(ConnLine { line, counts: true }).is_err() {
                     served.fetch_add(1, Ordering::Relaxed);
                 }
-                router.lock().unwrap().complete(idx);
+                lock_router(&router).complete(idx);
             }
         }
     }
@@ -442,17 +453,24 @@ fn handle_conn(
     });
     let reader = BufReader::new(stream);
     for line in reader.lines() {
-        let line = line?;
+        // A dead or misbehaving peer (reset mid-line, invalid UTF-8) only
+        // ends THIS connection: drop it and drain the writer. Propagating
+        // the error here would skip the writer join below and leak queued
+        // responses.
+        let Ok(line) = line else { break };
         if line.trim().is_empty() {
             continue;
         }
         match parse_request(&line) {
             Ok(wire) => {
-                ingest
-                    .send((wire, conn_tx.clone()))
-                    .map_err(|_| anyhow!("server gone"))?;
+                // The dispatcher hanging up (bounded serve complete) is a
+                // normal shutdown signal, not a connection error.
+                if ingest.send((wire, conn_tx.clone())).is_err() {
+                    break;
+                }
             }
             Err(e) => {
+                // Malformed request line: answer on the wire, keep reading.
                 let line = format!("{{\"error\": \"{}\"}}", json_escape(&e.to_string()));
                 let _ = conn_tx.send(ConnLine { line, counts: false });
             }

@@ -43,6 +43,7 @@
 use super::angle::TrigLut;
 use super::norm::NormMode;
 use super::packing::{bits_for, unpack_f32_range_into, BitCursor, BitVec};
+use anyhow::{ensure, Result};
 
 /// Which implementation of the shared dequant/score kernels runs.
 ///
@@ -84,6 +85,14 @@ impl KernelKind {
 /// `angles`/`norm_codes` are the chunk's packed streams, `windows` its
 /// per-token (min, max) norm windows, `raw_norms` its fp32 norms (used
 /// when `mode.bits == 0`).
+///
+/// All length preconditions are validated here in EVERY profile, not just
+/// debug: the packed streams come from stored cache state, so a truncated
+/// bitstream (partially appended layer, corrupted page) must surface as a
+/// clean `Err` instead of an out-of-bounds read of stale words in release
+/// builds. This is the single public entry for both read paths, so the
+/// inner stages ([`BitCursor`], `bulk_unpack!`) may keep their checks as
+/// `debug_assert!` — every index they touch is bounded by the checks here.
 #[allow(clippy::too_many_arguments)]
 pub fn decode_side_range(
     kind: KernelKind,
@@ -98,10 +107,42 @@ pub fn decode_side_range(
     half: usize,
     out_r: &mut [f32],
     out_i: &mut [f32],
-) {
+) -> Result<()> {
     let elems = tokens * half;
-    debug_assert!(out_r.len() >= elems && out_i.len() >= elems);
+    let end = t0 + tokens;
     let width = bits_for(bins);
+    ensure!(
+        out_r.len() >= elems && out_i.len() >= elems,
+        "decode_side_range: output buffers ({}, {}) hold fewer than tokens*half = {elems} elements",
+        out_r.len(),
+        out_i.len()
+    );
+    ensure!(
+        angles.len_bits() >= end * half * width as usize,
+        "decode_side_range: angle stream truncated ({} bits stored, {} needed for tokens ..{end})",
+        angles.len_bits(),
+        end * half * width as usize
+    );
+    if mode.bits == 0 {
+        ensure!(
+            raw_norms.len() >= end * half,
+            "decode_side_range: fp32 norm stream truncated ({} stored, {} needed)",
+            raw_norms.len(),
+            end * half
+        );
+    } else {
+        ensure!(
+            windows.len() >= end,
+            "decode_side_range: norm windows truncated ({} stored, {end} needed)",
+            windows.len()
+        );
+        ensure!(
+            norm_codes.len_bits() >= end * half * mode.bits as usize,
+            "decode_side_range: norm code stream truncated ({} bits stored, {} needed)",
+            norm_codes.len_bits(),
+            end * half * mode.bits as usize
+        );
+    }
     match kind {
         KernelKind::Scalar => {
             let mut ang = BitCursor::new(angles, t0 * half, width);
@@ -115,7 +156,7 @@ pub fn decode_side_range(
     }
     if mode.bits == 0 {
         out_r[..elems].copy_from_slice(&raw_norms[t0 * half..t0 * half + elems]);
-        return;
+        return Ok(());
     }
     let bits = mode.bits as u32;
     let levels = mode.levels().max(1.0);
@@ -158,15 +199,26 @@ pub fn decode_side_range(
             }
         }
     }
+    Ok(())
 }
 
 /// Gather `(cos θ, sin θ)` for a whole lane of codes-as-f32 into
 /// contiguous slabs. Per element this is exactly [`TrigLut::cos_sin`] on
 /// `code as u16` — same saturating cast, same last-bin clamp for corrupted
 /// codes — so the gathered slabs are bit-identical to per-pair lookups.
+///
+/// The length check is a release-mode `assert!`: this is a public kernel
+/// entry, and a short output slab is a caller bug that must not degrade to
+/// a silent partial gather in release builds. One branch per lane call is
+/// noise next to the gather itself.
 pub fn gather_trig(lut: &TrigLut, codes: &[f32], cos_out: &mut [f32], sin_out: &mut [f32]) {
     let n = codes.len();
-    debug_assert!(cos_out.len() >= n && sin_out.len() >= n);
+    assert!(
+        cos_out.len() >= n && sin_out.len() >= n,
+        "gather_trig: output slabs ({}, {}) shorter than the {n} input codes",
+        cos_out.len(),
+        sin_out.len()
+    );
     let (cos, sin) = (lut.cos_table(), lut.sin_table());
     let last = cos.len() - 1;
     for ((c, co), so) in codes.iter().zip(&mut cos_out[..n]).zip(&mut sin_out[..n]) {
@@ -182,7 +234,15 @@ pub fn gather_trig(lut: &TrigLut, codes: &[f32], cos_out: &mut [f32], sin_out: &
 /// (IEEE: `a - b == a + (-b)` and `(-x)*y == -(x*y)` exactly).
 pub fn weighted_polar_terms(r: &[f32], c: &[f32], s: &[f32], coef: f32, out: &mut [f32]) {
     let n = r.len();
-    debug_assert!(c.len() >= n && s.len() >= n && out.len() >= n);
+    // Release-mode check for the same reason as `gather_trig`: public
+    // kernel entry, caller bug must fail loudly in every profile.
+    assert!(
+        c.len() >= n && s.len() >= n && out.len() >= n,
+        "weighted_polar_terms: lanes ({}, {}, {}) shorter than the {n} radii",
+        c.len(),
+        s.len(),
+        out.len()
+    );
     #[cfg(feature = "simd")]
     {
         use std::simd::Simd;
@@ -349,7 +409,8 @@ mod tests {
                 half,
                 &mut sr,
                 &mut si,
-            );
+            )
+            .unwrap();
             decode_side_range(
                 KernelKind::Simd,
                 &angles,
@@ -363,10 +424,98 @@ mod tests {
                 half,
                 &mut vr,
                 &mut vi,
-            );
+            )
+            .unwrap();
             assert_eq!(sr, vr, "norms diverged: bins={bins} mode={mode:?} t0={t0}");
             assert_eq!(si, vi, "angles diverged: bins={bins} mode={mode:?} t0={t0}");
         });
+    }
+
+    /// A truncated packed stream must surface as `Err` from the public
+    /// entry in EVERY build profile — these checks are `ensure!`, not
+    /// `debug_assert!`, so this test pins release behavior too (CI runs
+    /// the lib suite under `--release` as well).
+    #[test]
+    fn truncated_streams_error_cleanly() {
+        let (half, tokens, bins) = (4usize, 6usize, 64u32);
+        let width = bits_for(bins);
+        let total = tokens * half;
+        let full: Vec<f32> = (0..total).map(|i| (i as u32 % bins) as f32).collect();
+        let angles = pack_f32_codes(&full, width);
+        // Angle stream one token short of what t0..t0+tokens needs.
+        let short_angles = pack_f32_codes(&full[..total - half], width);
+        let mode = NormMode::LINEAR8;
+        let ncodes: Vec<f32> = (0..total).map(|i| (i % 256) as f32).collect();
+        let norm_codes = pack_f32_codes(&ncodes, mode.bits as u32);
+        let short_norms = pack_f32_codes(&ncodes[..total - half], mode.bits as u32);
+        let windows: Vec<(f32, f32)> = (0..tokens).map(|t| (t as f32, t as f32 + 1.0)).collect();
+        let (mut r, mut i) = (vec![0.0f32; total], vec![0.0f32; total]);
+        for kind in [KernelKind::Scalar, KernelKind::Simd] {
+            let run = |ang: &BitVec, nc: &BitVec, win: &[(f32, f32)], r: &mut [f32], i: &mut [f32]| {
+                decode_side_range(
+                    kind, ang, bins, nc, win, &[], mode, 0, tokens, half, r, i,
+                )
+            };
+            assert!(run(&angles, &norm_codes, &windows, &mut r, &mut i).is_ok());
+            let e = run(&short_angles, &norm_codes, &windows, &mut r, &mut i).unwrap_err();
+            assert!(e.to_string().contains("angle stream truncated"), "{e}");
+            let e = run(&angles, &short_norms, &windows, &mut r, &mut i).unwrap_err();
+            assert!(e.to_string().contains("norm code stream truncated"), "{e}");
+            let e = run(&angles, &norm_codes, &windows[..tokens - 1], &mut r, &mut i).unwrap_err();
+            assert!(e.to_string().contains("norm windows truncated"), "{e}");
+            let e = run(&angles, &norm_codes, &windows, &mut r[..total - 1], &mut i).unwrap_err();
+            assert!(e.to_string().contains("output buffers"), "{e}");
+            // fp32 norms: raw stream shorter than the decode span
+            let e = decode_side_range(
+                kind,
+                &angles,
+                bins,
+                &BitVec::default(),
+                &[],
+                &full[..total - 1],
+                NormMode::FP32,
+                0,
+                tokens,
+                half,
+                &mut r,
+                &mut i,
+            )
+            .unwrap_err();
+            assert!(e.to_string().contains("fp32 norm stream truncated"), "{e}");
+        }
+    }
+
+    /// Nonzero `t0` counts against the stored stream too: a chunk holding
+    /// only `t0` tokens must reject a read past its end even when the
+    /// requested span alone would fit.
+    #[test]
+    fn truncation_accounts_for_chunk_local_offset() {
+        let (half, bins) = (2usize, 48u32);
+        let width = bits_for(bins);
+        let codes: Vec<f32> = (0..4 * half).map(|i| (i as u32 % bins) as f32).collect();
+        let angles = pack_f32_codes(&codes, width);
+        let norms: Vec<f32> = (0..8 * half).map(|i| i as f32).collect();
+        let (mut r, mut i) = (vec![0.0f32; 4 * half], vec![0.0f32; 4 * half]);
+        for kind in [KernelKind::Scalar, KernelKind::Simd] {
+            // 4 tokens stored: t0=2, span=2 fits; t0=3, span=2 does not.
+            for (t0, span, ok) in [(2usize, 2usize, true), (3, 2, false)] {
+                let got = decode_side_range(
+                    kind,
+                    &angles,
+                    bins,
+                    &BitVec::default(),
+                    &[],
+                    &norms,
+                    NormMode::FP32,
+                    t0,
+                    span,
+                    half,
+                    &mut r,
+                    &mut i,
+                );
+                assert_eq!(got.is_ok(), ok, "kind={kind:?} t0={t0}");
+            }
+        }
     }
 
     #[test]

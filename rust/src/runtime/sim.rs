@@ -33,6 +33,7 @@ use crate::quant::{LayerBins, Mode, NormMode, QuantConfig};
 use crate::util::hash::splitmix64 as mix;
 use anyhow::{ensure, Result};
 use std::cell::{Ref, RefCell};
+// xtask-allow(no-nondeterminism-in-identity-paths): HashMap here is keyed lookup only (LutCache interning); nothing ever iterates it, so hash order cannot reach a checksum
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -225,11 +226,13 @@ impl LaneScore {
 struct LutCache {
     key: Vec<LayerBins>,
     per_layer: Vec<(Arc<TrigLut>, Arc<TrigLut>)>,
+    // xtask-allow(no-nondeterminism-in-identity-paths): per-bin-count LUT pool, accessed only via get/insert by key — never iterated
     pool: HashMap<u32, Arc<TrigLut>>,
     builds: usize,
 }
 
 impl LutCache {
+    // xtask-allow(no-nondeterminism-in-identity-paths): keyed get/insert on the pool above; iteration-order-free by construction
     fn intern(pool: &mut HashMap<u32, Arc<TrigLut>>, builds: &mut usize, n: u32) -> Arc<TrigLut> {
         let n = n.max(2);
         if let Some(t) = pool.get(&n) {

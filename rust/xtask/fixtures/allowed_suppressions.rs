@@ -1,0 +1,11 @@
+//! Escape-hatch fixture: allows with and without reasons, plus a typo'd
+//! rule name. Not compiled — consumed by xtask lint tests.
+
+fn checked_invariant(slots: &[Option<u64>], i: usize) -> u64 {
+    // xtask-allow(no-panic-in-serving): slot occupancy was established by the caller's scan one line up
+    let a = slots[i].unwrap();
+    // xtask-allow(no-panic-in-serving)
+    let b = slots[i].unwrap();
+    // xtask-allow(no-such-rule): typo'd rule names must be reported
+    a + b
+}

@@ -1,0 +1,20 @@
+//! Known-bad snippet for `no-alloc-in-hot-path`: a decode-stage function
+//! that allocates per call. Not compiled — consumed by xtask lint tests.
+
+fn decode_tile(codes: &[u16]) -> Vec<f32> {
+    // BAD: fresh buffer every tile tick
+    let mut out = Vec::new();
+    out.extend(codes.iter().map(|&c| c as f32));
+    // BAD: iterator collect in the hot body
+    let doubled: Vec<f32> = out.iter().map(|v| v * 2.0).collect();
+    doubled
+}
+
+fn grow_scratch(scratch: &mut Vec<f32>, elems: usize) {
+    // Fine here: this helper is the grow-once scratch path, OUTSIDE the
+    // scoped hot function, so the function-scoped rule must not flag it.
+    if scratch.len() < elems {
+        scratch.resize(elems, 0.0);
+    }
+    let _tmp: Vec<u8> = Vec::new();
+}

@@ -1,0 +1,16 @@
+// Known-bad snippet for `release-checked-bounds`. Line 1 carries a
+// debug_assert that is NOT about lengths (legal); the two below vanish in
+// release exactly where a truncated bitstream would read stale words.
+fn kernel_entry(out: &mut [f32], codes: &[u16], width: u32) {
+    debug_assert!(width <= 16);
+    // BAD: bounds precondition only checked in debug builds
+    debug_assert!(out.len() >= codes.len());
+    // BAD: multi-line form, same problem
+    debug_assert!(
+        codes.len() * width as usize <= out.len() * 16,
+        "stream truncated"
+    );
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = c as f32;
+    }
+}

@@ -1,0 +1,19 @@
+//! Known-bad snippet for `no-nondeterminism-in-identity-paths`: hash
+//! iteration order, wall-clock time, and fused float ops feeding a
+//! checksum. Not compiled — consumed by xtask lint tests.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+fn content_checksum(pages: &HashMap<u64, Vec<u8>>) -> u64 {
+    let mut h = 0u64;
+    // BAD: HashMap iteration order differs run to run
+    for (k, v) in pages {
+        h = h.wrapping_mul(31).wrapping_add(k + v.len() as u64);
+    }
+    // BAD: wall-clock in an identity path
+    let _t = Instant::now();
+    // BAD: fma contracts differently across targets than mul-then-add
+    let fused = (h as f32).mul_add(2.0, 1.0);
+    h ^ fused as u64
+}

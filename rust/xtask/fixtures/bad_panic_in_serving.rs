@@ -1,0 +1,30 @@
+//! Known-bad snippet for `no-panic-in-serving`: wire-path code that can
+//! take a thread down on bad input. Not compiled — consumed by xtask
+//! lint tests. Exactly three findings: unwrap, expect, panic!.
+
+fn handle_line(line: &str) -> u64 {
+    // BAD: malformed input kills the reader thread
+    let parsed: u64 = line.trim().parse().unwrap();
+    parsed
+}
+
+fn route(loads: &[u64]) -> usize {
+    // BAD: panics on an empty replica set instead of erroring
+    let min = loads.iter().min().expect("at least one replica");
+    let msg = "strings mentioning .unwrap() must not fire";
+    if msg.is_empty() {
+        // BAD: reachable panic in the serving path
+        panic!("empty message");
+    }
+    *min as usize
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn in_test_mod() {
+        // Fine here: tests may unwrap freely.
+        let v: u64 = "7".parse().unwrap();
+        assert_eq!(v, 7);
+    }
+}

@@ -1,0 +1,457 @@
+//! A minimal Rust source lexer for the lint pass.
+//!
+//! We cannot vendor `syn` offline, and the lint rules only need to know
+//! three things about a file: which bytes are *code* (not string/char
+//! literals or comments), what each line's comments say (for the
+//! `xtask-allow` escape hatch), and where function bodies and
+//! `#[cfg(test)]` modules begin and end. A small state machine over the
+//! raw characters covers all of that; it understands line/block (nested)
+//! comments, string/byte-string/raw-string literals, char literals, and
+//! lifetimes.
+//!
+//! The output preserves line structure: `code[i]` is line `i` with every
+//! non-code region collapsed to a single space (so adjacent tokens never
+//! fuse), and `comments[i]` is the concatenated comment text on line `i`.
+
+/// Per-line split of a source file into code text and comment text.
+pub struct LexedFile {
+    /// Line text with literals and comments blanked out.
+    pub code: Vec<String>,
+    /// Comment text per line (without the `//` / `/*` markers).
+    pub comments: Vec<String>,
+}
+
+impl LexedFile {
+    /// Number of lines in the file.
+    pub fn lines(&self) -> usize {
+        self.code.len()
+    }
+}
+
+/// True for characters that can continue an identifier.
+pub fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into per-line code/comment text.
+pub fn lex(src: &str) -> LexedFile {
+    let cs: Vec<char> = src.chars().collect();
+    let mut code = Vec::new();
+    let mut comments = Vec::new();
+    let mut cur_code = String::new();
+    let mut cur_comment = String::new();
+    let mut i = 0usize;
+
+    macro_rules! newline {
+        () => {{
+            code.push(std::mem::take(&mut cur_code));
+            comments.push(std::mem::take(&mut cur_comment));
+        }};
+    }
+
+    while i < cs.len() {
+        let c = cs[i];
+        let next = cs.get(i + 1).copied();
+        match c {
+            '\n' => {
+                newline!();
+                i += 1;
+            }
+            '/' if next == Some('/') => {
+                // Line comment: record its text, stop before the newline.
+                i += 2;
+                while i < cs.len() && cs[i] != '\n' {
+                    cur_comment.push(cs[i]);
+                    i += 1;
+                }
+                cur_code.push(' ');
+            }
+            '/' if next == Some('*') => {
+                // Block comment, possibly nested; text still recorded per line.
+                i += 2;
+                let mut depth = 1u32;
+                while i < cs.len() && depth > 0 {
+                    if cs[i] == '/' && cs.get(i + 1) == Some(&'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if cs[i] == '*' && cs.get(i + 1) == Some(&'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else if cs[i] == '\n' {
+                        newline!();
+                        i += 1;
+                    } else {
+                        cur_comment.push(cs[i]);
+                        i += 1;
+                    }
+                }
+                cur_code.push(' ');
+            }
+            '"' => {
+                i = skip_string(&cs, i + 1, &mut code, &mut comments, &mut cur_code, &mut cur_comment);
+                cur_code.push(' ');
+            }
+            'r' | 'b' if raw_string_start(&cs, i).is_some() => {
+                let (body_start, hashes) = raw_string_start(&cs, i).unwrap();
+                i = skip_raw_string(&cs, body_start, hashes, &mut code, &mut comments, &mut cur_code, &mut cur_comment);
+                cur_code.push(' ');
+            }
+            'b' if next == Some('"') => {
+                i = skip_string(&cs, i + 2, &mut code, &mut comments, &mut cur_code, &mut cur_comment);
+                cur_code.push(' ');
+            }
+            '\'' => {
+                // Lifetime (`'a`, `'static`) vs char literal (`'a'`, `'\n'`).
+                let after = cs.get(i + 2).copied();
+                if next.map(|n| n.is_alphabetic() || n == '_') == Some(true) && after != Some('\'') {
+                    // Lifetime: the tick is dropped, the name lexes as code.
+                    cur_code.push(' ');
+                    i += 1;
+                } else {
+                    i = skip_char_literal(&cs, i + 1);
+                    cur_code.push(' ');
+                }
+            }
+            _ => {
+                cur_code.push(c);
+                i += 1;
+            }
+        }
+    }
+    code.push(cur_code);
+    comments.push(cur_comment);
+    LexedFile { code, comments }
+}
+
+/// If `cs[i..]` starts a raw (byte) string like `r"`, `r#"`, `br##"`,
+/// return `(index past the opening quote, hash count)`.
+fn raw_string_start(cs: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if cs.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if cs.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while cs.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if cs.get(j) == Some(&'"') {
+        Some((j + 1, hashes))
+    } else {
+        None
+    }
+}
+
+fn skip_string(
+    cs: &[char],
+    mut i: usize,
+    code: &mut Vec<String>,
+    comments: &mut Vec<String>,
+    cur_code: &mut String,
+    cur_comment: &mut String,
+) -> usize {
+    while i < cs.len() {
+        match cs[i] {
+            '\\' => i += 2,
+            '"' => return i + 1,
+            '\n' => {
+                code.push(std::mem::take(cur_code));
+                comments.push(std::mem::take(cur_comment));
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+fn skip_raw_string(
+    cs: &[char],
+    mut i: usize,
+    hashes: usize,
+    code: &mut Vec<String>,
+    comments: &mut Vec<String>,
+    cur_code: &mut String,
+    cur_comment: &mut String,
+) -> usize {
+    while i < cs.len() {
+        if cs[i] == '"' && (1..=hashes).all(|k| cs.get(i + k) == Some(&'#')) {
+            return i + 1 + hashes;
+        }
+        if cs[i] == '\n' {
+            code.push(std::mem::take(cur_code));
+            comments.push(std::mem::take(cur_comment));
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Skip a char literal body starting just past the opening tick.
+fn skip_char_literal(cs: &[char], mut i: usize) -> usize {
+    if cs.get(i) == Some(&'\\') {
+        i += 2; // escape marker plus the escaped char
+        if cs.get(i.wrapping_sub(1)) == Some(&'{') || cs.get(i) == Some(&'{') {
+            // `'\u{...}'`: consume through the closing brace.
+            while i < cs.len() && cs[i] != '}' {
+                i += 1;
+            }
+            i += 1;
+        }
+    } else if i < cs.len() {
+        i += 1;
+    }
+    if cs.get(i) == Some(&'\'') {
+        i + 1
+    } else {
+        i // malformed or actually a stray tick; resume lexing as code
+    }
+}
+
+/// Line spans `[start, end]` (inclusive, 0-based) of `#[cfg(test)] mod`
+/// blocks, so lint rules skip test code.
+pub fn test_mod_spans(lexed: &LexedFile) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    for line in 0..lexed.lines() {
+        if !lexed.code[line].contains("#[cfg(test)]") {
+            continue;
+        }
+        // Scan forward over further attributes to the item; only `mod`
+        // blocks are treated as spans (cfg(test) functions are rare and
+        // would be caught as regular code otherwise).
+        let mut j = line;
+        let mut is_mod = false;
+        while j < lexed.lines() {
+            let t = lexed.code[j].trim();
+            if contains_word(t, "mod") {
+                is_mod = true;
+                break;
+            }
+            if !t.is_empty() && !t.starts_with("#[") && j != line {
+                break;
+            }
+            j += 1;
+        }
+        if !is_mod {
+            continue;
+        }
+        if let Some((open_line, open_col)) = find_char_from(lexed, j, 0, '{') {
+            if let Some(end) = match_brace(lexed, open_line, open_col) {
+                spans.push((line, end));
+            }
+        }
+    }
+    spans
+}
+
+/// A function's name and body line span.
+pub struct FnSpan {
+    pub name: String,
+    /// Inclusive line span covering the signature through the closing brace.
+    pub start: usize,
+    pub end: usize,
+}
+
+/// Locate every `fn name(...) { ... }` in the lexed file (including those
+/// nested in impl blocks). Trait-declaration signatures ending in `;` are
+/// skipped.
+pub fn fn_spans(lexed: &LexedFile) -> Vec<FnSpan> {
+    let mut spans = Vec::new();
+    for line in 0..lexed.lines() {
+        let text = &lexed.code[line];
+        let mut from = 0usize;
+        while let Some(pos) = find_word_from(text, "fn", from) {
+            from = pos + 2;
+            let rest: &str = &text[pos + 2..];
+            let name: String = rest
+                .trim_start()
+                .chars()
+                .take_while(|&c| is_ident_char(c))
+                .collect();
+            if name.is_empty() {
+                continue;
+            }
+            // Find the body's opening brace, skipping over a `;` (trait
+            // method declaration) if one comes first at depth zero.
+            if let Some((open_line, open_col)) = find_body_open(lexed, line, pos + 2) {
+                if let Some(end) = match_brace(lexed, open_line, open_col) {
+                    spans.push(FnSpan { name, start: line, end });
+                }
+            }
+        }
+    }
+    spans
+}
+
+/// Find a word with identifier boundaries.
+pub fn contains_word(line: &str, word: &str) -> bool {
+    find_word_from(line, word, 0).is_some()
+}
+
+/// Byte offset of `word` in `line` at identifier boundaries, from `from`.
+pub fn find_word_from(line: &str, word: &str, from: usize) -> Option<usize> {
+    let mut start = from.min(line.len());
+    while let Some(rel) = line[start..].find(word) {
+        let pos = start + rel;
+        let before_ok = line[..pos].chars().next_back().map(is_ident_char) != Some(true);
+        let after_ok = line[pos + word.len()..].chars().next().map(is_ident_char) != Some(true);
+        if before_ok && after_ok {
+            return Some(pos);
+        }
+        start = pos + word.len();
+    }
+    None
+}
+
+/// First occurrence of `ch` at or after `(line, col)`; returns (line, col).
+fn find_char_from(lexed: &LexedFile, mut line: usize, mut col: usize, ch: char) -> Option<(usize, usize)> {
+    while line < lexed.lines() {
+        let text = &lexed.code[line];
+        if let Some(rel) = text[col.min(text.len())..].find(ch) {
+            return Some((line, col.min(text.len()) + rel));
+        }
+        line += 1;
+        col = 0;
+    }
+    None
+}
+
+/// Find the opening brace of a fn body declared at `(line, col)`; stops at
+/// a top-level `;` (no body). Parens in the signature are balanced so a
+/// `{` inside a default-argument-like context cannot confuse it (closures
+/// in signatures do not occur in this codebase).
+fn find_body_open(lexed: &LexedFile, mut line: usize, mut col: usize) -> Option<(usize, usize)> {
+    let mut paren = 0i32;
+    let mut angle = 0i32;
+    while line < lexed.lines() {
+        let text: Vec<char> = lexed.code[line].chars().collect();
+        // Work in char space; `col` below is a char index for this scan.
+        let mut ci = lexed.code[line][..col.min(lexed.code[line].len())].chars().count();
+        while ci < text.len() {
+            match text[ci] {
+                '(' => paren += 1,
+                ')' => paren -= 1,
+                '<' => angle += 1,
+                '>' => angle = (angle - 1).max(0),
+                ';' if paren == 0 => return None,
+                '{' if paren == 0 && angle <= 0 => {
+                    // Translate back to a byte column.
+                    let byte_col = lexed.code[line]
+                        .char_indices()
+                        .nth(ci)
+                        .map(|(b, _)| b)
+                        .unwrap_or(0);
+                    return Some((line, byte_col));
+                }
+                _ => {}
+            }
+            ci += 1;
+        }
+        line += 1;
+        col = 0;
+    }
+    None
+}
+
+/// Match the brace opened at `(line, col)`; returns the closing line.
+fn match_brace(lexed: &LexedFile, mut line: usize, col: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    let mut first = true;
+    let mut start_col = col;
+    while line < lexed.lines() {
+        for (b, c) in lexed.code[line].char_indices() {
+            if first && b < start_col {
+                continue;
+            }
+            match c {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some(line);
+                    }
+                }
+                _ => {}
+            }
+        }
+        first = false;
+        start_col = 0;
+        line += 1;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let src = "let x = \"unwrap() inside\"; // comment .unwrap()\nlet y = 1;\n";
+        let lx = lex(src);
+        assert!(!lx.code[0].contains("unwrap"));
+        assert!(lx.comments[0].contains(".unwrap()"));
+        assert_eq!(lx.code[1].trim(), "let y = 1;");
+    }
+
+    #[test]
+    fn raw_strings_and_chars_are_blanked() {
+        let src = "let r = r#\"panic!(\"x\")\"#;\nlet c = '\"';\nlet l: &'static str = \"ok\";\n";
+        let lx = lex(src);
+        assert!(!lx.code[0].contains("panic"));
+        assert!(!lx.code[1].contains('"'));
+        assert!(lx.code[2].contains("static"));
+    }
+
+    #[test]
+    fn nested_block_comments_span_lines() {
+        let src = "a /* one /* two */ still */ b\nc\n";
+        let lx = lex(src);
+        assert!(lx.code[0].contains('a') && lx.code[0].contains('b'));
+        assert!(!lx.code[0].contains("one"));
+        assert!(lx.comments[0].contains("two"));
+    }
+
+    #[test]
+    fn fn_spans_cover_bodies() {
+        let src = "fn foo() {\n    bar();\n}\n\nimpl T {\n    pub fn baz(&self) -> u8 {\n        1\n    }\n}\n";
+        let lx = lex(src);
+        let spans = fn_spans(&lx);
+        let foo = spans.iter().find(|s| s.name == "foo").unwrap();
+        assert_eq!((foo.start, foo.end), (0, 2));
+        let baz = spans.iter().find(|s| s.name == "baz").unwrap();
+        assert_eq!((baz.start, baz.end), (5, 7));
+    }
+
+    #[test]
+    fn test_mod_spans_found() {
+        let src = "fn live() {}\n\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+        let lx = lex(src);
+        let spans = test_mod_spans(&lx);
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].0, 2);
+        assert_eq!(spans[0].1, 5);
+    }
+
+    #[test]
+    fn generic_fn_signature_open_brace() {
+        let src = "pub fn gen<T: Ord>(xs: &[T]) -> Option<&T> {\n    xs.first()\n}\n";
+        let lx = lex(src);
+        let spans = fn_spans(&lx);
+        assert_eq!(spans.len(), 1);
+        assert_eq!((spans[0].start, spans[0].end), (0, 2));
+    }
+
+    #[test]
+    fn trait_decl_without_body_is_skipped() {
+        let src = "trait T {\n    fn sig(&self) -> u8;\n    fn with_default(&self) -> u8 {\n        0\n    }\n}\n";
+        let lx = lex(src);
+        let spans = fn_spans(&lx);
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].name, "with_default");
+    }
+}

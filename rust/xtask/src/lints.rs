@@ -1,0 +1,581 @@
+//! Repo-specific source lints for the TurboAngle serving stack.
+//!
+//! Four rules, each encoding an invariant the ordinary toolchain cannot
+//! see (docs/ANALYSIS.md has the full matrix):
+//!
+//! * `no-alloc-in-hot-path` — the decode-stage kernels and the tile-decode
+//!   tick path must stay allocation-free (`_into` contract from PR 7).
+//! * `no-panic-in-serving` — no `unwrap`/`expect`/`panic!` in the wire
+//!   path (`coordinator/server.rs`, `engine.rs`, `util/json.rs`): one bad
+//!   connection must never kill a reader/writer/replica thread.
+//! * `no-nondeterminism-in-identity-paths` — nothing feeding content
+//!   hashes or `LaneScore` checksums may touch `HashMap`/`HashSet`
+//!   iteration order, wall clocks, or fused-multiply-add float helpers.
+//! * `release-checked-bounds` — kernel-stage slice preconditions must be
+//!   validated in release builds at the public entry; a bare
+//!   `debug_assert!` on a length is exactly the check that vanishes where
+//!   it matters.
+//!
+//! Escape hatch: `// xtask-allow(<rule>): reason` on the flagged line or
+//! the line directly above. The reason is mandatory — an allow without
+//! one is itself a finding — so every suppression carries its audit note.
+
+use crate::lex::{self, LexedFile};
+use std::path::Path;
+
+/// Names of every rule, for allow-comment validation.
+pub const RULE_NAMES: [&str; 4] = [
+    "no-alloc-in-hot-path",
+    "no-panic-in-serving",
+    "no-nondeterminism-in-identity-paths",
+    "release-checked-bounds",
+];
+
+/// What to look for on a code line.
+pub enum Needle {
+    /// Exact substring of the blanked code text (operator-adjacent forms
+    /// like `.unwrap()` or `Vec::new`).
+    Sub(&'static str),
+    /// Identifier with word boundaries (`HashMap`, `Instant`).
+    Ident(&'static str),
+    /// A `debug_assert!`/`debug_assert_eq!` whose argument mentions a
+    /// length — a bounds check that vanishes in release builds.
+    DebugAssertLen,
+}
+
+/// Where a rule applies within one file.
+pub enum Scope {
+    /// The whole file, minus `#[cfg(test)] mod` blocks.
+    WholeFile,
+    /// Only inside the named functions' bodies. Every listed name must
+    /// exist in the file — a missing one is a finding, so scopes cannot
+    /// silently rot when code moves.
+    Funcs(&'static [&'static str]),
+}
+
+/// One (rule, file, scope) binding.
+pub struct Target {
+    pub rule: &'static str,
+    pub file: &'static str,
+    pub scope: Scope,
+}
+
+/// The needle set for each rule.
+pub fn rule_needles(rule: &str) -> &'static [Needle] {
+    match rule {
+        "no-alloc-in-hot-path" => &[
+            Needle::Sub("Vec::new"),
+            Needle::Sub("vec!"),
+            Needle::Sub(".to_vec()"),
+            Needle::Sub(".collect()"),
+            Needle::Sub(".collect::"),
+            Needle::Sub("String::new"),
+            Needle::Sub(".to_string()"),
+            Needle::Sub(".to_owned()"),
+            Needle::Sub("Box::new"),
+        ],
+        "no-panic-in-serving" => &[
+            Needle::Sub(".unwrap()"),
+            Needle::Sub(".expect("),
+            Needle::Sub("panic!("),
+            Needle::Sub("unreachable!("),
+            Needle::Sub("todo!("),
+            Needle::Sub("unimplemented!("),
+        ],
+        "no-nondeterminism-in-identity-paths" => &[
+            Needle::Ident("HashMap"),
+            Needle::Ident("HashSet"),
+            Needle::Ident("Instant"),
+            Needle::Ident("SystemTime"),
+            Needle::Sub(".mul_add("),
+        ],
+        "release-checked-bounds" => &[Needle::DebugAssertLen],
+        _ => &[],
+    }
+}
+
+/// Rationale printed with each finding.
+pub fn rule_note(rule: &str) -> &'static str {
+    match rule {
+        "no-alloc-in-hot-path" => {
+            "decode stages run per tile per tick; allocation belongs in grow-once scratch (TileScratch/TrigScratch), not the kernel body"
+        }
+        "no-panic-in-serving" => {
+            "a panic here kills a reader/writer/replica thread and poisons shared locks; return an error line or drop the connection"
+        }
+        "no-nondeterminism-in-identity-paths" => {
+            "content hashes and LaneScore checksums must be reproducible across runs and platforms; no hash-iteration order, clocks, or fused float ops"
+        }
+        "release-checked-bounds" => {
+            "debug_assert! length checks vanish in release; validate at the public kernel entry with ensure!/assert! instead"
+        }
+        _ => "",
+    }
+}
+
+/// The repo's lint surface: which rule applies where.
+pub fn targets() -> Vec<Target> {
+    use Scope::*;
+    vec![
+        Target {
+            rule: "no-alloc-in-hot-path",
+            file: "rust/src/quant/kernels.rs",
+            scope: Funcs(&[
+                "decode_side_range",
+                "gather_trig",
+                "weighted_polar_terms",
+                "affine_in_place",
+            ]),
+        },
+        Target {
+            rule: "no-alloc-in-hot-path",
+            file: "rust/src/quant/packing.rs",
+            scope: Funcs(&[
+                "unpack_codes_range_into",
+                "unpack_f32_range_into",
+                "unpack_into",
+                "unpack_f32_into",
+            ]),
+        },
+        Target {
+            rule: "no-alloc-in-hot-path",
+            file: "rust/src/coordinator/kv_manager.rs",
+            scope: Funcs(&[
+                "visit_seq_tiles",
+                "decode_tile_into",
+                "decode_lh_range",
+                "decode_side_range",
+                "fill_layer",
+                "fill_dense_range",
+            ]),
+        },
+        Target {
+            rule: "no-alloc-in-hot-path",
+            file: "rust/src/runtime/sim.rs",
+            scope: Funcs(&["slab", "element", "fold_acc", "end_row"]),
+        },
+        Target {
+            rule: "no-panic-in-serving",
+            file: "rust/src/coordinator/server.rs",
+            scope: WholeFile,
+        },
+        Target {
+            rule: "no-panic-in-serving",
+            file: "rust/src/coordinator/engine.rs",
+            scope: WholeFile,
+        },
+        Target {
+            rule: "no-panic-in-serving",
+            file: "rust/src/util/json.rs",
+            scope: WholeFile,
+        },
+        Target {
+            rule: "no-nondeterminism-in-identity-paths",
+            file: "rust/src/quant/kernels.rs",
+            scope: WholeFile,
+        },
+        Target {
+            rule: "no-nondeterminism-in-identity-paths",
+            file: "rust/src/quant/packing.rs",
+            scope: WholeFile,
+        },
+        Target {
+            rule: "no-nondeterminism-in-identity-paths",
+            file: "rust/src/util/hash.rs",
+            scope: WholeFile,
+        },
+        Target {
+            rule: "no-nondeterminism-in-identity-paths",
+            file: "rust/src/runtime/sim.rs",
+            scope: WholeFile,
+        },
+        Target {
+            rule: "no-nondeterminism-in-identity-paths",
+            file: "rust/src/coordinator/kv_manager.rs",
+            scope: Funcs(&["fold_hash", "content_hash"]),
+        },
+        Target {
+            rule: "release-checked-bounds",
+            file: "rust/src/quant/kernels.rs",
+            scope: WholeFile,
+        },
+    ]
+}
+
+/// One lint hit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: String,
+    pub excerpt: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}\n    note: {}",
+            self.file,
+            self.line,
+            self.rule,
+            self.excerpt,
+            rule_note(&self.rule)
+        )
+    }
+}
+
+/// Run every target against the repo rooted at `root`.
+pub fn run(root: &Path) -> Result<Vec<Finding>, String> {
+    let mut findings = Vec::new();
+    let mut cache: Vec<(String, LexedFile)> = Vec::new();
+    for t in targets() {
+        let idx = match cache.iter().position(|(f, _)| f == t.file) {
+            Some(i) => i,
+            None => {
+                let src = std::fs::read_to_string(root.join(t.file))
+                    .map_err(|e| format!("{}: {e}", t.file))?;
+                cache.push((t.file.to_string(), lex::lex(&src)));
+                cache.len() - 1
+            }
+        };
+        let lexed = &cache[idx].1;
+        findings.extend(check_target(t.file, lexed, &t));
+    }
+    for (file, lexed) in &cache {
+        findings.extend(check_allow_comments(file, lexed));
+    }
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    findings.dedup();
+    Ok(findings)
+}
+
+/// Evaluate one rule over one lexed file (public so tests can run a rule
+/// against fixture snippets with a synthetic scope).
+pub fn check_target(file: &str, lexed: &LexedFile, target: &Target) -> Vec<Finding> {
+    let test_spans = lex::test_mod_spans(lexed);
+    let in_tests = |line: usize| test_spans.iter().any(|&(s, e)| line >= s && line <= e);
+    let included: Vec<bool> = match &target.scope {
+        Scope::WholeFile => (0..lexed.lines()).map(|l| !in_tests(l)).collect(),
+        Scope::Funcs(names) => {
+            let spans = lex::fn_spans(lexed);
+            let mut inc = vec![false; lexed.lines()];
+            let mut missing = Vec::new();
+            for name in *names {
+                let mut found = false;
+                for s in spans.iter().filter(|s| &s.name == name) {
+                    if in_tests(s.start) {
+                        continue;
+                    }
+                    found = true;
+                    for v in inc.iter_mut().take(s.end + 1).skip(s.start) {
+                        *v = true;
+                    }
+                }
+                if !found {
+                    missing.push(*name);
+                }
+            }
+            if !missing.is_empty() {
+                // Scope rot: the function the rule should guard is gone.
+                return missing
+                    .iter()
+                    .map(|name| Finding {
+                        file: file.to_string(),
+                        line: 1,
+                        rule: target.rule.to_string(),
+                        excerpt: format!(
+                            "lint scope names function `{name}` which no longer exists in this file — update xtask::lints::targets()"
+                        ),
+                    })
+                    .collect();
+            }
+            inc
+        }
+    };
+
+    let mut findings = Vec::new();
+    for line in 0..lexed.lines() {
+        if !included[line] {
+            continue;
+        }
+        let code = &lexed.code[line];
+        for needle in rule_needles(target.rule) {
+            let hit = match needle {
+                Needle::Sub(s) => code.contains(s).then(|| s.to_string()),
+                Needle::Ident(w) => lex::contains_word(code, w).then(|| w.to_string()),
+                Needle::DebugAssertLen => debug_assert_len_hit(lexed, line),
+            };
+            if let Some(what) = hit {
+                if allowed(lexed, line, target.rule) {
+                    continue;
+                }
+                findings.push(Finding {
+                    file: file.to_string(),
+                    line: line + 1,
+                    rule: target.rule.to_string(),
+                    excerpt: format!("`{what}` in: {}", lexed.code[line].trim()),
+                });
+            }
+        }
+    }
+    findings
+}
+
+/// Does line `line` start a `debug_assert!` whose argument (possibly
+/// spanning lines) mentions a length? Returns the matched macro name.
+fn debug_assert_len_hit(lexed: &LexedFile, line: usize) -> Option<String> {
+    let code = &lexed.code[line];
+    let pos = lex::find_word_from(code, "debug_assert", 0)
+        .or_else(|| lex::find_word_from(code, "debug_assert_eq", 0))?;
+    // Capture the macro argument text up to the matching close paren.
+    let mut depth = 0i32;
+    let mut arg = String::new();
+    let mut started = false;
+    'outer: for l in line..lexed.lines() {
+        let text = &lexed.code[l];
+        let begin = if l == line { pos } else { 0 };
+        for c in text[begin.min(text.len())..].chars() {
+            match c {
+                '(' => {
+                    depth += 1;
+                    started = true;
+                }
+                ')' => {
+                    depth -= 1;
+                    if started && depth == 0 {
+                        break 'outer;
+                    }
+                }
+                _ => {}
+            }
+            if started {
+                arg.push(c);
+            }
+        }
+        arg.push(' ');
+    }
+    (arg.contains(".len()") || arg.contains("len_bits()") || arg.contains(".len_codes("))
+        .then(|| "debug_assert! on a length".to_string())
+}
+
+/// Is `rule` suppressed at `line` by an `xtask-allow` comment on the same
+/// line or the line directly above (with a non-empty reason)?
+fn allowed(lexed: &LexedFile, line: usize, rule: &str) -> bool {
+    let check = |l: usize| {
+        parse_allows(&lexed.comments[l])
+            .iter()
+            .any(|(r, reason)| r == rule && !reason.is_empty())
+    };
+    check(line) || (line > 0 && check(line - 1))
+}
+
+/// Extract every `xtask-allow(rule): reason` from one comment string.
+fn parse_allows(comment: &str) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    let mut rest = comment;
+    while let Some(pos) = rest.find("xtask-allow(") {
+        rest = &rest[pos + "xtask-allow(".len()..];
+        let Some(close) = rest.find(')') else { break };
+        let rule = rest[..close].trim().to_string();
+        rest = &rest[close + 1..];
+        let reason = match rest.strip_prefix(':') {
+            Some(r) => {
+                let end = r.find("xtask-allow(").unwrap_or(r.len());
+                r[..end].trim().to_string()
+            }
+            None => String::new(),
+        };
+        out.push((rule, reason));
+    }
+    out
+}
+
+/// Validate every allow comment in a file: the rule must exist and the
+/// reason must be non-empty, so suppressions cannot rot silently.
+pub fn check_allow_comments(file: &str, lexed: &LexedFile) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for line in 0..lexed.lines() {
+        for (rule, reason) in parse_allows(&lexed.comments[line]) {
+            if !RULE_NAMES.contains(&rule.as_str()) {
+                findings.push(Finding {
+                    file: file.to_string(),
+                    line: line + 1,
+                    rule: "xtask-allow".to_string(),
+                    excerpt: format!("unknown rule `{rule}` in xtask-allow"),
+                });
+            } else if reason.is_empty() {
+                findings.push(Finding {
+                    file: file.to_string(),
+                    line: line + 1,
+                    rule: "xtask-allow".to_string(),
+                    excerpt: format!("xtask-allow({rule}) without a reason — write `xtask-allow({rule}): why`"),
+                });
+            }
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lex::lex;
+
+    fn fixture(name: &str) -> LexedFile {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("fixtures")
+            .join(name);
+        lex(&std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{name}: {e}")))
+    }
+
+    fn repo_root() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .ancestors()
+            .nth(2)
+            .unwrap()
+            .to_path_buf()
+    }
+
+    fn rules_hit(file: &str, lexed: &LexedFile, target: &Target) -> Vec<String> {
+        check_target(file, lexed, target)
+            .into_iter()
+            .map(|f| f.rule)
+            .collect()
+    }
+
+    #[test]
+    fn alloc_lint_fires_on_fixture() {
+        let lx = fixture("bad_alloc_in_hot_path.rs");
+        let t = Target {
+            rule: "no-alloc-in-hot-path",
+            file: "fixture",
+            scope: Scope::Funcs(&["decode_tile"]),
+        };
+        let hits = check_target("fixture", &lx, &t);
+        assert!(
+            hits.iter().any(|f| f.excerpt.contains("collect")),
+            "expected a collect() finding, got {hits:?}"
+        );
+        assert!(hits.iter().any(|f| f.excerpt.contains("Vec::new")));
+        // The allocation in the helper OUTSIDE the scoped function is fine.
+        assert!(!hits.iter().any(|f| f.excerpt.contains("grow_scratch")));
+    }
+
+    #[test]
+    fn panic_lint_fires_on_fixture_but_not_in_tests() {
+        let lx = fixture("bad_panic_in_serving.rs");
+        let t = Target {
+            rule: "no-panic-in-serving",
+            file: "fixture",
+            scope: Scope::WholeFile,
+        };
+        let hits = check_target("fixture", &lx, &t);
+        assert!(hits.iter().any(|f| f.excerpt.contains(".unwrap()")));
+        assert!(hits.iter().any(|f| f.excerpt.contains("panic!(")));
+        // the unwrap inside #[cfg(test)] mod and the one inside a string
+        // literal must NOT fire
+        assert!(
+            !hits.iter().any(|f| f.excerpt.contains("in_test_mod")),
+            "{hits:?}"
+        );
+        assert_eq!(hits.len(), 3, "{hits:?}"); // unwrap, expect, panic!
+    }
+
+    #[test]
+    fn nondeterminism_lint_fires_on_fixture() {
+        let lx = fixture("bad_nondeterminism.rs");
+        let t = Target {
+            rule: "no-nondeterminism-in-identity-paths",
+            file: "fixture",
+            scope: Scope::WholeFile,
+        };
+        let hits = check_target("fixture", &lx, &t);
+        assert!(hits.iter().any(|f| f.excerpt.contains("HashMap")));
+        assert!(hits.iter().any(|f| f.excerpt.contains("Instant")));
+        assert!(hits.iter().any(|f| f.excerpt.contains(".mul_add(")));
+    }
+
+    #[test]
+    fn debug_bounds_lint_fires_on_fixture() {
+        let lx = fixture("bad_debug_bounds.rs");
+        let t = Target {
+            rule: "release-checked-bounds",
+            file: "fixture",
+            scope: Scope::WholeFile,
+        };
+        let hits = check_target("fixture", &lx, &t);
+        assert_eq!(hits.len(), 2, "{hits:?}"); // single-line + multi-line
+        // a debug_assert NOT about lengths stays legal
+        assert!(!hits.iter().any(|f| f.line == 1));
+    }
+
+    #[test]
+    fn allow_comment_suppresses_with_reason_only() {
+        let lx = fixture("allowed_suppressions.rs");
+        let t = Target {
+            rule: "no-panic-in-serving",
+            file: "fixture",
+            scope: Scope::WholeFile,
+        };
+        // Both unwraps carry allows, but only one has a reason: exactly
+        // the reasonless one still fires, plus the malformed-allow finding.
+        let hits = check_target("fixture", &lx, &t);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        let allows = check_allow_comments("fixture", &lx);
+        assert!(allows.iter().any(|f| f.excerpt.contains("without a reason")));
+        assert!(allows.iter().any(|f| f.excerpt.contains("unknown rule")));
+    }
+
+    #[test]
+    fn funcs_scope_reports_missing_function() {
+        let lx = lex("fn present() {}\n");
+        let t = Target {
+            rule: "no-alloc-in-hot-path",
+            file: "fixture",
+            scope: Scope::Funcs(&["present", "vanished"]),
+        };
+        let hits = check_target("fixture", &lx, &t);
+        assert_eq!(hits.len(), 1);
+        assert!(hits[0].excerpt.contains("vanished"));
+    }
+
+    /// The gate the whole PR hinges on: the lint surface is clean on the
+    /// tree it lands in. Equivalent to `cargo xtask lint` exiting 0.
+    #[test]
+    fn current_tree_is_clean() {
+        let findings = run(&repo_root()).unwrap();
+        assert!(
+            findings.is_empty(),
+            "lints must pass on the landed tree:\n{}",
+            findings
+                .iter()
+                .map(|f| f.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+
+    #[test]
+    fn needle_edges_do_not_overmatch() {
+        // unwrap_or / unwrap_or_else are fine; HashMapLike is not HashMap.
+        let lx = lex("fn f() { let x = o.unwrap_or(3); let h: HashMapLike = g(); }\n");
+        let hits = rules_hit(
+            "f",
+            &lx,
+            &Target { rule: "no-panic-in-serving", file: "f", scope: Scope::WholeFile },
+        );
+        assert!(hits.is_empty(), "{hits:?}");
+        let hits = rules_hit(
+            "f",
+            &lx,
+            &Target {
+                rule: "no-nondeterminism-in-identity-paths",
+                file: "f",
+                scope: Scope::WholeFile,
+            },
+        );
+        assert!(hits.is_empty(), "{hits:?}");
+    }
+}

@@ -1,0 +1,290 @@
+//! Model of the TCP front-end's dispatcher / router / replica-worker /
+//! writer handshake (`coordinator/server.rs`).
+//!
+//! The protocol being checked, mirroring `serve_on`:
+//!
+//! * the **dispatcher** routes ingested requests through the shared
+//!   `Arc<Mutex<Router>>` (least-loaded) into per-replica mpsc queues,
+//!   and exits once the shared `served` counter reaches `max_requests`
+//!   (dropping the queues, which tells workers to drain and exit);
+//! * each **replica worker** pops jobs, produces one response line per
+//!   request, pushes it to the connection's writer queue, and decrements
+//!   its router load;
+//! * the **writer thread** pops lines and writes them to the socket —
+//!   and only THEN bumps `served` (`ConnLine::counts`);
+//! * once the dispatcher and workers exit, `serve` returns and the
+//!   process exits, killing the (detached) writer thread wherever it is.
+//!
+//! The property is **no-lost-response**: when the process exits, every
+//! request's response has reached the socket. It holds precisely because
+//! `served` counts at the socket write. The `count_on_enqueue` knob moves
+//! the count to the worker's send — the obvious-looking alternative — and
+//! the explorer finds the schedule where the dispatcher sees
+//! `served == max` while a line is still queued and the process exit
+//! drops it. That pinned counterexample is the regression test guarding
+//! the `ConnLine::counts` design.
+
+use super::Model;
+
+/// Number of replica workers in the model.
+pub const REPLICAS: usize = 2;
+
+/// Actor indices.
+const DISPATCHER: usize = 0;
+const WORKER0: usize = 1;
+const WRITER: usize = 1 + REPLICAS;
+const EXIT: usize = 2 + REPLICAS;
+
+/// State machine for the dispatcher/worker/writer handshake.
+#[derive(Clone)]
+pub struct ServerModel {
+    /// Buggy variant: count `served` when the worker enqueues the line
+    /// instead of when the writer delivers it.
+    pub count_on_enqueue: bool,
+    /// Requests not yet dispatched.
+    pending: u8,
+    /// Total requests == `max_requests` of the bounded serve.
+    max_requests: u8,
+    /// Router load per replica (incremented on route, decremented on
+    /// completion — both under the one mutex, so one atomic step each).
+    loads: [u8; REPLICAS],
+    /// Set when `Router::complete` underflowed (refcount-style bug).
+    load_underflow: bool,
+    /// In-flight jobs per replica queue (job identity doesn't matter for
+    /// the property; counts do).
+    queued: [u8; REPLICAS],
+    /// A popped job the worker is currently executing.
+    working: [bool; REPLICAS],
+    /// Worker exited (queue disconnected and drained).
+    exited: [bool; REPLICAS],
+    /// Dispatcher exited (observed served >= max; queues dropped).
+    dispatcher_done: bool,
+    /// Response lines sitting in the connection writer's queue.
+    writer_queue: u8,
+    /// Lines that reached the socket.
+    delivered: u8,
+    /// The bounded-serve counter (`Arc<AtomicUsize>` in the real code).
+    served: u8,
+    /// Process exited: `serve` returned and detached threads are gone.
+    process_exited: bool,
+}
+
+impl ServerModel {
+    /// A bounded serve of `requests` requests with the real counting
+    /// discipline (`count_on_enqueue: false`) or the buggy one.
+    pub fn new(requests: u8, count_on_enqueue: bool) -> Self {
+        ServerModel {
+            count_on_enqueue,
+            pending: requests,
+            max_requests: requests,
+            loads: [0; REPLICAS],
+            load_underflow: false,
+            queued: [0; REPLICAS],
+            working: [false; REPLICAS],
+            exited: [false; REPLICAS],
+            dispatcher_done: false,
+            writer_queue: 0,
+            delivered: 0,
+            served: 0,
+            process_exited: false,
+        }
+    }
+
+    /// Least-loaded routing with low-index tie-break (`Router`'s
+    /// deterministic policy for equal loads).
+    fn route(&mut self) -> usize {
+        let mut best = 0usize;
+        for r in 1..REPLICAS {
+            if self.loads[r] < self.loads[best] {
+                best = r;
+            }
+        }
+        self.loads[best] += 1;
+        best
+    }
+
+    fn complete(&mut self, replica: usize) {
+        if self.loads[replica] == 0 {
+            self.load_underflow = true;
+        } else {
+            self.loads[replica] -= 1;
+        }
+    }
+}
+
+impl Model for ServerModel {
+    fn name(&self) -> &'static str {
+        if self.count_on_enqueue {
+            "server-dispatch (count-on-enqueue bug)"
+        } else {
+            "server-dispatch"
+        }
+    }
+
+    fn actor_label(&self, actor: usize) -> String {
+        match actor {
+            DISPATCHER => "dispatcher".into(),
+            WRITER => "writer".into(),
+            EXIT => "process-exit".into(),
+            w => format!("worker{}", w - WORKER0),
+        }
+    }
+
+    fn enabled_actors(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        // Dispatcher: has a request to route, or can observe completion.
+        if !self.dispatcher_done && (self.pending > 0 || self.served >= self.max_requests) {
+            out.push(DISPATCHER);
+        }
+        for r in 0..REPLICAS {
+            if self.exited[r] {
+                continue;
+            }
+            // Worker: finish current job, pop the next, or observe the
+            // disconnected empty queue and exit.
+            if self.working[r]
+                || self.queued[r] > 0
+                || (self.dispatcher_done && self.queued[r] == 0)
+            {
+                out.push(WORKER0 + r);
+            }
+        }
+        if self.writer_queue > 0 && !self.process_exited {
+            out.push(WRITER);
+        }
+        if self.dispatcher_done && self.exited.iter().all(|&e| e) && !self.process_exited {
+            out.push(EXIT);
+        }
+        out
+    }
+
+    fn step(&mut self, actor: usize) {
+        match actor {
+            DISPATCHER => {
+                if self.served >= self.max_requests {
+                    // `serve_on` breaks out of its loop and drops the
+                    // replica queues.
+                    self.dispatcher_done = true;
+                } else {
+                    // route + send, router locked for the route call
+                    let r = self.route();
+                    self.queued[r] += 1;
+                    self.pending -= 1;
+                }
+            }
+            WRITER => {
+                // write_all + flush, then count (the ConnLine::counts
+                // contract) — or just deliver, in the buggy variant
+                self.writer_queue -= 1;
+                self.delivered += 1;
+                if !self.count_on_enqueue {
+                    self.served += 1;
+                }
+            }
+            EXIT => {
+                // serve() returned; main exits; detached writer threads
+                // die wherever they are, queue contents and all.
+                self.process_exited = true;
+            }
+            w => {
+                let r = w - WORKER0;
+                if self.working[r] {
+                    // engine tick produced the response: enqueue the line
+                    // to the writer, complete the router entry
+                    self.working[r] = false;
+                    self.writer_queue += 1;
+                    if self.count_on_enqueue {
+                        self.served += 1;
+                    }
+                    self.complete(r);
+                } else if self.queued[r] > 0 {
+                    self.queued[r] -= 1;
+                    self.working[r] = true;
+                } else {
+                    // disconnected + drained: worker returns its metrics
+                    self.exited[r] = true;
+                }
+            }
+        }
+    }
+
+    fn invariant(&self) -> Result<(), String> {
+        if self.load_underflow {
+            return Err("router load underflow: complete() without a matching route()".into());
+        }
+        if self.delivered > self.max_requests {
+            return Err(format!(
+                "delivered {} responses for {} requests",
+                self.delivered, self.max_requests
+            ));
+        }
+        if self.process_exited && self.writer_queue > 0 {
+            return Err(format!(
+                "lost response: process exited with {} line(s) still in a writer queue",
+                self.writer_queue
+            ));
+        }
+        Ok(())
+    }
+
+    fn terminal(&self) -> Result<(), String> {
+        if self.delivered != self.max_requests {
+            return Err(format!(
+                "lost response: terminated with {}/{} responses on the wire",
+                self.delivered, self.max_requests
+            ));
+        }
+        if self.loads.iter().any(|&l| l != 0) {
+            return Err(format!("router loads not drained: {:?}", self.loads));
+        }
+        if !self.process_exited {
+            return Err("deadlock: all actors blocked before process exit".into());
+        }
+        Ok(())
+    }
+
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.push(self.pending);
+        out.extend_from_slice(&self.loads);
+        out.extend_from_slice(&self.queued);
+        out.push(
+            self.working[0] as u8
+                | (self.working[1] as u8) << 1
+                | (self.exited[0] as u8) << 2
+                | (self.exited[1] as u8) << 3
+                | (self.dispatcher_done as u8) << 4
+                | (self.process_exited as u8) << 5
+                | (self.load_underflow as u8) << 6,
+        );
+        out.push(self.writer_queue);
+        out.push(self.delivered);
+        out.push(self.served);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::explore;
+    use super::*;
+
+    /// The shipped counting discipline survives every interleaving.
+    #[test]
+    fn correct_protocol_is_exhaustively_safe() {
+        let r = explore(ServerModel::new(3, false), 2_000_000);
+        assert!(r.violation.is_none(), "{}", super::super::render(&r));
+        assert!(r.states > 30, "suspiciously small state space: {}", r.states);
+    }
+
+    /// Pinned counterexample: counting at enqueue time lets the bounded
+    /// serve observe completion while a response is still buffered, and
+    /// the process exit drops it. This is WHY `ConnLine::counts` is
+    /// counted by the writer after the socket write.
+    #[test]
+    fn count_on_enqueue_loses_a_response() {
+        let r = explore(ServerModel::new(3, true), 2_000_000);
+        let v = r.violation.expect("the lost-response schedule must be found");
+        assert!(v.message.contains("lost response"), "{}", v.message);
+        // The schedule must actually involve an early process exit.
+        assert!(v.trace.iter().any(|s| s == "process-exit"), "{:?}", v.trace);
+    }
+}

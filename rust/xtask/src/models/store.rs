@@ -1,0 +1,339 @@
+//! Model of the shared-prefix store's adopt / free / evict / swap
+//! refcount lifecycle (`coordinator/kv_manager.rs`).
+//!
+//! One sealed shared page, two sequences, one LRU evictor:
+//!
+//! * `adopt` — `new_seq_with_prefix` bumps the page's refcount;
+//! * `unref` — `free_seq` drops it (never below zero);
+//! * `swap_out` / `swap_in` — the real policy KEEPS shared refs while a
+//!   sequence is swapped out (the refs pin the prefix against eviction);
+//! * the evictor scans for `refs == 0` pages and frees them, revalidating
+//!   `refs == 0` at free time (`free_shared_page`'s `ensure!`).
+//!
+//! Checked properties: **refcount-never-negative**, **no-double-free**
+//! (pool release accounting underflows if a page is freed twice), and
+//! **no use-after-free** (no sequence ever holds or re-admits a page
+//! that was evicted under it).
+//!
+//! Two knobs re-introduce the two nastiest interleavings as pinned
+//! counterexamples:
+//!
+//! * `drop_refs_on_swap` — the tempting "swapped-out sequences shouldn't
+//!   pin memory" policy. The explorer finds: seq A swaps out (refs drop
+//!   to 0), the evictor frees the page, A swaps back in → use-after-free.
+//!   This is WHY `swap_out` keeps shared refs.
+//! * `revalidate_on_evict: false` — the evictor trusts its scan. The
+//!   explorer finds: evictor observes `refs == 0`, seq B adopts the page
+//!   (swap-in re-admission), evictor frees it under B → an adopted page
+//!   evicted. This is WHY `free_shared_page` re-checks under the lock.
+
+use super::Model;
+
+/// Per-sequence lifecycle script: adopt → (swap cycle) → release.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum SeqPhase {
+    Start,
+    /// Holding a ref (counted unless swapped under `drop_refs_on_swap`).
+    Adopted,
+    /// Swapped out (only the swapping sequence enters this phase).
+    Swapped,
+    /// Swapped back in.
+    Resident,
+    Done,
+    /// Terminal-with-error marker (the violation text lives in `fault`).
+    Faulted,
+}
+
+/// Evictor scan state.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum EvictPhase {
+    /// Looking for a refs == 0 page.
+    Scan,
+    /// Observed the page evictable; free not yet performed.
+    Candidate,
+    Done,
+}
+
+/// State machine for the shared-page refcount lifecycle.
+#[derive(Clone)]
+pub struct StoreModel {
+    /// Buggy policy: swap-out drops shared refs, swap-in re-adopts.
+    pub drop_refs_on_swap: bool,
+    /// Real policy: free re-checks refs == 0 under the lock.
+    pub revalidate_on_evict: bool,
+    /// The sealed shared page: present in the store tree?
+    page_present: bool,
+    /// Its refcount.
+    refs: u8,
+    /// Pool pages allocated (the page costs 1; underflow = double free).
+    pool_allocated: u8,
+    /// Sequence 0 swaps; sequence 1 is a plain adopt/release peer.
+    seqs: [SeqPhase; 2],
+    /// Evictor two-phase scan (observe, then free) — two lock regions,
+    /// exactly like an LRU pass that collects candidates then frees.
+    evictor: EvictPhase,
+    /// Remaining evictor passes (bounds the state space).
+    evict_passes: u8,
+    /// First violation observed by a step (checked by `invariant`).
+    fault: Option<&'static str>,
+}
+
+impl StoreModel {
+    /// Model with the real policies (`drop_refs_on_swap: false`,
+    /// `revalidate_on_evict: true`) or a buggy variant.
+    pub fn new(drop_refs_on_swap: bool, revalidate_on_evict: bool) -> Self {
+        StoreModel {
+            drop_refs_on_swap,
+            revalidate_on_evict,
+            // The page was sealed by an earlier sequence and sits in the
+            // store cache with no current adopters.
+            page_present: true,
+            refs: 0,
+            pool_allocated: 1,
+            seqs: [SeqPhase::Start; 2],
+            evictor: EvictPhase::Scan,
+            evict_passes: 2,
+            fault: None,
+        }
+    }
+
+    fn adopt(&mut self) -> bool {
+        if !self.page_present {
+            // Prefix miss: the real code simply doesn't adopt. For the
+            // swap-in path this is a use-after-free (handled by caller).
+            return false;
+        }
+        self.refs += 1;
+        true
+    }
+
+    fn unref(&mut self) {
+        if self.refs == 0 {
+            self.fault = Some("refcount underflow: unref of a page with refs == 0");
+        } else {
+            self.refs -= 1;
+        }
+    }
+}
+
+impl Model for StoreModel {
+    fn name(&self) -> &'static str {
+        match (self.drop_refs_on_swap, self.revalidate_on_evict) {
+            (false, true) => "store-refcount",
+            (true, _) => "store-refcount (drop-refs-on-swap bug)",
+            (false, false) => "store-refcount (no-revalidate-evict bug)",
+        }
+    }
+
+    fn actor_label(&self, actor: usize) -> String {
+        match actor {
+            0 => "seqA".into(),
+            1 => "seqB".into(),
+            _ => "evictor".into(),
+        }
+    }
+
+    fn enabled_actors(&self) -> Vec<usize> {
+        if self.fault.is_some() {
+            return Vec::new(); // freeze the violating state for the checker
+        }
+        let mut out = Vec::new();
+        for (i, s) in self.seqs.iter().enumerate() {
+            if !matches!(s, SeqPhase::Done | SeqPhase::Faulted) {
+                out.push(i);
+            }
+        }
+        if self.evictor != EvictPhase::Done && self.evict_passes > 0 {
+            out.push(2);
+        }
+        out
+    }
+
+    fn step(&mut self, actor: usize) {
+        match actor {
+            // seqA: adopt → swap_out → swap_in → free
+            0 => match self.seqs[0] {
+                SeqPhase::Start => {
+                    self.seqs[0] = if self.adopt() {
+                        SeqPhase::Adopted
+                    } else {
+                        SeqPhase::Done // prefix miss: owned-only sequence
+                    };
+                }
+                SeqPhase::Adopted => {
+                    // swap_out: pool pages released; shared refs KEPT by
+                    // the real policy, dropped by the buggy one
+                    if self.drop_refs_on_swap {
+                        self.unref();
+                    }
+                    self.seqs[0] = SeqPhase::Swapped;
+                }
+                SeqPhase::Swapped => {
+                    // swap_in: the stream returns; under the buggy policy
+                    // it must re-adopt the prefix it thinks it still has
+                    if self.drop_refs_on_swap {
+                        if !self.adopt() {
+                            self.fault = Some(
+                                "use-after-free: swap-in found its shared prefix page evicted",
+                            );
+                            self.seqs[0] = SeqPhase::Faulted;
+                            return;
+                        }
+                    } else if !self.page_present {
+                        self.fault =
+                            Some("use-after-free: page evicted while a swapped sequence held refs");
+                        self.seqs[0] = SeqPhase::Faulted;
+                        return;
+                    }
+                    self.seqs[0] = SeqPhase::Resident;
+                }
+                SeqPhase::Resident => {
+                    self.unref();
+                    self.seqs[0] = SeqPhase::Done;
+                }
+                SeqPhase::Done | SeqPhase::Faulted => {}
+            },
+            // seqB: adopt → free (late admission racing the evictor)
+            1 => match self.seqs[1] {
+                SeqPhase::Start => {
+                    self.seqs[1] = if self.adopt() {
+                        SeqPhase::Adopted
+                    } else {
+                        SeqPhase::Done
+                    };
+                }
+                SeqPhase::Adopted => {
+                    if !self.page_present {
+                        self.fault =
+                            Some("use-after-free: page evicted under a resident adopter");
+                        self.seqs[1] = SeqPhase::Faulted;
+                        return;
+                    }
+                    self.unref();
+                    self.seqs[1] = SeqPhase::Done;
+                }
+                _ => {}
+            },
+            // evictor: observe a refs == 0 page, then free it
+            _ => match self.evictor {
+                EvictPhase::Scan => {
+                    if self.page_present && self.refs == 0 {
+                        self.evictor = EvictPhase::Candidate;
+                    } else {
+                        self.evict_passes -= 1;
+                        if self.evict_passes == 0 {
+                            self.evictor = EvictPhase::Done;
+                        }
+                    }
+                }
+                EvictPhase::Candidate => {
+                    let safe = !self.revalidate_on_evict || self.refs == 0;
+                    if self.page_present && safe {
+                        if self.refs > 0 {
+                            // (only reachable without revalidation)
+                            self.fault = Some(
+                                "adopted page evicted: free ran on a stale refs == 0 observation",
+                            );
+                        }
+                        self.page_present = false;
+                        if self.pool_allocated == 0 {
+                            self.fault = Some("double free: pool release underflow");
+                        } else {
+                            self.pool_allocated -= 1;
+                        }
+                    }
+                    self.evict_passes -= 1;
+                    self.evictor = if self.evict_passes == 0 {
+                        EvictPhase::Done
+                    } else {
+                        EvictPhase::Scan
+                    };
+                }
+                EvictPhase::Done => {}
+            },
+        }
+    }
+
+    fn invariant(&self) -> Result<(), String> {
+        if let Some(f) = self.fault {
+            return Err(f.to_string());
+        }
+        // Pool accounting: the page is the only allocation.
+        let expect = self.page_present as u8;
+        if self.pool_allocated != expect {
+            return Err(format!(
+                "pool accounting drift: {} allocated, page_present={}",
+                self.pool_allocated, self.page_present
+            ));
+        }
+        // A page absent from the store cannot carry refs.
+        if !self.page_present && self.refs > 0 {
+            return Err(format!("{} refs on an evicted page", self.refs));
+        }
+        Ok(())
+    }
+
+    fn terminal(&self) -> Result<(), String> {
+        if self.seqs.iter().any(|s| *s != SeqPhase::Done) {
+            return Err("deadlock: a sequence could not finish its script".into());
+        }
+        if self.refs != 0 {
+            return Err(format!("leaked refs at shutdown: {}", self.refs));
+        }
+        Ok(())
+    }
+
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.push(self.page_present as u8);
+        out.push(self.refs);
+        out.push(self.pool_allocated);
+        for s in &self.seqs {
+            out.push(*s as u8);
+        }
+        out.push(self.evictor as u8);
+        out.push(self.evict_passes);
+        out.push(self.fault.map_or(0, |_| 1));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::explore;
+    use super::*;
+
+    /// The shipped lifecycle (refs kept across swap, revalidated evict)
+    /// survives every interleaving of two sequences and the evictor.
+    #[test]
+    fn real_policies_are_exhaustively_safe() {
+        let r = explore(StoreModel::new(false, true), 2_000_000);
+        assert!(r.violation.is_none(), "{}", super::super::render(&r));
+        assert!(r.states > 30, "suspiciously small state space: {}", r.states);
+    }
+
+    /// Pinned counterexample #1: dropping shared refs on swap-out lets
+    /// the evictor free the prefix under a swapped sequence; swap-in then
+    /// re-admits a freed page. This is WHY `swap_out` keeps shared refs.
+    #[test]
+    fn drop_refs_on_swap_is_found_unsafe() {
+        let r = explore(StoreModel::new(true, true), 2_000_000);
+        let v = r.violation.expect("the swap/evict race must be found");
+        assert!(v.message.contains("use-after-free"), "{}", v.message);
+        assert!(v.trace.iter().any(|s| s == "evictor"), "{:?}", v.trace);
+    }
+
+    /// Pinned counterexample #2: freeing on a stale refs == 0 observation
+    /// evicts a page a late-admitted sequence just adopted. This is WHY
+    /// `free_shared_page` revalidates refs == 0 under the lock.
+    #[test]
+    fn stale_evict_observation_is_found_unsafe() {
+        let r = explore(StoreModel::new(false, false), 2_000_000);
+        let v = r.violation.expect("the adopt/evict race must be found");
+        assert!(
+            v.message.contains("adopted page evicted")
+                || v.message.contains("use-after-free")
+                || v.message.contains("refs on an evicted page"),
+            "{}",
+            v.message
+        );
+    }
+}

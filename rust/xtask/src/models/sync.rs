@@ -1,0 +1,117 @@
+//! The `#[cfg(loom)]` seam: concrete `Arc<Mutex<_>>` miniatures of the
+//! modeled protocols, built against std by default and against
+//! `loom::sync` when the crate is compiled with `RUSTFLAGS="--cfg loom"`
+//! (after adding the loom dev-dependency — it is not vendored offline,
+//! see `docs/ANALYSIS.md`).
+//!
+//! Under std these run as plain threaded smoke tests — one interleaving
+//! per run, a sanity check that the miniature matches the abstract model
+//! in [`super::server`] / [`super::store`]. Under loom, `loom::model`
+//! replays the SAME closure across every schedule its exploration
+//! generates, so the concrete lock-and-channel code gets the exhaustive
+//! treatment the abstract models already have.
+
+#[cfg(loom)]
+pub use loom::sync::{Arc, Mutex};
+#[cfg(loom)]
+pub use loom::thread;
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Mutex};
+#[cfg(not(loom))]
+pub use std::thread;
+
+/// Shared-page refcount cell: the concrete miniature of
+/// [`super::store::StoreModel`]'s page. `None` means evicted.
+pub type PageCell = Arc<Mutex<Option<u32>>>;
+
+/// Adopt the page (bump refs). Returns false on a prefix miss.
+pub fn adopt(page: &PageCell) -> bool {
+    let mut slot = page.lock().unwrap();
+    match slot.as_mut() {
+        Some(refs) => {
+            *refs += 1;
+            true
+        }
+        None => false,
+    }
+}
+
+/// Release one ref. Panics on underflow — the invariant the models check.
+pub fn unref(page: &PageCell) {
+    let mut slot = page.lock().unwrap();
+    let refs = slot.as_mut().expect("unref of an evicted page");
+    assert!(*refs > 0, "refcount underflow");
+    *refs -= 1;
+}
+
+/// Evict iff refs == 0, revalidated under the same lock acquisition the
+/// free happens in — the policy `stale_evict_observation_is_found_unsafe`
+/// shows is load-bearing. Returns true if the page was freed.
+pub fn try_evict(page: &PageCell) -> bool {
+    let mut slot = page.lock().unwrap();
+    if matches!(*slot, Some(0)) {
+        *slot = None;
+        true
+    } else {
+        false
+    }
+}
+
+/// One run of the store lifecycle: a swapping sequence and an eviction
+/// pass racing on a shared page. Safe for any interleaving because refs
+/// are held across the swap window and eviction revalidates under the
+/// lock. Called directly by the std smoke test and via `loom::model` by
+/// the loom test.
+pub fn store_lifecycle_run() {
+    let page: PageCell = Arc::new(Mutex::new(Some(0)));
+
+    let seq = {
+        let page = Arc::clone(&page);
+        thread::spawn(move || {
+            if adopt(&page) {
+                // swap-out .. swap-in window: refs stay held
+                let mut slot = page.lock().unwrap();
+                assert!(slot.is_some(), "page evicted under a held ref");
+                drop(slot);
+                unref(&page);
+            }
+        })
+    };
+    let evictor = {
+        let page = Arc::clone(&page);
+        thread::spawn(move || {
+            try_evict(&page);
+        })
+    };
+
+    seq.join().unwrap();
+    evictor.join().unwrap();
+
+    // Whatever the schedule, refs have drained: either the page survived
+    // with refs == 0 or it was evicted while unreferenced.
+    let slot = page.lock().unwrap();
+    assert!(matches!(*slot, None | Some(0)), "leaked refs: {:?}", *slot);
+}
+
+#[cfg(all(test, not(loom)))]
+mod std_tests {
+    /// One arbitrary interleaving per run; the abstract model covers the
+    /// rest. Keeps the miniature honest against refactors.
+    #[test]
+    fn store_lifecycle_smoke() {
+        for _ in 0..64 {
+            super::store_lifecycle_run();
+        }
+    }
+}
+
+#[cfg(all(test, loom))]
+mod loom_tests {
+    /// `RUSTFLAGS="--cfg loom" cargo test -p xtask` (with the loom
+    /// dev-dependency added) explores every schedule of the miniature.
+    #[test]
+    fn store_lifecycle_all_schedules() {
+        loom::model(super::store_lifecycle_run);
+    }
+}
