@@ -6,7 +6,7 @@ ARTIFACTS ?= artifacts
 .PHONY: all artifacts test bench smoke bench-serving smoke-serving \
         bench-fused smoke-fused profile-fused bench-prefix smoke-prefix \
         bench-latency smoke-latency bench-quality smoke-quality \
-        docs fmt lint analyze loom miri tsan clean
+        bench-obs smoke-obs docs fmt lint analyze loom miri tsan clean
 
 all: test
 
@@ -97,6 +97,18 @@ bench-quality:
 smoke-quality:
 	cargo bench --bench quality_sweep -- --smoke
 
+# Observability overhead: the same serving workload with tracing off /
+# sampled (stride 32) / fully instrumented (stride 1); asserts token
+# bit-identity across modes, writes BENCH_obs_overhead.json plus a
+# Perfetto-loadable example trace (BENCH_obs_overhead_trace.json). CI's
+# bench-smoke gate asserts the measured overheads stay under the bound
+# fields published in the JSON. Field docs: docs/BENCH_GLOSSARY.md.
+bench-obs:
+	cargo bench --bench obs_overhead
+
+smoke-obs:
+	cargo bench --bench obs_overhead -- --smoke
+
 # Documentation gate: rustdoc clean under -D warnings (missing_docs
 # included for quant/ and coordinator/) and every doc-example compiles
 # and runs. CI runs the same two commands in the `docs` job.
@@ -143,4 +155,5 @@ clean:
 	rm -f BENCH_quant_hot_path.json BENCH_serving_throughput.json \
 	      BENCH_fused_attention.json BENCH_prefix_caching.json \
 	      BENCH_serving_latency.json BENCH_quality_sweep.json \
+	      BENCH_obs_overhead.json BENCH_obs_overhead_trace.json \
 	      flamegraph-fused.svg perf-fused.data

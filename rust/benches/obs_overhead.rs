@@ -1,0 +1,269 @@
+//! Observability overhead: the same serving workload with tracing off,
+//! sampled (stride 32), and fully instrumented (stride 1) — the numbers
+//! behind `BENCH_obs_overhead.json` and the CI gate that keeps the obs
+//! subsystem honest about its own cost.
+//!
+//! Three engines share one geometry and one request stream and differ
+//! only in `EngineConfig::{trace, sample_every}`:
+//!
+//! * `off`     — `trace: false`: every record site is one branch, the
+//!   gauge/stage samplers never run. This is the production default and
+//!   the baseline all overheads are measured against.
+//! * `sampled` — `trace: true, sample_every: 32`: the trace ring records
+//!   every lifecycle event; gauges and fused-path stage timers fire on
+//!   every 32nd tick (the CLI default).
+//! * `full`    — `trace: true, sample_every: 1`: worst case, every tick
+//!   sampled.
+//!
+//! All three modes are asserted to generate bit-identical token streams
+//! before any timing (observation must never perturb the computation),
+//! and passes are interleaved off/sampled/full so drift hits all modes
+//! equally. The `full` engine's snapshot is also rendered through the
+//! Chrome exporter, parse-checked, and written to
+//! `BENCH_obs_overhead_trace.json` as a loadable example trace.
+//!
+//! JSON summary fields (documented in docs/BENCH_GLOSSARY.md):
+//! `{off,sampled,full}_tok_per_s`, `sampled_overhead_pct`,
+//! `full_overhead_pct` (p50-wall overhead vs `off`, may be negative under
+//! timer noise), the CI bounds `sampled_overhead_bound_pct` /
+//! `full_overhead_bound_pct`, trace volume (`trace_spans`,
+//! `trace_gauge_samples`, `trace_dropped`), plus the workload geometry
+//! (`n_requests`, `sample_stride`, `smoke`).
+//!
+//!     cargo bench --bench obs_overhead [-- --smoke]
+
+use std::time::{Duration, Instant};
+use turboangle::coordinator::{BatchPolicy, Engine, EngineConfig, Request};
+use turboangle::obs::export;
+use turboangle::quant::QuantConfig;
+use turboangle::runtime::SimExecutor;
+use turboangle::util::bench::{BenchResult, JsonReport};
+use turboangle::util::json::Json;
+
+const OUT_JSON: &str = "BENCH_obs_overhead.json";
+const OUT_TRACE: &str = "BENCH_obs_overhead_trace.json";
+
+/// Overhead the CI smoke gate tolerates for the sampled (stride-32)
+/// configuration — the one `--trace on` ships with. Generous against
+/// shared-runner timer noise; the measured figure is typically ~1%.
+const SAMPLED_BOUND_PCT: f64 = 25.0;
+/// Gate for the worst-case stride-1 configuration.
+const FULL_BOUND_PCT: f64 = 100.0;
+
+struct Geom {
+    d_head: usize,
+    batch: usize,
+    prompt_min: usize,
+    prompt_max: usize,
+    gen_min: usize,
+    gen_max: usize,
+    n_requests: usize,
+    timed_passes: usize,
+}
+
+fn mk_engine(g: &Geom, trace: bool, sample_every: usize) -> Engine<SimExecutor> {
+    let exec = SimExecutor::with_dims(
+        7,
+        2,
+        2,
+        g.d_head,
+        g.batch,
+        g.prompt_max,
+        g.prompt_max + g.gen_max + g.batch,
+    );
+    Engine::new(
+        exec,
+        EngineConfig {
+            batch_policy: BatchPolicy {
+                min_batch: 1,
+                max_wait: Duration::ZERO,
+            },
+            capacity_pages: 4096,
+            page_tokens: 16,
+            trace,
+            sample_every,
+            ..EngineConfig::new(QuantConfig::paper_uniform(2).with_k8v4_log())
+        },
+    )
+}
+
+/// Deterministic mixed stream: prompt and generation lengths fan across
+/// their ranges so the pass exercises admission, paging, and retirement —
+/// identical for every mode and every pass (ids offset per pass).
+fn requests(g: &Geom, pass: u64) -> Vec<Request> {
+    let base = pass * 1_000_000;
+    (0..g.n_requests as u64)
+        .map(|i| {
+            let len = g.prompt_min + (i as usize * 7) % (g.prompt_max - g.prompt_min);
+            let prompt: Vec<i32> = (0..len as u64)
+                .map(|t| ((i * 31 + t * 7) % 26) as i32 + 97)
+                .collect();
+            let gen = g.gen_min + (i as usize * 5) % (g.gen_max - g.gen_min);
+            Request::new(base + i, prompt, gen)
+        })
+        .collect()
+}
+
+/// One full pass: submit the whole stream, drain it, return the sorted
+/// (id, tokens) streams for the bit-identity gate.
+fn run_pass(e: &mut Engine<SimExecutor>, g: &Geom, pass: u64) -> Vec<(u64, Vec<i32>)> {
+    for req in requests(g, pass) {
+        e.submit(req);
+    }
+    e.run_to_completion().expect("pass must drain");
+    let mut out: Vec<(u64, Vec<i32>)> = e
+        .take_finished()
+        .into_iter()
+        .map(|s| (s.request.id % 1_000_000, s.generated))
+        .collect();
+    out.sort();
+    out
+}
+
+/// Wrap per-pass wall times in a [`BenchResult`], same quantile indexing
+/// as `util::bench::bench` so the published fields are comparable across
+/// BENCH files.
+fn result_from(name: &str, walls: &[Duration]) -> BenchResult {
+    let mut sorted = walls.to_vec();
+    sorted.sort_unstable();
+    let n = sorted.len();
+    let sum: Duration = sorted.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean: sum / n as u32,
+        p50: sorted[n / 2],
+        p95: sorted[((n as f64 * 0.95) as usize).min(n - 1)],
+        min: sorted[0],
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let g = if smoke {
+        Geom {
+            d_head: 16,
+            batch: 4,
+            prompt_min: 8,
+            prompt_max: 40,
+            gen_min: 8,
+            gen_max: 24,
+            n_requests: 12,
+            timed_passes: 3,
+        }
+    } else {
+        Geom {
+            d_head: 64,
+            batch: 4,
+            prompt_min: 16,
+            prompt_max: 96,
+            gen_min: 16,
+            gen_max: 48,
+            n_requests: 32,
+            timed_passes: 7,
+        }
+    };
+    // planned decode tokens per pass (EOS may cut a stream short; the
+    // figure is the throughput denominator, identical across modes)
+    let tokens_per_pass: f64 = (0..g.n_requests)
+        .map(|i| (g.gen_min + (i * 5) % (g.gen_max - g.gen_min)) as f64)
+        .sum();
+    println!(
+        "== obs overhead: {} requests/pass, d_head {}, modes off / sampled(32) / full(1) ==",
+        g.n_requests, g.d_head
+    );
+
+    let mut off = mk_engine(&g, false, 32);
+    let mut sampled = mk_engine(&g, true, 32);
+    let mut full = mk_engine(&g, true, 1);
+
+    // correctness gate before any timing: instrumentation at any stride
+    // must not perturb a single generated token
+    let t_off = run_pass(&mut off, &g, 0);
+    let t_sampled = run_pass(&mut sampled, &g, 0);
+    let t_full = run_pass(&mut full, &g, 0);
+    assert_eq!(t_off, t_sampled, "stride-32 tracing changed the token streams");
+    assert_eq!(t_off, t_full, "stride-1 tracing changed the token streams");
+    assert!(
+        !full.obs_snapshot().events.is_empty(),
+        "full engine recorded nothing — bench is measuring nothing"
+    );
+
+    // interleaved timed passes: off, sampled, full within each round so
+    // machine drift is shared rather than attributed to one mode
+    let (mut w_off, mut w_sampled, mut w_full) = (Vec::new(), Vec::new(), Vec::new());
+    for pass in 0..g.timed_passes as u64 {
+        for (e, walls) in [
+            (&mut off, &mut w_off),
+            (&mut sampled, &mut w_sampled),
+            (&mut full, &mut w_full),
+        ] {
+            let t0 = Instant::now();
+            run_pass(e, &g, 1 + pass);
+            walls.push(t0.elapsed());
+        }
+    }
+    let r_off = result_from("serve pass, tracing off", &w_off);
+    let r_sampled = result_from("serve pass, traced stride 32", &w_sampled);
+    let r_full = result_from("serve pass, traced stride 1", &w_full);
+    for r in [&r_off, &r_sampled, &r_full] {
+        println!("{}", r.line(Some((tokens_per_pass, "decode-tok"))));
+    }
+
+    let pct = |traced: &BenchResult| {
+        (traced.p50.as_secs_f64() / r_off.p50.as_secs_f64() - 1.0) * 100.0
+    };
+    let sampled_pct = pct(&r_sampled);
+    let full_pct = pct(&r_full);
+
+    // render the worst-case engine's trace through the Chrome exporter:
+    // parse-check it, then publish it as the loadable example artifact
+    let snap = full.obs_snapshot();
+    let (spans, gauges, dropped) = (snap.events.len(), snap.gauges.len(), snap.dropped_events);
+    let doc = export::chrome_trace(&[snap]);
+    Json::parse(&doc).expect("exported Chrome trace must be valid JSON");
+    std::fs::write(OUT_TRACE, &doc).expect("write trace artifact");
+
+    let mut rep = JsonReport::new();
+    rep.summary("smoke", if smoke { 1.0 } else { 0.0 });
+    rep.summary("n_requests", g.n_requests);
+    rep.summary("sample_stride", 32usize);
+    rep.push(
+        &r_off,
+        tokens_per_pass,
+        "decode-tok",
+        &[("op", "serve_pass".into()), ("mode", "off".into())],
+    );
+    rep.push(
+        &r_sampled,
+        tokens_per_pass,
+        "decode-tok",
+        &[("op", "serve_pass".into()), ("mode", "sampled".into())],
+    );
+    rep.push(
+        &r_full,
+        tokens_per_pass,
+        "decode-tok",
+        &[("op", "serve_pass".into()), ("mode", "full".into())],
+    );
+    rep.summary("off_tok_per_s", r_off.throughput(tokens_per_pass));
+    rep.summary("sampled_tok_per_s", r_sampled.throughput(tokens_per_pass));
+    rep.summary("full_tok_per_s", r_full.throughput(tokens_per_pass));
+    // headline: what `--trace on` costs at the default stride, and the
+    // stride-1 ceiling — p50 wall vs the tracing-off baseline
+    rep.summary("sampled_overhead_pct", sampled_pct);
+    rep.summary("full_overhead_pct", full_pct);
+    rep.summary("sampled_overhead_bound_pct", SAMPLED_BOUND_PCT);
+    rep.summary("full_overhead_bound_pct", FULL_BOUND_PCT);
+    rep.summary("trace_spans", spans);
+    rep.summary("trace_gauge_samples", gauges);
+    rep.summary("trace_dropped", dropped as usize);
+    rep.write(OUT_JSON).expect("write BENCH json");
+
+    println!(
+        "\nsampled_overhead_pct: {sampled_pct:+.2}% (bound {SAMPLED_BOUND_PCT}%), \
+         full_overhead_pct: {full_pct:+.2}% (bound {FULL_BOUND_PCT}%)\n\
+         trace artifact: {spans} spans + {gauges} gauge samples ({dropped} dropped) -> {OUT_TRACE}\n\
+         wrote {OUT_JSON}"
+    );
+}

@@ -39,6 +39,7 @@ use super::metrics::EngineMetrics;
 use super::prefix_cache::PrefixCache;
 use super::scheduler::{next_action, Action, SchedulerPolicy};
 use super::session::{FinishReason, Request, Session};
+use crate::obs::{stage, EventKind, GaugeSample, GaugeSeries, ObsSnapshot, Recorder, StageStats};
 use crate::quant::QuantConfig;
 use crate::runtime::{ModelBackend, ModelExecutor};
 use anyhow::Result;
@@ -82,6 +83,13 @@ pub trait EngineCore: Send {
 
     /// Snapshot of the serving counters/histograms.
     fn metrics(&self) -> EngineMetrics;
+
+    /// Clone the replica's observability state — trace-ring contents,
+    /// sampled gauge series, and fused-path stage timers — for the trace
+    /// and metrics exporters. Default: empty, for cores without tracing.
+    fn obs_snapshot(&self) -> ObsSnapshot {
+        ObsSnapshot::default()
+    }
 }
 
 /// How decode reads the compressed cache.
@@ -135,6 +143,17 @@ pub struct EngineConfig {
     /// below `batch + chunk_tokens` throttle prefill while the engine is
     /// decode-saturated (the work still completes as decoders finish).
     pub tick_token_budget: usize,
+    /// Record request-lifecycle trace events and sampled gauges (CLI
+    /// `--trace on|off`). Off by default: every record site is then a
+    /// single branch and token streams are bit-identical either way.
+    pub trace: bool,
+    /// Trace ring capacity in events per replica. Bounded: when full the
+    /// oldest events are overwritten and the drop counter advances.
+    pub trace_events: usize,
+    /// Gauge/stage sampling stride in ticks (must be >= 1; CLI
+    /// `--sample-every N`). Stride 1 samples every tick; larger strides
+    /// cut sampling overhead proportionally.
+    pub sample_every: usize,
 }
 
 impl EngineConfig {
@@ -154,6 +173,9 @@ impl EngineConfig {
             chunked_prefill: false,
             chunk_tokens: 16,
             tick_token_budget: 64,
+            trace: false,
+            trace_events: 65_536,
+            sample_every: 32,
         }
     }
 }
@@ -210,14 +232,28 @@ pub struct Engine<B: ModelBackend = ModelExecutor> {
     /// so half-prefilled sessions stay preemptible under pressure.
     slot_decoded: Vec<bool>,
     finished: Vec<Session>,
+    /// request-lifecycle trace ring (disabled: every record is one branch)
+    obs: Recorder,
+    /// tick-sampled gauge series (pool/shared/swap/queue/per-layer bits)
+    gauges: GaugeSeries,
+    /// fused read-path stage timers accumulated over sampled ticks
+    stage: StageStats,
+    /// gauge/stage sampling stride in ticks (>= 1)
+    sample_every: u64,
+    /// monotonically increasing tick counter (timestamps trace events)
+    ticks: u64,
 }
 
 impl<B: ModelBackend> Engine<B> {
     /// Build an engine around `exec`. Panics on inconsistent configs
     /// (`ReadPath::Fused` without backend support, a zero chunk size or
-    /// tick budget with chunked prefill on) — the CLI validates the same
-    /// conditions earlier with actionable errors.
+    /// tick budget with chunked prefill on, a zero sampling stride) — the
+    /// CLI validates the same conditions earlier with actionable errors.
     pub fn new(exec: B, cfg: EngineConfig) -> Self {
+        assert!(
+            cfg.sample_every >= 1,
+            "sample_every must be >= 1 (the tick stride between gauge/stage samples)"
+        );
         if cfg.chunked_prefill {
             assert!(
                 cfg.chunk_tokens >= 1,
@@ -274,6 +310,11 @@ impl<B: ModelBackend> Engine<B> {
             vr: vec![0.0; n],
             vi: vec![0.0; n],
             finished: Vec::new(),
+            obs: Recorder::new(cfg.trace, cfg.trace_events),
+            gauges: GaugeSeries::default(),
+            stage: StageStats::default(),
+            sample_every: cfg.sample_every as u64,
+            ticks: 0,
         }
     }
 
@@ -313,10 +354,29 @@ impl<B: ModelBackend> Engine<B> {
         (self.kr.len() + self.ki.len() + self.vr.len() + self.vi.len()) * 4
     }
 
+    /// Whether request-lifecycle tracing is recording.
+    pub fn tracing(&self) -> bool {
+        self.obs.enabled()
+    }
+
+    /// Clone the replica's observability state — trace-ring contents,
+    /// sampled gauge series, and fused-path stage timers — for export
+    /// (`--trace-out`, the `metrics` wire query, tests).
+    pub fn obs_snapshot(&self) -> ObsSnapshot {
+        ObsSnapshot {
+            events: self.obs.snapshot(),
+            gauges: self.gauges.snapshot(),
+            dropped_events: self.obs.dropped(),
+            stage: self.stage,
+        }
+    }
+
     /// Enqueue a request (may finish it immediately with `CacheFull` when
     /// it can never fit the page pool).
     pub fn submit(&mut self, req: Request) {
         self.metrics.requests_submitted += 1;
+        self.obs
+            .record(EventKind::Queued, req.id, self.ticks, req.prompt.len() as u64);
         let tp = self.exec.serve().prefill_len;
         let tmax = self.exec.serve().tmax;
         let expected = expected_tokens(req.prompt.len(), req.max_new_tokens, tp, tmax);
@@ -331,6 +391,7 @@ impl<B: ModelBackend> Engine<B> {
 
     /// Terminally finish a request that can never fit the page pool.
     fn reject_cache_full(&mut self, req: Request) {
+        self.obs.record(EventKind::Rejected, req.id, self.ticks, 0);
         let plen = req.prompt.len().min(self.exec.serve().prefill_len);
         let mut sess = Session::new(req, plen);
         sess.finished = Some(FinishReason::CacheFull);
@@ -378,6 +439,12 @@ impl<B: ModelBackend> Engine<B> {
     fn admit_seq(&mut self, id: u64, expected: usize, shared: &[PageId]) -> Result<usize> {
         let shared_tokens = shared.len() * self.kv.page_tokens();
         self.kv.new_seq_with_prefix(id, expected, shared)?;
+        self.obs
+            .record(EventKind::Admitted, id, self.ticks, expected as u64);
+        if !shared.is_empty() {
+            self.obs
+                .record(EventKind::PrefixAdopt, id, self.ticks, shared.len() as u64);
+        }
         if self.prefix.is_some() {
             if shared.is_empty() {
                 self.metrics.prefix_misses += 1;
@@ -396,9 +463,17 @@ impl<B: ModelBackend> Engine<B> {
     /// counters and histograms cannot drift apart. Callers free the kv
     /// sequence first when one exists.
     fn retire(&mut self, sess: Session) {
-        self.metrics
-            .e2e
-            .record(Instant::now().duration_since(sess.request.arrival));
+        let e2e = Instant::now().duration_since(sess.request.arrival);
+        self.metrics.e2e.record(e2e);
+        // the Finish span covers the whole arrival→retirement lifetime, so
+        // every other event of the same request nests inside it
+        self.obs.record_span(
+            EventKind::Finish,
+            sess.request.id,
+            self.ticks,
+            e2e,
+            sess.generated.len() as u64,
+        );
         self.metrics.requests_finished += 1;
         self.finished.push(sess);
     }
@@ -423,8 +498,46 @@ impl<B: ModelBackend> Engine<B> {
         self.kv.memory_stats()
     }
 
-    /// One scheduler tick. Returns the action taken.
+    /// One scheduler tick. Returns the action taken. With tracing on,
+    /// every `sample_every`-th tick also snapshots the gauges and times
+    /// the fused read path's stages; with it off the tick body runs with
+    /// zero observability work beyond one branch.
     pub fn tick(&mut self) -> Result<Action> {
+        self.ticks += 1;
+        let sampled = self.obs.enabled() && self.ticks % self.sample_every == 0;
+        if sampled {
+            self.sample_gauges();
+            stage::set_enabled(true);
+        }
+        let action = self.tick_inner();
+        if sampled {
+            stage::set_enabled(false);
+            self.stage.add_sample(stage::take());
+        }
+        action
+    }
+
+    /// Take one gauge sample (pool, shared store, swap, queue depth,
+    /// per-layer achieved bits) at the current tick.
+    fn sample_gauges(&mut self) {
+        let mem = self.kv.memory_stats();
+        self.gauges.push(GaugeSample {
+            tick: self.ticks,
+            at_us: self.obs.now_us(),
+            pages_used: mem.pages_allocated as u64,
+            pages_reserved: mem.pages_reserved as u64,
+            pages_capacity: mem.pages_capacity as u64,
+            shared_pages: mem.shared_pages as u64,
+            shared_refs: mem.shared_refs as u64,
+            swap_bytes: mem.swapped_bytes as u64,
+            queue_depth: (self.batcher.pending() + self.active_sessions() + self.preempted.len())
+                as u64,
+            layer_bits_per_element: self.kv.per_layer_bits_per_element(),
+        });
+    }
+
+    /// The untraced tick body (the pre-observability `tick`).
+    fn tick_inner(&mut self) -> Result<Action> {
         self.try_readmit()?;
         if self.chunked {
             return self.tick_chunked();
@@ -570,9 +683,11 @@ impl<B: ModelBackend> Engine<B> {
             starts[slot] = sess.prefill_cursor;
             lens[slot] = want;
         }
+        let t_chunk = Instant::now();
         let out = self
             .exec
             .run_prefill_chunk(&tokens, &lengths, &starts, &lens, &self.quant)?;
+        let chunk_dur = t_chunk.elapsed();
         self.metrics.prefill_chunks += grants.len() as u64;
         let (h_n, half) = (
             self.exec.profile().n_kv_heads,
@@ -585,6 +700,8 @@ impl<B: ModelBackend> Engine<B> {
                 let sess = self.slots[slot].as_ref().expect("granted slot is seated");
                 (sess.request.id, sess.prefill_cursor, sess.prompt_len)
             };
+            self.obs
+                .record_span(EventKind::PrefillChunk, id, self.ticks, chunk_dur, want as u64);
             for t in c0..c0 + want {
                 self.kv.append_token_strided(
                     id,
@@ -613,6 +730,7 @@ impl<B: ModelBackend> Engine<B> {
                 self.metrics
                     .ttft
                     .record(Instant::now().duration_since(sess.request.arrival));
+                self.obs.record(EventKind::FirstToken, id, self.ticks, 0);
                 if sess.finished.is_some() {
                     // xtask-allow(no-panic-in-serving): the borrow that set `finished` was taken from this very slot
                     let sess = self.slots[slot].take().expect("granted slot is seated");
@@ -672,6 +790,12 @@ impl<B: ModelBackend> Engine<B> {
             // xtask-allow(no-panic-in-serving): same loop guard — the queue is non-empty or we'd have exited above
             let sess = self.preempted.pop_front().expect("checked non-empty");
             self.metrics.swap_ins += 1;
+            self.obs.record(
+                EventKind::SwapIn,
+                sess.request.id,
+                self.ticks,
+                sess.cache_len() as u64,
+            );
             self.slot_filled[slot] = 0; // restored stream: full refill
             self.slot_decoded[slot] = false; // must decode before re-eviction
             self.slots[slot] = Some(sess);
@@ -734,6 +858,12 @@ impl<B: ModelBackend> Engine<B> {
         self.kv.swap_out(sess.request.id)?;
         sess.preemptions += 1;
         self.metrics.preemptions += 1;
+        self.obs.record(
+            EventKind::Preempt,
+            sess.request.id,
+            self.ticks,
+            sess.cache_len() as u64,
+        );
         self.preempted.push_back(sess);
         Ok(())
     }
@@ -921,6 +1051,8 @@ impl<B: ModelBackend> Engine<B> {
             self.metrics
                 .ttft
                 .record(Instant::now().duration_since(sess.request.arrival));
+            self.obs
+                .record(EventKind::FirstToken, sess.request.id, self.ticks, 0);
             if sess.finished.is_some() {
                 // finished on its very first token (EOS, or max_new_tokens
                 // == 1): retire now instead of burning a decode step
@@ -1023,7 +1155,8 @@ impl<B: ModelBackend> Engine<B> {
                 &token, &pos, &self.quant, &self.kr, &self.ki, &self.vr, &self.vi,
             )?
         };
-        self.metrics.decode_step_latency.record(t0.elapsed());
+        let step_dur = t0.elapsed();
+        self.metrics.decode_step_latency.record(step_dur);
         self.metrics.decode_steps += 1;
         self.metrics.decode_slot_steps += b_total as u64;
 
@@ -1042,6 +1175,13 @@ impl<B: ModelBackend> Engine<B> {
                 continue; // mid-prefill lane: the step never touched it
             }
             self.slot_decoded[b] = true;
+            self.obs.record_span(
+                EventKind::DecodeStep,
+                sess.request.id,
+                self.ticks,
+                step_dur,
+                sess.generated.len() as u64,
+            );
             // append the *processed* token's compressed KV across all
             // (layer, head) pairs in one batched call
             self.kv.append_token_strided(
@@ -1105,6 +1245,10 @@ impl<B: ModelBackend> EngineCore for Engine<B> {
 
     fn metrics(&self) -> EngineMetrics {
         self.metrics.clone()
+    }
+
+    fn obs_snapshot(&self) -> ObsSnapshot {
+        Engine::obs_snapshot(self)
     }
 }
 

@@ -24,6 +24,7 @@
 //! (L,B,H,Tmax,d/2) tensors the decode_step HLO consumes; the fused read
 //! path walks the same chunks page-tile by page-tile.
 
+use crate::obs::stage::{self, Stage};
 use crate::quant::kernels::{self, KernelKind};
 use crate::quant::norm::{self, NormMode};
 use crate::quant::packing::{bits_for, BitVec};
@@ -1254,8 +1255,10 @@ impl PagedKvCache {
                 // t0 is always page-aligned, so one tile == one page chunk
                 let (ks, vs) = seq.chunk(&self.shared_store, t0 / tile_tokens, layer, head);
                 let (kn, s) = (self.kernel, &mut *scratch);
-                decode_side_range(kn, ks, bins.n_k, k_norm, 0, tokens, half, &mut s.kr, &mut s.ki)?;
-                decode_side_range(kn, vs, bins.n_v, v_norm, 0, tokens, half, &mut s.vr, &mut s.vi)?;
+                stage::time(Stage::Unpack, || -> Result<()> {
+                    decode_side_range(kn, ks, bins.n_k, k_norm, 0, tokens, half, &mut s.kr, &mut s.ki)?;
+                    decode_side_range(kn, vs, bins.n_v, v_norm, 0, tokens, half, &mut s.vr, &mut s.vi)
+                })?;
                 f(&KvTileView {
                     layer,
                     head,
@@ -1320,6 +1323,42 @@ impl PagedKvCache {
         // shared pages are resident memory, charged exactly once
         st.compressed_bytes += st.shared_bytes;
         st
+    }
+
+    /// Achieved total (angle + norm) bits per original fp16 element, per
+    /// layer, across resident, swapped, and shared streams (each stream
+    /// counted once — the per-layer refinement of
+    /// [`MemoryStats::angle_bits`] + [`MemoryStats::norm_bits`]). Layers
+    /// holding nothing report 0. This feeds the sampled
+    /// `bits_per_element` gauge track in exported traces, making
+    /// per-layer boost schedules visible as a time series instead of one
+    /// end-of-run number.
+    pub fn per_layer_bits_per_element(&self) -> Vec<f64> {
+        let half = self.d_head / 2;
+        let d_head = self.d_head as u64;
+        let mut bits = vec![0u64; self.n_layers];
+        let mut elems = vec![0u64; self.n_layers];
+        let mut add = |bits: &mut [u64], elems: &mut [u64], block: &PageBlock| {
+            for (layer, row) in block.chunks.iter().enumerate() {
+                for (k, v) in row {
+                    bits[layer] +=
+                        k.angle_bits() + v.angle_bits() + k.norm_bits() + v.norm_bits();
+                    elems[layer] += (k.token_vectors(half) + v.token_vectors(half)) * d_head;
+                }
+            }
+        };
+        for s in self.seqs.values().chain(self.swapped.values()) {
+            for block in &s.owned {
+                add(&mut bits, &mut elems, block);
+            }
+        }
+        for p in self.shared_store.values() {
+            add(&mut bits, &mut elems, &p.block);
+        }
+        bits.iter()
+            .zip(&elems)
+            .map(|(&b, &e)| if e == 0 { 0.0 } else { b as f64 / e as f64 })
+            .collect()
     }
 }
 

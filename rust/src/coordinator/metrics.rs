@@ -14,6 +14,7 @@ pub struct Histogram {
     buckets: [u64; 25],
     count: u64,
     sum_us: u64,
+    max_us: u64,
 }
 
 impl Histogram {
@@ -24,11 +25,22 @@ impl Histogram {
         self.buckets[idx] += 1;
         self.count += 1;
         self.sum_us += us;
+        self.max_us = self.max_us.max(us);
     }
 
     /// Number of recorded samples.
     pub fn count(&self) -> u64 {
         self.count
+    }
+
+    /// Sum of recorded samples in microseconds (saturating under merge).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    /// Largest recorded sample in microseconds (zero when empty).
+    pub fn max_us(&self) -> u64 {
+        self.max_us
     }
 
     /// Arithmetic mean of the recorded samples (zero when empty).
@@ -39,7 +51,10 @@ impl Histogram {
         Duration::from_micros(self.sum_us / self.count)
     }
 
-    /// Approximate quantile from bucket upper edges.
+    /// Approximate quantile from bucket upper edges, clamped to the largest
+    /// observed sample. Without the clamp a single 100µs sample reports
+    /// `quantile(1.0)` as 128µs (the bucket's upper edge, up to 2× off);
+    /// with it the tail quantile can never exceed anything actually seen.
     pub fn quantile(&self, q: f64) -> Duration {
         if self.count == 0 {
             return Duration::ZERO;
@@ -49,10 +64,24 @@ impl Histogram {
         for (i, &c) in self.buckets.iter().enumerate() {
             acc += c;
             if acc >= target {
-                return Duration::from_micros(1u64 << (i + 1));
+                return Duration::from_micros((1u64 << (i + 1)).min(self.max_us));
             }
         }
-        Duration::from_micros(1 << 25)
+        Duration::from_micros((1 << 25u64).min(self.max_us))
+    }
+
+    /// Fold `other` into `self` bucket-by-bucket: counts add, `sum_us`
+    /// saturates (two near-u64::MAX replicas must not wrap into a tiny
+    /// mean), `max_us` takes the larger tail. The bucket layout is shared
+    /// by construction, so merged quantiles equal the quantiles of a
+    /// histogram fed the concatenated samples (pinned by a proptest).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum_us = self.sum_us.saturating_add(other.sum_us);
+        self.max_us = self.max_us.max(other.max_us);
     }
 
     /// `{"count": …, "mean_us": …, "p50_us": …, "p95_us": …, "p99_us": …}` —
@@ -174,6 +203,35 @@ impl EngineMetrics {
         )
     }
 
+    /// Fold another replica's snapshot into this one: counters add,
+    /// histograms merge bucket-wise. The fleet-scope `stats` roll-up —
+    /// `{"id":N,"stats":true,"scope":"fleet"}` — is a fold of this over
+    /// every replica's `EngineMetrics`.
+    pub fn merge(&mut self, other: &EngineMetrics) {
+        self.requests_submitted += other.requests_submitted;
+        self.requests_finished += other.requests_finished;
+        self.tokens_generated += other.tokens_generated;
+        self.prefill_batches += other.prefill_batches;
+        self.prefill_sequences += other.prefill_sequences;
+        self.prefill_chunks += other.prefill_chunks;
+        self.decode_steps += other.decode_steps;
+        self.decode_slot_steps += other.decode_slot_steps;
+        self.preemptions += other.preemptions;
+        self.swap_ins += other.swap_ins;
+        self.rejected_cache_full += other.rejected_cache_full;
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_misses += other.prefix_misses;
+        self.prefix_tokens_reused += other.prefix_tokens_reused;
+        self.prefix_pages_adopted += other.prefix_pages_adopted;
+        self.prefix_pages_inserted += other.prefix_pages_inserted;
+        self.prefix_evictions += other.prefix_evictions;
+        self.ttft.merge(&other.ttft);
+        self.itl.merge(&other.itl);
+        self.decode_step_latency.merge(&other.decode_step_latency);
+        self.e2e.merge(&other.e2e);
+        self.coordinator_overhead.merge(&other.coordinator_overhead);
+    }
+
     /// Multi-line human-readable snapshot (CLI `serve`/`listen` epilogue).
     pub fn report(&self) -> String {
         format!(
@@ -257,6 +315,72 @@ mod tests {
         let h = Histogram::default();
         assert_eq!(h.quantile(0.5), Duration::ZERO);
         assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn single_sample_tail_quantile_is_exact() {
+        // Regression: the bucket upper edge used to inflate quantile(1.0)
+        // on a lone 100µs sample to 128µs. The max clamp pins it exactly.
+        let mut h = Histogram::default();
+        h.record(Duration::from_micros(100));
+        assert_eq!(h.quantile(1.0), Duration::from_micros(100));
+        assert_eq!(h.quantile(0.5), Duration::from_micros(100));
+        assert_eq!(h.max_us(), 100);
+    }
+
+    #[test]
+    fn quantile_never_exceeds_observed_max() {
+        let mut h = Histogram::default();
+        for us in [3u64, 17, 900, 5000, 65_537] {
+            h.record(Duration::from_micros(us));
+        }
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert!(h.quantile(q).as_micros() as u64 <= h.max_us());
+        }
+    }
+
+    #[test]
+    fn merge_adds_counts_and_saturates_sum() {
+        let mut a = Histogram::default();
+        let mut b = Histogram::default();
+        a.record(Duration::from_micros(10));
+        a.record(Duration::from_micros(1000));
+        b.record(Duration::from_micros(500_000));
+        let (ca, cb) = (a.count(), b.count());
+        a.merge(&b);
+        assert_eq!(a.count(), ca + cb);
+        assert_eq!(a.sum_us(), 10 + 1000 + 500_000);
+        assert_eq!(a.max_us(), 500_000);
+        // the merged tail sees b's large sample
+        assert!(a.quantile(1.0) >= Duration::from_micros(262_144));
+
+        // saturation: two huge sums must not wrap
+        let mut x = Histogram::default();
+        x.record(Duration::from_micros(u64::MAX));
+        let y = x.clone();
+        x.merge(&y);
+        assert_eq!(x.sum_us(), u64::MAX.saturating_add(u64::MAX));
+    }
+
+    #[test]
+    fn engine_metrics_merge_rolls_up() {
+        let mut a = EngineMetrics {
+            requests_finished: 2,
+            tokens_generated: 10,
+            ..Default::default()
+        };
+        a.ttft.record(Duration::from_micros(100));
+        let mut b = EngineMetrics {
+            requests_finished: 3,
+            tokens_generated: 7,
+            ..Default::default()
+        };
+        b.ttft.record(Duration::from_micros(200));
+        b.ttft.record(Duration::from_micros(300));
+        a.merge(&b);
+        assert_eq!(a.requests_finished, 5);
+        assert_eq!(a.tokens_generated, 17);
+        assert_eq!(a.ttft.count(), 3);
     }
 
     #[test]

@@ -33,8 +33,8 @@ pub mod session;
 pub use batcher::{Admission, BatchPolicy, DynamicBatcher, TakenBatch};
 pub use engine::{Engine, EngineConfig, EngineCore, ReadPath};
 pub use kv_manager::{BatchTileReader, MemoryStats, PageId, PagedKvCache, TileScratch};
+pub use metrics::{EngineMetrics, Histogram};
 pub use prefix_cache::PrefixCache;
-pub use metrics::EngineMetrics;
 pub use router::{hash_session_key, RoutePolicy, Router};
 pub use scheduler::SchedulerPolicy;
 pub use session::{FinishReason, Request, Session};

@@ -17,6 +17,18 @@
 //!
 //! Stats responses do not count toward `max_requests`.
 //!
+//! Two more query forms ride the same line protocol:
+//!
+//! * `{"id": N, "stats": true, "scope": "fleet"}` — fleet aggregation:
+//!   the dispatcher probes EVERY replica, merges the snapshots
+//!   ([`EngineMetrics::merge`]: counters add, histograms merge
+//!   bucket-wise) and answers with one roll-up —
+//!   `{"id": N, "scope": "fleet", "replicas": R, "stats": {…}}`.
+//! * `{"id": N, "metrics": true}` — Prometheus-style text exposition of
+//!   one replica's counters/gauges/quantiles, JSON-escaped into
+//!   `{"id": N, "replica": 0, "metrics": "# HELP …"}` so the one-line
+//!   protocol is preserved (schema: `docs/OBSERVABILITY.md`).
+//!
 //! Topology:
 //!
 //!   conns ──(reader threads)──► ingest ──► dispatcher ──► per-replica
@@ -42,6 +54,7 @@ use super::router::{hash_session_key, RoutePolicy, Router};
 use super::scheduler::Action;
 use super::session::{FinishReason, Request};
 use crate::coordinator::metrics::EngineMetrics;
+use crate::obs::{export, ObsSnapshot};
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
@@ -79,18 +92,48 @@ pub struct WireRequest {
     pub session_key: Option<u64>,
     /// `{"stats": true}`: a metrics query, not a generation request.
     pub stats: bool,
+    /// `{"scope": "fleet"}` on a stats query: merge every replica's
+    /// snapshot into one roll-up instead of answering from one replica.
+    pub fleet: bool,
+    /// `{"metrics": true}`: a Prometheus text-exposition query.
+    pub metrics: bool,
 }
 
 /// Parse one request line.
 pub fn parse_request(line: &str) -> Result<WireRequest> {
     let j = Json::parse(line)?;
+    if matches!(j.opt("metrics"), Some(Json::Bool(true))) {
+        return Ok(WireRequest {
+            id: j.get("id")?.as_u64()?,
+            prompt: String::new(),
+            max_new_tokens: 0,
+            session_key: None,
+            stats: false,
+            fleet: false,
+            metrics: true,
+        });
+    }
     if matches!(j.opt("stats"), Some(Json::Bool(true))) {
+        let fleet = match j.opt("scope") {
+            None => false,
+            Some(v) => match v.as_str()? {
+                "fleet" => true,
+                "replica" => false,
+                other => {
+                    return Err(anyhow!(
+                        "unknown stats scope '{other}' (expected \"replica\" or \"fleet\")"
+                    ))
+                }
+            },
+        };
         return Ok(WireRequest {
             id: j.get("id")?.as_u64()?,
             prompt: String::new(),
             max_new_tokens: 0,
             session_key: None,
             stats: true,
+            fleet,
+            metrics: false,
         });
     }
     let session_key = match j.opt("session_key") {
@@ -110,6 +153,8 @@ pub fn parse_request(line: &str) -> Result<WireRequest> {
             .unwrap_or(16),
         session_key,
         stats: false,
+        fleet: false,
+        metrics: false,
     })
 }
 
@@ -168,6 +213,24 @@ pub fn format_stats_response(id: u64, replica: usize, m: &EngineMetrics) -> Stri
     )
 }
 
+/// Format one fleet-scope stats response line (no trailing newline): the
+/// merged roll-up of `replicas` replica snapshots.
+pub fn format_fleet_stats_response(id: u64, replicas: usize, m: &EngineMetrics) -> String {
+    format!(
+        "{{\"id\": {id}, \"scope\": \"fleet\", \"replicas\": {replicas}, \"stats\": {}}}",
+        m.to_json()
+    )
+}
+
+/// Format one metrics response line (no trailing newline): a Prometheus
+/// text exposition JSON-escaped into the one-line wire protocol.
+pub fn format_metrics_response(id: u64, replica: usize, exposition: &str) -> String {
+    format!(
+        "{{\"id\": {id}, \"replica\": {replica}, \"metrics\": \"{}\"}}",
+        json_escape(exposition)
+    )
+}
+
 /// One line headed for a connection's writer thread. `counts` marks real
 /// responses (not error lines): the WRITER increments the served counter
 /// after pushing the bytes to the socket, so a bounded serve cannot
@@ -194,6 +257,14 @@ enum ReplicaJob {
         wire_id: u64,
         conn: mpsc::Sender<ConnLine>,
     },
+    /// A Prometheus text-exposition query, answered like `Stats`.
+    Metrics {
+        wire_id: u64,
+        conn: mpsc::Sender<ConnLine>,
+    },
+    /// A fleet roll-up probe: the worker sends its metrics snapshot to the
+    /// dispatcher's aggregator channel instead of the connection.
+    Snapshot { tx: mpsc::Sender<EngineMetrics> },
 }
 
 /// Aggregate result of one `serve` run.
@@ -203,6 +274,11 @@ pub struct ServeSummary {
     pub served: usize,
     /// Final metrics snapshot per replica, index-aligned with the engines.
     pub replicas: Vec<EngineMetrics>,
+    /// Final observability snapshot per replica (trace events, gauges,
+    /// stage timers), index-aligned with `replicas`. Empty snapshots when
+    /// tracing was off — feed them to
+    /// [`crate::obs::export::chrome_trace`] for `--trace-out`.
+    pub traces: Vec<ObsSnapshot>,
 }
 
 /// Bind `addr` and serve until `max_requests` have completed (0 = forever).
@@ -293,13 +369,52 @@ pub fn serve_on(
         }
         match ingest_rx.recv_timeout(IDLE_WAIT) {
             Ok((wire, conn)) => {
-                if wire.stats {
-                    // metrics query: route like a (keyless) request so
-                    // repeated queries sample the replicas
+                if wire.stats && wire.fleet {
+                    // fleet roll-up: probe EVERY replica, merge off-thread
+                    // so a slow replica never stalls the dispatcher
+                    let (snap_tx, snap_rx) = mpsc::channel::<EngineMetrics>();
+                    let mut alive = 0usize;
+                    for tx in &replica_txs {
+                        let probe = ReplicaJob::Snapshot {
+                            tx: snap_tx.clone(),
+                        };
+                        if tx.send(probe).is_ok() {
+                            alive += 1;
+                        }
+                    }
+                    drop(snap_tx);
+                    if alive == 0 {
+                        break; // all workers died; surface errors below
+                    }
+                    let wire_id = wire.id;
+                    std::thread::spawn(move || {
+                        // the channel closes once every probed worker has
+                        // answered (or died and dropped its sender)
+                        let mut merged = EngineMetrics::default();
+                        let mut n = 0usize;
+                        for m in snap_rx {
+                            merged.merge(&m);
+                            n += 1;
+                        }
+                        let line = format_fleet_stats_response(wire_id, n, &merged);
+                        let _ = conn.send(ConnLine { line, counts: false });
+                    });
+                    continue;
+                }
+                if wire.stats || wire.metrics {
+                    // single-replica query: route like a (keyless) request
+                    // so repeated queries sample the replicas
                     let replica = lock_router(&router).route(None);
-                    let job = ReplicaJob::Stats {
-                        wire_id: wire.id,
-                        conn,
+                    let job = if wire.stats {
+                        ReplicaJob::Stats {
+                            wire_id: wire.id,
+                            conn,
+                        }
+                    } else {
+                        ReplicaJob::Metrics {
+                            wire_id: wire.id,
+                            conn,
+                        }
                     };
                     if replica_txs[replica].send(job).is_err() {
                         break; // worker died; surface its error below
@@ -330,15 +445,18 @@ pub fn serve_on(
     let _ = acceptor.join(); // closes the listener, releasing the port
 
     let mut replicas = Vec::with_capacity(n_replicas);
+    let mut traces = Vec::with_capacity(n_replicas);
     for w in workers {
-        let metrics = w
+        let (metrics, obs) = w
             .join()
             .map_err(|_| anyhow!("replica worker panicked"))??;
         replicas.push(metrics);
+        traces.push(obs);
     }
     Ok(ServeSummary {
         served: served.load(Ordering::Relaxed),
         replicas,
+        traces,
     })
 }
 
@@ -352,10 +470,11 @@ fn replica_worker(
     rx: mpsc::Receiver<ReplicaJob>,
     router: Arc<Mutex<Router>>,
     served: Arc<AtomicUsize>,
-) -> Result<EngineMetrics> {
+) -> Result<(EngineMetrics, ObsSnapshot)> {
     let mut pending: HashMap<u64, (u64, mpsc::Sender<ConnLine>)> = HashMap::new();
-    // ingest one routed job: generation requests enter the engine; stats
-    // queries answer immediately from the metrics snapshot
+    // ingest one routed job: generation requests enter the engine; stats /
+    // metrics queries answer immediately from the engine's snapshots, and
+    // fleet probes answer to the dispatcher's aggregator channel
     fn take_job(
         job: ReplicaJob,
         idx: usize,
@@ -373,6 +492,23 @@ fn replica_worker(
                 // stats lines never count toward a bounded serve
                 let _ = conn.send(ConnLine { line, counts: false });
                 lock_router(router).complete(idx);
+            }
+            ReplicaJob::Metrics { wire_id, conn } => {
+                let text = export::prometheus(
+                    idx,
+                    &engine.metrics(),
+                    &engine.memory_stats(),
+                    engine.load(),
+                    &engine.obs_snapshot().stage,
+                );
+                let line = format_metrics_response(wire_id, idx, &text);
+                let _ = conn.send(ConnLine { line, counts: false });
+                lock_router(router).complete(idx);
+            }
+            ReplicaJob::Snapshot { tx } => {
+                // not router-dispatched: no complete(); the aggregator's
+                // channel closes once every probed replica has answered
+                let _ = tx.send(engine.metrics());
             }
         }
     }
@@ -422,7 +558,7 @@ fn replica_worker(
             }
         }
     }
-    Ok(engine.metrics())
+    Ok((engine.metrics(), engine.obs_snapshot()))
 }
 
 /// Connection handler: this thread reads and parses lines; a paired writer
@@ -498,6 +634,8 @@ mod tests {
                 max_new_tokens: 5,
                 session_key: None,
                 stats: false,
+                fleet: false,
+                metrics: false,
             }
         );
         // default max_new_tokens
@@ -511,6 +649,7 @@ mod tests {
     fn parses_stats_queries() {
         let r = parse_request(r#"{"id": 9, "stats": true}"#).unwrap();
         assert!(r.stats);
+        assert!(!r.fleet);
         assert_eq!(r.id, 9);
         // stats: false (or any non-true value) is an ordinary request
         assert!(parse_request(r#"{"id": 1, "stats": false}"#).is_err(), "needs a prompt");
@@ -518,6 +657,58 @@ mod tests {
         assert!(!r.stats);
         // a stats query still needs an id to echo
         assert!(parse_request(r#"{"stats": true}"#).is_err());
+    }
+
+    #[test]
+    fn parses_fleet_and_metrics_queries() {
+        let r = parse_request(r#"{"id": 4, "stats": true, "scope": "fleet"}"#).unwrap();
+        assert!(r.stats && r.fleet);
+        let r = parse_request(r#"{"id": 4, "stats": true, "scope": "replica"}"#).unwrap();
+        assert!(r.stats && !r.fleet);
+        // unknown scopes fail loudly instead of silently picking a replica
+        assert!(parse_request(r#"{"id": 4, "stats": true, "scope": "galaxy"}"#).is_err());
+        let r = parse_request(r#"{"id": 6, "metrics": true}"#).unwrap();
+        assert!(r.metrics && !r.stats);
+        assert!(parse_request(r#"{"metrics": true}"#).is_err(), "needs an id");
+    }
+
+    #[test]
+    fn formats_fleet_stats_responses() {
+        let mut a = EngineMetrics::default();
+        a.requests_finished = 2;
+        a.itl.record(std::time::Duration::from_micros(80));
+        let mut b = EngineMetrics::default();
+        b.requests_finished = 3;
+        b.itl.record(std::time::Duration::from_micros(40));
+        let mut merged = EngineMetrics::default();
+        merged.merge(&a);
+        merged.merge(&b);
+        let line = format_fleet_stats_response(11, 2, &merged);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("id").unwrap().as_u64().unwrap(), 11);
+        assert_eq!(j.get("scope").unwrap().as_str().unwrap(), "fleet");
+        assert_eq!(j.get("replicas").unwrap().as_usize().unwrap(), 2);
+        let stats = j.get("stats").unwrap();
+        assert_eq!(stats.get("requests_finished").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(stats.get("itl").unwrap().get("count").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn formats_metrics_responses() {
+        let mut m = EngineMetrics::default();
+        m.tokens_generated = 9;
+        let text = export::prometheus(
+            0,
+            &m,
+            &crate::coordinator::MemoryStats::default(),
+            0,
+            &crate::obs::StageStats::default(),
+        );
+        let line = format_metrics_response(8, 0, &text);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("id").unwrap().as_u64().unwrap(), 8);
+        let body = j.get("metrics").unwrap().as_str().unwrap().to_string();
+        assert!(body.contains("turboangle_tokens_generated_total{replica=\"0\"} 9"));
     }
 
     #[test]

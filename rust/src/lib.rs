@@ -48,6 +48,7 @@
 pub mod coordinator;
 #[allow(missing_docs)]
 pub mod eval;
+pub mod obs;
 pub mod quant;
 #[allow(missing_docs)]
 pub mod report;

@@ -6,8 +6,11 @@
 //! quantizer against python golden vectors AND the AOT kernel artifacts.
 
 use anyhow::{bail, Result};
-use turboangle::coordinator::{Engine, EngineConfig, EngineCore, ReadPath, RoutePolicy};
+use turboangle::coordinator::{
+    Engine, EngineConfig, EngineCore, EngineMetrics, ReadPath, RoutePolicy,
+};
 use turboangle::eval::{search, sensitivity, sweep, PplHarness};
+use turboangle::obs::{export, ObsSnapshot};
 use turboangle::quant::{angle, fwht, norm, spec, NormMode, QuantConfig, QuantSpec};
 use turboangle::report;
 use turboangle::runtime::{
@@ -83,6 +86,13 @@ SERVE FLAGS (turboangle serve ...)
   --chunk-tokens N        tokens per prefill chunk per tick (default: 16, >= 1)
   --tick-token-budget N   per-tick token budget: decode lanes cost 1 each, the
                           rest goes to prefill chunks (default: 64, >= 1)
+  --trace M               on|off (default: off) — record request-lifecycle
+                          spans + sampled gauges (docs/OBSERVABILITY.md);
+                          token streams are bit-identical either way
+  --trace-out FILE        write a Chrome trace-event JSON file at exit
+                          (chrome://tracing, Perfetto); implies --trace on
+  --sample-every N        tick stride between gauge/stage samples
+                          (default: 32, >= 1; 1 = every tick)
 
 LISTEN FLAGS (turboangle listen ...)
   --addr A                bind address (default: 127.0.0.1:7777)
@@ -101,15 +111,24 @@ LISTEN FLAGS (turboangle listen ...)
                           backend (--sim) — rejected on the PJRT executor
   --chunk-tokens N        tokens per prefill chunk per tick (default: 16, >= 1)
   --tick-token-budget N   per-tick token budget (default: 64, >= 1)
+  --trace M               on|off (default: off) — per-replica span rings +
+                          sampled gauges (docs/OBSERVABILITY.md)
+  --trace-out FILE        merged Chrome trace across all replicas at exit
+                          (one pid per replica); implies --trace on
+  --sample-every N        tick stride between gauge/stage samples
+                          (default: 32, >= 1)
 
   wire protocol: one JSON object per line —
     {\"id\": 1, \"prompt\": \"...\", \"max_new_tokens\": 8, \"session_key\": \"u1\"}
     {\"id\": 2, \"stats\": true}   -> one replica's latency/counter snapshot
+    {\"id\": 3, \"stats\": true, \"scope\": \"fleet\"}
+                                -> histogram-merged view across all replicas
+    {\"id\": 4, \"metrics\": true} -> Prometheus text exposition (one replica)
 
 BENCH ENTRY POINTS (cargo bench --bench <name> [-- --smoke])
   quant_hot_path | serving_throughput | fused_attention | prefix_caching |
-  serving_latency | quality_sweep — each writes BENCH_<name>.json; every
-  field is documented in docs/BENCH_GLOSSARY.md
+  serving_latency | quality_sweep | obs_overhead — each writes
+  BENCH_<name>.json; every field is documented in docs/BENCH_GLOSSARY.md
 ";
 
 fn parse_route_policy(s: &str) -> Result<RoutePolicy> {
@@ -136,6 +155,24 @@ fn parse_on_off(flag: &str, s: &str) -> Result<bool> {
         "off" => false,
         other => bail!("--{flag} takes on|off (got '{other}')"),
     })
+}
+
+/// Parse the tracing flags shared by `serve` and `listen`: `--trace
+/// on|off`, `--trace-out FILE` (implies `--trace on`), and
+/// `--sample-every N` (tick stride between gauge/stage samples).
+fn parse_trace_flags(args: &Args) -> Result<(bool, Option<String>, usize)> {
+    let trace_out = args.flag("trace-out").map(String::from);
+    let trace =
+        parse_on_off("trace", &args.get_str("trace", "off"))? || trace_out.is_some();
+    let sample_every = args.get_usize("sample-every", 32)?;
+    if sample_every == 0 {
+        bail!(
+            "--sample-every must be >= 1 (got 0): it is the tick stride between \
+             gauge/stage samples — use 1 to sample every tick, or larger values \
+             to cut overhead"
+        );
+    }
+    Ok((trace, trace_out, sample_every))
 }
 
 /// Reject `--chunked-prefill on` on a backend without native chunk
@@ -291,11 +328,15 @@ fn main() -> Result<()> {
                 "chunked-prefill",
                 "chunk-tokens",
                 "tick-token-budget",
+                "trace",
+                "trace-out",
+                "sample-every",
             ];
             known.extend_from_slice(spec::FLAGS);
             args.check_known(&known)?;
             let quant_spec = QuantSpec::from_args(&args, "k8v4log")?;
             let (chunked, chunk_tokens, tick_budget) = parse_chunk_flags(&args)?;
+            let (trace, trace_out, sample_every) = parse_trace_flags(&args)?;
             let read_path = parse_read_path(&args.get_str("read-path", "auto"))?;
             let prefix_cache = parse_on_off("prefix-cache", &args.get_str("prefix-cache", "on"))?;
             let requests = args.get_usize("requests", 12)?;
@@ -307,12 +348,15 @@ fn main() -> Result<()> {
                 cfg.chunked_prefill = chunked;
                 cfg.chunk_tokens = chunk_tokens;
                 cfg.tick_token_budget = tick_budget;
+                cfg.trace = trace;
+                cfg.sample_every = sample_every;
                 cfg
             };
+            let trace_out = trace_out.as_deref();
             if args.get_bool("sim") {
                 let sim = sim_exec(args.get_usize("sim-layers", 8)?);
                 let l = ModelBackend::profile(&sim).n_layers;
-                run_serve("sim", sim, mk_cfg(quant_spec.build(l)?), requests, gen_max)?;
+                run_serve("sim", sim, mk_cfg(quant_spec.build(l)?), requests, gen_max, trace_out)?;
             } else {
                 if read_path == ReadPath::Fused {
                     bail!(
@@ -327,7 +371,7 @@ fn main() -> Result<()> {
                 let exec = ModelExecutor::load(&rt, &manifest, &model, Entry::Serve)?;
                 ensure_chunked_support(&exec, chunked)?;
                 let quant = quant_spec.build(exec.profile.n_layers)?;
-                run_serve(&model, exec, mk_cfg(quant), requests, gen_max)?;
+                run_serve(&model, exec, mk_cfg(quant), requests, gen_max, trace_out)?;
             }
         }
         "seed-sweep" => {
@@ -388,6 +432,9 @@ fn main() -> Result<()> {
                 "chunked-prefill",
                 "chunk-tokens",
                 "tick-token-budget",
+                "trace",
+                "trace-out",
+                "sample-every",
             ];
             known.extend_from_slice(spec::FLAGS);
             args.check_known(&known)?;
@@ -403,6 +450,7 @@ fn main() -> Result<()> {
             let read_path = parse_read_path(&args.get_str("read-path", "auto"))?;
             let prefix_cache = parse_on_off("prefix-cache", &args.get_str("prefix-cache", "on"))?;
             let (chunked, chunk_tokens, tick_budget) = parse_chunk_flags(&args)?;
+            let (trace, trace_out, sample_every) = parse_trace_flags(&args)?;
             if read_path == ReadPath::Fused && !args.get_bool("sim") {
                 // fail with a flag error, not an assert mid-construction:
                 // the PJRT executor consumes dense HLO inputs only
@@ -415,6 +463,8 @@ fn main() -> Result<()> {
                 cfg.chunked_prefill = chunked;
                 cfg.chunk_tokens = chunk_tokens;
                 cfg.tick_token_budget = tick_budget;
+                cfg.trace = trace;
+                cfg.sample_every = sample_every;
                 Ok(cfg)
             };
             let mut engines: Vec<Box<dyn EngineCore>> = Vec::with_capacity(replicas);
@@ -440,6 +490,17 @@ fn main() -> Result<()> {
             println!("served {} requests across {replicas} replicas", summary.served);
             for (i, m) in summary.replicas.iter().enumerate() {
                 println!("-- replica {i} --\n{}", m.report());
+            }
+            if replicas > 1 {
+                let mut fleet = EngineMetrics::default();
+                for m in &summary.replicas {
+                    fleet.merge(m);
+                }
+                println!("-- fleet (histogram-merged across {replicas} replicas) --");
+                println!("{}", fleet.report());
+            }
+            if let Some(path) = &trace_out {
+                write_trace(path, &summary.traces)?;
             }
         }
         "selfcheck" => selfcheck(&artifacts)?,
@@ -561,6 +622,7 @@ fn run_serve<B: ModelBackend>(
     cfg: EngineConfig,
     requests: usize,
     gen_max: usize,
+    trace_out: Option<&str>,
 ) -> Result<()> {
     let mut engine = Engine::new(exec, cfg);
     let spec = WorkloadSpec {
@@ -597,6 +659,24 @@ fn run_serve<B: ModelBackend>(
             .collect();
         println!("  req {} ({} prompt tok) -> {:?}", s.request.id, s.prompt_len, text);
     }
+    if let Some(path) = trace_out {
+        write_trace(path, &[engine.obs_snapshot()])?;
+    }
+    Ok(())
+}
+
+/// Write the merged Chrome trace for one or more replica snapshots and
+/// print a one-line summary (span/gauge counts, ring drops).
+fn write_trace(path: &str, traces: &[ObsSnapshot]) -> Result<()> {
+    let events: usize = traces.iter().map(|t| t.events.len()).sum();
+    let gauges: usize = traces.iter().map(|t| t.gauges.len()).sum();
+    let dropped: u64 = traces.iter().map(|t| t.dropped_events).sum();
+    std::fs::write(path, export::chrome_trace(traces))?;
+    println!(
+        "trace: {events} spans + {gauges} gauge samples from {} replica(s) -> {path} \
+         ({dropped} ring-dropped)",
+        traces.len()
+    );
     Ok(())
 }
 

@@ -1,0 +1,292 @@
+//! Trace exporters: Chrome trace-event JSON (Perfetto-loadable) and a
+//! Prometheus-style text exposition.
+//!
+//! Both are hand-rolled string builders (the repo has no serde): the
+//! Chrome format is the `{"traceEvents":[...]}` array-of-objects schema
+//! with `"ph":"X"` complete spans (pid = replica, tid = request id) and
+//! `"ph":"C"` counter tracks for the sampled gauges; the Prometheus
+//! format is the plain `# TYPE`/`name{labels} value` text exposition,
+//! shipped over the line-oriented wire protocol as a JSON-escaped string
+//! (`{"id":N,"metrics":true}` → `{"id":N,"replica":i,"metrics":"..."}`).
+//! Field-by-field schema docs live in `docs/OBSERVABILITY.md`.
+
+use super::{ObsSnapshot, StageStats};
+use crate::coordinator::{EngineMetrics, MemoryStats};
+use std::fmt::Write as _;
+
+/// Render per-replica observability snapshots as one Chrome trace-event
+/// JSON document. Load the result in Perfetto / `chrome://tracing`:
+/// each replica is a process, each request id a track, and the gauges
+/// appear as counter tracks on the same microsecond timeline.
+pub fn chrome_trace(replicas: &[ObsSnapshot]) -> String {
+    let mut out = String::from("{\"displayTimeUnit\": \"ms\", \"traceEvents\": [");
+    let mut first = true;
+    for (pid, snap) in replicas.iter().enumerate() {
+        for ev in &snap.events {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            let _ = write!(
+                out,
+                "\n{{\"name\": \"{}\", \"cat\": \"request\", \"ph\": \"X\", \
+                 \"ts\": {}, \"dur\": {}, \"pid\": {}, \"tid\": {}, \
+                 \"args\": {{\"tick\": {}, \"arg\": {}}}}}",
+                ev.kind.name(),
+                ev.at_us,
+                ev.dur_us,
+                pid,
+                ev.request_id,
+                ev.tick,
+                ev.arg,
+            );
+        }
+        for g in &snap.gauges {
+            for (name, body) in [
+                (
+                    "pool_pages",
+                    format!(
+                        "\"used\": {}, \"reserved\": {}, \"capacity\": {}",
+                        g.pages_used, g.pages_reserved, g.pages_capacity
+                    ),
+                ),
+                (
+                    "shared_store",
+                    format!("\"pages\": {}, \"refs\": {}", g.shared_pages, g.shared_refs),
+                ),
+                ("swap_pool", format!("\"bytes\": {}", g.swap_bytes)),
+                ("queue_depth", format!("\"requests\": {}", g.queue_depth)),
+            ] {
+                if !first {
+                    out.push(',');
+                }
+                first = false;
+                let _ = write!(
+                    out,
+                    "\n{{\"name\": \"{name}\", \"ph\": \"C\", \"ts\": {}, \
+                     \"pid\": {pid}, \"args\": {{{body}}}}}",
+                    g.at_us,
+                );
+            }
+            if !g.layer_bits_per_element.is_empty() {
+                if !first {
+                    out.push(',');
+                }
+                first = false;
+                let mut body = String::new();
+                for (l, bpe) in g.layer_bits_per_element.iter().enumerate() {
+                    if l > 0 {
+                        body.push_str(", ");
+                    }
+                    let _ = write!(body, "\"L{l}\": {bpe:.4}");
+                }
+                let _ = write!(
+                    out,
+                    "\n{{\"name\": \"bits_per_element\", \"ph\": \"C\", \
+                     \"ts\": {}, \"pid\": {pid}, \"args\": {{{body}}}}}",
+                    g.at_us,
+                );
+            }
+        }
+    }
+    let total_dropped: u64 = replicas.iter().map(|s| s.dropped_events).sum();
+    let _ = write!(
+        out,
+        "\n], \"otherData\": {{\"dropped_events\": {total_dropped}, \"replicas\": {}}}}}",
+        replicas.len()
+    );
+    out
+}
+
+/// Escape a string for embedding inside a JSON string literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 8);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render one replica's metrics as Prometheus text exposition (the body
+/// of the `{"id":N,"metrics":true}` wire response). Counters are
+/// `_total`-suffixed, histograms expose `quantile`-labelled gauges plus
+/// `_count`/`_sum_us`, and the fused-path stage timers appear as
+/// `turboangle_stage_ns_total{stage=...}`.
+pub fn prometheus(
+    replica: usize,
+    m: &EngineMetrics,
+    mem: &MemoryStats,
+    queue_depth: usize,
+    stage: &StageStats,
+) -> String {
+    let r = replica;
+    let mut o = String::with_capacity(4096);
+    let mut counter = |o: &mut String, name: &str, help: &str, v: u64| {
+        let _ = write!(
+            o,
+            "# HELP turboangle_{name} {help}\n# TYPE turboangle_{name} counter\nturboangle_{name}{{replica=\"{r}\"}} {v}\n",
+        );
+    };
+    counter(&mut o, "requests_submitted_total", "Requests handed to submit.", m.requests_submitted);
+    counter(&mut o, "requests_finished_total", "Sessions retired.", m.requests_finished);
+    counter(&mut o, "tokens_generated_total", "Decode tokens produced.", m.tokens_generated);
+    counter(&mut o, "prefill_chunks_total", "Chunked-prefill slices run.", m.prefill_chunks);
+    counter(&mut o, "decode_steps_total", "Decode steps executed.", m.decode_steps);
+    counter(&mut o, "preemptions_total", "Sessions swapped out under pressure.", m.preemptions);
+    counter(&mut o, "swap_ins_total", "Preempted sessions restored.", m.swap_ins);
+    counter(&mut o, "rejected_cache_full_total", "Requests rejected as unfittable.", m.rejected_cache_full);
+    counter(&mut o, "prefix_hits_total", "Admissions that adopted shared prefix pages.", m.prefix_hits);
+    counter(&mut o, "prefix_misses_total", "Admissions with no cached prefix.", m.prefix_misses);
+
+    for (name, help, h) in [
+        ("ttft_us", "Time to first token.", &m.ttft),
+        ("itl_us", "Inter-token latency.", &m.itl),
+        ("e2e_us", "Request end-to-end latency.", &m.e2e),
+        ("decode_step_us", "Per decode step latency.", &m.decode_step_latency),
+    ] {
+        let _ = write!(o, "# HELP turboangle_{name} {help}\n# TYPE turboangle_{name} summary\n");
+        for (q, d) in [(0.5, h.quantile(0.5)), (0.95, h.quantile(0.95)), (0.99, h.quantile(0.99))] {
+            let _ = write!(
+                o,
+                "turboangle_{name}{{replica=\"{r}\",quantile=\"{q}\"}} {}\n",
+                d.as_micros()
+            );
+        }
+        let _ = write!(o, "turboangle_{name}_count{{replica=\"{r}\"}} {}\n", h.count());
+        let _ = write!(o, "turboangle_{name}_sum{{replica=\"{r}\"}} {}\n", h.sum_us());
+    }
+
+    let mut gauge = |o: &mut String, name: &str, help: &str, v: u64| {
+        let _ = write!(
+            o,
+            "# HELP turboangle_{name} {help}\n# TYPE turboangle_{name} gauge\nturboangle_{name}{{replica=\"{r}\"}} {v}\n",
+        );
+    };
+    gauge(&mut o, "pool_pages_used", "Pool pages physically held.", mem.pages_allocated as u64);
+    gauge(&mut o, "pool_pages_reserved", "Pool pages promised at admission.", mem.pages_reserved as u64);
+    gauge(&mut o, "pool_pages_capacity", "Pool capacity in pages.", mem.pages_capacity as u64);
+    gauge(&mut o, "shared_pages", "Shared prefix-store pages.", mem.shared_pages as u64);
+    gauge(&mut o, "shared_refs", "References onto shared pages.", mem.shared_refs as u64);
+    gauge(&mut o, "swap_bytes", "Swapped compressed stream bytes.", mem.swapped_bytes as u64);
+    gauge(&mut o, "queue_depth", "Requests queued, seated, or preempted.", queue_depth as u64);
+
+    let _ = write!(
+        o,
+        "# HELP turboangle_stage_ns_total Fused read-path time on sampled ticks.\n\
+         # TYPE turboangle_stage_ns_total counter\n"
+    );
+    for (s, ns) in [
+        ("unpack", stage.unpack_ns),
+        ("gather", stage.gather_ns),
+        ("score", stage.score_ns),
+    ] {
+        let _ = write!(o, "turboangle_stage_ns_total{{replica=\"{r}\",stage=\"{s}\"}} {ns}\n");
+    }
+    let _ = write!(
+        o,
+        "# HELP turboangle_stage_sampled_ticks Ticks that contributed stage samples.\n\
+         # TYPE turboangle_stage_sampled_ticks counter\n\
+         turboangle_stage_sampled_ticks{{replica=\"{r}\"}} {}\n",
+        stage.sampled_ticks
+    );
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{EventKind, GaugeSample, TraceEvent};
+    use crate::util::json::Json;
+
+    fn snap() -> ObsSnapshot {
+        ObsSnapshot {
+            events: vec![
+                TraceEvent {
+                    kind: EventKind::Queued,
+                    request_id: 1,
+                    tick: 0,
+                    at_us: 10,
+                    dur_us: 0,
+                    arg: 4,
+                },
+                TraceEvent {
+                    kind: EventKind::Finish,
+                    request_id: 1,
+                    tick: 9,
+                    at_us: 10,
+                    dur_us: 900,
+                    arg: 6,
+                },
+            ],
+            gauges: vec![GaugeSample {
+                tick: 8,
+                at_us: 500,
+                pages_used: 3,
+                pages_reserved: 4,
+                pages_capacity: 64,
+                layer_bits_per_element: vec![2.25, 4.5],
+                ..Default::default()
+            }],
+            dropped_events: 0,
+            stage: StageStats::default(),
+        }
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_spans_and_counters() {
+        let doc = chrome_trace(&[snap(), ObsSnapshot::default()]);
+        let j = Json::parse(&doc).expect("exported trace must parse");
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        let spans: Vec<_> = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "X")
+            .collect();
+        assert_eq!(spans.len(), 2);
+        assert!(spans.iter().any(|e| e.get("name").unwrap().as_str().unwrap() == "finish"
+            && e.get("dur").unwrap().as_u64().unwrap() == 900));
+        let counters: Vec<_> = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "C")
+            .collect();
+        assert_eq!(counters.len(), 5, "4 fixed tracks + per-layer bpe");
+        assert!(counters
+            .iter()
+            .any(|e| e.get("name").unwrap().as_str().unwrap() == "bits_per_element"));
+    }
+
+    #[test]
+    fn json_escape_handles_quotes_and_newlines() {
+        let escaped = json_escape("a\"b\\c\nd");
+        let wrapped = format!("{{\"s\": \"{escaped}\"}}");
+        let j = Json::parse(&wrapped).unwrap();
+        assert_eq!(j.get("s").unwrap().as_str().unwrap(), "a\"b\\c\nd");
+    }
+
+    #[test]
+    fn prometheus_exposition_has_counters_gauges_and_quantiles() {
+        let mut m = EngineMetrics::default();
+        m.requests_finished = 2;
+        m.ttft.record(std::time::Duration::from_micros(150));
+        let mem = MemoryStats { pages_allocated: 7, ..Default::default() };
+        let stage = StageStats { unpack_ns: 10, gather_ns: 20, score_ns: 30, sampled_ticks: 1 };
+        let text = prometheus(1, &m, &mem, 3, &stage);
+        assert!(text.contains("turboangle_requests_finished_total{replica=\"1\"} 2"));
+        assert!(text.contains("turboangle_ttft_us{replica=\"1\",quantile=\"0.5\"} 150"));
+        assert!(text.contains("turboangle_pool_pages_used{replica=\"1\"} 7"));
+        assert!(text.contains("turboangle_stage_ns_total{replica=\"1\",stage=\"gather\"} 20"));
+        // every non-comment line is `name{labels} value`
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert!(line.contains("{replica=\"1\""), "bad exposition line: {line}");
+        }
+    }
+}

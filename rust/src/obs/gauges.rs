@@ -1,0 +1,109 @@
+//! Tick-sampled gauge series: pool occupancy, shared-store pressure,
+//! swap-pool size, queue depth, and per-layer achieved bits-per-element.
+//!
+//! The engine samples one [`GaugeSample`] every `--sample-every` ticks
+//! (stride 1 = every tick) into a bounded [`GaugeSeries`]; exporters turn
+//! the series into Chrome trace counter tracks so occupancy lines up with
+//! request spans on the same timeline.
+
+/// One sampled snapshot of replica-level gauges at a given tick.
+#[derive(Clone, Debug, Default)]
+pub struct GaugeSample {
+    /// Engine tick at which the sample was taken.
+    pub tick: u64,
+    /// Microseconds since the replica's trace epoch (shared clock with
+    /// [`crate::obs::TraceEvent::at_us`]).
+    pub at_us: u64,
+    /// Pool pages physically held (private + shared).
+    pub pages_used: u64,
+    /// Pool pages promised at admission (>= used).
+    pub pages_reserved: u64,
+    /// Pool capacity in pages (constant, kept per-sample so exported
+    /// traces are self-describing).
+    pub pages_capacity: u64,
+    /// Immutable pages in the content-addressed shared prefix store.
+    pub shared_pages: u64,
+    /// Total sequence references onto shared pages.
+    pub shared_refs: u64,
+    /// Heap bytes of swapped-out compressed streams.
+    pub swap_bytes: u64,
+    /// Requests waiting or running: queued + seated + preempted.
+    pub queue_depth: u64,
+    /// Achieved total (angle + norm) bits per original fp16 element, per
+    /// layer, across resident + shared + swapped streams. Empty when the
+    /// cache is empty.
+    pub layer_bits_per_element: Vec<f64>,
+}
+
+/// Bounded FIFO of gauge samples. When full, the oldest sample is
+/// discarded and the drop counter advances.
+#[derive(Clone, Debug)]
+pub struct GaugeSeries {
+    samples: std::collections::VecDeque<GaugeSample>,
+    capacity: usize,
+    dropped: u64,
+}
+
+impl GaugeSeries {
+    /// Series bounded at `capacity` samples (min 1).
+    pub fn new(capacity: usize) -> GaugeSeries {
+        let capacity = capacity.max(1);
+        GaugeSeries {
+            samples: std::collections::VecDeque::with_capacity(capacity),
+            capacity,
+            dropped: 0,
+        }
+    }
+
+    /// Append one sample, discarding the oldest when full.
+    pub fn push(&mut self, s: GaugeSample) {
+        if self.samples.len() == self.capacity {
+            self.samples.pop_front();
+            self.dropped += 1;
+        }
+        self.samples.push_back(s);
+    }
+
+    /// Number of samples currently held.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True when no samples have been taken.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Samples discarded because the series was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Copy the held samples out, oldest first.
+    pub fn snapshot(&self) -> Vec<GaugeSample> {
+        self.samples.iter().cloned().collect()
+    }
+}
+
+impl Default for GaugeSeries {
+    fn default() -> GaugeSeries {
+        GaugeSeries::new(4096)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_bounds_and_drops_oldest() {
+        let mut s = GaugeSeries::new(3);
+        for tick in 0..5u64 {
+            s.push(GaugeSample { tick, ..Default::default() });
+        }
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.dropped(), 2);
+        let ticks: Vec<u64> = s.snapshot().iter().map(|g| g.tick).collect();
+        assert_eq!(ticks, vec![2, 3, 4]);
+    }
+}

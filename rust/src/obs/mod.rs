@@ -1,0 +1,44 @@
+//! Observability: request-lifecycle tracing, sampled gauges, fused-path
+//! stage timers, and exporters.
+//!
+//! The serving counters in [`crate::coordinator::EngineMetrics`] answer
+//! "how much"; this module answers "when and why". Each replica engine
+//! owns a [`Recorder`] — a bounded, allocation-free-on-the-hot-path trace
+//! ring of [`TraceEvent`]s with span semantics (queued → admitted /
+//! rejected → prefill-chunk×N → first-token → decode-step×N → preempt /
+//! swap-in → prefix-adopt → finish) — plus a tick-sampled [`GaugeSeries`]
+//! (pool pages, shared-store pressure, swap bytes, queue depth, per-layer
+//! achieved bits-per-element) and thread-local [`stage`] timers over the
+//! fused read path (unpack / trig-gather / score).
+//!
+//! Everything drains through [`ObsSnapshot`] (`EngineCore::obs_snapshot`)
+//! into two exporters in [`export`]: Chrome trace-event JSON
+//! (`--trace-out FILE`, Perfetto-loadable) and Prometheus text exposition
+//! (wire query `{"id":N,"metrics":true}`). Tracing is off by default and
+//! costs one branch per record site; `--sample-every N` sets the gauge /
+//! stage sampling stride. Schema and overhead model:
+//! `docs/OBSERVABILITY.md`; overhead numbers: `BENCH_obs_overhead.json`.
+
+pub mod export;
+pub mod gauges;
+pub mod stage;
+pub mod trace;
+
+pub use gauges::{GaugeSample, GaugeSeries};
+pub use stage::{Stage, StageStats};
+pub use trace::{EventKind, Recorder, TraceEvent, TraceRing};
+
+/// Everything one replica has observed: drained trace events, the gauge
+/// series, the ring's drop counter, and accumulated stage timers. This is
+/// what `EngineCore::obs_snapshot` returns and what the exporters consume.
+#[derive(Clone, Debug, Default)]
+pub struct ObsSnapshot {
+    /// Trace events in recording order (oldest first).
+    pub events: Vec<TraceEvent>,
+    /// Sampled gauge series, oldest first.
+    pub gauges: Vec<GaugeSample>,
+    /// Events lost to ring wrap-around (0 = the trace is complete).
+    pub dropped_events: u64,
+    /// Fused read-path stage timers accumulated over sampled ticks.
+    pub stage: StageStats,
+}

@@ -1,0 +1,151 @@
+//! Thread-local per-stage timing for the fused decode read path.
+//!
+//! The fused path's identity-critical files (`runtime/sim.rs`,
+//! `coordinator/kv_manager.rs` decode helpers) ban the `Instant`
+//! identifier outright via `cargo xtask analyze`, so they cannot read a
+//! clock themselves. Instead they wrap their stages in [`time`], and the
+//! clock read lives here — in one audited module — behind a thread-local
+//! enable flag. When timing is disabled (the default, and every
+//! non-sampled tick), [`time`] is one thread-local branch around the
+//! closure; the engine flips the flag on only for ticks selected by the
+//! `--sample-every` stride.
+//!
+//! Thread-locality is safe because the fused read path runs on the single
+//! engine thread of each replica (the rayon-parallel dense fill paths are
+//! deliberately not instrumented).
+
+use std::cell::Cell;
+use std::time::Instant;
+
+/// The three stages of the fused dequant-attend read path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Code/norm unpacking: `decode_side_range` over packed tiles.
+    Unpack,
+    /// Trig-table gather (`gather_trig`) feeding the polar reconstruction.
+    Gather,
+    /// Score accumulation: polar terms, fold, and row reduction.
+    Score,
+}
+
+/// Accumulated per-stage wall time, plus how many engine ticks
+/// contributed samples. Nanosecond sums so short stages don't vanish.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageStats {
+    /// Total nanoseconds spent unpacking codes/norms on sampled ticks.
+    pub unpack_ns: u64,
+    /// Total nanoseconds in trig-table gathers on sampled ticks.
+    pub gather_ns: u64,
+    /// Total nanoseconds in score accumulation on sampled ticks.
+    pub score_ns: u64,
+    /// Number of sampled ticks that contributed to the sums.
+    pub sampled_ticks: u64,
+}
+
+impl StageStats {
+    /// Fold one sampled tick's counters in (adds the sums, counts the
+    /// tick).
+    pub fn add_sample(&mut self, s: StageStats) {
+        self.unpack_ns += s.unpack_ns;
+        self.gather_ns += s.gather_ns;
+        self.score_ns += s.score_ns;
+        self.sampled_ticks += 1;
+    }
+
+    /// Fleet roll-up: add another replica's accumulated stats wholesale.
+    pub fn merge(&mut self, o: &StageStats) {
+        self.unpack_ns += o.unpack_ns;
+        self.gather_ns += o.gather_ns;
+        self.score_ns += o.score_ns;
+        self.sampled_ticks += o.sampled_ticks;
+    }
+}
+
+thread_local! {
+    static ENABLED: Cell<bool> = const { Cell::new(false) };
+    static UNPACK_NS: Cell<u64> = const { Cell::new(0) };
+    static GATHER_NS: Cell<u64> = const { Cell::new(0) };
+    static SCORE_NS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Turn stage timing on/off for the current thread. The engine enables
+/// it only for sampled ticks, so untimed ticks pay one branch per stage.
+pub fn set_enabled(on: bool) {
+    ENABLED.with(|e| e.set(on));
+}
+
+/// Whether stage timing is currently enabled on this thread.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.with(|e| e.get())
+}
+
+/// Run `f`, attributing its wall time to `stage` when timing is enabled.
+/// Disabled: one thread-local branch, then the closure runs untouched.
+#[inline]
+pub fn time<R>(stage: Stage, f: impl FnOnce() -> R) -> R {
+    if !enabled() {
+        return f();
+    }
+    let t0 = Instant::now();
+    let r = f();
+    let ns = t0.elapsed().as_nanos() as u64;
+    let cell = match stage {
+        Stage::Unpack => &UNPACK_NS,
+        Stage::Gather => &GATHER_NS,
+        Stage::Score => &SCORE_NS,
+    };
+    cell.with(|c| c.set(c.get() + ns));
+    r
+}
+
+/// Drain the current thread's counters, resetting them to zero. Returns
+/// sums with `sampled_ticks = 0`; callers fold via
+/// [`StageStats::add_sample`] which counts the tick.
+pub fn take() -> StageStats {
+    StageStats {
+        unpack_ns: UNPACK_NS.with(|c| c.replace(0)),
+        gather_ns: GATHER_NS.with(|c| c.replace(0)),
+        score_ns: SCORE_NS.with(|c| c.replace(0)),
+        sampled_ticks: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_timing_records_nothing() {
+        set_enabled(false);
+        let v = time(Stage::Gather, || 41 + 1);
+        assert_eq!(v, 42);
+        assert_eq!(take(), StageStats::default());
+    }
+
+    #[test]
+    fn enabled_timing_attributes_to_the_right_stage() {
+        set_enabled(true);
+        let _ = take(); // reset any prior state on this test thread
+        time(Stage::Unpack, || std::thread::sleep(std::time::Duration::from_micros(200)));
+        time(Stage::Score, || std::thread::sleep(std::time::Duration::from_micros(200)));
+        set_enabled(false);
+        let s = take();
+        assert!(s.unpack_ns > 0 && s.score_ns > 0);
+        assert_eq!(s.gather_ns, 0);
+        // take() drained the counters
+        assert_eq!(take(), StageStats::default());
+    }
+
+    #[test]
+    fn add_sample_counts_ticks_and_merge_adds_them() {
+        let mut a = StageStats::default();
+        a.add_sample(StageStats { unpack_ns: 5, gather_ns: 1, score_ns: 2, sampled_ticks: 0 });
+        a.add_sample(StageStats { unpack_ns: 5, gather_ns: 1, score_ns: 2, sampled_ticks: 0 });
+        assert_eq!(a.sampled_ticks, 2);
+        let mut b = a;
+        b.merge(&a);
+        assert_eq!(b.unpack_ns, 20);
+        assert_eq!(b.sampled_ticks, 4);
+    }
+}

@@ -1,0 +1,288 @@
+//! Bounded request-lifecycle trace ring.
+//!
+//! Every replica owns one [`Recorder`]: a preallocated ring of
+//! [`TraceEvent`]s plus a monotonic epoch. Recording is designed for the
+//! serving hot path — when tracing is disabled it is a single branch, and
+//! when enabled a `push` is one clock read plus an indexed store into the
+//! preallocated ring (no allocation, ever). When the ring wraps, the
+//! oldest events are overwritten and a drop counter advances so exporters
+//! can report truncation instead of silently lying.
+//!
+//! The recording functions (`TraceRing::push`, `Recorder::record`,
+//! `Recorder::record_span`) are covered by the `no-alloc-in-hot-path` and
+//! `no-nondeterminism-in-identity-paths` lints in `cargo xtask analyze`:
+//! they must stay allocation-free and their clock reads must never feed
+//! content hashes or scoring state.
+
+use std::time::{Duration, Instant};
+
+/// What happened to a request. One variant per lifecycle edge from the
+/// span diagram in `docs/OBSERVABILITY.md`:
+/// queued → admitted/rejected → prefill-chunk×N → first-token →
+/// decode-step×N (interleaved with preempt/swap-in) → finish.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Request entered the waiting queue (`arg` = prompt tokens).
+    Queued,
+    /// Request was seated in a decode slot (`arg` = expected cache tokens).
+    Admitted,
+    /// Request was rejected because the pool cannot ever hold it.
+    Rejected,
+    /// One chunked-prefill slice ran (`arg` = tokens in the chunk). Span.
+    PrefillChunk,
+    /// The first generated token was emitted.
+    FirstToken,
+    /// One decode step advanced this request (`arg` = tokens generated so
+    /// far). Span covering the batched step latency.
+    DecodeStep,
+    /// Request was preempted and its cache swapped out (`arg` = cached
+    /// tokens at eviction).
+    Preempt,
+    /// Request was re-admitted from the swap pool.
+    SwapIn,
+    /// Admission adopted shared prefix pages (`arg` = pages adopted).
+    PrefixAdopt,
+    /// Request finished (`arg` = tokens generated). Span covering the
+    /// whole arrival→retire lifetime; every other event for the same
+    /// request nests inside it.
+    Finish,
+}
+
+impl EventKind {
+    /// Stable lower-snake name used by the exporters.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Queued => "queued",
+            EventKind::Admitted => "admitted",
+            EventKind::Rejected => "rejected",
+            EventKind::PrefillChunk => "prefill_chunk",
+            EventKind::FirstToken => "first_token",
+            EventKind::DecodeStep => "decode_step",
+            EventKind::Preempt => "preempt",
+            EventKind::SwapIn => "swap_in",
+            EventKind::PrefixAdopt => "prefix_adopt",
+            EventKind::Finish => "finish",
+        }
+    }
+}
+
+/// One recorded event. `Copy` and fixed-size so the ring is a flat
+/// preallocated buffer.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    /// Which lifecycle edge this is.
+    pub kind: EventKind,
+    /// The wire/request id the event belongs to.
+    pub request_id: u64,
+    /// Engine tick at which the event was recorded.
+    pub tick: u64,
+    /// Microseconds since the recorder's epoch at the START of the event
+    /// (for instant events this is the moment of recording).
+    pub at_us: u64,
+    /// Span duration in microseconds; 0 for instant events.
+    pub dur_us: u64,
+    /// Kind-specific payload (see [`EventKind`] docs).
+    pub arg: u64,
+}
+
+/// Fixed-capacity ring of [`TraceEvent`]s. Pushing never allocates; once
+/// full, the oldest event is overwritten and `dropped` advances.
+#[derive(Debug)]
+pub struct TraceRing {
+    buf: Vec<TraceEvent>,
+    /// Next write position (wraps at capacity).
+    head: usize,
+    /// Total events overwritten because the ring was full.
+    dropped: u64,
+    capacity: usize,
+}
+
+impl TraceRing {
+    /// Preallocate a ring holding up to `capacity` events (min 1).
+    pub fn new(capacity: usize) -> TraceRing {
+        let capacity = capacity.max(1);
+        TraceRing {
+            buf: Vec::with_capacity(capacity),
+            head: 0,
+            dropped: 0,
+            capacity,
+        }
+    }
+
+    /// Append one event. Allocation-free: the buffer was sized at
+    /// construction, so this is at most an indexed overwrite.
+    #[inline]
+    pub fn push(&mut self, ev: TraceEvent) {
+        if self.buf.len() < self.capacity {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.dropped += 1;
+        }
+        self.head += 1;
+        if self.head == self.capacity {
+            self.head = 0;
+        }
+    }
+
+    /// Number of events currently held.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when no events have been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events overwritten because the ring wrapped.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Copy the held events out in recording order (oldest first).
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        if self.buf.len() < self.capacity {
+            self.buf.clone()
+        } else {
+            // Ring has wrapped: oldest event sits at `head`.
+            let mut out = Vec::with_capacity(self.buf.len());
+            out.extend_from_slice(&self.buf[self.head..]);
+            out.extend_from_slice(&self.buf[..self.head]);
+            out
+        }
+    }
+}
+
+/// Per-replica trace recorder: an enable flag, a monotonic epoch all
+/// timestamps are relative to, and the bounded ring.
+#[derive(Debug)]
+pub struct Recorder {
+    enabled: bool,
+    epoch: Instant,
+    ring: TraceRing,
+}
+
+impl Recorder {
+    /// Build a recorder; when `enabled` is false every record call is a
+    /// single branch and the ring stays empty.
+    pub fn new(enabled: bool, capacity: usize) -> Recorder {
+        Recorder {
+            enabled,
+            epoch: Instant::now(),
+            ring: TraceRing::new(capacity),
+        }
+    }
+
+    /// Whether recording is active.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Microseconds since the recorder epoch (shared clock for gauges so
+    /// counter tracks line up with spans in the exported trace).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Record an instant event (duration 0).
+    #[inline]
+    pub fn record(&mut self, kind: EventKind, request_id: u64, tick: u64, arg: u64) {
+        if !self.enabled {
+            return;
+        }
+        let at_us = self.epoch.elapsed().as_micros() as u64;
+        self.ring.push(TraceEvent {
+            kind,
+            request_id,
+            tick,
+            at_us,
+            dur_us: 0,
+            arg,
+        });
+    }
+
+    /// Record a span that ENDS now and lasted `dur`; `at_us` is
+    /// back-dated so the exported span covers `[now - dur, now]`.
+    #[inline]
+    pub fn record_span(&mut self, kind: EventKind, request_id: u64, tick: u64, dur: Duration, arg: u64) {
+        if !self.enabled {
+            return;
+        }
+        let end_us = self.epoch.elapsed().as_micros() as u64;
+        let dur_us = dur.as_micros() as u64;
+        self.ring.push(TraceEvent {
+            kind,
+            request_id,
+            tick,
+            at_us: end_us.saturating_sub(dur_us),
+            dur_us,
+            arg,
+        });
+    }
+
+    /// Events overwritten because the ring wrapped.
+    pub fn dropped(&self) -> u64 {
+        self.ring.dropped()
+    }
+
+    /// Number of events currently held.
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Copy held events out in recording order.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        self.ring.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_holds_events_in_order_and_wraps() {
+        let mut r = TraceRing::new(4);
+        for i in 0..6u64 {
+            r.push(TraceEvent {
+                kind: EventKind::DecodeStep,
+                request_id: i,
+                tick: i,
+                at_us: i,
+                dur_us: 0,
+                arg: 0,
+            });
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 2);
+        let ids: Vec<u64> = r.snapshot().iter().map(|e| e.request_id).collect();
+        assert_eq!(ids, vec![2, 3, 4, 5], "oldest two overwritten, order kept");
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let mut rec = Recorder::new(false, 16);
+        rec.record(EventKind::Queued, 1, 0, 0);
+        rec.record_span(EventKind::Finish, 1, 0, Duration::from_micros(5), 0);
+        assert!(rec.is_empty());
+    }
+
+    #[test]
+    fn span_is_backdated_to_cover_duration() {
+        let mut rec = Recorder::new(true, 16);
+        std::thread::sleep(Duration::from_millis(2));
+        rec.record_span(EventKind::Finish, 7, 3, Duration::from_micros(1500), 9);
+        let evs = rec.snapshot();
+        assert_eq!(evs.len(), 1);
+        let e = evs[0];
+        assert_eq!(e.kind, EventKind::Finish);
+        assert_eq!(e.dur_us, 1500);
+        assert!(e.at_us + e.dur_us <= rec.now_us());
+    }
+}

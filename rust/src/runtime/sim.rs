@@ -27,6 +27,7 @@
 use super::backend::{KvTileReader, KvTileView, ModelBackend};
 use super::executor::{DecodeOut, PrefillOut};
 use super::manifest::{EvalProtocol, Profile, ServeProtocol};
+use crate::obs::stage::{self, Stage};
 use crate::quant::angle::TrigLut;
 use crate::quant::kernels::{self, KernelKind, TrigScratch};
 use crate::quant::{LayerBins, Mode, NormMode, QuantConfig};
@@ -126,7 +127,7 @@ impl LaneScore {
             kr.len() >= elems && ki.len() >= elems && vr.len() >= elems && vi.len() >= elems
         );
         match kind {
-            KernelKind::Scalar => {
+            KernelKind::Scalar => stage::time(Stage::Score, || {
                 let rows = kr[..elems]
                     .chunks_exact(half)
                     .zip(ki[..elems].chunks_exact(half))
@@ -138,49 +139,55 @@ impl LaneScore {
                     }
                     self.end_row();
                 }
-            }
+            }),
             KernelKind::Simd => {
                 // pass 1: checksum chain, sequential in element order
-                for (((&a, &b), &c), &d) in kr[..elems]
-                    .iter()
-                    .zip(&ki[..elems])
-                    .zip(&vr[..elems])
-                    .zip(&vi[..elems])
-                {
-                    self.fold_acc(a, b, c, d);
-                }
+                stage::time(Stage::Score, || {
+                    for (((&a, &b), &c), &d) in kr[..elems]
+                        .iter()
+                        .zip(&ki[..elems])
+                        .zip(&vr[..elems])
+                        .zip(&vi[..elems])
+                    {
+                        self.fold_acc(a, b, c, d);
+                    }
+                });
                 // pass 2: gather trig table entries for the whole slab
                 scratch.ensure(elems);
-                kernels::gather_trig(lutk, &ki[..elems], &mut scratch.kc, &mut scratch.ks);
-                kernels::gather_trig(lutv, &vi[..elems], &mut scratch.vc, &mut scratch.vs);
-                // pass 3: elementwise weighted polar terms (vectorizable;
-                // `kc + (-0.25)*ks` == `kc - 0.25*ks` exactly in IEEE-754)
-                kernels::weighted_polar_terms(
-                    &kr[..elems],
-                    &scratch.kc,
-                    &scratch.ks,
-                    -0.25,
-                    &mut scratch.st,
-                );
-                kernels::weighted_polar_terms(
-                    &vr[..elems],
-                    &scratch.vc,
-                    &scratch.vs,
-                    0.5,
-                    &mut scratch.vt,
-                );
-                // pass 4: per-row reduction in original element order, then
-                // the streaming-softmax row close — both stay sequential
-                for (st, vt) in scratch.st[..elems]
-                    .chunks_exact(half)
-                    .zip(scratch.vt[..elems].chunks_exact(half))
-                {
-                    for (&s, &v) in st.iter().zip(vt) {
-                        self.s_row += s;
-                        self.v_row += v;
+                stage::time(Stage::Gather, || {
+                    kernels::gather_trig(lutk, &ki[..elems], &mut scratch.kc, &mut scratch.ks);
+                    kernels::gather_trig(lutv, &vi[..elems], &mut scratch.vc, &mut scratch.vs);
+                });
+                stage::time(Stage::Score, || {
+                    // pass 3: elementwise weighted polar terms (vectorizable;
+                    // `kc + (-0.25)*ks` == `kc - 0.25*ks` exactly in IEEE-754)
+                    kernels::weighted_polar_terms(
+                        &kr[..elems],
+                        &scratch.kc,
+                        &scratch.ks,
+                        -0.25,
+                        &mut scratch.st,
+                    );
+                    kernels::weighted_polar_terms(
+                        &vr[..elems],
+                        &scratch.vc,
+                        &scratch.vs,
+                        0.5,
+                        &mut scratch.vt,
+                    );
+                    // pass 4: per-row reduction in original element order,
+                    // then the streaming-softmax row close — both sequential
+                    for (st, vt) in scratch.st[..elems]
+                        .chunks_exact(half)
+                        .zip(scratch.vt[..elems].chunks_exact(half))
+                    {
+                        for (&s, &v) in st.iter().zip(vt) {
+                            self.s_row += s;
+                            self.v_row += v;
+                        }
+                        self.end_row();
                     }
-                    self.end_row();
-                }
+                });
             }
         }
     }

@@ -13,6 +13,7 @@ use turboangle::coordinator::server::serve_on;
 use turboangle::coordinator::{
     BatchPolicy, Engine, EngineConfig, EngineCore, FinishReason, ReadPath, Request, RoutePolicy,
 };
+use turboangle::obs::{export, EventKind, TraceEvent};
 use turboangle::quant::{KernelKind, Mode, NormMode, QuantConfig};
 use turboangle::runtime::{Entry, Manifest, ModelExecutor, Runtime, SimExecutor};
 use turboangle::util::json::Json;
@@ -83,6 +84,26 @@ fn sim_engine_chunked(
             chunked_prefill: true,
             chunk_tokens,
             tick_token_budget: tick_budget,
+            ..EngineConfig::new(QuantConfig::paper_uniform(2).with_k8v4_log())
+        },
+    )
+}
+
+/// Fully instrumented engine: same geometry as `sim_engine(seed, 256, 8)`
+/// but with the trace ring on and gauges/stage timers sampled every tick —
+/// the worst-case observability load for the identity tests below.
+fn sim_engine_traced(seed: u64) -> Engine<SimExecutor> {
+    Engine::new(
+        SimExecutor::new(seed),
+        EngineConfig {
+            batch_policy: BatchPolicy {
+                min_batch: 1,
+                max_wait: Duration::ZERO,
+            },
+            capacity_pages: 256,
+            page_tokens: 8,
+            trace: true,
+            sample_every: 1,
             ..EngineConfig::new(QuantConfig::paper_uniform(2).with_k8v4_log())
         },
     )
@@ -834,6 +855,208 @@ fn tcp_server_serves_chunked_engine_and_stats_queries() {
     gen_ids.sort();
     assert_eq!(gen_ids, vec![1, 2]);
     assert_eq!(summary.served, 2, "stats responses do not count as served");
+}
+
+/// Tracing is observational only: a fully instrumented engine (trace ring
+/// on, gauges + stage timers sampled every tick) generates bit-identical
+/// token streams to an untraced twin, and its snapshot carries exactly one
+/// `Finish` span per retired request with every `DecodeStep` nested inside
+/// its request's lifetime span.
+#[test]
+fn tracing_preserves_token_streams_and_records_nested_spans() {
+    let run = |traced: bool| {
+        let mut e = if traced {
+            sim_engine_traced(7)
+        } else {
+            sim_engine(7, 256, 8)
+        };
+        for req in workload::generate(&WorkloadSpec {
+            n_requests: 5,
+            prompt_min: 4,
+            prompt_max: 24,
+            gen_min: 3,
+            gen_max: 8,
+            seed: 13,
+            sessions: 0,
+            ..Default::default()
+        }) {
+            e.submit(req);
+        }
+        e.run_to_completion().unwrap();
+        let snap = e.obs_snapshot();
+        let finished = e.metrics.requests_finished;
+        let mut out: Vec<(u64, Vec<i32>)> = e
+            .take_finished()
+            .into_iter()
+            .map(|s| (s.request.id, s.generated))
+            .collect();
+        out.sort();
+        (out, snap, finished)
+    };
+    let (plain, off_snap, _) = run(false);
+    let (traced, snap, finished) = run(true);
+    assert_eq!(plain, traced, "tracing must not perturb generated tokens");
+    assert!(off_snap.events.is_empty(), "tracing off must record nothing");
+    assert!(off_snap.gauges.is_empty(), "tracing off must sample nothing");
+
+    assert_eq!(snap.dropped_events, 0, "5 small requests cannot wrap the ring");
+    let finishes: Vec<&TraceEvent> = snap
+        .events
+        .iter()
+        .filter(|e| e.kind == EventKind::Finish)
+        .collect();
+    assert_eq!(finishes.len() as u64, finished, "one finish span per request");
+    // Span nesting: every decode step lands inside its request's
+    // arrival→retire span. Timestamps truncate to whole microseconds when
+    // recorded, so each endpoint comparison tolerates ±2µs.
+    for f in &finishes {
+        for d in snap
+            .events
+            .iter()
+            .filter(|e| e.kind == EventKind::DecodeStep && e.request_id == f.request_id)
+        {
+            assert!(
+                d.at_us + 2 >= f.at_us,
+                "decode step starts before its finish span: {d:?} vs {f:?}"
+            );
+            assert!(
+                d.at_us + d.dur_us <= f.at_us + f.dur_us + 2,
+                "decode step ends after its finish span: {d:?} vs {f:?}"
+            );
+        }
+    }
+    assert!(!snap.gauges.is_empty(), "stride-1 sampling must capture gauges");
+    assert!(
+        snap.stage.sampled_ticks > 0,
+        "stride-1 sampling must time the fused read path"
+    );
+}
+
+/// The full traced fleet path over TCP: two instrumented replicas behind
+/// the front-end answer pipelined generations, a mid-stream fleet-scope
+/// stats query whose merged histogram counts equal the sum of the
+/// per-replica counts, a Prometheus `metrics` query, and — after shutdown —
+/// the collected per-replica snapshots render to parseable Chrome
+/// trace-event JSON with one `finish` span per served request.
+#[test]
+fn traced_two_replica_server_exports_fleet_stats_and_chrome_trace() {
+    let engines: Vec<Box<dyn EngineCore>> = (0..2)
+        .map(|_| Box::new(sim_engine_traced(7)) as Box<dyn EngineCore>)
+        .collect();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        serve_on(listener, engines, RoutePolicy::SessionAffinity, 9).unwrap()
+    });
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let read_json = |reader: &mut BufReader<TcpStream>| -> Json {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        Json::parse(line.trim()).unwrap_or_else(|e| panic!("bad response {line}: {e}"))
+    };
+
+    // 8 pipelined generations, 4 per session key — "alice" and "carol"
+    // hash to different replicas of the 2-ring, so both engines trace.
+    for (base, key) in [(10, "alice"), (20, "carol")] {
+        for i in 0..4 {
+            let line = format!(
+                r#"{{"id": {}, "prompt": "traced request {}", "max_new_tokens": 5, "session_key": "{}"}}"#,
+                base + i,
+                i,
+                key
+            );
+            stream.write_all(line.as_bytes()).unwrap();
+            stream.write_all(b"\n").unwrap();
+        }
+    }
+    stream.flush().unwrap();
+    let mut ids: Vec<u64> = (0..8)
+        .map(|_| read_json(&mut reader).get("id").unwrap().as_u64().unwrap())
+        .collect();
+    ids.sort();
+    assert_eq!(ids, (10..14).chain(20..24).collect::<Vec<u64>>());
+
+    // All 8 responses arrived, so both engines have retired their share —
+    // the fleet roll-up below is deterministic, not racing the workers.
+    stream
+        .write_all(b"{\"id\": 90, \"stats\": true, \"scope\": \"fleet\"}\n")
+        .unwrap();
+    stream.flush().unwrap();
+    let fleet = read_json(&mut reader);
+    assert_eq!(fleet.get("id").unwrap().as_u64().unwrap(), 90);
+    assert_eq!(fleet.get("scope").unwrap().as_str().unwrap(), "fleet");
+    assert_eq!(fleet.get("replicas").unwrap().as_usize().unwrap(), 2);
+    let stats = fleet.get("stats").unwrap();
+    assert_eq!(
+        stats.get("requests_finished").unwrap().as_u64().unwrap(),
+        8,
+        "fleet counters must sum both replicas (4 + 4)"
+    );
+    assert_eq!(
+        stats.get("e2e").unwrap().get("count").unwrap().as_u64().unwrap(),
+        8,
+        "merged histogram count must equal the sum of per-replica counts"
+    );
+
+    stream.write_all(b"{\"id\": 91, \"metrics\": true}\n").unwrap();
+    stream.flush().unwrap();
+    let metrics = read_json(&mut reader);
+    assert_eq!(metrics.get("id").unwrap().as_u64().unwrap(), 91);
+    let exposition = metrics.get("metrics").unwrap().as_str().unwrap().to_string();
+    assert!(exposition.contains("# TYPE"), "not an exposition: {exposition}");
+    assert!(exposition.contains("turboangle_requests_finished_total"));
+    assert!(exposition.contains("turboangle_pool_pages_used"));
+
+    // Ninth generation reaches max_requests and shuts the server down.
+    stream
+        .write_all(
+            b"{\"id\": 30, \"prompt\": \"closing request\", \"max_new_tokens\": 4, \"session_key\": \"alice\"}\n",
+        )
+        .unwrap();
+    stream.flush().unwrap();
+    assert_eq!(read_json(&mut reader).get("id").unwrap().as_u64().unwrap(), 30);
+    drop(reader);
+    drop(stream);
+    let summary = server.join().unwrap();
+
+    assert_eq!(summary.served, 9, "stats/metrics responses do not count");
+    assert_eq!(summary.replicas.len(), 2);
+    assert_eq!(summary.traces.len(), 2, "one obs snapshot per replica");
+    let finished: u64 = summary.replicas.iter().map(|m| m.requests_finished).sum();
+    assert_eq!(finished, 9);
+
+    // The collected snapshots round-trip through the Chrome exporter into
+    // a parseable document: one complete-span event per retired request,
+    // counter tracks from the sampled gauges, and a zero drop counter.
+    let doc = export::chrome_trace(&summary.traces);
+    let j = Json::parse(&doc).unwrap_or_else(|e| panic!("trace not parseable: {e}"));
+    let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+    let finish_spans = events
+        .iter()
+        .filter(|e| e.get("name").unwrap().as_str().unwrap() == "finish")
+        .count();
+    assert_eq!(
+        finish_spans as u64, finished,
+        "one finish span per request served anywhere in the fleet"
+    );
+    assert!(
+        events
+            .iter()
+            .all(|e| e.get("pid").unwrap().as_usize().unwrap() < 2),
+        "span pids must name one of the 2 replicas"
+    );
+    assert!(
+        events
+            .iter()
+            .any(|e| e.get("ph").unwrap().as_str().unwrap() == "C"),
+        "sampled gauges must appear as counter tracks"
+    );
+    let other = j.get("otherData").unwrap();
+    assert_eq!(other.get("dropped_events").unwrap().as_u64().unwrap(), 0);
+    assert_eq!(other.get("replicas").unwrap().as_usize().unwrap(), 2);
 }
 
 /// Build the engine against real artifacts + a real PJRT runtime. Returns

@@ -6,6 +6,7 @@ use turboangle::coordinator::kv_manager::{PageId, PagedKvCache, TileScratch};
 use turboangle::coordinator::prefix_cache::PrefixCache;
 use turboangle::coordinator::router::{RoutePolicy, Router};
 use turboangle::coordinator::session::Request;
+use turboangle::coordinator::Histogram;
 use turboangle::quant::packing::{
     bits_for, pack, unpack, unpack_codes_range_into, unpack_f32_range_into, BitCursor, BitVec,
 };
@@ -950,4 +951,41 @@ fn prop_mode_values_match_manifest_contract() {
     assert_eq!(Mode::TqSymG4 as i32, 3);
     assert_eq!(Mode::Kivi as i32, 4);
     assert_eq!(Mode::KvQuant as i32, 5);
+}
+
+#[test]
+fn prop_histogram_merge_equals_concatenation() {
+    // The contract docs/OBSERVABILITY.md leans on for fleet stats: merging
+    // per-replica histograms is indistinguishable from one histogram that
+    // saw every sample. Exact for counts/sums/max; exact for quantiles too
+    // because the bucket layout is shared by construction.
+    run_cases(200, |g| {
+        let na = g.usize_in(0, 40);
+        let nb = g.usize_in(0, 40);
+        let mut a = Histogram::default();
+        let mut b = Histogram::default();
+        let mut c = Histogram::default();
+        for i in 0..na + nb {
+            let us = 1u64 << g.usize_in(0, 26); // spans past the last bucket
+            let us = us + g.u64() % us.max(2); // off the power-of-two edges
+            let d = std::time::Duration::from_micros(us);
+            if i < na {
+                a.record(d);
+            } else {
+                b.record(d);
+            }
+            c.record(d);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert_eq!(a.sum_us(), c.sum_us());
+        assert_eq!(a.max_us(), c.max_us());
+        for q in [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            assert_eq!(
+                a.quantile(q),
+                c.quantile(q),
+                "q={q} na={na} nb={nb}: merged and concatenated disagree"
+            );
+        }
+    });
 }

@@ -1,0 +1,32 @@
+//! Known-bad snippet for the obs-recording lint scopes: a trace-ring
+//! `push` that allocates per event, and a `record` that reads a clock
+//! type by name instead of going through the recorder epoch. Not
+//! compiled — consumed by xtask lint tests.
+
+fn push(&mut self, ev: TraceEvent) {
+    // BAD: per-event allocation on the recording hot path
+    let copy: Vec<TraceEvent> = self.buf.iter().copied().collect();
+    self.buf = copy;
+    // BAD: formatting allocates a String per event
+    self.labels.push(ev.request_id.to_string());
+}
+
+fn record(&mut self, kind: EventKind, request_id: u64) {
+    // BAD: naming the clock type here lets wall-clock state leak past
+    // the recorder epoch into identity-adjacent code
+    let t0 = Instant::now();
+    self.ring_write(kind, request_id, t0);
+}
+
+fn record_span(&mut self, kind: EventKind) {
+    // Clean: timestamps come from the epoch-relative helper, and the
+    // write is an indexed store into the preallocated ring.
+    let at_us = self.now_us();
+    self.buf[self.head] = (kind, at_us);
+}
+
+fn snapshot(&self) -> Vec<TraceEvent> {
+    // Fine here: exporters run off the hot path, OUTSIDE the scoped
+    // recording functions, so the function-scoped rules must not flag it.
+    self.buf.to_vec()
+}

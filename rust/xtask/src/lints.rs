@@ -3,8 +3,9 @@
 //! Four rules, each encoding an invariant the ordinary toolchain cannot
 //! see (docs/ANALYSIS.md has the full matrix):
 //!
-//! * `no-alloc-in-hot-path` — the decode-stage kernels and the tile-decode
-//!   tick path must stay allocation-free (`_into` contract from PR 7).
+//! * `no-alloc-in-hot-path` — the decode-stage kernels, the tile-decode
+//!   tick path, and the obs recording functions (trace-ring push, stage
+//!   timer) must stay allocation-free (`_into` contract from PR 7).
 //! * `no-panic-in-serving` — no `unwrap`/`expect`/`panic!` in the wire
 //!   path (`coordinator/server.rs`, `engine.rs`, `util/json.rs`): one bad
 //!   connection must never kill a reader/writer/replica thread.
@@ -155,6 +156,16 @@ pub fn targets() -> Vec<Target> {
             scope: Funcs(&["slab", "element", "fold_acc", "end_row"]),
         },
         Target {
+            rule: "no-alloc-in-hot-path",
+            file: "rust/src/obs/trace.rs",
+            scope: Funcs(&["push", "record", "record_span"]),
+        },
+        Target {
+            rule: "no-alloc-in-hot-path",
+            file: "rust/src/obs/stage.rs",
+            scope: Funcs(&["time"]),
+        },
+        Target {
             rule: "no-panic-in-serving",
             file: "rust/src/coordinator/server.rs",
             scope: WholeFile,
@@ -193,6 +204,15 @@ pub fn targets() -> Vec<Target> {
             rule: "no-nondeterminism-in-identity-paths",
             file: "rust/src/coordinator/kv_manager.rs",
             scope: Funcs(&["fold_hash", "content_hash"]),
+        },
+        // Obs recording runs inside the engine tick between identity-
+        // critical stages: it must never name a clock type directly
+        // (timestamps flow through the Recorder epoch only) so a refactor
+        // cannot leak wall-clock state into scoring or hashing code.
+        Target {
+            rule: "no-nondeterminism-in-identity-paths",
+            file: "rust/src/obs/trace.rs",
+            scope: Funcs(&["push", "record", "record_span"]),
         },
         Target {
             rule: "release-checked-bounds",
@@ -526,6 +546,38 @@ mod tests {
         let allows = check_allow_comments("fixture", &lx);
         assert!(allows.iter().any(|f| f.excerpt.contains("without a reason")));
         assert!(allows.iter().any(|f| f.excerpt.contains("unknown rule")));
+    }
+
+    #[test]
+    fn obs_recording_alloc_lint_fires_on_fixture() {
+        let lx = fixture("bad_obs_recording.rs");
+        let t = Target {
+            rule: "no-alloc-in-hot-path",
+            file: "fixture",
+            scope: Scope::Funcs(&["push", "record", "record_span"]),
+        };
+        let hits = check_target("fixture", &lx, &t);
+        assert!(
+            hits.iter().any(|f| f.excerpt.contains(".collect()")),
+            "expected the per-event collect() finding, got {hits:?}"
+        );
+        assert!(hits.iter().any(|f| f.excerpt.contains(".to_string()")));
+        // snapshot() is an exporter outside the recording scope: its
+        // to_vec() must NOT fire.
+        assert!(!hits.iter().any(|f| f.excerpt.contains(".to_vec()")), "{hits:?}");
+    }
+
+    #[test]
+    fn obs_recording_clock_lint_fires_on_fixture() {
+        let lx = fixture("bad_obs_recording.rs");
+        let t = Target {
+            rule: "no-nondeterminism-in-identity-paths",
+            file: "fixture",
+            scope: Scope::Funcs(&["push", "record", "record_span"]),
+        };
+        let hits = check_target("fixture", &lx, &t);
+        assert_eq!(hits.len(), 1, "{hits:?}"); // only record()'s Instant
+        assert!(hits[0].excerpt.contains("Instant"));
     }
 
     #[test]
