@@ -27,12 +27,21 @@
 //! formerly misnamed `shared_page_bytes`, which read as a per-page size),
 //! `reuse_savings_bytes` (compressed bytes NOT stored privately thanks to
 //! adoption, per warm pass), `n_prefixes`/`prefix_len`/`requests`.
+//!
+//! A fourth scenario runs the same workload over a 3-replica FLEET
+//! sharing one node-level store, requests routed by prompt fingerprint:
+//! `fleet_hit_ratio` (headline — must not fall below `warm_hit_rate`),
+//! `fleet_replicas`, `fleet_shared_pages` (node-store pages counted
+//! once), `fleet_pages_gross` (naive per-replica sum; gross/pages equals
+//! the replica count exactly when dedup worked).
 //! Every field is documented in docs/BENCH_GLOSSARY.md.
 //!
 //!     cargo bench --bench prefix_caching [-- --smoke]
 
+use std::sync::Arc;
 use std::time::Duration;
-use turboangle::coordinator::{BatchPolicy, Engine, EngineConfig};
+use turboangle::coordinator::router::{prefix_fingerprint, RoutePolicy, Router};
+use turboangle::coordinator::{BatchPolicy, Engine, EngineConfig, SharedPageStore};
 use turboangle::quant::QuantConfig;
 use turboangle::runtime::SimExecutor;
 use turboangle::util::bench::{bench, black_box, JsonReport};
@@ -50,6 +59,14 @@ struct Geom {
 }
 
 fn mk_engine(g: &Geom, prefix_cache: bool) -> Engine<SimExecutor> {
+    mk_engine_store(g, prefix_cache, None)
+}
+
+fn mk_engine_store(
+    g: &Geom,
+    prefix_cache: bool,
+    shared_store: Option<Arc<SharedPageStore>>,
+) -> Engine<SimExecutor> {
     // sim geometry: batch 4 lanes, tmax just past the prompt bound
     let exec = SimExecutor::with_dims(1, 2, 2, 8, 4, g.prefill_len, g.prefill_len + 8);
     Engine::new(
@@ -61,6 +78,7 @@ fn mk_engine(g: &Geom, prefix_cache: bool) -> Engine<SimExecutor> {
             },
             page_tokens: g.page_tokens,
             prefix_cache,
+            shared_store,
             ..EngineConfig::new(QuantConfig::paper_uniform(2).with_k8v4_log())
         },
     )
@@ -231,6 +249,75 @@ fn main() {
         speedup > 1.0,
         "prefix_hit_speedup {speedup:.3} must exceed 1 on the warm workload"
     );
+
+    // fleet scenario: 3 replicas on ONE node-level store, requests routed
+    // by prompt fingerprint so each shared prefix has a home replica. A
+    // population pass seeds the trees, then a warm pass measures the
+    // fleet-wide hit ratio — the headline CI pins against the
+    // single-replica warm_hit_rate (routing + the node store must not
+    // cost hits a single warm replica would have had).
+    const FLEET: usize = 3;
+    let store = SharedPageStore::node(4096 * FLEET);
+    let mut fleet: Vec<Engine<SimExecutor>> = (0..FLEET)
+        .map(|_| mk_engine_store(&g, true, Some(Arc::clone(&store))))
+        .collect();
+    let mut router = Router::new(FLEET, RoutePolicy::Prefix { imbalance_bound: 4 });
+    let mut fleet_tokens = Vec::new();
+    for fpass in 0..2u64 {
+        for req in workload::generate(&spec(&g)) {
+            let mut req = req;
+            req.id += (100 + fpass) * 1_000_000;
+            let fp = prefix_fingerprint(&req.prompt, g.page_tokens);
+            let replica = router.route(fp);
+            fleet[replica].submit(req);
+            // the bench drains sequentially, so the slot frees right away
+            router.complete(replica);
+        }
+        if fpass == 0 {
+            for e in fleet.iter_mut() {
+                e.run_to_completion().expect("fleet population pass must drain");
+                e.take_finished();
+            }
+        }
+    }
+    let (mut warm_hits, mut warm_misses) = (0u64, 0u64);
+    for e in fleet.iter_mut() {
+        let (h0, m0) = (e.metrics.prefix_hits, e.metrics.prefix_misses);
+        e.run_to_completion().expect("fleet warm pass must drain");
+        warm_hits += e.metrics.prefix_hits - h0;
+        warm_misses += e.metrics.prefix_misses - m0;
+        fleet_tokens
+            .extend(e.take_finished().into_iter().map(|s| (s.request.id % 1_000_000, s.generated)));
+    }
+    fleet_tokens.sort();
+    assert_eq!(cold_tokens, fleet_tokens, "fleet vs cold token drift");
+    let fleet_hit_ratio = warm_hits as f64 / (warm_hits + warm_misses).max(1) as f64;
+    let fleet_mems: Vec<_> = fleet.iter().map(|e| e.memory_stats()).collect();
+    assert!(
+        fleet_mems.windows(2).all(|w| w[0].shared_store_id == w[1].shared_store_id),
+        "fleet replicas must share one node store"
+    );
+    let fleet_pages_gross: usize = fleet_mems.iter().map(|m| m.shared_pages).sum();
+    rep.summary("fleet_replicas", FLEET);
+    // headline: warm hit ratio across the routed 3-replica fleet
+    rep.summary("fleet_hit_ratio", fleet_hit_ratio);
+    // node-store pages counted ONCE (every replica reports the same store)
+    rep.summary("fleet_shared_pages", fleet_mems[0].shared_pages);
+    // naive per-replica sum — gross/shared_pages == replicas proves dedup
+    rep.summary("fleet_pages_gross", fleet_pages_gross);
+    println!(
+        "fleet: {FLEET} replicas, hit ratio {:.0}% (single-replica warm {:.0}%), \
+         {} node-store pages ({} gross across replicas)",
+        fleet_hit_ratio * 100.0,
+        hit_rate * 100.0,
+        fleet_mems[0].shared_pages,
+        fleet_pages_gross
+    );
+    assert!(
+        fleet_hit_ratio >= hit_rate,
+        "fleet_hit_ratio {fleet_hit_ratio:.3} fell below the single-replica warm_hit_rate {hit_rate:.3}"
+    );
+
     rep.write(OUT_JSON).expect("write bench json");
     println!("wrote {OUT_JSON}");
 }

@@ -112,6 +112,15 @@ impl DynamicBatcher {
         self.queue.front()
     }
 
+    /// Put a request back at the queue head, restoring its FIFO position,
+    /// after a seating attempt failed post-admission — e.g. a node-level
+    /// shared store whose matched prefix pages another replica evicted
+    /// between the admission pass and adoption. Not a new submission: the
+    /// `submitted` counter is untouched.
+    pub fn requeue_front(&mut self, req: Request) {
+        self.queue.push_front(req);
+    }
+
     /// Pop up to `free_slots` admissible requests. `admit` is the kv pool
     /// check. `Defer` keeps the head queued and stops the pass (head-of-line
     /// blocking is intentional: FIFO fairness); `Reject` pops the request

@@ -34,7 +34,9 @@
 //! multi-replica server (`server.rs`) only ever sees `dyn EngineCore`.
 
 use super::batcher::{Admission, BatchPolicy, DynamicBatcher};
-use super::kv_manager::{BatchTileReader, MemoryStats, PageId, PagedKvCache, TileScratch};
+use super::kv_manager::{
+    BatchTileReader, MemoryStats, PageId, PagedKvCache, SharedPageStore, TileScratch,
+};
 use super::metrics::EngineMetrics;
 use super::prefix_cache::PrefixCache;
 use super::scheduler::{next_action, Action, SchedulerPolicy};
@@ -44,6 +46,7 @@ use crate::quant::QuantConfig;
 use crate::runtime::{ModelBackend, ModelExecutor};
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Padding token id for unused prefill positions (matches the L2 protocol).
@@ -68,6 +71,12 @@ pub trait EngineCore: Send {
 
     /// Snapshot of the replica's cache memory accounting.
     fn memory_stats(&self) -> MemoryStats;
+
+    /// Tokens per kv page — the paging/sharing granularity. The server's
+    /// prefix-fingerprint routing aligns its hash window to this, so every
+    /// replica behind one router must agree on it (they do: one CLI flag
+    /// configures all of them).
+    fn page_tokens(&self) -> usize;
 
     /// Replica depth gauge: queued + active + preempted sessions. The TCP
     /// front-end's `Router` tracks its own dispatched-minus-completed
@@ -154,6 +163,13 @@ pub struct EngineConfig {
     /// `--sample-every N`). Stride 1 samples every tick; larger strides
     /// cut sampling overhead proportionally.
     pub sample_every: usize,
+    /// Node-level shared page store (CLI `--shared-store node`): hand every
+    /// engine replica on the node one clone of the same
+    /// [`SharedPageStore::node`] Arc, so a prefix harvested by any replica
+    /// is adopted — zero bytes copied — by all of them, and stored once per
+    /// NODE instead of once per replica. `None` keeps the classic
+    /// replica-private store. Token streams are bit-identical either way.
+    pub shared_store: Option<Arc<SharedPageStore>>,
 }
 
 impl EngineConfig {
@@ -176,6 +192,7 @@ impl EngineConfig {
             trace: false,
             trace_events: 65_536,
             sample_every: 32,
+            shared_store: None,
         }
     }
 }
@@ -279,15 +296,27 @@ impl<B: ModelBackend> Engine<B> {
         // the fused path never materializes the dense tensors — this is
         // the memory the tentpole removes: 4 slabs of L·B·H·Tmax·d/2 f32
         let n = if fused { 0 } else { l * b * h * tmax * half };
-        let kv = PagedKvCache::new(
-            cfg.quant.clone(),
-            l,
-            h,
-            exec.profile().d_head,
-            tmax,
-            cfg.capacity_pages,
-            cfg.page_tokens,
-        );
+        let kv = match cfg.shared_store {
+            Some(store) => PagedKvCache::with_store(
+                cfg.quant.clone(),
+                l,
+                h,
+                exec.profile().d_head,
+                tmax,
+                cfg.capacity_pages,
+                cfg.page_tokens,
+                store,
+            ),
+            None => PagedKvCache::new(
+                cfg.quant.clone(),
+                l,
+                h,
+                exec.profile().d_head,
+                tmax,
+                cfg.capacity_pages,
+                cfg.page_tokens,
+            ),
+        };
         Engine {
             exec,
             kv,
@@ -418,12 +447,20 @@ impl<B: ModelBackend> Engine<B> {
             return self.kv.free_seq(id);
         };
         let prompt = &sess.request.prompt[..sess.prompt_len];
-        let before = self.kv.shared_page_count();
+        // count inserts by this cache's own monotonic seal counter, not a
+        // before/after of the store's page count — a node store's count
+        // moves under concurrent replicas' seals and evictions
+        let before = self.kv.sealed_pages_total();
         let chain = self.kv.finish_seq_share(id, prompt)?;
-        self.metrics.prefix_pages_inserted += (self.kv.shared_page_count() - before) as u64;
-        // a chain id the tree could not link (hash-collision dedup
-        // fallback) is indexed nowhere — free it or it leaks its pool page
-        for pid in p.insert(prompt, &chain) {
+        self.metrics.prefix_pages_inserted += self.kv.sealed_pages_total() - before;
+        // index the chain. A tree node whose old page a node store has
+        // since evicted is repointed at the freshly sealed id; a chain id
+        // the tree still could not link (hash-collision dedup fallback, or
+        // a conflicting page that is still resident) is indexed nowhere —
+        // free it or it leaks its pool page
+        let kv = &self.kv;
+        let orphans = p.insert_with(prompt, &chain, &|pid| kv.shared_page_present(pid));
+        for pid in orphans {
             if self.kv.shared_page_refs(pid) == Some(0) {
                 self.kv.free_shared_page(pid)?;
             }
@@ -435,27 +472,44 @@ impl<B: ModelBackend> Engine<B> {
     /// shared by monolithic and chunked seating so their kv creation and
     /// prefix accounting can never drift: create the kv sequence adopting
     /// `shared` prefix pages, record the hit/miss/reuse counters, and
-    /// return the adopted token count.
-    fn admit_seq(&mut self, id: u64, expected: usize, shared: &[PageId]) -> Result<usize> {
-        let shared_tokens = shared.len() * self.kv.page_tokens();
-        self.kv.new_seq_with_prefix(id, expected, shared)?;
+    /// return the ACTUALLY adopted token count (a node-scoped store may
+    /// have evicted part of the matched chain since the admission pass, so
+    /// adoption can truncate — the caller must size the prefill suffix by
+    /// this return, never by `shared.len()`). Returns `Ok(None)` — with no
+    /// sequence created — when truncation re-priced the reservation past
+    /// what the pool can promise; the caller requeues the request.
+    fn admit_seq(&mut self, id: u64, expected: usize, shared: &[PageId]) -> Result<Option<usize>> {
+        let adopted = self.kv.new_seq_with_prefix(id, expected, shared)?;
+        if adopted.unwrap_or(0) < shared.len() {
+            // part of the matched chain is gone from the node store: drop
+            // the dead tree entries so retries and future matches stop
+            // offering pages that can no longer be adopted
+            if let Some(p) = self.prefix.as_mut() {
+                let kv = &self.kv;
+                p.prune_missing(&|pid| kv.shared_page_present(pid));
+            }
+        }
+        let Some(adopted_pages) = adopted else {
+            return Ok(None);
+        };
+        let shared_tokens = adopted_pages * self.kv.page_tokens();
         self.obs
             .record(EventKind::Admitted, id, self.ticks, expected as u64);
-        if !shared.is_empty() {
+        if adopted_pages > 0 {
             self.obs
-                .record(EventKind::PrefixAdopt, id, self.ticks, shared.len() as u64);
+                .record(EventKind::PrefixAdopt, id, self.ticks, adopted_pages as u64);
         }
         if self.prefix.is_some() {
-            if shared.is_empty() {
+            if adopted_pages == 0 {
                 self.metrics.prefix_misses += 1;
             } else {
                 self.metrics.prefix_hits += 1;
                 self.metrics.prefix_tokens_reused += shared_tokens as u64;
-                self.metrics.prefix_pages_adopted += shared.len() as u64;
+                self.metrics.prefix_pages_adopted += adopted_pages as u64;
             }
         }
         self.metrics.prefill_sequences += 1;
-        Ok(shared_tokens)
+        Ok(Some(shared_tokens))
     }
 
     /// The single retire path: every finished session — rejected, done at
@@ -832,6 +886,12 @@ impl<B: ModelBackend> Engine<B> {
         if deficit == 0 {
             return Ok(0);
         }
+        if self.kv.store_is_node_scoped() {
+            // node-store pages are charged to the NODE store's own budget,
+            // not this replica's pool — evicting them frees no pool pages,
+            // so admission pressure falls through to session eviction
+            return Ok(0);
+        }
         let Some(p) = self.prefix.as_mut() else {
             return Ok(0);
         };
@@ -995,15 +1055,41 @@ impl<B: ModelBackend> Engine<B> {
         let tp = self.exec.serve().prefill_len;
         let tmax = self.exec.serve().tmax;
         let b_total = self.slots.len();
-        let page_tokens = self.kv.page_tokens();
+        // Admission FIRST, model work second: every kv sequence is created
+        // (adopting what the shared store can actually lease NOW) before a
+        // single token runs through the backend, so the per-lane prefix
+        // lengths below reflect the ACTUAL adoption. Against a node-scoped
+        // store the admission pass's match is only a quote — another
+        // replica may have evicted matched pages since — and feeding the
+        // stale count to `run_prefill_suffix` would skip KV emission for
+        // positions nothing adopted, a silent hole in the cache. A
+        // truncated adoption whose re-priced reservation no longer fits
+        // requeues its request at the queue head instead.
+        let mut seated: Vec<(Request, usize)> = Vec::with_capacity(reqs.len());
+        let mut requeue: Vec<Request> = Vec::new();
+        for req in reqs {
+            let expected = expected_tokens(req.prompt.len(), req.max_new_tokens, tp, tmax);
+            let shared = matches.remove(&req.id).unwrap_or_default();
+            match self.admit_seq(req.id, expected, &shared)? {
+                Some(shared_tokens) => seated.push((req, shared_tokens)),
+                None => requeue.push(req),
+            }
+        }
+        for req in requeue.into_iter().rev() {
+            self.metrics.prefix_adopt_requeues += 1;
+            self.batcher.requeue_front(req);
+        }
+        if seated.is_empty() {
+            return Ok(());
+        }
         let mut tokens = vec![PAD; b_total * tp];
         let mut lengths = vec![1i32; b_total]; // dummy lanes: len 1
         let mut prefix_lens = vec![0usize; b_total];
-        for (lane, req) in reqs.iter().enumerate() {
+        for (lane, (req, shared_tokens)) in seated.iter().enumerate() {
             let plen = req.prompt.len().min(tp);
             tokens[lane * tp..lane * tp + plen].copy_from_slice(&req.prompt[..plen]);
             lengths[lane] = plen as i32;
-            prefix_lens[lane] = matches.get(&req.id).map_or(0, Vec::len) * page_tokens;
+            prefix_lens[lane] = *shared_tokens;
         }
         let out = if self.prefix.is_some() {
             // cached positions skip KV emission in the backend
@@ -1020,11 +1106,8 @@ impl<B: ModelBackend> Engine<B> {
             self.exec.profile().d_head / 2,
         );
         let vocab = self.exec.profile().vocab;
-        for (lane, req) in reqs.into_iter().enumerate() {
+        for (lane, (req, shared_tokens)) in seated.into_iter().enumerate() {
             let plen = req.prompt.len().min(tp);
-            let expected = expected_tokens(req.prompt.len(), req.max_new_tokens, tp, tmax);
-            let shared = matches.remove(&req.id).unwrap_or_default();
-            let shared_tokens = self.admit_seq(req.id, expected, &shared)?;
             // pack the SUFFIX tokens' compressed entries: positions below
             // `shared_tokens` are already resident in the adopted pages.
             // One strided append per token covers every (layer, head) at
@@ -1080,16 +1163,29 @@ impl<B: ModelBackend> Engine<B> {
     ) -> Result<()> {
         let tp = self.exec.serve().prefill_len;
         let tmax = self.exec.serve().tmax;
-        for (lane, req) in reqs.into_iter().enumerate() {
+        let mut lane = 0usize;
+        let mut requeue: Vec<Request> = Vec::new();
+        for req in reqs {
             let plen = req.prompt.len().min(tp);
             let expected = expected_tokens(req.prompt.len(), req.max_new_tokens, tp, tmax);
             let shared = matches.remove(&req.id).unwrap_or_default();
-            let shared_tokens = self.admit_seq(req.id, expected, &shared)?;
+            // same node-store race as monolithic seating: adoption can
+            // truncate, and a reservation the truncation re-priced past
+            // the pool requeues the request instead of seating it
+            let Some(shared_tokens) = self.admit_seq(req.id, expected, &shared)? else {
+                requeue.push(req);
+                continue;
+            };
             let sess = Session::new_prefilling(req, plen, shared_tokens.min(plen));
             let slot = free[lane];
+            lane += 1;
             self.slot_filled[slot] = 0; // new sequence: full refill needed
             self.slot_decoded[slot] = false; // evictable once it progresses
             self.slots[slot] = Some(sess);
+        }
+        for req in requeue.into_iter().rev() {
+            self.metrics.prefix_adopt_requeues += 1;
+            self.batcher.requeue_front(req);
         }
         Ok(())
     }
@@ -1233,6 +1329,10 @@ impl<B: ModelBackend> EngineCore for Engine<B> {
 
     fn memory_stats(&self) -> MemoryStats {
         Engine::memory_stats(self)
+    }
+
+    fn page_tokens(&self) -> usize {
+        self.kv.page_tokens()
     }
 
     fn load(&self) -> usize {

@@ -137,6 +137,10 @@ pub struct EngineMetrics {
     pub prefix_pages_inserted: u64,
     /// unreferenced cached pages reclaimed under pool pressure
     pub prefix_evictions: u64,
+    /// admitted requests requeued because the node-scoped shared store
+    /// evicted their matched prefix between admission and adoption and the
+    /// re-priced reservation no longer fit (always 0 with a replica store)
+    pub prefix_adopt_requeues: u64,
     /// time-to-first-token (arrival → first token)
     pub ttft: Histogram,
     /// inter-token latency: the gap between a session's consecutive tokens
@@ -182,6 +186,7 @@ impl EngineMetrics {
              \"decode_steps\": {}, \"preemptions\": {}, \"swap_ins\": {}, \
              \"rejected_cache_full\": {}, \"prefix_hits\": {}, \
              \"prefix_misses\": {}, \"prefix_tokens_reused\": {}, \
+             \"prefix_adopt_requeues\": {}, \
              \"ttft\": {}, \"itl\": {}, \"e2e\": {}, \"decode_step\": {}}}",
             self.requests_submitted,
             self.requests_finished,
@@ -196,6 +201,7 @@ impl EngineMetrics {
             self.prefix_hits,
             self.prefix_misses,
             self.prefix_tokens_reused,
+            self.prefix_adopt_requeues,
             self.ttft.to_json(),
             self.itl.to_json(),
             self.e2e.to_json(),
@@ -225,6 +231,7 @@ impl EngineMetrics {
         self.prefix_pages_adopted += other.prefix_pages_adopted;
         self.prefix_pages_inserted += other.prefix_pages_inserted;
         self.prefix_evictions += other.prefix_evictions;
+        self.prefix_adopt_requeues += other.prefix_adopt_requeues;
         self.ttft.merge(&other.ttft);
         self.itl.merge(&other.itl);
         self.decode_step_latency.merge(&other.decode_step_latency);

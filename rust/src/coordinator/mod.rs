@@ -12,7 +12,8 @@
 //! * [`batcher`] / [`scheduler`] — dynamic batching and prefill/decode
 //!   interleave, with terminal `CacheFull` rejection of impossible requests
 //! * [`router`] — replica routing policies (round-robin, least-loaded,
-//!   consistent-hash session affinity)
+//!   consistent-hash session affinity, and prefix-fingerprint routing
+//!   with an imbalance-bounded least-loaded fallback)
 //! * [`engine`] — the tick loop gluing slots, cache, and the AOT programs;
 //!   [`engine::EngineCore`] is the object-safe replica surface, and the
 //!   engine is generic over [`crate::runtime::ModelBackend`]
@@ -32,9 +33,11 @@ pub mod session;
 
 pub use batcher::{Admission, BatchPolicy, DynamicBatcher, TakenBatch};
 pub use engine::{Engine, EngineConfig, EngineCore, ReadPath};
-pub use kv_manager::{BatchTileReader, MemoryStats, PageId, PagedKvCache, TileScratch};
+pub use kv_manager::{
+    BatchTileReader, MemoryStats, PageId, PagedKvCache, SharedPageStore, TileScratch,
+};
 pub use metrics::{EngineMetrics, Histogram};
 pub use prefix_cache::PrefixCache;
-pub use router::{hash_session_key, RoutePolicy, Router};
+pub use router::{hash_session_key, prefix_fingerprint, RoutePolicy, Router};
 pub use scheduler::SchedulerPolicy;
 pub use session::{FinishReason, Request, Session};

@@ -155,6 +155,24 @@ impl PrefixCache {
     /// indexed nowhere, so eviction would never find them: the caller must
     /// free the unreferenced ones or they leak their pool charge.
     pub fn insert(&mut self, tokens: &[i32], pages: &[PageId]) -> Vec<PageId> {
+        self.insert_with(tokens, pages, &|_| true)
+    }
+
+    /// [`Self::insert`] made node-store aware: when the existing node at a
+    /// position holds a DIFFERENT page that is no longer `present` in the
+    /// shared store (a node-scoped store's LRU ran on another replica, or
+    /// under this one's own seal pressure), the node is REPOINTED at the
+    /// chain's page — the old id is dead and matching must follow the live
+    /// one — instead of orphaning the fresh copy while the tree keeps
+    /// offering a page that can never be adopted again. A still-present
+    /// conflicting page keeps its node and the chain id is returned as an
+    /// orphan, exactly as [`Self::insert`] does.
+    pub fn insert_with(
+        &mut self,
+        tokens: &[i32],
+        pages: &[PageId],
+        present: &dyn Fn(PageId) -> bool,
+    ) -> Vec<PageId> {
         self.clock += 1;
         let clock = self.clock;
         let pt = self.page_tokens;
@@ -175,7 +193,11 @@ impl PrefixCache {
                     let n = self.node_mut(j);
                     n.last_used = clock;
                     if n.page != pid {
-                        orphans.push(pid);
+                        if present(n.page) {
+                            orphans.push(pid);
+                        } else {
+                            n.page = pid;
+                        }
                     }
                     j
                 }
@@ -198,6 +220,56 @@ impl PrefixCache {
             cur = Some(j);
         }
         orphans
+    }
+
+    /// Drop every node whose page is no longer `present` in the shared
+    /// store — node-scoped stores LRU-evict refs==0 pages under seal
+    /// pressure, concurrently with every replica — together with its whole
+    /// subtree: a chain cannot be adopted past a missing parent, so the
+    /// descendants are unreachable for matching even when their own pages
+    /// survive (the store reclaims those itself once unreferenced). Returns
+    /// the number of nodes removed. A no-op under a replica-scoped store,
+    /// whose pages only leave through [`Self::evict_lru`].
+    pub fn prune_missing(&mut self, present: &dyn Fn(PageId) -> bool) -> usize {
+        let dead: Vec<usize> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, slot)| {
+                slot.as_ref().and_then(|n| (!present(n.page)).then_some(i))
+            })
+            .collect();
+        let mut removed = 0usize;
+        for i in dead {
+            // an earlier subtree removal may have already taken this node
+            if self.nodes[i].is_some() {
+                removed += self.remove_subtree(i);
+            }
+        }
+        removed
+    }
+
+    /// Remove node `i` and its whole subtree, unlinking from a (possibly
+    /// already-removed) parent. Returns the number of nodes removed.
+    fn remove_subtree(&mut self, i: usize) -> usize {
+        let n = self.nodes[i].take().expect("live node");
+        match n.parent {
+            None => {
+                self.roots.remove(&n.key);
+            }
+            Some(p) => {
+                if let Some(pn) = self.nodes[p].as_mut() {
+                    pn.children.remove(&n.key);
+                }
+            }
+        }
+        self.free.push(i);
+        self.cached_tokens -= self.page_tokens;
+        let mut removed = 1usize;
+        for (_, c) in n.children {
+            removed += self.remove_subtree(c);
+        }
+        removed
     }
 
     /// Evict up to `want` least-recently-used LEAF pages whose refcount
@@ -313,6 +385,35 @@ mod tests {
         assert_eq!(t.pages(), 2);
         // after the pin clears, both go
         assert_eq!(t.evict_lru(10, &no_refs), vec![11, 10]);
+    }
+
+    #[test]
+    fn repoint_and_prune_follow_remote_eviction() {
+        let mut t = PrefixCache::new(2);
+        t.insert(&[1, 2, 3, 4], &[10, 11]);
+        // a remote replica's node store evicted page 10; a fresh harvest
+        // re-sealed the same window as page 50 — the node repoints
+        let ten_gone = |p: PageId| p != 10;
+        assert_eq!(
+            t.insert_with(&[1, 2, 3, 4], &[50, 11], &ten_gone),
+            Vec::<PageId>::new()
+        );
+        assert_eq!(t.match_prefix(&[1, 2, 3, 4]), vec![50, 11]);
+        assert_eq!(t.pages(), 2, "repoint creates no node");
+        // a still-present conflicting page keeps its node: the chain id is
+        // orphaned exactly as insert() would
+        assert_eq!(t.insert_with(&[1, 2, 3, 4], &[50, 77], &|_| true), vec![77]);
+        assert_eq!(t.match_prefix(&[1, 2, 3, 4]), vec![50, 11]);
+        // pruning a missing interior page drops its whole subtree — the
+        // child is unreachable for adoption even though its page survives
+        t.insert(&[1, 2, 3, 4, 5, 6], &[50, 11, 12]);
+        assert_eq!(t.pages(), 3);
+        assert_eq!(t.prune_missing(&|p| p != 11), 2);
+        assert_eq!(t.match_prefix(&[1, 2, 3, 4, 5, 6]), vec![50]);
+        assert_eq!(t.pages(), 1);
+        assert_eq!(t.cached_tokens(), 2);
+        // pruning with everything present is a no-op
+        assert_eq!(t.prune_missing(&|_| true), 0);
     }
 
     #[test]

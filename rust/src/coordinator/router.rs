@@ -3,7 +3,13 @@
 //! Single-process here (replicas are engine instances), but the policy
 //! layer is the real thing: least-loaded with optional session affinity
 //! (consistent hashing on a session key keeps multi-turn requests on the
-//! replica that may still hold their prefix).
+//! replica that may still hold their prefix), plus **prefix routing**
+//! ([`RoutePolicy::Prefix`]): consistent-hash by the prompt's first-page
+//! fingerprint ([`prefix_fingerprint`]), so requests sharing a cacheable
+//! prefix land on the replica whose radix tree already indexes it —
+//! round-robin actively destroys that locality. A configurable imbalance
+//! bound spills to least-loaded before a hot prefix can overload its home
+//! replica.
 
 use crate::util::hash::splitmix64;
 use std::collections::BTreeMap;
@@ -17,6 +23,39 @@ pub enum RoutePolicy {
     LeastLoaded,
     /// consistent-hash by session key, falling back to least-loaded
     SessionAffinity,
+    /// consistent-hash by prompt-prefix fingerprint, falling back to
+    /// least-loaded when the prompt has no full-page fingerprint or the
+    /// ring target already carries more than `imbalance_bound` in-flight
+    /// requests above the least-loaded replica
+    Prefix {
+        /// max jobs the ring target may sit above the minimum load before
+        /// the request spills to least-loaded (0 = spill on any imbalance)
+        imbalance_bound: usize,
+    },
+}
+
+/// Fingerprint of the FIRST `page_tokens` tokens of a prompt — the
+/// consistent-hash key [`RoutePolicy::Prefix`] routes by. Prompts sharing
+/// their first cache page (system prompts, few-shot templates) collocate
+/// on one replica, so its radix tree — and, with a node-level store, its
+/// already-warm adoption path — sees every reuse opportunity. Hashing ONLY
+/// the first aligned window (not the longest) is deliberate: prompts that
+/// share a long system prompt but diverge later must still land together.
+/// `None` when the prompt has no full page — nothing adoptable exists, so
+/// the router falls back to least-loaded. FNV-1a over the little-endian
+/// token bytes, then splitmix64 for avalanche.
+pub fn prefix_fingerprint(tokens: &[i32], page_tokens: usize) -> Option<u64> {
+    if page_tokens == 0 || tokens.len() < page_tokens {
+        return None;
+    }
+    let mut h: u64 = 0xCBF29CE484222325;
+    for &t in &tokens[..page_tokens] {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001B3);
+        }
+    }
+    Some(splitmix64(h))
 }
 
 /// Replica picker + in-flight load tracker (one per server dispatcher).
@@ -63,8 +102,11 @@ impl Router {
         self.loads.len()
     }
 
-    /// Pick a replica for a request. `session_key` enables affinity.
-    pub fn route(&mut self, session_key: Option<u64>) -> usize {
+    /// Pick a replica for a request. `key` is policy-dependent: the
+    /// session key under [`RoutePolicy::SessionAffinity`], the
+    /// [`prefix_fingerprint`] under [`RoutePolicy::Prefix`] (the server's
+    /// dispatcher computes the right one), ignored otherwise.
+    pub fn route(&mut self, key: Option<u64>) -> usize {
         let r = match self.policy {
             RoutePolicy::RoundRobin => {
                 let r = self.rr_next % self.loads.len();
@@ -72,13 +114,35 @@ impl Router {
                 r
             }
             RoutePolicy::LeastLoaded => self.least_loaded(),
-            RoutePolicy::SessionAffinity => match session_key {
+            RoutePolicy::SessionAffinity => match key {
                 Some(key) => self.ring_lookup(splitmix64(key)),
+                None => self.least_loaded(),
+            },
+            RoutePolicy::Prefix { imbalance_bound } => match key {
+                Some(fp) => {
+                    let target = self.ring_lookup(splitmix64(fp));
+                    let min = self.loads.iter().copied().min().unwrap_or(0);
+                    if self.loads[target] > min + imbalance_bound {
+                        // a hot prefix must not melt its home replica:
+                        // spill to least-loaded (the prefix becomes warm
+                        // on the spill target too — sharing, not pinning)
+                        self.least_loaded()
+                    } else {
+                        target
+                    }
+                }
                 None => self.least_loaded(),
             },
         };
         self.loads[r] += 1;
         r
+    }
+
+    /// The ring target for a fingerprint, ignoring load — what
+    /// [`Self::route`] picks before the imbalance fallback. Deterministic
+    /// and side-effect-free, for tests and capacity planning.
+    pub fn target_of(&self, fp: u64) -> usize {
+        self.ring_lookup(splitmix64(fp))
     }
 
     /// A request finished on `replica`.
@@ -159,5 +223,47 @@ mod tests {
             seen.insert(r.route(Some(k)));
         }
         assert!(seen.len() >= 3, "ring should spread keys, got {seen:?}");
+    }
+
+    #[test]
+    fn fingerprint_covers_exactly_the_first_page() {
+        // same first page, different tails: same fingerprint
+        assert_eq!(
+            prefix_fingerprint(&[1, 2, 3, 4, 9, 9], 4),
+            prefix_fingerprint(&[1, 2, 3, 4], 4)
+        );
+        // one token differs inside the window: different fingerprint
+        assert_ne!(
+            prefix_fingerprint(&[1, 2, 3, 5], 4),
+            prefix_fingerprint(&[1, 2, 3, 4], 4)
+        );
+        // no full page: nothing to route by
+        assert!(prefix_fingerprint(&[1, 2, 3], 4).is_none());
+        assert!(prefix_fingerprint(&[], 4).is_none());
+        assert!(prefix_fingerprint(&[1], 0).is_none());
+    }
+
+    #[test]
+    fn prefix_routes_sticky_until_imbalance_bound_spills() {
+        let mut r = Router::new(3, RoutePolicy::Prefix { imbalance_bound: 2 });
+        let fp = prefix_fingerprint(&[7, 7, 7, 7], 4).expect("full page");
+        let target = r.target_of(fp);
+        // sticky while within the bound: loads 1, 2 above an empty fleet
+        assert_eq!(r.route(Some(fp)), target);
+        assert_eq!(r.route(Some(fp)), target);
+        // load 2 == min 0 + bound 2: still allowed
+        assert_eq!(r.route(Some(fp)), target);
+        // load 3 > bound: spill to least-loaded, NOT the home replica
+        let spill = r.route(Some(fp));
+        assert_ne!(spill, target, "imbalance bound must spill");
+        // draining the home replica restores stickiness
+        r.complete(target);
+        r.complete(target);
+        r.complete(target);
+        assert_eq!(r.route(Some(fp)), target);
+        // no fingerprint: least-loaded fallback
+        let mut lb = Router::new(2, RoutePolicy::Prefix { imbalance_bound: 0 });
+        assert_eq!(lb.route(None), 0);
+        assert_eq!(lb.route(None), 1);
     }
 }

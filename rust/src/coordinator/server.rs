@@ -42,15 +42,24 @@
 //!   complete, so one connection can have many ids in flight (responses
 //!   are matched by `id`, order is not guaranteed).
 //! * The dispatcher routes each request through [`Router`] — round-robin,
-//!   least-loaded, or consistent-hash session affinity via the optional
+//!   least-loaded, consistent-hash session affinity via the optional
 //!   `session_key` field (string keys are hashed, numeric keys used
-//!   directly).
+//!   directly), or prefix routing ([`RoutePolicy::Prefix`]): the
+//!   dispatcher fingerprints the prompt's first cache page
+//!   ([`prefix_fingerprint`]) so requests sharing a cacheable prefix land
+//!   on the replica whose radix tree already indexes it.
+//! * Stats responses carry a `shared_store` object next to `stats`; the
+//!   fleet roll-up dedups it by store identity
+//!   ([`MemoryStats::shared_store_id`]) so replicas sharing one
+//!   node-level page store count its pages exactly once
+//!   (`pages_gross` keeps the per-replica sum for comparison).
 //! * Replica workers block on `recv_timeout` when idle — an idle replica
 //!   burns no CPU — and keep ticking while they still hold work after the
 //!   dispatcher hangs up, so shutdown drains cleanly.
 
 use super::engine::EngineCore;
-use super::router::{hash_session_key, RoutePolicy, Router};
+use super::kv_manager::MemoryStats;
+use super::router::{hash_session_key, prefix_fingerprint, RoutePolicy, Router};
 use super::scheduler::Action;
 use super::session::{FinishReason, Request};
 use crate::coordinator::metrics::EngineMetrics;
@@ -205,20 +214,72 @@ pub fn format_response(
 }
 
 /// Format one stats response line (no trailing newline): the queried
-/// replica's metrics snapshot as JSON.
-pub fn format_stats_response(id: u64, replica: usize, m: &EngineMetrics) -> String {
+/// replica's metrics snapshot as JSON, plus its shared-store gauge
+/// (`id` is the store's process-unique identity — replicas on one
+/// node-level store report the same id).
+pub fn format_stats_response(id: u64, replica: usize, m: &EngineMetrics, mem: &MemoryStats) -> String {
     format!(
-        "{{\"id\": {id}, \"replica\": {replica}, \"stats\": {}}}",
-        m.to_json()
+        "{{\"id\": {id}, \"replica\": {replica}, \"shared_store\": {{\"id\": {}, \"pages\": {}, \"refs\": {}, \"bytes\": {}}}, \"stats\": {}}}",
+        mem.shared_store_id, mem.shared_pages, mem.shared_refs, mem.shared_bytes, m.to_json()
     )
 }
 
+/// The fleet's shared-store occupancy, deduplicated by store identity:
+/// replicas sharing one node-level [`super::SharedPageStore`] all report
+/// the same `shared_store_id`, so each physical store contributes its
+/// pages/refs/bytes exactly once. `pages_gross` is the raw per-replica
+/// sum — with one node store and R replicas it is R× `pages`, which is
+/// how smoke tests verify the dedup actually happened.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct FleetSharedStats {
+    /// distinct physical stores seen across the probed replicas
+    pub stores: usize,
+    /// shared pages, each physical store counted once
+    pub pages: usize,
+    /// sequence references onto shared pages, each store counted once
+    pub refs: usize,
+    /// shared-store heap bytes, each store counted once
+    pub bytes: usize,
+    /// per-replica sum of shared pages WITHOUT dedup (node store: R×pages)
+    pub pages_gross: usize,
+}
+
+/// Fold per-replica memory snapshots into the fleet's deduped
+/// shared-store roll-up. First snapshot per store id wins — replicas of
+/// one node store observe the same store, so their figures agree.
+pub fn fleet_shared_stats(mem: &[MemoryStats]) -> FleetSharedStats {
+    let mut seen: HashMap<u64, (usize, usize, usize)> = HashMap::new();
+    let mut gross = 0usize;
+    for ms in mem {
+        gross += ms.shared_pages;
+        seen.entry(ms.shared_store_id)
+            .or_insert((ms.shared_pages, ms.shared_refs, ms.shared_bytes));
+    }
+    let mut out = FleetSharedStats {
+        stores: seen.len(),
+        pages_gross: gross,
+        ..FleetSharedStats::default()
+    };
+    for (p, r, b) in seen.values() {
+        out.pages += p;
+        out.refs += r;
+        out.bytes += b;
+    }
+    out
+}
+
 /// Format one fleet-scope stats response line (no trailing newline): the
-/// merged roll-up of `replicas` replica snapshots.
-pub fn format_fleet_stats_response(id: u64, replicas: usize, m: &EngineMetrics) -> String {
+/// merged roll-up of `replicas` replica snapshots plus the deduped
+/// shared-store occupancy.
+pub fn format_fleet_stats_response(
+    id: u64,
+    replicas: usize,
+    m: &EngineMetrics,
+    shared: &FleetSharedStats,
+) -> String {
     format!(
-        "{{\"id\": {id}, \"scope\": \"fleet\", \"replicas\": {replicas}, \"stats\": {}}}",
-        m.to_json()
+        "{{\"id\": {id}, \"scope\": \"fleet\", \"replicas\": {replicas}, \"shared_store\": {{\"stores\": {}, \"pages\": {}, \"refs\": {}, \"bytes\": {}, \"pages_gross\": {}}}, \"stats\": {}}}",
+        shared.stores, shared.pages, shared.refs, shared.bytes, shared.pages_gross, m.to_json()
     )
 }
 
@@ -262,9 +323,13 @@ enum ReplicaJob {
         wire_id: u64,
         conn: mpsc::Sender<ConnLine>,
     },
-    /// A fleet roll-up probe: the worker sends its metrics snapshot to the
-    /// dispatcher's aggregator channel instead of the connection.
-    Snapshot { tx: mpsc::Sender<EngineMetrics> },
+    /// A fleet roll-up probe: the worker sends its metrics + memory
+    /// snapshots to the dispatcher's aggregator channel instead of the
+    /// connection (memory carries the shared-store gauge the fleet
+    /// response dedups by store id).
+    Snapshot {
+        tx: mpsc::Sender<(EngineMetrics, MemoryStats)>,
+    },
 }
 
 /// Aggregate result of one `serve` run.
@@ -303,6 +368,10 @@ pub fn serve_on(
 ) -> Result<ServeSummary> {
     anyhow::ensure!(!engines.is_empty(), "need at least one engine replica");
     let n_replicas = engines.len();
+    // prefix routing fingerprints the first page_tokens-aligned window of
+    // every prompt; all replicas of one fleet share a page geometry, so
+    // replica 0 speaks for all of them
+    let page_tokens = engines[0].page_tokens();
     let local = listener.local_addr()?;
     eprintln!("turboangle serving on {local} ({n_replicas} replicas, {policy:?})");
 
@@ -372,7 +441,7 @@ pub fn serve_on(
                 if wire.stats && wire.fleet {
                     // fleet roll-up: probe EVERY replica, merge off-thread
                     // so a slow replica never stalls the dispatcher
-                    let (snap_tx, snap_rx) = mpsc::channel::<EngineMetrics>();
+                    let (snap_tx, snap_rx) = mpsc::channel::<(EngineMetrics, MemoryStats)>();
                     let mut alive = 0usize;
                     for tx in &replica_txs {
                         let probe = ReplicaJob::Snapshot {
@@ -391,12 +460,14 @@ pub fn serve_on(
                         // the channel closes once every probed worker has
                         // answered (or died and dropped its sender)
                         let mut merged = EngineMetrics::default();
-                        let mut n = 0usize;
-                        for m in snap_rx {
+                        let mut mems: Vec<MemoryStats> = Vec::new();
+                        for (m, ms) in snap_rx {
                             merged.merge(&m);
-                            n += 1;
+                            mems.push(ms);
                         }
-                        let line = format_fleet_stats_response(wire_id, n, &merged);
+                        let shared = fleet_shared_stats(&mems);
+                        let line =
+                            format_fleet_stats_response(wire_id, mems.len(), &merged, &shared);
                         let _ = conn.send(ConnLine { line, counts: false });
                     });
                     continue;
@@ -422,11 +493,19 @@ pub fn serve_on(
                     continue;
                 }
                 let prompt: Vec<i32> = wire.prompt.bytes().map(|b| b as i32).collect();
+                // the routing key is policy-dependent: prefix routing keys
+                // on the prompt's first-page fingerprint (prompts too short
+                // to fill a page have nothing adoptable — route by load);
+                // every other policy keys on the wire session key
+                let key = match policy {
+                    RoutePolicy::Prefix { .. } => prefix_fingerprint(&prompt, page_tokens),
+                    _ => wire.session_key,
+                };
                 let id = next_id;
                 next_id += 1;
                 let mut req = Request::new(id, prompt, wire.max_new_tokens);
                 req.session_key = wire.session_key;
-                let replica = lock_router(&router).route(wire.session_key);
+                let replica = lock_router(&router).route(key);
                 let job = ReplicaJob::Gen {
                     req,
                     wire_id: wire.id,
@@ -488,7 +567,8 @@ fn replica_worker(
                 engine.submit(req);
             }
             ReplicaJob::Stats { wire_id, conn } => {
-                let line = format_stats_response(wire_id, idx, &engine.metrics());
+                let line =
+                    format_stats_response(wire_id, idx, &engine.metrics(), &engine.memory_stats());
                 // stats lines never count toward a bounded serve
                 let _ = conn.send(ConnLine { line, counts: false });
                 lock_router(router).complete(idx);
@@ -508,7 +588,7 @@ fn replica_worker(
             ReplicaJob::Snapshot { tx } => {
                 // not router-dispatched: no complete(); the aggregator's
                 // channel closes once every probed replica has answered
-                let _ = tx.send(engine.metrics());
+                let _ = tx.send((engine.metrics(), engine.memory_stats()));
             }
         }
     }
@@ -683,14 +763,52 @@ mod tests {
         let mut merged = EngineMetrics::default();
         merged.merge(&a);
         merged.merge(&b);
-        let line = format_fleet_stats_response(11, 2, &merged);
+        // two replicas on ONE node store: same id, pages counted once
+        let mut ma = crate::coordinator::MemoryStats::default();
+        ma.shared_store_id = 7;
+        ma.shared_pages = 4;
+        ma.shared_refs = 6;
+        ma.shared_bytes = 4096;
+        let mb = ma; // Copy: both replicas report the same store
+        let shared = fleet_shared_stats(&[ma, mb]);
+        assert_eq!(shared.stores, 1);
+        assert_eq!(shared.pages, 4, "one store counts once");
+        assert_eq!(shared.pages_gross, 8, "gross keeps the per-replica sum");
+        let line = format_fleet_stats_response(11, 2, &merged, &shared);
         let j = Json::parse(&line).unwrap();
         assert_eq!(j.get("id").unwrap().as_u64().unwrap(), 11);
         assert_eq!(j.get("scope").unwrap().as_str().unwrap(), "fleet");
         assert_eq!(j.get("replicas").unwrap().as_usize().unwrap(), 2);
+        let ss = j.get("shared_store").unwrap();
+        assert_eq!(ss.get("stores").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(ss.get("pages").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(ss.get("refs").unwrap().as_usize().unwrap(), 6);
+        assert_eq!(ss.get("pages_gross").unwrap().as_usize().unwrap(), 8);
         let stats = j.get("stats").unwrap();
         assert_eq!(stats.get("requests_finished").unwrap().as_usize().unwrap(), 5);
         assert_eq!(stats.get("itl").unwrap().get("count").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn fleet_shared_stats_sums_distinct_stores() {
+        // replica-scoped stores: distinct ids, everything sums
+        let mut a = crate::coordinator::MemoryStats::default();
+        a.shared_store_id = 1;
+        a.shared_pages = 3;
+        a.shared_refs = 3;
+        a.shared_bytes = 300;
+        let mut b = crate::coordinator::MemoryStats::default();
+        b.shared_store_id = 2;
+        b.shared_pages = 5;
+        b.shared_refs = 1;
+        b.shared_bytes = 500;
+        let s = fleet_shared_stats(&[a, b]);
+        assert_eq!(s.stores, 2);
+        assert_eq!(s.pages, 8);
+        assert_eq!(s.refs, 4);
+        assert_eq!(s.bytes, 800);
+        assert_eq!(s.pages_gross, 8, "no dedup to do: gross == deduped");
+        assert_eq!(fleet_shared_stats(&[]), FleetSharedStats::default());
     }
 
     #[test]
@@ -715,10 +833,16 @@ mod tests {
     fn formats_stats_responses() {
         let mut m = EngineMetrics::default();
         m.itl.record(std::time::Duration::from_micros(80));
-        let line = format_stats_response(5, 1, &m);
+        let mut mem = crate::coordinator::MemoryStats::default();
+        mem.shared_store_id = 3;
+        mem.shared_pages = 2;
+        let line = format_stats_response(5, 1, &m, &mem);
         let j = Json::parse(&line).unwrap();
         assert_eq!(j.get("id").unwrap().as_u64().unwrap(), 5);
         assert_eq!(j.get("replica").unwrap().as_usize().unwrap(), 1);
+        let ss = j.get("shared_store").unwrap();
+        assert_eq!(ss.get("id").unwrap().as_u64().unwrap(), 3);
+        assert_eq!(ss.get("pages").unwrap().as_usize().unwrap(), 2);
         let stats = j.get("stats").unwrap();
         assert_eq!(stats.get("itl").unwrap().get("count").unwrap().as_usize().unwrap(), 1);
     }

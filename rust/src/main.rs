@@ -6,8 +6,9 @@
 //! quantizer against python golden vectors AND the AOT kernel artifacts.
 
 use anyhow::{bail, Result};
+use std::sync::Arc;
 use turboangle::coordinator::{
-    Engine, EngineConfig, EngineCore, EngineMetrics, ReadPath, RoutePolicy,
+    Engine, EngineConfig, EngineCore, EngineMetrics, ReadPath, RoutePolicy, SharedPageStore,
 };
 use turboangle::eval::{search, sensitivity, sweep, PplHarness};
 use turboangle::obs::{export, ObsSnapshot};
@@ -99,8 +100,17 @@ LISTEN FLAGS (turboangle listen ...)
   --max-requests N        serve N generation responses then exit; 0 = forever
                           (default: 0; stats responses do not count)
   --replicas N            engine replica worker threads (default: 1, >= 1)
-  --route-policy P        rr|least-loaded|affinity (default: affinity; affinity
-                          keys on the wire \"session_key\", string or number)
+  --route-policy P        rr|least-loaded|affinity|prefix (default: affinity;
+                          affinity keys on the wire \"session_key\"; prefix
+                          keys on the prompt's first-page fingerprint so
+                          requests sharing a cacheable prefix collocate)
+  --imbalance-bound N     prefix routing only: max in-flight jobs the home
+                          replica may sit above the least-loaded one before
+                          a request spills there instead (default: 4)
+  --shared-store S        node|replica (default: replica) — node shares ONE
+                          content-addressed immutable-page store across all
+                          replicas on this node, so a prefix sealed by any
+                          replica is adoptable by every other
   --sim                   deterministic simulated backend — no artifacts needed
   --sim-layers L          sim model depth (default: 2, the protocol-smoke geometry)
   --model M               profile when not --sim (default: smollm2-sim)
@@ -131,12 +141,13 @@ BENCH ENTRY POINTS (cargo bench --bench <name> [-- --smoke])
   BENCH_<name>.json; every field is documented in docs/BENCH_GLOSSARY.md
 ";
 
-fn parse_route_policy(s: &str) -> Result<RoutePolicy> {
+fn parse_route_policy(s: &str, imbalance_bound: usize) -> Result<RoutePolicy> {
     Ok(match s {
         "rr" | "round-robin" => RoutePolicy::RoundRobin,
         "least-loaded" => RoutePolicy::LeastLoaded,
         "affinity" | "session-affinity" => RoutePolicy::SessionAffinity,
-        other => bail!("unknown route policy '{other}' (rr|least-loaded|affinity)"),
+        "prefix" => RoutePolicy::Prefix { imbalance_bound },
+        other => bail!("unknown route policy '{other}' (rr|least-loaded|affinity|prefix)"),
     })
 }
 
@@ -425,6 +436,8 @@ fn main() -> Result<()> {
                 "max-requests",
                 "replicas",
                 "route-policy",
+                "imbalance-bound",
+                "shared-store",
                 "sim",
                 "sim-layers",
                 "read-path",
@@ -446,7 +459,14 @@ fn main() -> Result<()> {
             if replicas == 0 {
                 bail!("--replicas must be >= 1 (got 0): each replica is one engine worker thread");
             }
-            let policy = parse_route_policy(&args.get_str("route-policy", "affinity"))?;
+            let imbalance_bound = args.get_usize("imbalance-bound", 4)?;
+            let policy =
+                parse_route_policy(&args.get_str("route-policy", "affinity"), imbalance_bound)?;
+            let shared_node = match args.get_str("shared-store", "replica").as_str() {
+                "node" => true,
+                "replica" => false,
+                other => bail!("--shared-store takes node|replica (got '{other}')"),
+            };
             let read_path = parse_read_path(&args.get_str("read-path", "auto"))?;
             let prefix_cache = parse_on_off("prefix-cache", &args.get_str("prefix-cache", "on"))?;
             let (chunked, chunk_tokens, tick_budget) = parse_chunk_flags(&args)?;
@@ -467,13 +487,27 @@ fn main() -> Result<()> {
                 cfg.sample_every = sample_every;
                 Ok(cfg)
             };
+            // `--shared-store node`: ONE content-addressed store, built on
+            // first use (its capacity scales with the fleet) and cloned
+            // into every replica's config
+            let mut node_store: Option<Arc<SharedPageStore>> = None;
+            let mut attach_store = |cfg: &mut EngineConfig| {
+                if !shared_node {
+                    return;
+                }
+                let cap = cfg.capacity_pages * replicas;
+                let store = node_store.get_or_insert_with(|| SharedPageStore::node(cap));
+                cfg.shared_store = Some(Arc::clone(store));
+            };
             let mut engines: Vec<Box<dyn EngineCore>> = Vec::with_capacity(replicas);
             if args.get_bool("sim") {
                 // identical seeds: the replicas serve the same "model"
                 for _ in 0..replicas {
                     let sim = sim_exec(args.get_usize("sim-layers", 2)?);
                     let l = ModelBackend::profile(&sim).n_layers;
-                    engines.push(Box::new(Engine::new(sim, engine_cfg(l)?)));
+                    let mut cfg = engine_cfg(l)?;
+                    attach_store(&mut cfg);
+                    engines.push(Box::new(Engine::new(sim, cfg)));
                 }
             } else {
                 let manifest = Manifest::load(&artifacts)?;
@@ -482,7 +516,9 @@ fn main() -> Result<()> {
                     let exec = ModelExecutor::load(&rt, &manifest, &model, Entry::Serve)?;
                     ensure_chunked_support(&exec, chunked)?;
                     let l = exec.profile.n_layers;
-                    engines.push(Box::new(Engine::new(exec, engine_cfg(l)?)));
+                    let mut cfg = engine_cfg(l)?;
+                    attach_store(&mut cfg);
+                    engines.push(Box::new(Engine::new(exec, cfg)));
                 }
             }
             let summary =

@@ -147,6 +147,7 @@ pub fn prometheus(
     counter(&mut o, "rejected_cache_full_total", "Requests rejected as unfittable.", m.rejected_cache_full);
     counter(&mut o, "prefix_hits_total", "Admissions that adopted shared prefix pages.", m.prefix_hits);
     counter(&mut o, "prefix_misses_total", "Admissions with no cached prefix.", m.prefix_misses);
+    counter(&mut o, "prefix_adopt_requeues_total", "Seatings requeued after a concurrent replica evicted matched pages.", m.prefix_adopt_requeues);
 
     for (name, help, h) in [
         ("ttft_us", "Time to first token.", &m.ttft),
@@ -177,6 +178,12 @@ pub fn prometheus(
     gauge(&mut o, "pool_pages_capacity", "Pool capacity in pages.", mem.pages_capacity as u64);
     gauge(&mut o, "shared_pages", "Shared prefix-store pages.", mem.shared_pages as u64);
     gauge(&mut o, "shared_refs", "References onto shared pages.", mem.shared_refs as u64);
+    gauge(
+        &mut o,
+        "shared_store_id",
+        "Process-unique shared-store identity; node-scoped replicas report the same id, so fleet roll-ups count each store once.",
+        mem.shared_store_id,
+    );
     gauge(&mut o, "swap_bytes", "Swapped compressed stream bytes.", mem.swapped_bytes as u64);
     gauge(&mut o, "queue_depth", "Requests queued, seated, or preempted.", queue_depth as u64);
 

@@ -9,9 +9,11 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::time::Duration;
+use std::sync::Arc;
 use turboangle::coordinator::server::serve_on;
 use turboangle::coordinator::{
     BatchPolicy, Engine, EngineConfig, EngineCore, FinishReason, ReadPath, Request, RoutePolicy,
+    SharedPageStore,
 };
 use turboangle::obs::{export, EventKind, TraceEvent};
 use turboangle::quant::{KernelKind, Mode, NormMode, QuantConfig};
@@ -54,6 +56,33 @@ fn sim_engine_prefix(
             page_tokens,
             read_path,
             prefix_cache,
+            ..EngineConfig::new(QuantConfig::paper_uniform(2).with_k8v4_log())
+        },
+    )
+}
+
+/// Prefix-caching engine whose shared store is chosen by the caller:
+/// `None` = the usual replica-private store, `Some(store)` = a node-level
+/// store shared with other engines (clone the `Arc` into each replica).
+fn sim_engine_store(
+    seed: u64,
+    capacity_pages: usize,
+    page_tokens: usize,
+    read_path: ReadPath,
+    store: Option<Arc<SharedPageStore>>,
+) -> Engine<SimExecutor> {
+    Engine::new(
+        SimExecutor::new(seed),
+        EngineConfig {
+            batch_policy: BatchPolicy {
+                min_batch: 1,
+                max_wait: Duration::ZERO,
+            },
+            capacity_pages,
+            page_tokens,
+            read_path,
+            prefix_cache: true,
+            shared_store: store,
             ..EngineConfig::new(QuantConfig::paper_uniform(2).with_k8v4_log())
         },
     )
@@ -532,6 +561,226 @@ fn prefix_eviction_reclaims_cached_pages_under_pressure() {
         e.metrics.prefix_evictions
     );
     assert_eq!(e.metrics.preemptions, 0, "no live work was preempted");
+}
+
+/// The node-store acceptance criterion: a shared-prefix workload split
+/// round-robin over 2–4 replicas generates EXACTLY the same token
+/// streams whether the fleet shares one node-level page store or each
+/// replica keeps its own — on both read paths — and the node runs match
+/// a single-replica run too. With the node store every replica reports
+/// the SAME store identity, so fleet roll-ups count its pages once.
+#[test]
+fn node_store_fleet_emits_bit_identical_tokens_across_scopes() {
+    let spec = WorkloadSpec {
+        n_requests: 16,
+        prompt_min: 2,
+        prompt_max: 6,
+        gen_min: 2,
+        gen_max: 6,
+        seed: 21,
+        n_prefixes: 2,
+        prefix_len: 12, // 3 full pages of 4 — matchable after one finish
+        ..Default::default()
+    };
+    let solo = |path: ReadPath| -> Vec<(u64, Vec<i32>)> {
+        let mut e = sim_engine_store(7, 256, 4, path, None);
+        for req in workload::generate(&spec) {
+            e.submit(req);
+        }
+        e.run_to_completion().unwrap();
+        let mut out: Vec<(u64, Vec<i32>)> = e
+            .take_finished()
+            .into_iter()
+            .map(|s| (s.request.id, s.generated))
+            .collect();
+        out.sort();
+        out
+    };
+    let fleet = |path: ReadPath, replicas: usize, node: bool| -> Vec<(u64, Vec<i32>)> {
+        let store = node.then(|| SharedPageStore::node(256 * replicas));
+        let mut engines: Vec<Engine<SimExecutor>> = (0..replicas)
+            .map(|_| sim_engine_store(7, 256, 4, path, store.clone()))
+            .collect();
+        for (i, req) in workload::generate(&spec).into_iter().enumerate() {
+            engines[i % replicas].submit(req);
+        }
+        // interleaved ticking: every replica makes progress each round, so
+        // harvest/adopt on the shared store genuinely interleave
+        loop {
+            let mut any = false;
+            for e in engines.iter_mut() {
+                if e.has_work() {
+                    e.tick().unwrap();
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        let ids: Vec<u64> = engines.iter().map(|e| e.memory_stats().shared_store_id).collect();
+        if node {
+            assert!(
+                ids.windows(2).all(|w| w[0] == w[1]),
+                "node-scoped replicas must report one store identity: {ids:?}"
+            );
+        } else {
+            let distinct: std::collections::HashSet<u64> = ids.iter().copied().collect();
+            assert_eq!(distinct.len(), replicas, "replica stores must be distinct: {ids:?}");
+        }
+        let mut out = Vec::new();
+        for e in engines.iter_mut() {
+            out.extend(e.take_finished().into_iter().map(|s| (s.request.id, s.generated)));
+        }
+        out.sort();
+        out
+    };
+    for path in [ReadPath::Fused, ReadPath::Reinflate] {
+        let want = solo(path);
+        for replicas in [2usize, 3, 4] {
+            for node in [true, false] {
+                assert_eq!(
+                    fleet(path, replicas, node),
+                    want,
+                    "fleet diverged ({path:?}, {replicas} replicas, node={node})"
+                );
+            }
+        }
+    }
+    assert_eq!(
+        solo(ReadPath::Fused),
+        solo(ReadPath::Reinflate),
+        "read paths must agree on the reference run too"
+    );
+}
+
+/// The cross-replica refcount scenario the ISSUE pins: replica B harvests
+/// a prefix into the node store; replica A's first request re-harvests the
+/// SAME content (the seal dedups onto B's physical pages); A's second
+/// request ADOPTS those pages, is preempted while holding them (its swap
+/// pins must keep B's pages alive), resumes, and generates exactly what
+/// the replica-scoped runs do — on both read paths.
+#[test]
+fn preempted_adopter_resumes_on_prefix_harvested_by_peer_replica() {
+    let shared_prompt: Vec<i32> = vec![10, 20, 30, 40, 50, 60, 70, 80];
+    let competitor: Vec<i32> = vec![9, 8, 7, 6, 5, 4, 3, 2];
+    let run = |path: ReadPath, node: bool| -> Vec<Vec<i32>> {
+        let store = node.then(|| SharedPageStore::node(64));
+        // node mode keeps adopted pages OUT of the replica pool, so a
+        // smaller pool is needed to force the same preemption pressure
+        let pool = if node { 4 } else { 6 };
+        let mut a = sim_engine_store(7, pool, 4, path, store.clone());
+        let mut b = sim_engine_store(7, 64, 4, path, store.clone());
+        // replica B publishes the prefix
+        b.submit(Request::new(100, shared_prompt.clone(), 8));
+        b.run_to_completion().unwrap();
+        assert!(b.memory_stats().shared_pages >= 2, "B must harvest the prompt");
+        // A's first request harvests into A's OWN radix tree; with the
+        // node store the seal dedups onto the pages B already published
+        a.submit(Request::new(1, shared_prompt.clone(), 8));
+        a.run_to_completion().unwrap();
+        if node {
+            let (ma, mb) = (a.memory_stats(), b.memory_stats());
+            assert_eq!(ma.shared_store_id, mb.shared_store_id, "one physical store");
+            assert_eq!(
+                ma.shared_pages, mb.shared_pages,
+                "same content must dedup onto the same physical pages"
+            );
+        }
+        // A's second request adopts, decodes once, then gets preempted
+        a.submit(Request::new(2, shared_prompt.clone(), 8));
+        for _ in 0..100 {
+            if a.tick().unwrap() == turboangle::coordinator::scheduler::Action::Prefill {
+                break;
+            }
+        }
+        a.tick().unwrap(); // at least one decode so the adopter is evictable
+        a.submit(Request::new(3, competitor.clone(), 8));
+        a.run_to_completion().unwrap();
+        assert!(a.metrics.preemptions >= 1, "the adopter must be swapped out");
+        assert!(a.metrics.swap_ins >= 1, "the adopter must be restored");
+        assert!(a.metrics.prefix_hits >= 1, "request 2 must adopt the prefix");
+        let mut fin = a.take_finished();
+        fin.sort_by_key(|s| s.request.id);
+        assert_eq!(fin.len(), 3);
+        let mut out: Vec<Vec<i32>> = fin.into_iter().map(|s| s.generated).collect();
+        out.push(b.take_finished().pop().unwrap().generated);
+        out
+    };
+    let baseline = run(ReadPath::Reinflate, false);
+    assert_eq!(baseline[0], baseline[1], "same prompt, same deterministic stream");
+    for (path, node) in [
+        (ReadPath::Reinflate, true),
+        (ReadPath::Fused, false),
+        (ReadPath::Fused, true),
+    ] {
+        assert_eq!(
+            run(path, node),
+            baseline,
+            "preempted cross-replica adopter diverged ({path:?}, node={node})"
+        );
+    }
+}
+
+/// Threaded node-store churn (TSan-coverable): two OS threads each drive
+/// their own engine against ONE tiny node store, so adopt / harvest /
+/// LRU-evict genuinely race on the store lock. Both replicas must still
+/// generate exactly the single-engine streams, and the store must respect
+/// its capacity once the dust settles.
+#[test]
+fn node_store_survives_concurrent_replicas_on_threads() {
+    // 8-token shared prefix (2 pages of 4) + 8-token distinct tails: each
+    // prompt seals up to 4 pages, so 6 prompts want 2 + 6*2 = 14 unique
+    // pages — far past the 8-page store, forcing real LRU eviction
+    let prompts: Vec<Vec<i32>> = (0..6)
+        .map(|i| {
+            let mut p = vec![11, 22, 33, 44, 55, 66, 77, 88];
+            p.extend([i as i32 + 1; 8]);
+            p
+        })
+        .collect();
+    let solo: Vec<(u64, Vec<i32>)> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let mut e = sim_engine_store(7, 64, 4, ReadPath::Auto, None);
+            e.submit(Request::new(i as u64, p.clone(), 6));
+            e.run_to_completion().unwrap();
+            (i as u64, e.take_finished().pop().unwrap().generated)
+        })
+        .collect();
+    // capacity 8 pages: the 14-page working set overflows it, so the
+    // peers race adoption against each other's LRU evictions
+    let store = SharedPageStore::node(8);
+    let handles: Vec<std::thread::JoinHandle<Vec<(u64, Vec<i32>)>>> = (0..2u64)
+        .map(|t| {
+            let store = Arc::clone(&store);
+            let prompts = prompts.clone();
+            std::thread::spawn(move || {
+                let mut e = sim_engine_store(7, 64, 4, ReadPath::Auto, Some(store));
+                for (i, p) in prompts.iter().enumerate() {
+                    e.submit(Request::new(t * 100 + i as u64, p.clone(), 6));
+                    e.run_to_completion().unwrap();
+                }
+                let mut out: Vec<(u64, Vec<i32>)> = e
+                    .take_finished()
+                    .into_iter()
+                    .map(|s| (s.request.id % 100, s.generated))
+                    .collect();
+                out.sort();
+                out
+            })
+        })
+        .collect();
+    for h in handles {
+        let got = h.join().expect("replica thread panicked");
+        assert_eq!(got, solo, "a concurrent replica diverged from the solo streams");
+    }
+    assert!(
+        store.page_count() <= 8,
+        "node store exceeded its capacity: {} pages",
+        store.page_count()
+    );
 }
 
 /// The chunked-prefill acceptance criterion: for a whole mixed workload

@@ -4,7 +4,7 @@
 use turboangle::coordinator::batcher::{Admission, BatchPolicy, DynamicBatcher};
 use turboangle::coordinator::kv_manager::{PageId, PagedKvCache, TileScratch};
 use turboangle::coordinator::prefix_cache::PrefixCache;
-use turboangle::coordinator::router::{RoutePolicy, Router};
+use turboangle::coordinator::router::{prefix_fingerprint, RoutePolicy, Router};
 use turboangle::coordinator::session::Request;
 use turboangle::coordinator::Histogram;
 use turboangle::quant::packing::{
@@ -468,6 +468,103 @@ fn prop_least_loaded_never_picks_strictly_more_loaded() {
 }
 
 #[test]
+fn prop_prefix_ring_deterministic_per_fingerprint() {
+    // the fingerprint→replica map is a pure function of (tokens, fleet
+    // size): two routers of equal size agree, repeated lookups agree, and
+    // an idle fleet routes exactly to the ring target (no spurious spill)
+    run_cases(120, |g| {
+        let replicas = g.usize_in(1, 8);
+        let bound = g.usize_in(0, 4);
+        let mut r1 = Router::new(replicas, RoutePolicy::Prefix { imbalance_bound: bound });
+        let r2 = Router::new(replicas, RoutePolicy::Prefix { imbalance_bound: bound });
+        let page = g.usize_in(1, 16);
+        for _ in 0..20 {
+            let len = page + g.usize_in(0, 8);
+            let tokens: Vec<i32> = (0..len).map(|_| (g.u64() % 512) as i32).collect();
+            let fp = prefix_fingerprint(&tokens, page).expect("window is full");
+            assert_eq!(
+                prefix_fingerprint(&tokens, page),
+                Some(fp),
+                "fingerprint must be deterministic"
+            );
+            assert_eq!(r1.target_of(fp), r2.target_of(fp), "equal rings diverged");
+            assert_eq!(r1.target_of(fp), r1.target_of(fp), "lookup not stable");
+            // idle fleet (all loads 0): min + bound is never exceeded, so
+            // the route IS the ring target
+            let picked = r1.route(Some(fp));
+            assert_eq!(picked, r1.target_of(fp), "idle fleet must not spill");
+            r1.complete(picked);
+        }
+    });
+}
+
+#[test]
+fn prop_prefix_ring_rebalance_is_bounded_and_directional() {
+    // growing the fleet from n to n+1 replicas only ADDS ring points, so
+    // a key either keeps its target or moves onto the NEW replica — and
+    // only about 1/(n+1) of keys may move at all
+    run_cases(60, |g| {
+        let n = g.usize_in(1, 7);
+        let old = Router::new(n, RoutePolicy::Prefix { imbalance_bound: 0 });
+        let new = Router::new(n + 1, RoutePolicy::Prefix { imbalance_bound: 0 });
+        let k = 256usize;
+        let mut moved = 0usize;
+        for _ in 0..k {
+            let fp = g.u64();
+            let (a, b) = (old.target_of(fp), new.target_of(fp));
+            if a != b {
+                assert_eq!(
+                    b, n,
+                    "a moved key must land on the new replica, not shuffle among the old ones"
+                );
+                moved += 1;
+            }
+        }
+        // expected moved share is 1/(n+1); 16 virtual nodes keep the
+        // realized share near it — generous slack covers vnode placement
+        // and key-sampling noise
+        let bound = k as f64 * (2.5 / (n as f64 + 1.0) + 0.10);
+        assert!(
+            (moved as f64) <= bound,
+            "moved {moved}/{k} keys growing {n}->{} (bound {bound:.0})",
+            n + 1
+        );
+    });
+}
+
+#[test]
+fn prop_prefix_spill_never_exceeds_imbalance_bound() {
+    // whatever the churn, a prefix route lands on a replica whose
+    // pre-route load sits within `imbalance_bound` of the fleet minimum:
+    // the home replica when allowed, the least-loaded one otherwise
+    run_cases(150, |g| {
+        let replicas = g.usize_in(1, 6);
+        let bound = g.usize_in(0, 5);
+        let mut r = Router::new(replicas, RoutePolicy::Prefix { imbalance_bound: bound });
+        let mut outstanding = Vec::new();
+        for _ in 0..g.usize_in(1, 200) {
+            if g.bool() || outstanding.is_empty() {
+                // few hot fingerprints, so home replicas actually overload
+                let fp = (g.u64() % 6).wrapping_mul(0x9E3779B97F4A7C15);
+                let min_before = *r.loads().iter().min().unwrap();
+                let picked = r.route(Some(fp));
+                assert!(
+                    r.loads()[picked] - 1 <= min_before + bound,
+                    "routed to pre-route load {} with min {min_before}, bound {bound}",
+                    r.loads()[picked] - 1
+                );
+                outstanding.push(picked);
+            } else {
+                let i = g.usize_in(0, outstanding.len() - 1);
+                r.complete(outstanding.swap_remove(i));
+            }
+        }
+        let total: usize = r.loads().iter().sum();
+        assert_eq!(total, outstanding.len(), "load accounting drifted");
+    });
+}
+
+#[test]
 fn prop_swap_roundtrip_restores_dense_reinflation_bit_identically() {
     run_cases(60, |g| {
         let l_n = g.usize_in(1, 3);
@@ -741,7 +838,9 @@ fn prop_shared_pool_accounting_and_eviction_safety() {
                         (0..tlen).map(|_| (g.u64() % 3) as i32).collect();
                     let matched = tree.match_prefix(&tokens);
                     let id = next_id;
-                    if kv.new_seq_with_prefix(id, tlen, &matched).is_ok() {
+                    // Ok(None) = pool pressure (no sequence created): skip,
+                    // exactly like the pre-node-store Err on reserve failure
+                    if let Ok(Some(_)) = kv.new_seq_with_prefix(id, tlen, &matched) {
                         next_id += 1;
                         append_model_suffix(&mut kv, id, &tokens, matched.len() * pt);
                         live.push((id, tokens, matched));

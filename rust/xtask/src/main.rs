@@ -72,12 +72,17 @@ fn run_models(trace: bool) -> usize {
     println!("{}", models::render(&store));
     violations += store.violation.is_some() as usize;
 
+    let node = models::explore(models::node_store::NodeStoreModel::new(false), MAX_STATES);
+    println!("{}", models::render(&node));
+    violations += node.violation.is_some() as usize;
+
     if trace {
         println!("\npinned counterexamples (buggy variants, expected to fail):");
         for report in [
             models::explore(models::server::ServerModel::new(3, true), MAX_STATES),
             models::explore(models::store::StoreModel::new(true, true), MAX_STATES),
             models::explore(models::store::StoreModel::new(false, false), MAX_STATES),
+            models::explore(models::node_store::NodeStoreModel::new(true), MAX_STATES),
         ] {
             println!("{}", models::render(&report));
         }

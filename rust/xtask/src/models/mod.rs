@@ -19,6 +19,7 @@
 //! dependency added), so the models stay wired for the real checker
 //! without it being vendored offline.
 
+pub mod node_store;
 pub mod server;
 pub mod store;
 pub mod sync;

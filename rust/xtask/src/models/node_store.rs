@@ -1,0 +1,323 @@
+//! Model of the CROSS-REPLICA node-store refcount lifecycle
+//! (`coordinator/kv_manager.rs`, `SharedPageStore::node`).
+//!
+//! One content-addressed page, two replica actors, one LRU evictor:
+//!
+//! * `harvest` — each replica seals the same token window at finish time;
+//!   the node store dedups on content equality, so the second seal lands
+//!   on the FIRST replica's physical page instead of inserting a copy;
+//! * `adopt` — `new_seq_with_prefix` on either replica bumps the page's
+//!   (store-global) refcount; a miss after eviction simply recomputes;
+//! * `swap_out` / `swap_in` — a preempted adopter KEEPS its shared refs
+//!   while swapped, pinning the page across the replica boundary;
+//! * the evictor (an at-capacity `seal_page` on some replica) frees
+//!   `refs == 0` pages, revalidating under the store lock.
+//!
+//! Checked properties: **refcount-never-negative**,
+//! **no-evict-under-remote-ref** (a page replica B still references can
+//! never be freed by replica A's eviction pass, even while B's adopter is
+//! swapped out), and **no-double-free** (freeing an absent page).
+//!
+//! One knob re-introduces the scoping bug this store exists to prevent:
+//!
+//! * `local_refs_only` — the evicting replica consults only its OWN
+//!   sequences when judging a page idle (the natural design if each
+//!   replica kept private refcounts instead of the store counting
+//!   globally). The explorer finds: A seals, B dedup-harvests and adopts,
+//!   A's evictor sees no LOCAL use and frees the page under B. Even
+//!   free-time revalidation cannot save it — it revalidates the wrong
+//!   set. This is WHY refcounts live in the store, not the replicas.
+
+use super::Model;
+
+/// Per-replica sequence script over the shared page.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Start,
+    /// Sealed (or dedup-harvested) the page into the node store.
+    Sealed,
+    /// Holding a store-global ref.
+    Adopted,
+    /// Preempted: pool pages gone, shared refs kept (replica A only).
+    Swapped,
+    /// Swapped back in.
+    Resident,
+    Done,
+    /// Terminal-with-error marker (the violation text lives in `fault`).
+    Faulted,
+}
+
+/// Evictor scan state.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum EvictPhase {
+    /// Looking for an idle page.
+    Scan,
+    /// Observed the page evictable; free not yet performed.
+    Candidate,
+    Done,
+}
+
+/// State machine for the cross-replica node-store page lifecycle.
+#[derive(Clone)]
+pub struct NodeStoreModel {
+    /// Buggy policy: eviction judges idleness by the evicting replica's
+    /// own refs, blind to the peer replica's.
+    pub local_refs_only: bool,
+    /// The sealed page: resident in the node store?
+    page_present: bool,
+    /// Per-replica refcounts; the store's global count is their sum. The
+    /// evictor runs on replica 0's seal path.
+    refs: [u8; 2],
+    /// Replica A adopts / swaps; replica B is the remote dedup-adopter.
+    seqs: [Phase; 2],
+    /// Evictor two-phase pass (observe, then free under the lock).
+    evictor: EvictPhase,
+    /// Remaining evictor passes (bounds the state space).
+    evict_passes: u8,
+    /// First violation observed by a step (checked by `invariant`).
+    fault: Option<&'static str>,
+}
+
+impl NodeStoreModel {
+    /// Model with the real policy (`local_refs_only: false`) or the
+    /// replica-scoped-refcount bug.
+    pub fn new(local_refs_only: bool) -> Self {
+        NodeStoreModel {
+            local_refs_only,
+            // Nothing sealed yet: replica A's first finish publishes it.
+            page_present: false,
+            refs: [0, 0],
+            seqs: [Phase::Start; 2],
+            evictor: EvictPhase::Scan,
+            evict_passes: 2,
+            fault: None,
+        }
+    }
+
+    fn global_refs(&self) -> u8 {
+        self.refs[0] + self.refs[1]
+    }
+
+    /// The refs the evictor can SEE under the active policy.
+    fn observed_refs(&self) -> u8 {
+        if self.local_refs_only {
+            self.refs[0]
+        } else {
+            self.global_refs()
+        }
+    }
+
+    /// Seal the page's content: insert when absent, dedup onto the
+    /// existing physical page when present (never a second copy).
+    fn harvest(&mut self) {
+        if !self.page_present {
+            self.page_present = true;
+        }
+    }
+
+    fn adopt(&mut self, replica: usize) -> bool {
+        if !self.page_present {
+            // Prefix miss (evicted since sealing): the real code
+            // recomputes the window — the sequence proceeds owned-only.
+            return false;
+        }
+        self.refs[replica] += 1;
+        true
+    }
+
+    fn unref(&mut self, replica: usize) {
+        if self.refs[replica] == 0 {
+            self.fault = Some("refcount underflow: unref of a page with refs == 0");
+        } else {
+            self.refs[replica] -= 1;
+        }
+    }
+}
+
+impl Model for NodeStoreModel {
+    fn name(&self) -> &'static str {
+        if self.local_refs_only {
+            "node-store-refcount (local-refs-only bug)"
+        } else {
+            "node-store-refcount"
+        }
+    }
+
+    fn actor_label(&self, actor: usize) -> String {
+        match actor {
+            0 => "replicaA".into(),
+            1 => "replicaB".into(),
+            _ => "evictor".into(),
+        }
+    }
+
+    fn enabled_actors(&self) -> Vec<usize> {
+        if self.fault.is_some() {
+            return Vec::new(); // freeze the violating state for the checker
+        }
+        let mut out = Vec::new();
+        for (i, s) in self.seqs.iter().enumerate() {
+            if !matches!(s, Phase::Done | Phase::Faulted) {
+                out.push(i);
+            }
+        }
+        if self.evictor != EvictPhase::Done && self.evict_passes > 0 {
+            out.push(2);
+        }
+        out
+    }
+
+    fn step(&mut self, actor: usize) {
+        match actor {
+            // replica A: harvest → adopt → swap_out → swap_in → free
+            0 => match self.seqs[0] {
+                Phase::Start => {
+                    self.harvest();
+                    self.seqs[0] = Phase::Sealed;
+                }
+                Phase::Sealed => {
+                    self.seqs[0] = if self.adopt(0) { Phase::Adopted } else { Phase::Done };
+                }
+                Phase::Adopted => {
+                    // swap_out: pool pages and reservation released; the
+                    // shared refs are KEPT — they are the eviction pin
+                    self.seqs[0] = Phase::Swapped;
+                }
+                Phase::Swapped => {
+                    if !self.page_present {
+                        self.fault = Some(
+                            "use-after-free: page evicted while a swapped sequence held refs",
+                        );
+                        self.seqs[0] = Phase::Faulted;
+                        return;
+                    }
+                    self.seqs[0] = Phase::Resident;
+                }
+                Phase::Resident => {
+                    self.unref(0);
+                    self.seqs[0] = Phase::Done;
+                }
+                Phase::Done | Phase::Faulted => {}
+            },
+            // replica B: dedup-harvest → adopt → free (the remote peer
+            // whose refs replica A's evictor must respect)
+            1 => match self.seqs[1] {
+                Phase::Start => {
+                    self.harvest();
+                    self.seqs[1] = Phase::Sealed;
+                }
+                Phase::Sealed => {
+                    self.seqs[1] = if self.adopt(1) { Phase::Adopted } else { Phase::Done };
+                }
+                Phase::Adopted => {
+                    if !self.page_present {
+                        self.fault =
+                            Some("use-after-free: page evicted under a resident remote adopter");
+                        self.seqs[1] = Phase::Faulted;
+                        return;
+                    }
+                    self.unref(1);
+                    self.seqs[1] = Phase::Done;
+                }
+                _ => {}
+            },
+            // evictor: observe an idle page, then free it under the lock
+            _ => match self.evictor {
+                EvictPhase::Scan => {
+                    if self.page_present && self.observed_refs() == 0 {
+                        self.evictor = EvictPhase::Candidate;
+                    } else {
+                        self.evict_passes -= 1;
+                        if self.evict_passes == 0 {
+                            self.evictor = EvictPhase::Done;
+                        }
+                    }
+                }
+                EvictPhase::Candidate => {
+                    // free-time revalidation — against the policy's view;
+                    // a replica-scoped view revalidates the WRONG set
+                    if self.page_present && self.observed_refs() == 0 {
+                        if self.global_refs() > 0 {
+                            self.fault = Some(
+                                "remote-ref eviction: page freed while the peer replica held refs",
+                            );
+                        }
+                        self.page_present = false;
+                    }
+                    self.evict_passes -= 1;
+                    self.evictor =
+                        if self.evict_passes == 0 { EvictPhase::Done } else { EvictPhase::Scan };
+                }
+                EvictPhase::Done => {}
+            },
+        }
+    }
+
+    fn invariant(&self) -> Result<(), String> {
+        if let Some(f) = self.fault {
+            return Err(f.to_string());
+        }
+        // A page absent from the store cannot carry refs on ANY replica.
+        if !self.page_present && self.global_refs() > 0 {
+            return Err(format!("{} refs on an evicted page", self.global_refs()));
+        }
+        Ok(())
+    }
+
+    fn terminal(&self) -> Result<(), String> {
+        if self.seqs.iter().any(|s| *s != Phase::Done) {
+            return Err("deadlock: a replica could not finish its script".into());
+        }
+        if self.global_refs() != 0 {
+            return Err(format!("leaked refs at shutdown: {}", self.global_refs()));
+        }
+        Ok(())
+    }
+
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.push(self.page_present as u8);
+        out.push(self.refs[0]);
+        out.push(self.refs[1]);
+        for s in &self.seqs {
+            out.push(*s as u8);
+        }
+        out.push(self.evictor as u8);
+        out.push(self.evict_passes);
+        out.push(self.fault.map_or(0, |_| 1));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::explore;
+    use super::*;
+
+    /// The shipped store-global refcount survives every interleaving of
+    /// two replicas (one swapping) and the evictor: no page is ever freed
+    /// under a remote ref, no ref underflows, nothing double-frees.
+    #[test]
+    fn global_refcounts_are_exhaustively_safe() {
+        let r = explore(NodeStoreModel::new(false), 2_000_000);
+        assert!(r.violation.is_none(), "{}", super::super::render(&r));
+        assert!(r.states > 50, "suspiciously small state space: {}", r.states);
+    }
+
+    /// Pinned counterexample: replica-scoped refcounts let replica A's
+    /// eviction pass free a page replica B dedup-harvested and adopted —
+    /// free-time revalidation included, since it revalidates the wrong
+    /// set. This is WHY refcounts live in the node store itself.
+    #[test]
+    fn local_refs_only_is_found_unsafe() {
+        let r = explore(NodeStoreModel::new(true), 2_000_000);
+        let v = r.violation.expect("the cross-replica evict race must be found");
+        assert!(
+            v.message.contains("remote-ref eviction")
+                || v.message.contains("use-after-free")
+                || v.message.contains("refs on an evicted page"),
+            "{}",
+            v.message
+        );
+        assert!(v.trace.iter().any(|s| s == "replicaB"), "{:?}", v.trace);
+        assert!(v.trace.iter().any(|s| s == "evictor"), "{:?}", v.trace);
+    }
+}
